@@ -1,0 +1,99 @@
+//! Bench: coordinator substrates — ring all-reduce scaling, loader
+//! throughput/backpressure, and the full train-step breakdown (fwd/bwd vs
+//! optimizer vs data) that the §Perf L3 pass optimizes against.
+//!
+//!   cargo bench --bench coordinator
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use grasswalk::coordinator::{Ring, TrainConfig, Trainer};
+use grasswalk::data::{CorpusConfig, Loader, SyncLoader};
+use grasswalk::optim::Method;
+use grasswalk::runtime::Engine;
+use grasswalk::util::bench::{header, throughput, Bench};
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::default();
+    println!("== coordinator substrates ==");
+    println!("{}", header());
+
+    // Ring all-reduce scaling in world size and payload.
+    for &workers in &[2usize, 4, 8] {
+        for &len in &[1 << 12, 1 << 16, 1 << 20] {
+            let ring = Ring::new(workers);
+            let stats = b.run(
+                &format!("ring all-reduce w={workers} len={len}"),
+                || {
+                    let mut bufs: Vec<Vec<f32>> =
+                        (0..workers).map(|_| vec![1.0f32; len]).collect();
+                    std::hint::black_box(ring.all_reduce_sum(&mut bufs));
+                },
+            );
+            let bytes = 2.0 * (workers - 1) as f64 / workers as f64
+                * (len * 4) as f64;
+            println!(
+                "    -> {:.2} GB/s effective per worker",
+                bytes / stats.median.as_secs_f64() / 1e9
+            );
+        }
+    }
+
+    // Loader: sync vs prefetching throughput.
+    let cfg = CorpusConfig::default();
+    let mut sync = SyncLoader::new(cfg.clone(), 0, 1, 8, 65);
+    let s = b.run("loader sync 8x65", || {
+        std::hint::black_box(sync.next());
+    });
+    println!(
+        "    -> {:.0} batches/s",
+        throughput(1, s.median)
+    );
+    let pre = Loader::spawn(cfg, 0, 1, 8, 65, 8);
+    // Drain warm queue then measure steady-state.
+    for _ in 0..8 {
+        let _ = pre.next();
+    }
+    let s = b.run("loader prefetch 8x65", || {
+        std::hint::black_box(pre.next());
+    });
+    println!(
+        "    -> {:.0} batches/s (hides generation latency)",
+        throughput(1, s.median)
+    );
+
+    // Full train-step breakdown on the compiled model.
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("(skipping train-step rows: run `make artifacts`)");
+        return Ok(());
+    }
+    let engine = Arc::new(Engine::new(dir)?);
+    for workers in [1usize, 2] {
+        let cfg = TrainConfig {
+            method: Method::GrassWalk,
+            steps: 1,
+            rank: 16,
+            interval: 10,
+            workers,
+            log_every: 0,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(engine.clone(), cfg)?;
+        trainer.train_step()?; // warmup/compile
+        let n = 10;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            trainer.train_step()?;
+        }
+        let per = t0.elapsed().as_secs_f64() / n as f64;
+        println!(
+            "train_step e2e (workers={workers})                    \
+             {:>8.1}ms/step",
+            per * 1e3
+        );
+    }
+    Ok(())
+}

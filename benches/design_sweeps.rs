@@ -1,0 +1,107 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! rank r, refresh interval T, and geodesic step size η — both their
+//! convergence effect (final quadratic-model error) and their per-step /
+//! per-refresh cost.
+//!
+//!   cargo bench --bench design_sweeps
+
+use grasswalk::optim::{
+    MatrixOptimizer, ProjectedConfig, ProjectedOptimizer, SubspaceRule,
+};
+use grasswalk::tensor::Mat;
+use grasswalk::util::bench::Bench;
+use grasswalk::util::rng::Rng;
+use std::time::Instant;
+
+/// Quadratic with a strong low-rank core + noise: the controlled
+/// environment in which rank/interval trade-offs are visible.
+fn run(cfg: ProjectedConfig, steps: usize, seed: u64) -> (f32, f64) {
+    let (m, n) = (48, 96);
+    let mut rng = Rng::new(seed);
+    let core = grasswalk::optim::grassmann::random_point(m, 6, &mut rng);
+    let coeff = Mat::randn(6, n, 2.0, &mut rng);
+    let target = grasswalk::tensor::matmul(&core, &coeff);
+    let mut w = Mat::zeros(m, n);
+    let mut opt = ProjectedOptimizer::new(cfg);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let mut g = w.sub(&target);
+        g.axpy(0.05, &Mat::randn(m, n, 1.0, &mut rng));
+        opt.step(&mut w, &g, &mut rng);
+    }
+    (w.sub(&target).fro_norm(), t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let steps = 300;
+    println!("== design sweeps (quadratic core-subspace model, {steps} \
+              steps) ==");
+
+    println!("\n-- rank sweep (GrassWalk, T=20, eta=0.5) --");
+    println!("{:<8} {:>12} {:>12} {:>14}", "rank", "final err",
+             "time (ms)", "state floats");
+    for rank in [1usize, 2, 4, 8, 16, 32] {
+        let cfg = ProjectedConfig {
+            rank,
+            interval: 20,
+            alpha: 0.05,
+            ..Default::default()
+        };
+        let (err, secs) = run(cfg.clone(), steps, 1);
+        let mut opt = ProjectedOptimizer::new(cfg);
+        let mut rng = Rng::new(1);
+        let mut w = Mat::zeros(48, 96);
+        let g = Mat::randn(48, 96, 1.0, &mut rng);
+        opt.step(&mut w, &g, &mut rng);
+        println!("{rank:<8} {err:>12.4} {:>12.1} {:>14}", secs * 1e3,
+                 opt.state_floats());
+    }
+
+    println!("\n-- interval sweep (GrassWalk, rank=8) --");
+    println!("{:<8} {:>12} {:>12}", "T", "final err", "time (ms)");
+    for interval in [5usize, 10, 25, 50, 100, 1_000_000] {
+        let cfg = ProjectedConfig {
+            rank: 8,
+            interval,
+            alpha: 0.05,
+            ..Default::default()
+        };
+        let (err, secs) = run(cfg, steps, 2);
+        let label = if interval >= steps { "never".into() }
+                    else { interval.to_string() };
+        println!("{label:<8} {err:>12.4} {:>12.1}", secs * 1e3);
+    }
+
+    println!("\n-- eta sweep (GrassWalk geodesic step size, rank=8, T=20) --");
+    println!("{:<8} {:>12}", "eta", "final err");
+    for eta in [0.05f32, 0.1, 0.25, 0.5, 1.0, 2.0] {
+        let cfg = ProjectedConfig {
+            rank: 8,
+            interval: 20,
+            alpha: 0.05,
+            eta,
+            ..Default::default()
+        };
+        let (err, _) = run(cfg, steps, 3);
+        println!("{eta:<8} {err:>12.4}");
+    }
+
+    println!("\n-- rule cost at refresh (rank=8, refresh EVERY step) --");
+    let b = Bench::quick();
+    for rule in [SubspaceRule::Svd, SubspaceRule::RandWalk,
+                 SubspaceRule::RandJump, SubspaceRule::Track] {
+        let mut rng = Rng::new(4);
+        let g = Mat::randn(48, 96, 1.0, &mut rng);
+        let mut w = Mat::zeros(48, 96);
+        let mut opt = ProjectedOptimizer::new(ProjectedConfig {
+            rank: 8,
+            interval: 1,
+            rule,
+            ..Default::default()
+        });
+        opt.step(&mut w, &g, &mut rng);
+        b.run(&format!("refresh {}", rule.label()), || {
+            opt.step(&mut w, &g, &mut rng);
+        });
+    }
+}

@@ -1,0 +1,65 @@
+//! Bench: the linalg substrate (S1) — GEMM variants, QR, SVD, rSVD at the
+//! paper's layer geometries. Feeds the §Perf iteration log: the optimizer
+//! hot path is 3 thin GEMMs per matrix, and subspace refreshes are
+//! QR/SVD/rSVD-bound.
+//!
+//!   cargo bench --bench linalg
+
+use grasswalk::tensor::{
+    matmul, matmul_tn, qr_thin, rsvd, svd_thin, Mat,
+};
+use grasswalk::util::bench::{header, Bench};
+use grasswalk::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let b = Bench::default();
+    println!("== linalg substrate ==");
+    println!("{}", header());
+
+    // Proxy layer geometry (compiled model) and a 1B-ish slice.
+    for &(m, n, r) in &[(64usize, 172usize, 16usize), (256, 688, 64),
+                        (512, 1365, 128)] {
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        let s = grasswalk::tensor::orthonormalize(
+            &Mat::randn(m, r, 1.0, &mut rng));
+        let gt = matmul_tn(&s, &g);
+
+        b.run(&format!("project S^T G            {m}x{n} r{r}"), || {
+            std::hint::black_box(matmul_tn(&s, &g));
+        });
+        b.run(&format!("backproject S Gt         {m}x{n} r{r}"), || {
+            std::hint::black_box(matmul(&s, &gt));
+        });
+        b.run(&format!("qr_thin                  {m}x{r}"), || {
+            std::hint::black_box(qr_thin(
+                &Mat::randn(m, r, 1.0, &mut Rng::new(1))));
+        });
+        b.run(&format!("rsvd (r, +4, p0)         {m}x{r}"), || {
+            let x = Mat::randn(m, r, 1.0, &mut Rng::new(2));
+            std::hint::black_box(rsvd(&x, r, 4, 0, &mut Rng::new(3)));
+        });
+    }
+
+    // Full SVD — the GaLore refresh cost (paper: "computationally heavy").
+    for &(m, n) in &[(64usize, 172usize), (128, 344), (256, 688)] {
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        b.run(&format!("svd_thin (GaLore refresh) {m}x{n}"), || {
+            std::hint::black_box(svd_thin(&g));
+        });
+    }
+
+    // GEMM scaling for the roofline estimate.
+    for &d in &[64usize, 128, 256, 512] {
+        let a = Mat::randn(d, d, 1.0, &mut rng);
+        let c = Mat::randn(d, d, 1.0, &mut rng);
+        let stats = b.run(&format!("gemm square              {d}x{d}"), || {
+            std::hint::black_box(matmul(&a, &c));
+        });
+        let flops = 2.0 * (d as f64).powi(3);
+        println!(
+            "    -> {:.2} GFLOP/s",
+            flops / stats.median.as_secs_f64() / 1e9
+        );
+    }
+}

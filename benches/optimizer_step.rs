@@ -1,0 +1,96 @@
+//! Bench: per-matrix optimizer step cost across all methods and the two
+//! engines (Rust math vs compiled Pallas artifact via PJRT) — the §Perf
+//! L3 target is the projected step within 2× of its GEMM roofline.
+//!
+//!   cargo bench --bench optimizer_step
+
+use std::sync::Arc;
+
+use grasswalk::optim::{Method, MatrixOptimizer, SubspaceRule};
+use grasswalk::runtime::Engine;
+use grasswalk::tensor::{Mat, matmul, matmul_tn};
+use grasswalk::util::bench::{header, Bench};
+use grasswalk::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::new(0);
+    println!("== optimizer step (per matrix) ==");
+    println!("{}", header());
+
+    for &(m, n, r) in &[(64usize, 172usize, 16usize), (256, 688, 64)] {
+        println!("-- shape {m}x{n}, rank {r} --");
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+
+        // Roofline reference: the 3 rank-r GEMMs alone.
+        let s = grasswalk::tensor::orthonormalize(
+            &Mat::randn(m, r, 1.0, &mut rng));
+        let stats = b.run(&format!("gemm roofline (3 thin)   {m}x{n}"), || {
+            let gt = matmul_tn(&s, &g);
+            let _ = std::hint::black_box(matmul(&s, &gt));
+            let _ = std::hint::black_box(matmul(&s, &gt));
+        });
+        let roofline = stats.median;
+
+        for method in Method::all() {
+            let mut opt = method.build(r, 1_000_000, 1e-3, 1000);
+            let mut w = Mat::randn(m, n, 1.0, &mut rng);
+            let mut step_rng = Rng::new(7);
+            // init
+            opt.step(&mut w, &g, &mut step_rng);
+            let st = b.run(
+                &format!("{:<24} {m}x{n}", method.label()),
+                || {
+                    opt.step(&mut w, &g, &mut step_rng);
+                },
+            );
+            if *method == Method::GrassWalk {
+                println!(
+                    "    -> grasswalk steady-state vs roofline: {:.2}x",
+                    st.median.as_secs_f64() / roofline.as_secs_f64()
+                );
+            }
+        }
+
+        // Refresh cost per rule (the every-T step).
+        for rule in [SubspaceRule::Svd, SubspaceRule::RandWalk,
+                     SubspaceRule::RandJump, SubspaceRule::Track] {
+            let mut opt = grasswalk::optim::ProjectedOptimizer::new(
+                grasswalk::optim::ProjectedConfig {
+                    rank: r,
+                    interval: 1, // refresh EVERY step
+                    rule,
+                    ..Default::default()
+                },
+            );
+            let mut w = Mat::randn(m, n, 1.0, &mut rng);
+            let mut step_rng = Rng::new(8);
+            opt.step(&mut w, &g, &mut step_rng);
+            b.run(
+                &format!("refresh-every-step {:<8} {m}x{n}", rule.label()),
+                || {
+                    opt.step(&mut w, &g, &mut step_rng);
+                },
+            );
+        }
+    }
+
+    // PJRT fused-kernel path, if artifacts exist.
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let engine = Arc::new(Engine::new(dir).unwrap());
+        let (m, n, r) = (64usize, 172usize, 16usize);
+        let mut opt = grasswalk::coordinator::PjrtProjected::new(
+            engine, SubspaceRule::RandJump, r, 1_000_000, 0.5);
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        let mut w = Mat::randn(m, n, 1.0, &mut rng);
+        let mut step_rng = Rng::new(9);
+        opt.step(&mut w, &g, &mut step_rng);
+        b.run(&format!("pjrt fused opt_step      {m}x{n}"), || {
+            opt.step(&mut w, &g, &mut step_rng);
+        });
+    } else {
+        eprintln!("(skipping PJRT engine rows: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `pytest python/tests/ -q` work from the
+repository root by putting `python/` on sys.path (the tests import the
+`compile` package relative to that directory)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

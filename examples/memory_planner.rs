@@ -1,0 +1,70 @@
+//! Memory planner: the analytic accountant behind the GB columns of
+//! Tables 1–2, exposed as a user tool.
+//!
+//! Itemizes peak training memory (weights / grads / activations /
+//! optimizer state / workspace / overhead) for any LLaMA preset × method
+//! × rank, at the paper's exact 1B / 7B dimensions.
+//!
+//!   cargo run --release --example memory_planner -- --model llama-1b
+//!   cargo run --release --example memory_planner -- --model llama-7b \
+//!       --rank 1024 --batch 8
+
+use grasswalk::coordinator::MemoryModel;
+use grasswalk::model::shapes;
+use grasswalk::optim::Method;
+use grasswalk::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let name = args.get_or("model", "llama-1b");
+    let preset = shapes::preset(&name)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown preset `{name}` (tiny|small|llama-1b|llama-7b)"))?;
+    let rank = args.usize_or("rank", 512);
+    let mem = MemoryModel {
+        batch: args.usize_or("batch", 16),
+        seq_len: args.usize_or("seq", 256),
+        ..Default::default()
+    };
+
+    println!(
+        "== {} ({:.2}B params) | rank {rank} | batch {} | seq {} ==",
+        preset.name,
+        preset.param_count() as f64 / 1e9,
+        mem.batch,
+        mem.seq_len
+    );
+    println!(
+        "{:<12} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>9}",
+        "method", "weights", "grads", "acts", "state", "wspace", "ovhd",
+        "TOTAL GB"
+    );
+    let gib = |b: usize| b as f64 / (1u64 << 30) as f64;
+    for &m in Method::all() {
+        let b = mem.breakdown(&preset, m, rank);
+        println!(
+            "{:<12} {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>8.2} {:>8.1} {:>9.1}",
+            m.label(),
+            gib(b.weights),
+            gib(b.grads),
+            gib(b.activations),
+            gib(b.optim_state),
+            gib(b.workspace),
+            gib(b.overhead),
+            b.total_gib()
+        );
+    }
+
+    if preset.name == "llama-1b" {
+        println!("\npaper Table 1 (A6000, measured): galore 31.1 | \
+                  apollo 35.5 | ldadam 34.9 | frugal 39.3 | \
+                  subtrack++ 32.6 | grasswalk 32.0 | grassjump 32.1");
+    } else if preset.name == "llama-7b" {
+        println!("\npaper Table 2 (measured): subtrack++/grasswalk/\
+                  grassjump all 49.4");
+    }
+    println!("\nThe model reproduces the paper's *relative* footprints \
+              (DESIGN.md §7); absolute GB depend on allocator/runtime \
+              constants calibrated via `fixed_overhead`.");
+    Ok(())
+}

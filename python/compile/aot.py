@@ -1,0 +1,247 @@
+"""AOT export: lower the L2 model (+ embedded L1 Pallas kernels) to HLO
+*text* artifacts the Rust runtime loads via the PJRT C API.
+
+HLO TEXT, NOT `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the `xla`
+0.1.6 crate) rejects (`proto.id() <= INT_MAX`). The HLO *text* parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (default config `tiny`, rank 16):
+
+  fwd_bwd_<cfg>.hlo.txt      (tokens, *params) -> (loss, *grads)
+  eval_loss_<cfg>.hlo.txt    (tokens, *params) -> (loss,)
+  train_step_<cfg>_r<r>.hlo.txt
+                             fused step: fwd/bwd + per-projection Pallas
+                             projected-Adam update (the e2e-composition
+                             proof artifact)
+  opt_step_<m>x<n>_r<r>.hlo.txt
+                             standalone fused optimizer update for each
+                             distinct projected layer shape (hot path for
+                             the Rust trainer's `pjrt` optimizer engine)
+  manifest.json              positional ABI: every artifact's input/output
+                             names + shapes + dtypes, param table, config
+
+Run: `cd python && python -m compile.aot --out ../artifacts` (the Makefile
+target `artifacts` does exactly this, and is a no-op when inputs are
+unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import projected_adam as pa
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def export_fwd_bwd(cfg, batch, out_dir, manifest):
+    specs = M.param_specs(cfg)
+    tok = _spec((batch, cfg.seq_len + 1), jnp.int32)
+    args = [tok] + [_spec(s) for _, s in specs]
+    lowered = jax.jit(M.make_fwd_bwd(cfg)).lower(*args)
+    path = f"fwd_bwd_{cfg.name()}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"][f"fwd_bwd_{cfg.name()}"] = {
+        "file": path,
+        "inputs": [_io_entry("tokens", (batch, cfg.seq_len + 1), "i32")]
+        + [_io_entry(n, s, "f32") for n, s in specs],
+        "outputs": [_io_entry("loss", (), "f32")]
+        + [_io_entry(f"grad.{n}", s, "f32") for n, s in specs],
+    }
+    return path
+
+
+def export_eval_loss(cfg, batch, out_dir, manifest):
+    specs = M.param_specs(cfg)
+    tok = _spec((batch, cfg.seq_len + 1), jnp.int32)
+    args = [tok] + [_spec(s) for _, s in specs]
+    lowered = jax.jit(M.make_eval_loss(cfg)).lower(*args)
+    path = f"eval_loss_{cfg.name()}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"][f"eval_loss_{cfg.name()}"] = {
+        "file": path,
+        "inputs": [_io_entry("tokens", (batch, cfg.seq_len + 1), "i32")]
+        + [_io_entry(n, s, "f32") for n, s in specs],
+        "outputs": [_io_entry("loss", (), "f32")],
+    }
+    return path
+
+
+def export_opt_step(m, n, r, out_dir, manifest, hp):
+    """Standalone fused projected-Adam update for one layer shape."""
+    step = pa.make_opt_step(m, n, r, **hp)
+    args = [
+        _spec((m, n)),            # W
+        _spec((m, n)),            # G
+        _spec((m, r)),            # S
+        _spec((r, n)),            # M
+        _spec((r, n)),            # V
+        _spec((r, r)),            # R
+        _spec(()),                # t
+        _spec(()),                # lam_prev
+        _spec(()),                # refresh flag
+    ]
+    lowered = jax.jit(step).lower(*args)
+    key = f"opt_step_{m}x{n}_r{r}"
+    path = f"{key}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"][key] = {
+        "file": path,
+        "inputs": [
+            _io_entry("W", (m, n), "f32"), _io_entry("G", (m, n), "f32"),
+            _io_entry("S", (m, r), "f32"), _io_entry("M", (r, n), "f32"),
+            _io_entry("V", (r, n), "f32"), _io_entry("R", (r, r), "f32"),
+            _io_entry("t", (), "f32"), _io_entry("lam_prev", (), "f32"),
+            _io_entry("refresh", (), "f32"),
+        ],
+        "outputs": [
+            _io_entry("W_new", (m, n), "f32"),
+            _io_entry("M_new", (r, n), "f32"),
+            _io_entry("V_new", (r, n), "f32"),
+            _io_entry("lam_norm", (), "f32"),
+        ],
+        "hyperparams": hp,
+        "vmem_report": pa.vmem_report(m, n, r),
+    }
+    return path
+
+
+def export_train_step(cfg, rank, batch, out_dir, manifest, hp):
+    specs = M.param_specs(cfg)
+    np_ = M.n_projected(cfg)
+    pshapes = M.projected_shapes(cfg, rank)
+
+    inputs = [_io_entry("tokens", (batch, cfg.seq_len + 1), "i32"),
+              _io_entry("t", (), "f32"), _io_entry("refresh", (), "f32")]
+    args = [_spec((batch, cfg.seq_len + 1), jnp.int32), _spec(()),
+            _spec(())]
+    for name, s in specs:
+        inputs.append(_io_entry(name, s, "f32"))
+        args.append(_spec(s))
+    for kind in ("M", "V"):
+        for name, m, n, _tr in pshapes:
+            inputs.append(_io_entry(f"{kind}.{name}", (rank, n), "f32"))
+            args.append(_spec((rank, n)))
+    for name, m, n, _tr in pshapes:
+        inputs.append(_io_entry(f"S.{name}", (m, rank), "f32"))
+        args.append(_spec((m, rank)))
+    for name, m, n, _tr in pshapes:
+        inputs.append(_io_entry(f"R.{name}", (rank, rank), "f32"))
+        args.append(_spec((rank, rank)))
+    inputs.append(_io_entry("lam_prev", (np_,), "f32"))
+    args.append(_spec((np_,)))
+
+    step = M.make_train_step(cfg, rank, **hp)
+    lowered = jax.jit(step).lower(*args)
+    key = f"train_step_{cfg.name()}_r{rank}"
+    path = f"{key}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    outputs = [_io_entry("loss", (), "f32")]
+    outputs += [_io_entry(f"new.{n}", s, "f32") for n, s in specs]
+    for kind in ("M", "V"):
+        for name, m, n, _tr in pshapes:
+            outputs.append(
+                _io_entry(f"new.{kind}.{name}", (rank, n), "f32"))
+    outputs.append(_io_entry("lam_norms", (np_,), "f32"))
+    manifest["artifacts"][key] = {
+        "file": path, "inputs": inputs, "outputs": outputs,
+        "hyperparams": hp,
+    }
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default="tiny", choices=list(M.CONFIGS))
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--skip-train-step", action="store_true",
+                    help="skip the (slow to lower) fused train_step")
+    args = ap.parse_args()
+
+    cfg = M.CONFIGS[args.config]
+    os.makedirs(args.out, exist_ok=True)
+    hp = {"alpha": 1e-3, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8,
+          "zeta": 1.01}
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"artifacts": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        manifest.setdefault("artifacts", {})
+
+    manifest["model"] = {
+        "config": args.config,
+        "vocab": cfg.vocab, "dim": cfg.dim, "hidden": cfg.hidden,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+        "seq_len": cfg.seq_len, "rank": args.rank, "batch": args.batch,
+        "params": [{"name": n, "shape": list(s)}
+                   for n, s in M.param_specs(cfg)],
+        "n_projected": M.n_projected(cfg),
+        "projected": [
+            {"name": n, "m": m, "n": nn, "transpose": tr}
+            for n, m, nn, tr in M.projected_shapes(cfg, args.rank)
+        ],
+    }
+
+    print(f"[aot] config={args.config} rank={args.rank} "
+          f"batch={args.batch} -> {args.out}")
+    p = export_fwd_bwd(cfg, args.batch, args.out, manifest)
+    print(f"[aot] wrote {p}")
+    p = export_eval_loss(cfg, args.batch, args.out, manifest)
+    print(f"[aot] wrote {p}")
+
+    # One standalone fused optimizer artifact per distinct projected shape
+    # (in optimizer orientation), plus a larger bench shape exercising the
+    # LLaMA-1B MLP geometry at CPU-tractable size.
+    shapes = sorted({(m, n) for _, m, n, _t in
+                     M.projected_shapes(cfg, args.rank)})
+    shapes.append((256, 688))  # bench shape
+    for (m, n) in shapes:
+        r = min(args.rank, m)
+        p = export_opt_step(m, n, r, args.out, manifest, hp)
+        print(f"[aot] wrote {p}")
+
+    if not args.skip_train_step:
+        p = export_train_step(cfg, args.rank, args.batch, args.out,
+                              manifest, hp)
+        print(f"[aot] wrote {p}")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest.json "
+          f"({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

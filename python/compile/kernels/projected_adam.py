@@ -1,0 +1,278 @@
+"""L1 Pallas kernel: fused projected-Adam + recovery-scaling update.
+
+The paper's per-layer hot spot is the optimizer update after the backward
+pass: two thin GEMMs (S^T G and S G~^O), the Adam moment math, and the
+column-wise recovery scaling. Done naively that is five separate kernels
+and five HBM round-trips over the (m, n) gradient. This kernel fuses them
+into ONE pass over the gradient.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * the grid tiles the n (column) axis — every quantity in the update is
+    column-separable except the global ||Lambda||_F growth limiter, which
+    the wrapper applies outside the kernel;
+  * S (m, r) and R (r, r) are pinned whole in VMEM (BlockSpec with a
+    constant index_map), they are small: r << m <= n;
+  * G / W / Lambda stream through VMEM in (m, bn) tiles; M / V in (r, bn);
+  * the two GEMMs are rank-r contractions that feed the MXU; the moment
+    and scaling math rides the VPU on the same resident tiles.
+
+`interpret=True` ALWAYS: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute. Correctness comes from pytest vs `ref.py`;
+TPU efficiency is estimated analytically (DESIGN.md §8, vmem_report()).
+
+Branching: instead of lax.cond (which would put both moment forms behind a
+select anyway on TPU), the kernel always evaluates both the regular
+(eqs 5-6) and the AO (eqs 7-8) moment updates on the resident tile and
+selects with `refresh` in {0.0, 1.0}. The AO extra cost is two (r, r) @
+(r, bn) MXU calls — negligible against the (m, bn) streams.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default column-tile width. 128 matches the TPU lane width; the wrapper
+# clamps to n and pads the last tile via pl.cdiv grid semantics.
+DEFAULT_BLOCK_N = 128
+
+# Scalar vector layout: [alpha, beta1, beta2, eps, t, refresh]
+N_SCALARS = 6
+
+
+def _kernel(scal_ref, g_ref, s_ref, r_ref, m_ref, v_ref, w_ref,
+            w_out, m_out, v_out, lam_out):
+    """One (m, bn) column tile of the fused update.
+
+    scal_ref : (1, N_SCALARS)  [alpha, beta1, beta2, eps, t, refresh]
+    g_ref    : (m, bn)   gradient tile
+    s_ref    : (m, r)    subspace basis (whole, pinned)
+    r_ref    : (r, r)    rotation S_t^T S_{t-1} (identity when not refreshing)
+    m_ref    : (r, bn)   first moment tile
+    v_ref    : (r, bn)   second moment tile
+    w_ref    : (m, bn)   weight tile
+    w_out    : (m, bn)   W - alpha * Ghat          (Lambda applied outside)
+    m_out    : (r, bn)   updated first moment
+    v_out    : (r, bn)   updated second moment
+    lam_out  : (m, bn)   unlimited Lambda tile
+    """
+    alpha = scal_ref[0, 0]
+    beta1 = scal_ref[0, 1]
+    beta2 = scal_ref[0, 2]
+    eps = scal_ref[0, 3]
+    t = scal_ref[0, 4]
+    refresh = scal_ref[0, 5]
+
+    g = g_ref[...]
+    s = s_ref[...]
+    rot = r_ref[...]
+    m_prev = m_ref[...]
+    v_prev = v_ref[...]
+
+    # eq 1 — project: MXU rank-r contraction (m, bn) -> (r, bn).
+    gt = jnp.dot(s.T, g, preferred_element_type=jnp.float32)
+
+    # eqs 5-6 — regular Adam moments.
+    m_reg = beta1 * m_prev + (1.0 - beta1) * gt
+    v_reg = beta2 * v_prev + (1.0 - beta2) * gt * gt
+
+    # eqs 7-8 — AO moments (rotate states onto the refreshed basis).
+    rm = jnp.dot(rot, m_prev, preferred_element_type=jnp.float32)
+    m_ao = beta1 * rm + (1.0 - beta1) * gt
+    centered = v_prev - m_prev * m_prev
+    est = jnp.dot(rot * rot, centered,
+                  preferred_element_type=jnp.float32) + rm * rm
+    weight = 1.0 - beta2 ** (t - 1.0)
+    v_ao = beta2 * (weight * jnp.abs(est)) + (1.0 - beta2) * gt * gt
+
+    m_new = jnp.where(refresh > 0.5, m_ao, m_reg)
+    v_new = jnp.where(refresh > 0.5, v_ao, v_reg)
+
+    # Bias-corrected Adam direction G~^O.
+    m_hat = m_new / (1.0 - beta1**t)
+    v_hat = v_new / (1.0 - beta2**t)
+    gt_o = m_hat / (jnp.sqrt(v_hat) + eps)
+
+    # eq 11 first half — back-project: MXU (r, bn) -> (m, bn).
+    ghat = jnp.dot(s, gt_o, preferred_element_type=jnp.float32)
+
+    # eq 9 — residual + column-wise recovery scaling (VPU reductions over
+    # the rank axis; both norms are per-column so tile-local).
+    delta = g - jnp.dot(s, gt, preferred_element_type=jnp.float32)
+    num = jnp.sqrt(jnp.sum(gt_o * gt_o, axis=0))
+    den = jnp.sqrt(jnp.sum(gt * gt, axis=0))
+    phi = num / jnp.maximum(den, ref.NORM_FLOOR)
+    lam = delta * phi[None, :]
+
+    w_out[...] = w_ref[...] - alpha * ghat
+    m_out[...] = m_new
+    v_out[...] = v_new
+    lam_out[...] = lam
+
+
+def projected_adam_step(W, G, S, M, V, R, t, lam_prev, *,
+                        alpha=1e-3, beta1=0.9, beta2=0.999, eps=1e-8,
+                        zeta=1.01, refresh=False, block_n=DEFAULT_BLOCK_N,
+                        interpret=True):
+    """Fused optimizer step; bit-for-bit semantics of ref.projected_adam_step_ref.
+
+    The Pallas grid covers the column axis. The eq-10 growth limiter needs
+    the global Frobenius norm of Lambda, so the kernel emits the unlimited
+    Lambda and the wrapper finishes: limit, then W -= alpha * Lambda.
+    """
+    m, n = G.shape
+    r = S.shape[1]
+    bn = min(block_n, n)
+    grid = (pl.cdiv(n, bn),)
+
+    # `t` and `refresh` may be python numbers OR traced f32 scalars (when
+    # this wrapper is called from the fused train_step artifact).
+    if isinstance(refresh, bool):
+        refresh = 1.0 if refresh else 0.0
+    scalars = jnp.stack([
+        jnp.float32(alpha), jnp.float32(beta1), jnp.float32(beta2),
+        jnp.float32(eps), jnp.asarray(t, jnp.float32),
+        jnp.asarray(refresh, jnp.float32),
+    ]).reshape(1, N_SCALARS)
+
+    col = lambda i: (0, i)   # stream column tiles
+    pin = lambda i: (0, 0)   # pin whole operand in VMEM
+
+    w_pre, m_new, v_new, lam = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N_SCALARS), pin),
+            pl.BlockSpec((m, bn), col),   # G
+            pl.BlockSpec((m, r), pin),    # S
+            pl.BlockSpec((r, r), pin),    # R
+            pl.BlockSpec((r, bn), col),   # M
+            pl.BlockSpec((r, bn), col),   # V
+            pl.BlockSpec((m, bn), col),   # W
+        ],
+        out_specs=[
+            pl.BlockSpec((m, bn), col),
+            pl.BlockSpec((r, bn), col),
+            pl.BlockSpec((r, bn), col),
+            pl.BlockSpec((m, bn), col),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((r, n), jnp.float32),
+            jax.ShapeDtypeStruct((r, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, G, S, R, M, V, W)
+
+    lam_limited, lam_norm = ref.growth_limit(lam, lam_prev, zeta)
+    w_new = w_pre - alpha * lam_limited
+    return w_new, m_new, v_new, lam_norm
+
+
+def choose_block_n(m, n, r, vmem_budget_bytes=16 * (1 << 20),
+                   dtype_bytes=4):
+    """Largest lane-aligned column tile that fits the VMEM budget.
+
+    Perf-pass tuner (EXPERIMENTS.md §Perf L1): larger tiles amortize the
+    pinned S/R operands over more columns (higher arithmetic intensity)
+    until the streamed tiles exhaust VMEM. Always a multiple of the
+    128-wide TPU lane, and at least one lane.
+    """
+    best = 128
+    bn = 128
+    while bn <= n + 127:
+        if vmem_report(m, n, r, block_n=bn,
+                       dtype_bytes=dtype_bytes)["vmem_bytes"] \
+                <= vmem_budget_bytes:
+            best = bn
+        else:
+            break
+        bn += 128
+    return min(best, max(n, 1))
+
+
+def vmem_report(m, n, r, block_n=DEFAULT_BLOCK_N, dtype_bytes=4):
+    """Analytic VMEM footprint + MXU utilization estimate for one tile.
+
+    Used by DESIGN.md §8 / EXPERIMENTS.md §Perf: interpret-mode wallclock is
+    NOT a TPU proxy, so the optimization loop reasons about structure.
+    """
+    bn = min(block_n, n)
+    tiles = {
+        "G": m * bn, "W_in": m * bn, "W_out": m * bn,
+        "Lambda": m * bn, "Delta_scratch": m * bn,
+        "S": m * r, "R": r * r,
+        "M_in": r * bn, "V_in": r * bn, "M_out": r * bn, "V_out": r * bn,
+        "Gt/Gt_o": 2 * r * bn,
+    }
+    vmem_bytes = sum(tiles.values()) * dtype_bytes
+    # MXU work per tile: S^T G, S Gt, S Gt_o (+ two tiny r*r GEMMs).
+    macs = 3 * m * r * bn + 2 * r * r * bn
+    # Bytes moved HBM<->VMEM per tile (stream tensors once each way).
+    hbm_bytes = (5 * m * bn + 4 * r * bn) * dtype_bytes
+    arithmetic_intensity = 2.0 * macs / hbm_bytes
+    return {
+        "block_n": bn,
+        "vmem_bytes": vmem_bytes,
+        "vmem_mib": vmem_bytes / (1 << 20),
+        "macs_per_tile": macs,
+        "hbm_bytes_per_tile": hbm_bytes,
+        "arithmetic_intensity_flops_per_byte": arithmetic_intensity,
+        "fits_16mib_vmem": vmem_bytes <= 16 * (1 << 20),
+    }
+
+
+# Convenience: a jitted whole-step for AOT lowering of a single layer shape.
+def make_opt_step(m, n, r, *, alpha, beta1, beta2, eps, zeta,
+                  block_n=DEFAULT_BLOCK_N):
+    """Returns a jax function (W,G,S,M,V,R,t,lam_prev,refresh)->(...) with
+    hyperparameters baked in, suitable for jax.jit(...).lower()."""
+
+    @functools.partial(jax.jit, static_argnums=())
+    def step(W, G, S, M, V, R, t, lam_prev, refresh):
+        # `t` and `refresh` arrive as f32[] literals from the Rust runtime.
+        mn, nn = W.shape
+        bn = min(block_n, nn)
+        scalars = jnp.stack(
+            [jnp.float32(alpha), jnp.float32(beta1), jnp.float32(beta2),
+             jnp.float32(eps), t, refresh]).reshape(1, N_SCALARS)
+        grid = (pl.cdiv(nn, bn),)
+        col = lambda i: (0, i)
+        pin = lambda i: (0, 0)
+        w_pre, m_new, v_new, lam = pl.pallas_call(
+            _kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, N_SCALARS), pin),
+                pl.BlockSpec((mn, bn), col),
+                pl.BlockSpec((mn, r), pin),
+                pl.BlockSpec((r, r), pin),
+                pl.BlockSpec((r, bn), col),
+                pl.BlockSpec((r, bn), col),
+                pl.BlockSpec((mn, bn), col),
+            ],
+            out_specs=[
+                pl.BlockSpec((mn, bn), col),
+                pl.BlockSpec((r, bn), col),
+                pl.BlockSpec((r, bn), col),
+                pl.BlockSpec((mn, bn), col),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((mn, nn), jnp.float32),
+                jax.ShapeDtypeStruct((r, nn), jnp.float32),
+                jax.ShapeDtypeStruct((r, nn), jnp.float32),
+                jax.ShapeDtypeStruct((mn, nn), jnp.float32),
+            ],
+            interpret=True,
+        )(scalars, G, S, R, M, V, W)
+        lam_limited, lam_norm = ref.growth_limit(lam, lam_prev, zeta)
+        w_new = w_pre - jnp.float32(alpha) * lam_limited
+        return w_new, m_new, v_new, lam_norm
+
+    return step

@@ -1,0 +1,172 @@
+"""Pure-jnp oracle for the fused projected-Adam + recovery-scaling update.
+
+This is the CORE correctness signal for the L1 Pallas kernel
+(`projected_adam.py`). Everything here follows the paper
+"Randomized Gradient Subspaces for Efficient LLM Training" exactly:
+
+  eq 1   G~   = S^T G                      (project into the rank-r subspace)
+  eq 5/6 regular Adam moment updates       (subspace unchanged)
+  eq 7/8 adaptive-optimizer (AO) updates   (subspace refreshed: rotate states)
+  eq 9   column-wise recovery scaling      (reintroduce the residual Delta)
+  eq 10  growth-rate limiter zeta
+  eq 11  W <- W - alpha*Ghat - alpha*Lambda
+
+Conventions (shared with the Rust implementation in rust/src/optim/):
+  W, G      : (m, n)  with m <= n  (wide matrices are transposed by callers)
+  S, S_prev : (m, r)  orthonormal columns
+  M, V      : (r, n)  Adam first/second moment *in the subspace*
+  R         : (r, r)  rotation S_t^T S_{t-1}; identity on non-refresh steps
+  t         : 1-based step counter (for bias correction and the
+              (1 - beta2^(t-1)) estimator weight of eq 8)
+
+The oracle is intentionally written in the most literal, unfused style.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Small positive floor used when dividing by column norms of the projected
+# gradient (eq 9); matches `RS_NORM_FLOOR` in rust/src/optim/rs.rs.
+NORM_FLOOR = 1e-12
+
+
+def project(S, G):
+    """eq 1: low-rank gradient G~ = S^T G, (r, n)."""
+    return S.T @ G
+
+
+def adam_moments_regular(M, V, Gt, beta1, beta2):
+    """eqs 5-6: standard Adam moment updates in the subspace."""
+    M_new = beta1 * M + (1.0 - beta1) * Gt
+    V_new = beta2 * V + (1.0 - beta2) * jnp.square(Gt)
+    return M_new, V_new
+
+
+def adam_moments_ao(M, V, Gt, R, beta1, beta2, t):
+    """eqs 7-8: AO moment updates after a subspace refresh.
+
+    R = S_t^T S_{t-1} rotates the old first moment onto the new basis.
+    The second moment is treated as a statistical estimator: the paper's
+    eq 8 is
+
+      V <- beta2 * [ (1 - beta2^(t-1)) * | R^{.2} (V - M^{.2})
+                                           + (R M)^{.2} | ] + (1-beta2) G~^2
+    """
+    RM = R @ M
+    M_new = beta1 * RM + (1.0 - beta1) * Gt
+    centered = V - jnp.square(M)  # variance estimate around the mean
+    est = jnp.square(R) @ centered + jnp.square(RM)
+    weight = 1.0 - beta2 ** (t - 1)
+    V_new = beta2 * (weight * jnp.abs(est)) + (1.0 - beta2) * jnp.square(Gt)
+    return M_new, V_new
+
+
+def adam_direction(M, V, beta1, beta2, t, eps):
+    """Bias-corrected Adam direction G~^O = M^ / (sqrt(V^) + eps)."""
+    m_hat = M / (1.0 - beta1**t)
+    v_hat = V / (1.0 - beta2**t)
+    return m_hat / (jnp.sqrt(v_hat) + eps)
+
+
+def recovery_scale(Gt, Gt_o, Delta):
+    """eq 9: column-wise rescaling of the discarded residual.
+
+    phi_i = ||G~^O[:, i]|| / ||G~[:, i]||   (2-norm over the rank axis)
+    Lambda = phi * Delta                      (broadcast over columns)
+    """
+    num = jnp.linalg.norm(Gt_o, axis=0)
+    den = jnp.linalg.norm(Gt, axis=0)
+    phi = num / jnp.maximum(den, NORM_FLOOR)
+    return Delta * phi[None, :]
+
+
+def growth_limit(Lambda, lam_prev, zeta):
+    """eq 10: if ||Lambda||/||Lambda_prev|| > zeta, rescale to the cap.
+
+    lam_prev <= 0 (first step) disables the limiter.
+    """
+    lam = jnp.linalg.norm(Lambda)
+    cap = zeta * lam_prev
+    do_limit = jnp.logical_and(lam_prev > 0.0, lam > cap)
+    scale = jnp.where(do_limit, cap / jnp.maximum(lam, NORM_FLOOR), 1.0)
+    return Lambda * scale, jnp.where(do_limit, cap, lam)
+
+
+def projected_adam_step_ref(
+    W,
+    G,
+    S,
+    M,
+    V,
+    R,
+    t,
+    lam_prev,
+    *,
+    alpha=1e-3,
+    beta1=0.9,
+    beta2=0.999,
+    eps=1e-8,
+    zeta=1.01,
+    refresh=False,
+):
+    """One full optimizer step for a single (m, n) parameter matrix.
+
+    Returns (W_new, M_new, V_new, lam_norm). `refresh` selects AO (eqs 7-8)
+    vs regular Adam (eqs 5-6); callers pass R = I when refresh is False.
+    """
+    Gt = project(S, G)
+    if refresh:
+        M_new, V_new = adam_moments_ao(M, V, Gt, R, beta1, beta2, t)
+    else:
+        M_new, V_new = adam_moments_regular(M, V, Gt, beta1, beta2)
+    Gt_o = adam_direction(M_new, V_new, beta1, beta2, t, eps)
+    Ghat = S @ Gt_o
+    Delta = G - S @ Gt
+    Lambda = recovery_scale(Gt, Gt_o, Delta)
+    Lambda, lam_norm = growth_limit(Lambda, lam_prev, zeta)
+    W_new = W - alpha * Ghat - alpha * Lambda
+    return W_new, M_new, V_new, lam_norm
+
+
+# ---------------------------------------------------------------------------
+# Reference subspace-update rules (used by python tests to cross-check the
+# Rust implementations through golden files, and by aot.py for shapes).
+# ---------------------------------------------------------------------------
+
+
+def grassmann_exp_step(S, X, eta):
+    """eq 4: geodesic step from S in tangent direction X (thin SVD of X).
+
+    X is first projected to the horizontal space (I - S S^T) X so that the
+    direction is a valid Grassmannian tangent vector.
+    """
+    Xh = X - S @ (S.T @ X)
+    U, sig, Vt = jnp.linalg.svd(Xh, full_matrices=False)
+    Vmat = Vt.T
+    cos = jnp.cos(sig * eta)
+    sin = jnp.sin(sig * eta)
+    moved = (S @ Vmat) * cos[None, :] + U * sin[None, :]
+    S_new = moved @ Vt + S @ (jnp.eye(S.shape[1]) - Vmat @ Vt)
+    # Re-orthonormalize to kill rounding drift (QR keeps span).
+    Q, _ = jnp.linalg.qr(S_new)
+    return Q
+
+
+def random_orthonormal(key_matrix):
+    """GrassJump basis: QR of a provided gaussian sample (m, r)."""
+    Q, _ = jnp.linalg.qr(key_matrix)
+    return Q
+
+
+def svd_basis(G, r):
+    """GaLore/Fira basis: top-r left singular vectors of G (eq 2)."""
+    U, _, _ = jnp.linalg.svd(G, full_matrices=False)
+    return U[:, :r]
+
+
+def energy_ratio(G, S):
+    """eq 3: R_t = ||S^T G||_F / ||G||_F."""
+    return jnp.linalg.norm(S.T @ G) / jnp.maximum(
+        jnp.linalg.norm(G), NORM_FLOOR
+    )

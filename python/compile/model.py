@@ -1,0 +1,267 @@
+"""L2: LLaMA-style decoder forward/backward in JAX (build-time only).
+
+The model mirrors the architecture the paper trains (Touvron et al., 2023):
+pre-RMSNorm decoder blocks with rotary attention and a SwiGLU MLP, i.e.
+exactly the seven projection matrices per block whose gradient subspaces
+the paper analyzes:
+
+  attention:  q_proj, k_proj, v_proj  (dim, dim)     o_proj (dim, dim)
+  mlp:        gate_proj, up_proj      (dim, hidden)  down_proj (hidden, dim)
+
+Parameters are a flat, deterministically ordered list of f32 matrices so
+the Rust runtime can marshal PJRT literals positionally; `param_specs()`
+is the single source of truth for that order and is emitted into
+artifacts/manifest.json by aot.py.
+
+Only `fwd_bwd` (loss + grads), `eval_loss`, and `train_step` (fwd/bwd +
+fused L1 optimizer update on every projection) are lowered to HLO; Python
+never runs at training time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import projected_adam as pa
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Shape configuration. Defaults = `tiny` (CI-sized e2e proof)."""
+
+    vocab: int = 256
+    dim: int = 64
+    hidden: int = 172        # ~8/3 * dim, rounded like LLaMA
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    def name(self) -> str:
+        return f"d{self.dim}_l{self.n_layers}_v{self.vocab}_s{self.seq_len}"
+
+
+TINY = ModelConfig()
+# A larger config for the e2e driver when more CPU budget is available.
+SMALL = ModelConfig(vocab=2048, dim=256, hidden=688, n_layers=4,
+                    n_heads=8, seq_len=128)
+CONFIGS = {"tiny": TINY, "small": SMALL}
+
+# The seven projection types of Figure 1, in paper order.
+PROJ_TYPES = ("q_proj", "k_proj", "v_proj", "o_proj",
+              "gate_proj", "up_proj", "down_proj")
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the positional ABI with Rust.
+
+    2-D projection params (the ones the paper's optimizers project) come
+    first, block by block; embeddings and norm vectors follow.
+    """
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    d, h = cfg.dim, cfg.hidden
+    proj_shapes = {
+        "q_proj": (d, d), "k_proj": (d, d), "v_proj": (d, d),
+        "o_proj": (d, d), "gate_proj": (d, h), "up_proj": (d, h),
+        "down_proj": (h, d),
+    }
+    for layer in range(cfg.n_layers):
+        for p in PROJ_TYPES:
+            specs.append((f"layers.{layer}.{p}", proj_shapes[p]))
+    specs.append(("embed", (cfg.vocab, d)))
+    specs.append(("lm_head", (d, cfg.vocab)))
+    for layer in range(cfg.n_layers):
+        specs.append((f"layers.{layer}.attn_norm", (d,)))
+        specs.append((f"layers.{layer}.mlp_norm", (d,)))
+    specs.append(("final_norm", (d,)))
+    return specs
+
+
+def n_projected(cfg: ModelConfig) -> int:
+    """Number of leading params that get the projected optimizer."""
+    return cfg.n_layers * len(PROJ_TYPES)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Scaled-gaussian init matching rust/src/model/init.rs."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = (2.0 / (5.0 * fan_in)) ** 0.5
+            params.append(
+                std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, cfg: ModelConfig):
+    """Rotary embedding over the head dimension; x: (B, T, H, hd)."""
+    hd = cfg.head_dim
+    half = hd // 2
+    pos = jnp.arange(x.shape[1], dtype=jnp.float32)[:, None]
+    freq = cfg.rope_theta ** (
+        -jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos * freq[None, :]            # (T, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(params: List[jax.Array], tokens: jax.Array,
+            cfg: ModelConfig) -> jax.Array:
+    """Next-token mean cross-entropy loss. tokens: (B, T+1) int32."""
+    np_ = n_projected(cfg)
+    proj = params[:np_]
+    embed = params[np_]
+    lm_head = params[np_ + 1]
+    norms = params[np_ + 2:]
+
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    B, T = inputs.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+
+    x = embed[inputs]                    # (B, T, d)
+    mask = jnp.tril(jnp.ones((T, T), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    for layer in range(cfg.n_layers):
+        base = layer * len(PROJ_TYPES)
+        wq, wk, wv, wo, wg, wu, wd = proj[base:base + 7]
+        attn_norm = norms[2 * layer]
+        mlp_norm = norms[2 * layer + 1]
+
+        h = _rmsnorm(x, attn_norm)
+        q = (h @ wq).reshape(B, T, H, hd)
+        k = (h @ wk).reshape(B, T, H, hd)
+        v = (h @ wv).reshape(B, T, H, hd)
+        q, k = _rope(q, cfg), _rope(k, cfg)
+        att = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(
+            jnp.float32(hd))
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, cfg.dim)
+        x = x + o @ wo
+
+        h = _rmsnorm(x, mlp_norm)
+        x = x + (jax.nn.silu(h @ wg) * (h @ wu)) @ wd
+
+    x = _rmsnorm(x, params[-1])
+    logits = x @ lm_head                 # (B, T, vocab)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def fwd_bwd(params: List[jax.Array], tokens: jax.Array,
+            cfg: ModelConfig):
+    """(loss, [grads...]) — the artifact the Rust trainer calls per step."""
+    loss, grads = jax.value_and_grad(
+        lambda p: forward(p, tokens, cfg))(params)
+    return (loss, *grads)
+
+
+def make_fwd_bwd(cfg: ModelConfig):
+    def fn(tokens, *params):
+        return fwd_bwd(list(params), tokens, cfg)
+    return fn
+
+
+def make_eval_loss(cfg: ModelConfig):
+    def fn(tokens, *params):
+        return (forward(list(params), tokens, cfg),)
+    return fn
+
+
+def make_train_step(cfg: ModelConfig, rank: int, *, alpha=1e-3,
+                    beta1=0.9, beta2=0.999, eps=1e-8, zeta=1.01,
+                    dense_lr=1e-3):
+    """Fully fused train step: fwd/bwd + the L1 Pallas kernel applied to
+    every projection parameter + plain SGD on embeddings/norms.
+
+    This is the all-layers-compose artifact: the Pallas kernel lowers into
+    the SAME HLO as the model gradient graph. Signature (positional):
+
+      tokens (B, T+1) i32,
+      t f32[], refresh f32[],
+      params...               (len = len(param_specs)),
+      M_i, V_i (rank, n_i)    for each projected param i,
+      S_i (m_i, rank), R_i (rank, rank),
+      lam_prev (np,) f32
+
+    Returns (loss, params'..., M'..., V'..., lam_norms).
+
+    Projected params with m > n (down_proj) run in transposed orientation;
+    the ABI (manifest.json) records per-param orientation.
+    """
+    np_ = n_projected(cfg)
+
+    def step(tokens, t, refresh, *rest):
+        n_params = len(param_specs(cfg))
+        params = list(rest[:n_params])
+        off = n_params
+        Ms = list(rest[off:off + np_]); off += np_
+        Vs = list(rest[off:off + np_]); off += np_
+        Ss = list(rest[off:off + np_]); off += np_
+        Rs = list(rest[off:off + np_]); off += np_
+        lam_prev = rest[off]
+
+        out = fwd_bwd(params, tokens, cfg)
+        loss, grads = out[0], list(out[1:])
+
+        new_params = list(params)
+        new_m, new_v, lam_norms = [], [], []
+        for i in range(np_):
+            W, G, S, R = params[i], grads[i], Ss[i], Rs[i]
+            m_rows, n_cols = W.shape
+            transpose = m_rows > n_cols
+            if transpose:
+                W, G = W.T, G.T
+            w2, m2, v2, ln = pa.projected_adam_step(
+                W, G, S, Ms[i], Vs[i], R, t, lam_prev[i],
+                alpha=alpha, beta1=beta1, beta2=beta2, eps=eps,
+                zeta=zeta, refresh=refresh)
+            new_params[i] = w2.T if transpose else w2
+            new_m.append(m2)
+            new_v.append(v2)
+            lam_norms.append(ln)
+        # Dense (non-projected) params: plain SGD keeps the artifact lean;
+        # the Rust trainer runs its own dense Adam on the unfused path.
+        for i in range(np_, n_params):
+            new_params[i] = params[i] - dense_lr * grads[i]
+
+        return (loss, *new_params, *new_m, *new_v,
+                jnp.stack(lam_norms))
+
+    return step
+
+
+def projected_shapes(cfg: ModelConfig, rank: int):
+    """Per projected param: (name, m, n, transpose) in optimizer
+    orientation (m <= n after transposition)."""
+    out = []
+    for name, shape in param_specs(cfg)[:n_projected(cfg)]:
+        m, n = shape
+        transpose = m > n
+        if transpose:
+            m, n = n, m
+        out.append((name, m, n, transpose))
+    return out

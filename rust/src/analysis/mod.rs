@@ -1,0 +1,203 @@
+//! S11: gradient-subspace analysis — the measurements behind the paper's
+//! Figures 1 and 2.
+//!
+//! * [`energy_ratio`] — eq 3: fraction of gradient Frobenius energy
+//!   captured by the rank-r core subspace (Figure 1's y-axis).
+//! * [`ErrorSpectrum`] — the top-k singular values of the subspace
+//!   estimation error derivative ∂E/∂S (Figure 2's curves): small,
+//!   rapidly decaying, flattening values ⇒ near-flat curvature.
+//! * [`LayerCluster`] — aggregation of per-matrix measurements into the
+//!   seven projection-type clusters the paper plots.
+
+use crate::model::shapes::PROJ_TYPES;
+use crate::optim::grassmann;
+use crate::tensor::{left_singular_basis, matmul_tn, svd_thin, Mat};
+
+/// eq 3: R_t = ||S^T G||_F / ||G||_F, in [0, 1].
+pub fn energy_ratio(g: &Mat, s: &Mat) -> f32 {
+    let gt = matmul_tn(s, g);
+    (gt.fro_norm() / g.fro_norm().max(1e-12)).min(1.0)
+}
+
+/// Energy ratio of the *best* rank-r subspace (SVD basis) — what Figure 1
+/// reports per layer per step.
+pub fn core_energy_ratio(g: &Mat, rank: usize) -> f32 {
+    // Orientation: operate on the m <= n side.
+    let g_oriented;
+    let g = if g.rows > g.cols {
+        g_oriented = g.t();
+        &g_oriented
+    } else {
+        g
+    };
+    let s = left_singular_basis(g, rank.min(g.rows));
+    energy_ratio(g, &s)
+}
+
+/// Top-k singular values of the subspace-estimation-error derivative
+/// −2 (I − S Sᵀ) G Gᵀ S (Figure 2). Values are normalized by the
+/// gradient's squared norm so layers of different scale are comparable.
+pub fn error_derivative_spectrum(g: &Mat, s: &Mat, k: usize) -> Vec<f32> {
+    let d = grassmann::error_derivative(s, g);
+    let svd = svd_thin(&d);
+    let scale = (g.fro_norm() * g.fro_norm()).max(1e-12);
+    svd.s
+        .iter()
+        .take(k)
+        .map(|&x| x / scale)
+        .collect()
+}
+
+/// Uniformity of a (nonnegative, descending) spectrum: ratio of the
+/// geometric mean to the arithmetic mean — 1.0 means perfectly flat.
+/// The paper observes this increasing over training (flattening).
+pub fn spectrum_flatness(spec: &[f32]) -> f32 {
+    let eps = 1e-20f64;
+    let n = spec.len().max(1) as f64;
+    let am: f64 = spec.iter().map(|&x| x as f64).sum::<f64>() / n + eps;
+    let gm: f64 = (spec
+        .iter()
+        .map(|&x| (x as f64 + eps).ln())
+        .sum::<f64>()
+        / n)
+        .exp();
+    (gm / am) as f32
+}
+
+/// Aggregates a per-step measurement over the 7 projection-type clusters
+/// across all decoder layers (max or mean within cluster, as the paper
+/// does per figure).
+#[derive(Clone, Debug)]
+pub struct LayerCluster {
+    /// [proj_type][sample] accumulated values for the current step.
+    acc: Vec<Vec<f32>>,
+}
+
+impl Default for LayerCluster {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LayerCluster {
+    pub fn new() -> LayerCluster {
+        LayerCluster { acc: vec![Vec::new(); PROJ_TYPES.len()] }
+    }
+
+    pub fn add(&mut self, proj_type: usize, value: f32) {
+        self.acc[proj_type].push(value);
+    }
+
+    /// Mean per cluster (Figure 1 lines).
+    pub fn means(&self) -> Vec<f32> {
+        self.acc
+            .iter()
+            .map(|v| {
+                if v.is_empty() {
+                    f32::NAN
+                } else {
+                    v.iter().sum::<f32>() / v.len() as f32
+                }
+            })
+            .collect()
+    }
+
+    /// Max per cluster (Figure 2's upper-bound aggregation).
+    pub fn maxes(&self) -> Vec<f32> {
+        self.acc
+            .iter()
+            .map(|v| v.iter().cloned().fold(f32::NAN, f32::max))
+            .collect()
+    }
+
+    pub fn clear(&mut self) {
+        for v in &mut self.acc {
+            v.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::grassmann::random_point;
+    use crate::tensor::matmul;
+    use crate::util::rng::Rng;
+
+    fn low_rank_plus_noise(
+        m: usize,
+        n: usize,
+        rank: usize,
+        core_scale: f32,
+        noise: f32,
+        rng: &mut Rng,
+    ) -> Mat {
+        let u = random_point(m, rank, rng);
+        let coeff = Mat::randn(rank, n, core_scale, rng);
+        let mut g = matmul(&u, &coeff);
+        g.axpy(noise, &Mat::randn(m, n, 1.0, rng));
+        g
+    }
+
+    #[test]
+    fn energy_ratio_full_rank_is_one() {
+        let mut rng = Rng::new(1);
+        let g = Mat::randn(10, 20, 1.0, &mut rng);
+        assert!((core_energy_ratio(&g, 10) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn strong_core_high_ratio_noise_low_ratio() {
+        let mut rng = Rng::new(2);
+        let strong = low_rank_plus_noise(32, 64, 4, 5.0, 0.05, &mut rng);
+        assert!(core_energy_ratio(&strong, 4) > 0.95);
+        let noise = Mat::randn(32, 64, 1.0, &mut rng);
+        let r = core_energy_ratio(&noise, 4);
+        // Pure noise: rank-4 of 32 captures roughly sqrt-ish share, far
+        // below the structured case but nonzero.
+        assert!(r > 0.1 && r < 0.8, "r={r}");
+    }
+
+    #[test]
+    fn wide_matrices_handled_by_orientation() {
+        let mut rng = Rng::new(3);
+        let g = low_rank_plus_noise(64, 16, 4, 5.0, 0.05, &mut rng);
+        assert!(core_energy_ratio(&g, 4) > 0.9);
+    }
+
+    #[test]
+    fn error_spectrum_small_when_subspace_correct() {
+        let mut rng = Rng::new(4);
+        let u = random_point(24, 4, &mut rng);
+        let coeff = Mat::randn(4, 40, 3.0, &mut rng);
+        let g = matmul(&u, &coeff);
+        let spec_right = error_derivative_spectrum(&g, &u, 10);
+        let wrong = random_point(24, 4, &mut Rng::new(99));
+        let spec_wrong = error_derivative_spectrum(&g, &wrong, 10);
+        assert!(spec_right[0] < 1e-4, "{:?}", &spec_right[..3]);
+        assert!(spec_wrong[0] > spec_right[0] * 100.0);
+    }
+
+    #[test]
+    fn flatness_bounds() {
+        assert!((spectrum_flatness(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-5);
+        let skew = spectrum_flatness(&[1.0, 0.001, 0.0001]);
+        assert!(skew < 0.2, "{skew}");
+    }
+
+    #[test]
+    fn cluster_aggregation() {
+        let mut c = LayerCluster::new();
+        c.add(0, 1.0);
+        c.add(0, 3.0);
+        c.add(6, 5.0);
+        let means = c.means();
+        assert_eq!(means[0], 2.0);
+        assert_eq!(means[6], 5.0);
+        assert!(means[1].is_nan());
+        let maxes = c.maxes();
+        assert_eq!(maxes[0], 3.0);
+        c.clear();
+        assert!(c.means()[0].is_nan());
+    }
+}

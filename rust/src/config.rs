@@ -1,0 +1,159 @@
+//! S12: typed experiment configuration, loadable from the TOML presets in
+//! `configs/` and overridable from the CLI.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{OptEngine, TrainConfig};
+use crate::optim::{Method, Schedule};
+use crate::util::toml::{parse as parse_toml, TomlTable};
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    pub train: TrainConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            artifacts_dir: "artifacts".into(),
+            out_dir: "results".into(),
+            train: TrainConfig::default(),
+        }
+    }
+}
+
+fn get_usize(t: &TomlTable, key: &str, default: usize) -> usize {
+    t.get(key)
+        .and_then(|v| v.as_i64())
+        .map(|v| v as usize)
+        .unwrap_or(default)
+}
+
+fn get_f32(t: &TomlTable, key: &str, default: f32) -> f32 {
+    t.get(key).and_then(|v| v.as_f64()).map(|v| v as f32).unwrap_or(default)
+}
+
+fn get_str<'a>(t: &'a TomlTable, key: &str, default: &'a str) -> &'a str {
+    t.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+}
+
+impl ExperimentConfig {
+    pub fn from_toml_str(src: &str) -> Result<ExperimentConfig> {
+        let t = parse_toml(src).map_err(|e| anyhow!("config: {e}"))?;
+        let mut cfg = ExperimentConfig {
+            name: get_str(&t, "name", "default").to_string(),
+            artifacts_dir: get_str(&t, "paths.artifacts", "artifacts")
+                .to_string(),
+            out_dir: get_str(&t, "paths.out", "results").to_string(),
+            train: TrainConfig::default(),
+        };
+        let tr = &mut cfg.train;
+        if let Some(m) = t.get("train.method").and_then(|v| v.as_str()) {
+            tr.method = Method::parse(m)
+                .ok_or_else(|| anyhow!("unknown method `{m}`"))?;
+        }
+        tr.rank = get_usize(&t, "train.rank", tr.rank);
+        tr.interval = get_usize(&t, "train.interval", tr.interval);
+        tr.lr = get_f32(&t, "train.lr", tr.lr);
+        tr.dense_lr = get_f32(&t, "train.dense_lr", tr.dense_lr);
+        tr.steps = get_usize(&t, "train.steps", tr.steps);
+        tr.grad_accum = get_usize(&t, "train.grad_accum", tr.grad_accum);
+        tr.workers = get_usize(&t, "train.workers", tr.workers);
+        tr.seed = get_usize(&t, "train.seed", tr.seed as usize) as u64;
+        tr.eval_every = get_usize(&t, "train.eval_every", tr.eval_every);
+        tr.eval_batches =
+            get_usize(&t, "train.eval_batches", tr.eval_batches);
+        tr.log_every = get_usize(&t, "train.log_every", tr.log_every);
+        match get_str(&t, "train.opt_engine", "rust") {
+            "pjrt" => tr.opt_engine = OptEngine::Pjrt,
+            _ => tr.opt_engine = OptEngine::Rust,
+        }
+        let warmup = get_usize(&t, "train.warmup", 0);
+        match get_str(&t, "train.schedule", "constant") {
+            "warmup" => tr.schedule = Schedule::Warmup { warmup },
+            "cosine" => {
+                tr.schedule = Schedule::WarmupCosine {
+                    warmup,
+                    total_steps: tr.steps,
+                    min_ratio: get_f32(&t, "train.min_lr_ratio", 0.1),
+                }
+            }
+            _ => tr.schedule = Schedule::Constant,
+        }
+        if let Some(every) =
+            t.get("train.analysis_every").and_then(|v| v.as_i64())
+        {
+            tr.analysis_every = Some(every as usize);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<ExperimentConfig> {
+        let src = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow!("read {:?}: {e}", path.as_ref()))?;
+        Self::from_toml_str(&src)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+name = "table1-grasswalk"
+[paths]
+artifacts = "artifacts"
+out = "results/table1"
+[train]
+method = "grasswalk"
+rank = 16
+interval = 100
+lr = 1e-3
+steps = 500
+grad_accum = 2
+workers = 2
+schedule = "cosine"
+warmup = 50
+analysis_every = 100
+opt_engine = "pjrt"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "table1-grasswalk");
+        assert_eq!(cfg.train.method, Method::GrassWalk);
+        assert_eq!(cfg.train.workers, 2);
+        assert_eq!(cfg.train.opt_engine, OptEngine::Pjrt);
+        assert_eq!(cfg.train.analysis_every, Some(100));
+        match cfg.train.schedule {
+            Schedule::WarmupCosine { warmup, total_steps, .. } => {
+                assert_eq!(warmup, 50);
+                assert_eq!(total_steps, 500);
+            }
+            _ => panic!("wrong schedule"),
+        }
+    }
+
+    #[test]
+    fn defaults_when_sparse() {
+        let cfg = ExperimentConfig::from_toml_str("name = \"x\"").unwrap();
+        assert_eq!(cfg.train.method, Method::GrassWalk);
+        assert_eq!(cfg.train.opt_engine, OptEngine::Rust);
+    }
+
+    #[test]
+    fn rejects_unknown_method() {
+        let r = ExperimentConfig::from_toml_str(
+            "[train]\nmethod = \"bogus\"",
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Ring all-reduce over in-process workers — the collective substrate of
+//! the simulated data-parallel runtime (DESIGN.md §7: stands in for the
+//! multi-GPU NCCL ring the paper's 7B runs rely on).
+//!
+//! Implements the classic two-phase ring: reduce-scatter (N−1 steps) then
+//! all-gather (N−1 steps), each worker owning chunk `rank` at the end of
+//! phase 1. Workers are threads; "links" are bounded channels.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Barrier};
+
+/// A reusable ring of N workers for repeated all-reduce rounds.
+pub struct Ring {
+    n: usize,
+}
+
+impl Ring {
+    pub fn new(n: usize) -> Ring {
+        assert!(n >= 1);
+        Ring { n }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.n
+    }
+
+    /// All-reduce (sum) the per-worker vectors in place. Every vector
+    /// must have the same length. Returns per-worker results (all equal).
+    ///
+    /// The chunked ring transfers 2·(N−1)/N of the data per worker — the
+    /// bandwidth-optimal schedule; a test asserts the traffic accounting.
+    pub fn all_reduce_sum(&self, buffers: &mut [Vec<f32>]) -> RingStats {
+        let n = self.n;
+        assert_eq!(buffers.len(), n);
+        if n == 1 {
+            return RingStats { bytes_sent_per_worker: 0, steps: 0 };
+        }
+        let len = buffers[0].len();
+        assert!(buffers.iter().all(|b| b.len() == len));
+
+        // Chunk boundaries (chunk i: [starts[i], starts[i+1])).
+        let starts: Vec<usize> =
+            (0..=n).map(|i| i * len / n).collect();
+
+        // Channels: tx[i] sends to worker (i+1) % n.
+        let mut senders: Vec<Option<SyncSender<Vec<f32>>>> =
+            (0..n).map(|_| None).collect();
+        let mut receivers: Vec<Option<Receiver<Vec<f32>>>> =
+            (0..n).map(|_| None).collect();
+        for i in 0..n {
+            let (tx, rx) = sync_channel::<Vec<f32>>(1);
+            senders[i] = Some(tx);
+            receivers[(i + 1) % n] = Some(rx);
+        }
+        let barrier = Arc::new(Barrier::new(n));
+        let mut bytes_sent = 0usize;
+
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = buffers
+                .iter_mut()
+                .enumerate()
+                .zip(senders.iter_mut().zip(receivers.iter_mut()))
+                .map(|((rank, buf), (tx, rx))| {
+                    let tx = tx.take().unwrap();
+                    let rx = rx.take().unwrap();
+                    let starts = starts.clone();
+                    let barrier = barrier.clone();
+                    scope.spawn(move || {
+                        let mut sent = 0usize;
+                        // Phase 1: reduce-scatter.
+                        for step in 0..n - 1 {
+                            let send_chunk = (rank + n - step) % n;
+                            let (s0, s1) =
+                                (starts[send_chunk], starts[send_chunk + 1]);
+                            tx.send(buf[s0..s1].to_vec()).unwrap();
+                            sent += (s1 - s0) * 4;
+                            let recv_chunk = (rank + n - step - 1 + n) % n;
+                            let data = rx.recv().unwrap();
+                            let (r0, r1) =
+                                (starts[recv_chunk], starts[recv_chunk + 1]);
+                            for (dst, src) in
+                                buf[r0..r1].iter_mut().zip(&data)
+                            {
+                                *dst += *src;
+                            }
+                        }
+                        // Phase 2: all-gather.
+                        for step in 0..n - 1 {
+                            let send_chunk = (rank + 1 + n - step) % n;
+                            let (s0, s1) =
+                                (starts[send_chunk], starts[send_chunk + 1]);
+                            tx.send(buf[s0..s1].to_vec()).unwrap();
+                            sent += (s1 - s0) * 4;
+                            let recv_chunk = (rank + n - step) % n;
+                            let data = rx.recv().unwrap();
+                            let (r0, r1) =
+                                (starts[recv_chunk], starts[recv_chunk + 1]);
+                            buf[r0..r1].copy_from_slice(&data);
+                        }
+                        barrier.wait();
+                        sent
+                    })
+                })
+                .collect();
+            for h in handles {
+                bytes_sent = bytes_sent.max(h.join().unwrap());
+            }
+        });
+
+        RingStats { bytes_sent_per_worker: bytes_sent, steps: 2 * (n - 1) }
+    }
+
+    /// Convenience: average instead of sum.
+    pub fn all_reduce_mean(&self, buffers: &mut [Vec<f32>]) -> RingStats {
+        let stats = self.all_reduce_sum(buffers);
+        let inv = 1.0 / self.n as f32;
+        for b in buffers.iter_mut() {
+            for x in b.iter_mut() {
+                *x *= inv;
+            }
+        }
+        stats
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RingStats {
+    pub bytes_sent_per_worker: usize,
+    pub steps: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn make_buffers(n: usize, len: usize) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut rng = Rng::new(len as u64);
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let mut expect = vec![0.0f32; len];
+        for b in &bufs {
+            for (e, x) in expect.iter_mut().zip(b) {
+                *e += *x;
+            }
+        }
+        (bufs, expect)
+    }
+
+    #[test]
+    fn sum_matches_serial_reduction() {
+        for n in [2usize, 3, 4, 8] {
+            for len in [1usize, 7, 64, 1000] {
+                let (mut bufs, expect) = make_buffers(n, len);
+                Ring::new(n).all_reduce_sum(&mut bufs);
+                for (w, b) in bufs.iter().enumerate() {
+                    for (i, (&got, &want)) in
+                        b.iter().zip(&expect).enumerate()
+                    {
+                        assert!(
+                            (got - want).abs() < 1e-3,
+                            "n={n} len={len} worker={w} i={i}: {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mean_divides_by_world() {
+        let n = 4;
+        let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| vec![2.0f32; 10]).collect();
+        Ring::new(n).all_reduce_mean(&mut bufs);
+        for b in &bufs {
+            assert!(b.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn single_worker_noop() {
+        let mut bufs = vec![vec![1.0f32, 2.0]];
+        let stats = Ring::new(1).all_reduce_sum(&mut bufs);
+        assert_eq!(stats.steps, 0);
+        assert_eq!(bufs[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn bandwidth_optimal_traffic() {
+        // Ring sends ~2 (N-1)/N of the buffer per worker.
+        let n = 4;
+        let len = 1000;
+        let (mut bufs, _) = make_buffers(n, len);
+        let stats = Ring::new(n).all_reduce_sum(&mut bufs);
+        let ideal = 2.0 * (n - 1) as f64 / n as f64 * (len * 4) as f64;
+        let actual = stats.bytes_sent_per_worker as f64;
+        assert!(
+            (actual - ideal).abs() / ideal < 0.05,
+            "actual {actual} ideal {ideal}"
+        );
+        assert_eq!(stats.steps, 2 * (n - 1));
+    }
+
+    #[test]
+    fn uneven_chunking_correct() {
+        // len not divisible by n exercises the chunk boundary math.
+        let (mut bufs, expect) = make_buffers(3, 10);
+        Ring::new(3).all_reduce_sum(&mut bufs);
+        for b in &bufs {
+            for (got, want) in b.iter().zip(&expect) {
+                assert!((got - want).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! S13: checkpointing — binary save/restore of the trainer's parameters
+//! and position.
+//!
+//! Format (little-endian):
+//!   magic "GWCKPT01" | step u64 | seed u64 | n_floats u64 | f32 data...
+//!   | crc32 of the data section
+//!
+//! Subspace/optimizer state is intentionally NOT serialized: every method
+//! re-initializes its basis from the first post-restore gradient (the
+//! paper's own init rule), which keeps checkpoints method-portable. The
+//! restore-then-continue loss curve is validated in the trainer e2e test.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"GWCKPT01";
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub seed: u64,
+    pub params: Vec<f32>,
+}
+
+/// Simple CRC32 (IEEE) for integrity.
+fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, t) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *t = c;
+    }
+    let mut crc = 0xFFFFFFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFFFFFF
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {path:?}"))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&self.seed.to_le_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        let bytes: Vec<u8> =
+            self.params.iter().flat_map(|x| x.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        f.write_all(&crc32(&bytes).to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u64buf)?;
+        let step = u64::from_le_bytes(u64buf);
+        f.read_exact(&mut u64buf)?;
+        let seed = u64::from_le_bytes(u64buf);
+        f.read_exact(&mut u64buf)?;
+        let n = u64::from_le_bytes(u64buf) as usize;
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let mut crcbuf = [0u8; 4];
+        f.read_exact(&mut crcbuf)?;
+        if u32::from_le_bytes(crcbuf) != crc32(&bytes) {
+            bail!("checkpoint CRC mismatch (corrupt file)");
+        }
+        let params = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint { step, seed, params })
+    }
+}
+
+/// Save the trainer's current state.
+pub fn save_trainer(
+    trainer: &super::trainer::Trainer,
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    Checkpoint {
+        step: trainer.current_step() as u64,
+        seed: trainer.cfg.seed,
+        params: trainer.params_flat(),
+    }
+    .save(path)
+}
+
+/// Restore parameters + step into an existing trainer (must be built with
+/// the same model config).
+pub fn restore_trainer(
+    trainer: &mut super::trainer::Trainer,
+    path: impl AsRef<Path>,
+) -> Result<u64> {
+    let ck = Checkpoint::load(path)?;
+    trainer.load_params_flat(&ck.params)?;
+    trainer.set_step(ck.step as usize);
+    Ok(ck.step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            step: 42,
+            seed: 7,
+            params: (0..1000).map(|i| i as f32 * 0.5).collect(),
+        };
+        let path = std::env::temp_dir().join("gw_ckpt_test.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let ck = Checkpoint { step: 1, seed: 2, params: vec![1.0; 64] };
+        let path = std::env::temp_dir().join("gw_ckpt_corrupt.bin");
+        ck.save(&path).unwrap();
+        // Flip a byte in the data section.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let path = std::env::temp_dir().join("gw_ckpt_magic.bin");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn crc_known_value() {
+        // CRC32("123456789") = 0xCBF43926 (IEEE test vector).
+        assert_eq!(super::crc32(b"123456789"), 0xCBF43926);
+    }
+}

@@ -1,0 +1,15 @@
+//! S8/S9/S13: the L3 coordination layer — trainer event loop, simulated
+//! data-parallel collective, analytic memory accountant, PJRT-backed
+//! optimizer hot path, and checkpointing.
+
+pub mod allreduce;
+pub mod checkpoint;
+pub mod memory;
+pub mod pjrt_opt;
+pub mod trainer;
+
+pub use allreduce::{Ring, RingStats};
+pub use checkpoint::{restore_trainer, save_trainer, Checkpoint};
+pub use memory::{MemoryBreakdown, MemoryModel};
+pub use pjrt_opt::PjrtProjected;
+pub use trainer::{OptEngine, TrainConfig, Trainer, TrainReport};

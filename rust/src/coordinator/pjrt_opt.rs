@@ -1,0 +1,147 @@
+//! PJRT-backed projected optimizer: runs the fused L1 Pallas `opt_step`
+//! artifact on the hot path instead of the Rust math, while the subspace
+//! refresh policy (walk/jump, every T steps) stays in Rust.
+//!
+//! This is the `--opt-engine pjrt` path of the trainer and the living
+//! proof that the compiled kernel composes into the production loop; its
+//! numerics against the Rust engine are pinned by
+//! rust/tests/runtime_numerics.rs and the trainer e2e test.
+
+use std::sync::Arc;
+
+use crate::optim::{grassmann, MatrixOptimizer, SubspaceRule};
+use crate::runtime::{Engine, Executable, Value};
+use crate::tensor::{left_singular_basis, matmul_tn, Mat};
+use crate::util::rng::Rng;
+
+pub struct PjrtProjected {
+    engine: Arc<Engine>,
+    exe: Option<Arc<Executable>>,
+    rule: SubspaceRule,
+    rank: usize,
+    interval: usize,
+    eta: f32,
+    s: Option<Mat>,
+    m: Option<Mat>,
+    v: Option<Mat>,
+    lam_prev: f32,
+    t: usize,
+    transposed: Option<bool>,
+    name: String,
+}
+
+impl PjrtProjected {
+    pub fn new(
+        engine: Arc<Engine>,
+        rule: SubspaceRule,
+        rank: usize,
+        interval: usize,
+        eta: f32,
+    ) -> PjrtProjected {
+        PjrtProjected {
+            engine,
+            exe: None,
+            rule,
+            rank,
+            interval,
+            eta,
+            s: None,
+            m: None,
+            v: None,
+            lam_prev: 0.0,
+            t: 0,
+            transposed: None,
+            name: format!("pjrt-projected({})", rule.label()),
+        }
+    }
+
+    fn step_oriented(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
+        self.t += 1;
+        let r = self.rank.min(g.rows);
+        let refresh = if self.s.is_none() {
+            true
+        } else {
+            self.rule != SubspaceRule::Frozen
+                && self.t > 1
+                && (self.t - 1) % self.interval.max(1) == 0
+        };
+        let mut rot = Mat::eye(r);
+        if refresh {
+            let s_new = match (&self.s, self.rule) {
+                (None, _) => left_singular_basis(g, r),
+                (Some(_), SubspaceRule::RandJump) => {
+                    grassmann::random_point(g.rows, r, rng)
+                }
+                (Some(s), SubspaceRule::RandWalk) => {
+                    let x = Mat::randn(s.rows, s.cols, 1.0, rng);
+                    grassmann::exp_map(s, &x, self.eta, Some((4, 0)), rng)
+                }
+                (Some(_), _) => left_singular_basis(g, r),
+            };
+            if let Some(s_old) = &self.s {
+                rot = matmul_tn(&s_new, s_old);
+            }
+            self.s = Some(s_new);
+        }
+        let s = self.s.as_ref().unwrap().clone();
+        if self.m.is_none() {
+            self.m = Some(Mat::zeros(r, g.cols));
+            self.v = Some(Mat::zeros(r, g.cols));
+        }
+        // Lazy-load the artifact for this (m, n, r) geometry.
+        if self.exe.is_none() {
+            let key = self.engine.manifest.opt_step_key(g.rows, g.cols, r);
+            self.exe = Some(
+                self.engine
+                    .load(&key)
+                    .unwrap_or_else(|e| panic!("{key}: {e}")),
+            );
+        }
+        let exe = self.exe.as_ref().unwrap();
+        let ao_refresh = refresh && self.t > 1;
+        let outs = exe
+            .run(&[
+                Value::from_mat(w),
+                Value::from_mat(g),
+                Value::from_mat(&s),
+                Value::from_mat(self.m.as_ref().unwrap()),
+                Value::from_mat(self.v.as_ref().unwrap()),
+                Value::from_mat(&rot),
+                Value::scalar(self.t as f32),
+                Value::scalar(self.lam_prev),
+                Value::scalar(if ao_refresh { 1.0 } else { 0.0 }),
+            ])
+            .expect("opt_step artifact execution");
+        *w = outs[0].clone().into_mat().unwrap();
+        self.m = Some(outs[1].clone().into_mat().unwrap());
+        self.v = Some(outs[2].clone().into_mat().unwrap());
+        self.lam_prev = outs[3].as_f32().unwrap();
+    }
+}
+
+impl MatrixOptimizer for PjrtProjected {
+    fn step(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
+        assert_eq!(w.shape(), g.shape());
+        let transposed =
+            *self.transposed.get_or_insert_with(|| w.rows > w.cols);
+        if transposed {
+            let mut wt = w.t();
+            let gt = g.t();
+            self.step_oriented(&mut wt, &gt, rng);
+            *w = wt.t();
+        } else {
+            self.step_oriented(w, g, rng);
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.s.as_ref().map(|x| x.len()).unwrap_or(0)
+            + self.m.as_ref().map(|x| x.len()).unwrap_or(0)
+            + self.v.as_ref().map(|x| x.len()).unwrap_or(0)
+            + 1
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}

@@ -1,0 +1,484 @@
+//! S8: the training coordinator — the L3 event loop.
+//!
+//! Owns: parameters, per-matrix optimizers, data-parallel worker shards
+//! with gradient all-reduce, gradient accumulation, LR scheduling, eval,
+//! metrics, and (optionally) the per-layer subspace analysis stream that
+//! regenerates Figures 1–2. The model fwd/bwd is the compiled L2 artifact
+//! executed through PJRT; Python never runs here.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::analysis;
+use crate::data::{CorpusConfig, SyncLoader, TokenBatch};
+use crate::metrics::Recorder;
+use crate::model::shapes::PROJ_TYPES;
+use crate::optim::{
+    AdamConfig, AdamVec, MatrixOptimizer, Method, Schedule,
+};
+use crate::runtime::{Engine, Executable, Value};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::allreduce::Ring;
+
+/// Which engine applies the projected-optimizer update on the hot path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptEngine {
+    /// Pure-Rust optimizer suite (all methods).
+    Rust,
+    /// Compiled fused Pallas opt_step artifacts for projected params
+    /// (GrassWalk/GrassJump family only); falls back to Rust where no
+    /// artifact shape matches.
+    Pjrt,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub method: Method,
+    pub rank: usize,
+    pub interval: usize,
+    pub lr: f32,
+    pub dense_lr: f32,
+    pub steps: usize,
+    /// Gradient-accumulation microbatches per optimizer step.
+    pub grad_accum: usize,
+    /// Simulated data-parallel world size (worker shards + ring
+    /// all-reduce). The compiled artifact fixes the per-microbatch size.
+    pub workers: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub schedule: Schedule,
+    pub opt_engine: OptEngine,
+    pub log_every: usize,
+    /// If set, record Figure-1/2 measurements every N steps.
+    pub analysis_every: Option<usize>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            method: Method::GrassWalk,
+            rank: 16,
+            interval: 100,
+            lr: 1e-3,
+            dense_lr: 1e-3,
+            steps: 200,
+            grad_accum: 1,
+            workers: 1,
+            seed: 0,
+            eval_every: 50,
+            eval_batches: 2,
+            schedule: Schedule::Constant,
+            opt_engine: OptEngine::Rust,
+            log_every: 25,
+            analysis_every: None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub method: Method,
+    pub steps: usize,
+    pub final_train_loss: f64,
+    pub final_eval_loss: f64,
+    pub wall_seconds: f64,
+    pub optimizer_state_floats: usize,
+}
+
+/// The trainer owns everything mutable about a run.
+pub struct Trainer {
+    engine: Arc<Engine>,
+    pub cfg: TrainConfig,
+    fwd_bwd: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    /// Parameters in ABI order, as runtime Values (dims + data).
+    pub params: Vec<Value>,
+    /// One optimizer per projected (2-D, leading) parameter.
+    proj_opts: Vec<Box<dyn MatrixOptimizer>>,
+    /// Dense Adam for embeddings / norms (everything past n_projected).
+    dense_opts: Vec<AdamVec>,
+    loaders: Vec<SyncLoader>,
+    eval_loader: SyncLoader,
+    ring: Ring,
+    rng: Rng,
+    step: usize,
+}
+
+impl Trainer {
+    pub fn new(engine: Arc<Engine>, cfg: TrainConfig) -> Result<Trainer> {
+        let model = engine.manifest.model.clone();
+        let fwd_bwd = engine.load(&engine.manifest.fwd_bwd_key()?)?;
+        let eval_exe = engine.load(&engine.manifest.eval_loss_key()?)?;
+
+        let mut rng = Rng::new(cfg.seed);
+        // Parameters: python-matching init scheme (exact values differ
+        // from jax PRNG; distributional match is what matters).
+        let mut params = Vec::new();
+        for p in &model.params {
+            if p.shape.len() == 1 {
+                params.push(Value::F32(p.shape.clone(), vec![1.0; p.shape[0]]));
+            } else {
+                let std = (2.0 / (5.0 * p.shape[0] as f32)).sqrt();
+                let mut data = vec![0.0f32; p.shape.iter().product()];
+                rng.fill_normal(&mut data, std);
+                params.push(Value::F32(p.shape.clone(), data));
+            }
+        }
+
+        // Optimizers. The PJRT opt engine routes the fused Pallas artifact
+        // onto the hot path for the Grass family; other methods (and
+        // shapes without a compiled artifact) use the Rust suite.
+        let mut proj_opts: Vec<Box<dyn MatrixOptimizer>> = Vec::new();
+        for _ in 0..model.n_projected {
+            let opt: Box<dyn MatrixOptimizer> = match (cfg.opt_engine,
+                                                       cfg.method) {
+                (OptEngine::Pjrt, Method::GrassWalk) => {
+                    Box::new(super::pjrt_opt::PjrtProjected::new(
+                        engine.clone(),
+                        crate::optim::SubspaceRule::RandWalk,
+                        cfg.rank,
+                        cfg.interval,
+                        0.5,
+                    ))
+                }
+                (OptEngine::Pjrt, Method::GrassJump) => {
+                    Box::new(super::pjrt_opt::PjrtProjected::new(
+                        engine.clone(),
+                        crate::optim::SubspaceRule::RandJump,
+                        cfg.rank,
+                        cfg.interval,
+                        0.5,
+                    ))
+                }
+                _ => cfg.method.build(cfg.rank, cfg.interval, cfg.lr,
+                                      cfg.steps),
+            };
+            proj_opts.push(opt);
+        }
+        let dense_opts = model.params[model.n_projected..]
+            .iter()
+            .map(|p| {
+                AdamVec::new(
+                    AdamConfig { alpha: cfg.dense_lr, ..Default::default() },
+                    p.shape.iter().product(),
+                )
+            })
+            .collect();
+
+        // Data: one shard per worker + a held-out eval shard.
+        let corpus = CorpusConfig {
+            vocab: model.vocab,
+            seed: cfg.seed ^ 0xDA7A,
+            ..Default::default()
+        };
+        let loaders = (0..cfg.workers.max(1))
+            .map(|w| {
+                SyncLoader::new(
+                    corpus.clone(),
+                    w,
+                    cfg.workers.max(1),
+                    model.batch,
+                    model.seq_len + 1,
+                )
+            })
+            .collect();
+        let eval_loader = SyncLoader::new(
+            CorpusConfig { seed: cfg.seed ^ 0xE7A1, ..corpus },
+            0,
+            1,
+            model.batch,
+            model.seq_len + 1,
+        );
+
+        Ok(Trainer {
+            ring: Ring::new(cfg.workers.max(1)),
+            engine,
+            cfg,
+            fwd_bwd,
+            eval_exe,
+            params,
+            proj_opts,
+            dense_opts,
+            loaders,
+            eval_loader,
+            rng,
+            step: 0,
+        })
+    }
+
+    fn model(&self) -> &crate::runtime::ModelSpec {
+        &self.engine.manifest.model
+    }
+
+    /// One fwd/bwd on `batch`, returning (loss, grads-in-ABI-order).
+    /// Borrows params (run_refs): no per-microbatch weight clone.
+    fn forward_backward(&self, batch: &TokenBatch) -> Result<(f64, Vec<Value>)> {
+        let tokens = Value::I32(
+            vec![batch.batch, batch.width],
+            batch.tokens.clone(),
+        );
+        let mut inputs: Vec<&Value> = Vec::with_capacity(1 + self.params.len());
+        inputs.push(&tokens);
+        inputs.extend(self.params.iter());
+        let mut outs = self.fwd_bwd.run_refs(&inputs)?;
+        let loss = outs.remove(0).as_f32()? as f64;
+        Ok((loss, outs))
+    }
+
+    /// Gradient step `t`: microbatch accumulation per worker, ring
+    /// all-reduce across workers, then the per-matrix optimizers.
+    pub fn train_step(&mut self) -> Result<f64> {
+        self.step += 1;
+        let accum = self.cfg.grad_accum.max(1);
+        let workers = self.cfg.workers.max(1);
+        let n_params = self.params.len();
+
+        // --- per-worker gradient accumulation --------------------------
+        let mut worker_grads: Vec<Vec<f32>> = Vec::with_capacity(workers);
+        let mut loss_sum = 0.0;
+        for w in 0..workers {
+            let mut flat: Option<Vec<f32>> = None;
+            for _ in 0..accum {
+                let batch = self.loaders[w].next();
+                let (loss, grads) = self.forward_backward(&batch)?;
+                loss_sum += loss;
+                let mut off = 0usize;
+                let total: usize =
+                    grads.iter().map(|g| g.as_vec().unwrap().len()).sum();
+                let flat = flat.get_or_insert_with(|| vec![0.0f32; total]);
+                for g in &grads {
+                    let v = g.as_vec().unwrap();
+                    for (dst, &src) in flat[off..off + v.len()].iter_mut().zip(v)
+                    {
+                        *dst += src / accum as f32;
+                    }
+                    off += v.len();
+                }
+            }
+            worker_grads.push(flat.unwrap());
+        }
+        let mean_loss = loss_sum / (workers * accum) as f64;
+
+        // --- collective: ring all-reduce mean over workers --------------
+        self.ring.all_reduce_mean(&mut worker_grads);
+        let flat = worker_grads.into_iter().next().unwrap();
+
+        // --- unflatten into ABI-ordered grad matrices -------------------
+        let model = self.model().clone();
+        let mut grads: Vec<Value> = Vec::with_capacity(n_params);
+        let mut off = 0usize;
+        for p in &model.params {
+            let len: usize = p.shape.iter().product();
+            grads.push(Value::F32(
+                p.shape.clone(),
+                flat[off..off + len].to_vec(),
+            ));
+            off += len;
+        }
+
+        // --- LR schedule (applied as gradient scaling; see optim docs) --
+        let mult = self.cfg.schedule.multiplier(self.step);
+
+        // --- projected params ------------------------------------------
+        for i in 0..model.n_projected {
+            let shape = model.params[i].shape.clone();
+            let mut w = std::mem::replace(
+                &mut self.params[i],
+                Value::F32(vec![], vec![0.0]),
+            )
+            .into_mat()?;
+            let g_mat = grads[i].clone().into_mat()?;
+            let g_scaled =
+                if (mult - 1.0).abs() < f32::EPSILON {
+                    g_mat
+                } else {
+                    g_mat.scale(mult)
+                };
+            let mut fork = self.rng.fork(i as u64);
+            self.proj_opts[i].step(&mut w, &g_scaled, &mut fork);
+            self.params[i] = Value::F32(shape, w.data);
+        }
+
+        // --- dense params ------------------------------------------------
+        for (k, i) in (model.n_projected..n_params).enumerate() {
+            let g = grads[i].as_vec()?.to_vec();
+            let g_scaled: Vec<f32> =
+                g.iter().map(|&x| x * mult).collect();
+            if let Value::F32(_, w) = &mut self.params[i] {
+                self.dense_opts[k].step(w, &g_scaled);
+            }
+        }
+
+        Ok(mean_loss)
+    }
+
+    /// Held-out eval loss averaged over `eval_batches`.
+    pub fn eval(&mut self) -> Result<f64> {
+        let mut total = 0.0;
+        for _ in 0..self.cfg.eval_batches.max(1) {
+            let batch = self.eval_loader.next();
+            let tokens = Value::I32(
+                vec![batch.batch, batch.width],
+                batch.tokens,
+            );
+            let mut inputs: Vec<&Value> =
+                Vec::with_capacity(1 + self.params.len());
+            inputs.push(&tokens);
+            inputs.extend(self.params.iter());
+            let outs = self.eval_exe.run_refs(&inputs)?;
+            total += outs[0].as_f32()? as f64;
+        }
+        Ok(total / self.cfg.eval_batches.max(1) as f64)
+    }
+
+    /// Sample a fresh gradient set (held-out batch) without touching the
+    /// optimizer — the raw material for Figure-1/2 measurements.
+    pub fn sample_gradients(&mut self) -> Result<Vec<Mat>> {
+        let batch = self.eval_loader.next();
+        let (_, grads) = self.forward_backward(&batch)?;
+        grads.into_iter().map(|g| g.into_mat()).collect()
+    }
+
+    /// Figure-1/2 measurements for the current gradient state: energy
+    /// ratio and error-spectrum head per projection-type cluster.
+    fn record_analysis(&mut self, rec: &mut Recorder) -> Result<()> {
+        let batch = self.eval_loader.next();
+        let (_, grads) = self.forward_backward(&batch)?;
+        let model = self.model().clone();
+        let mut energy = analysis::LayerCluster::new();
+        let mut spec_top = analysis::LayerCluster::new();
+        for i in 0..model.n_projected {
+            let ty = i % PROJ_TYPES.len();
+            let g = grads[i].clone().into_mat()?;
+            energy.add(ty, analysis::core_energy_ratio(&g, self.cfg.rank));
+            // Spectrum vs the optimizer's CURRENT basis when available.
+            let g_oriented = if g.rows > g.cols { g.t() } else { g };
+            let s = crate::tensor::left_singular_basis(
+                &g_oriented,
+                self.cfg.rank.min(g_oriented.rows),
+            );
+            let spec =
+                analysis::error_derivative_spectrum(&g_oriented, &s, 5);
+            spec_top.add(ty, spec.first().copied().unwrap_or(0.0));
+        }
+        for (ty, (e, sp)) in
+            energy.means().iter().zip(spec_top.maxes()).enumerate()
+        {
+            rec.push(&format!("energy/{}", PROJ_TYPES[ty]), self.step, *e as f64);
+            rec.push(
+                &format!("errspec/{}", PROJ_TYPES[ty]),
+                self.step,
+                sp as f64,
+            );
+        }
+        Ok(())
+    }
+
+    /// Full training run with metric recording.
+    pub fn run(&mut self, rec: &mut Recorder) -> Result<TrainReport> {
+        rec.note("method", self.cfg.method.label());
+        rec.note("rank", self.cfg.rank);
+        rec.note("interval", self.cfg.interval);
+        rec.note("workers", self.cfg.workers);
+        rec.note("grad_accum", self.cfg.grad_accum);
+        let mut last_train = f64::NAN;
+        let mut last_eval = f64::NAN;
+        for s in 1..=self.cfg.steps {
+            let loss = self.train_step()?;
+            last_train = loss;
+            rec.push("train_loss", s, loss);
+            rec.push("wall_s", s, rec.elapsed_s());
+            if self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
+                eprintln!(
+                    "[{}] step {s}/{} loss {loss:.4} ({:.1}s)",
+                    self.cfg.method.label(),
+                    self.cfg.steps,
+                    rec.elapsed_s()
+                );
+            }
+            if self.cfg.eval_every > 0 && s % self.cfg.eval_every == 0 {
+                last_eval = self.eval()?;
+                rec.push("eval_loss", s, last_eval);
+            }
+            if let Some(every) = self.cfg.analysis_every {
+                if s == 1 || s % every == 0 {
+                    self.record_analysis(rec)?;
+                }
+            }
+        }
+        if last_eval.is_nan() {
+            last_eval = self.eval()?;
+            rec.push("eval_loss", self.cfg.steps, last_eval);
+        }
+        Ok(TrainReport {
+            method: self.cfg.method,
+            steps: self.cfg.steps,
+            final_train_loss: last_train,
+            final_eval_loss: last_eval,
+            wall_seconds: rec.elapsed_s(),
+            optimizer_state_floats: self.state_floats(),
+        })
+    }
+
+    /// Total persistent optimizer-state footprint (f32 counts).
+    pub fn state_floats(&self) -> usize {
+        self.proj_opts.iter().map(|o| o.state_floats()).sum::<usize>()
+            + self
+                .dense_opts
+                .iter()
+                .map(|o| o.state_floats())
+                .sum::<usize>()
+    }
+
+    pub fn current_step(&self) -> usize {
+        self.step
+    }
+
+    pub fn n_projected(&self) -> usize {
+        self.proj_opts.len()
+    }
+
+    /// Swap in custom per-matrix optimizers (ablation grid support).
+    pub fn replace_projected_optimizers(
+        &mut self,
+        opts: Vec<Box<dyn MatrixOptimizer>>,
+    ) {
+        assert_eq!(opts.len(), self.proj_opts.len());
+        self.proj_opts = opts;
+    }
+
+    /// Restore trainer position (checkpoint support).
+    pub(crate) fn set_step(&mut self, step: usize) {
+        self.step = step;
+    }
+
+    pub fn params_flat(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for p in &self.params {
+            out.extend_from_slice(p.as_vec().unwrap());
+        }
+        out
+    }
+
+    pub fn load_params_flat(&mut self, flat: &[f32]) -> Result<()> {
+        let mut off = 0usize;
+        for p in &mut self.params {
+            let len = p.as_vec()?.len();
+            if off + len > flat.len() {
+                return Err(anyhow!("checkpoint too short"));
+            }
+            if let Value::F32(_, data) = p {
+                data.copy_from_slice(&flat[off..off + len]);
+            }
+            off += len;
+        }
+        if off != flat.len() {
+            return Err(anyhow!("checkpoint length mismatch"));
+        }
+        Ok(())
+    }
+}

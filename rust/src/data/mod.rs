@@ -1,0 +1,10 @@
+//! S6: data pipeline — synthetic C4-like corpus (DESIGN.md §7), byte-level
+//! BPE-lite tokenizer, and sharded prefetching loaders with backpressure.
+
+pub mod corpus;
+pub mod loader;
+pub mod tokenizer;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use loader::{Loader, SyncLoader, TokenBatch};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,147 @@
+//! Byte-level tokenizer with learned bigram merges (BPE-lite).
+//!
+//! The e2e pipeline trains on synthetic token ids directly, but a real
+//! deployment ingests text; this tokenizer closes that path: train merges
+//! on a corpus sample, then encode/decode losslessly. Vocabulary layout:
+//! ids [0, 256) are raw bytes, ids [256, 256 + merges) are merge pairs.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// merge id -> (left id, right id)
+    merges: Vec<(u32, u32)>,
+    /// (left, right) -> merge id; used by `merge_id` lookups and kept for
+    /// streaming-encoder extensions.
+    table: HashMap<(u32, u32), u32>,
+}
+
+impl Tokenizer {
+    pub const BYTE_VOCAB: usize = 256;
+
+    /// Train `n_merges` greedy most-frequent-pair merges on `text`.
+    pub fn train(text: &[u8], n_merges: usize) -> Tokenizer {
+        let mut ids: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut table = HashMap::new();
+        for step in 0..n_merges {
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &cnt)) =
+                counts.iter().max_by_key(|(p, &c)| (c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = (Self::BYTE_VOCAB + step) as u32;
+            merges.push(pair);
+            table.insert(pair, new_id);
+            ids = Self::apply_merge(&ids, pair, new_id);
+        }
+        Tokenizer { merges, table }
+    }
+
+    fn apply_merge(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(ids.len());
+        let mut i = 0;
+        while i < ids.len() {
+            if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                out.push(new_id);
+                i += 2;
+            } else {
+                out.push(ids[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        Self::BYTE_VOCAB + self.merges.len()
+    }
+
+    /// Merge id for a pair, if one was learned.
+    pub fn merge_id(&self, left: u32, right: u32) -> Option<u32> {
+        self.table.get(&(left, right)).copied()
+    }
+
+    /// Encode text by applying merges in training order.
+    pub fn encode(&self, text: &[u8]) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        for (k, &pair) in self.merges.iter().enumerate() {
+            let new_id = (Self::BYTE_VOCAB + k) as u32;
+            if ids.len() < 2 {
+                break;
+            }
+            ids = Self::apply_merge(&ids, pair, new_id);
+        }
+        ids
+    }
+
+    /// Lossless decode.
+    pub fn decode(&self, ids: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &id in ids {
+            self.push_id(id, &mut out);
+        }
+        out
+    }
+
+    fn push_id(&self, id: u32, out: &mut Vec<u8>) {
+        if (id as usize) < Self::BYTE_VOCAB {
+            out.push(id as u8);
+        } else {
+            let (l, r) = self.merges[id as usize - Self::BYTE_VOCAB];
+            self.push_id(l, out);
+            self.push_id(r, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &[u8] =
+        b"the cat sat on the mat. the cat ate the rat. the rat ran.";
+
+    #[test]
+    fn roundtrip_lossless() {
+        let tok = Tokenizer::train(SAMPLE, 20);
+        let ids = tok.encode(SAMPLE);
+        assert_eq!(tok.decode(&ids), SAMPLE);
+    }
+
+    #[test]
+    fn merges_compress() {
+        let tok = Tokenizer::train(SAMPLE, 20);
+        let ids = tok.encode(SAMPLE);
+        assert!(ids.len() < SAMPLE.len(), "{} !< {}", ids.len(),
+                SAMPLE.len());
+    }
+
+    #[test]
+    fn unseen_text_still_roundtrips() {
+        let tok = Tokenizer::train(SAMPLE, 20);
+        let other = b"completely different words entirely \xff\x00";
+        assert_eq!(tok.decode(&tok.encode(other)), other);
+    }
+
+    #[test]
+    fn vocab_size_counts_merges() {
+        let tok = Tokenizer::train(SAMPLE, 5);
+        assert!(tok.vocab_size() <= 261);
+        assert!(tok.vocab_size() > 256);
+    }
+
+    #[test]
+    fn empty_input() {
+        let tok = Tokenizer::train(b"", 4);
+        assert_eq!(tok.vocab_size(), 256);
+        assert!(tok.encode(b"").is_empty());
+    }
+}

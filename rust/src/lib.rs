@@ -1,0 +1,30 @@
+//! # grasswalk — Randomized Gradient Subspaces for Efficient LLM Training
+//!
+//! Production-grade reproduction of the paper's GrassWalk / GrassJump
+//! optimizers and every substrate they need, as a three-layer Rust + JAX +
+//! Pallas stack (Python only at build time; see DESIGN.md):
+//!
+//! * [`tensor`] — dense linalg substrate (GEMM, QR, SVD, randomized SVD)
+//! * [`optim`] — the paper's optimizer suite + baselines (GaLore, APOLLO,
+//!   FRUGAL, LDAdam, SubTrack++, Fira, Adam, SGD) and the AO/RS components
+//! * [`runtime`] — PJRT engine loading AOT HLO-text artifacts
+//! * [`data`] — synthetic-C4 corpus, tokenizer, sharded prefetch loader
+//! * [`model`] — LLaMA shape calculus, init, pure-Rust reference forward
+//! * [`coordinator`] — trainer loop, grad accumulation, data-parallel
+//!   workers with ring all-reduce, memory accountant, checkpoints
+//! * [`metrics`] — time series recording + CSV/JSON emission
+//! * [`analysis`] — gradient-subspace energy & curvature (Figures 1–2)
+//! * [`config`] — TOML presets + typed experiment config
+//! * [`util`] — in-repo substrates (RNG, pool, JSON, TOML, CLI, bench)
+
+pub mod ablation;
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

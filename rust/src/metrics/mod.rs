@@ -1,0 +1,225 @@
+//! S10: metrics — time-series recording for losses, wall-clock, subspace
+//! diagnostics, with CSV/JSON emission for the figure regenerators.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One named time series: (step, value) points.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub points: Vec<(usize, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, step: usize, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|&(_, v)| v)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Mean of the final `k` values (smoothed eval metric).
+    pub fn tail_mean(&self, k: usize) -> Option<f64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(k)..];
+        Some(tail.iter().map(|&(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+}
+
+/// A recorder shared by one training run.
+pub struct Recorder {
+    pub run_name: String,
+    pub series: BTreeMap<String, Series>,
+    pub meta: Vec<(String, String)>,
+    start: Instant,
+}
+
+impl Recorder {
+    pub fn new(run_name: &str) -> Recorder {
+        Recorder {
+            run_name: run_name.to_string(),
+            series: BTreeMap::new(),
+            meta: Vec::new(),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn note(&mut self, key: &str, value: impl ToString) {
+        self.meta.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn push(&mut self, name: &str, step: usize, value: f64) {
+        self.series.entry(name.to_string()).or_default().push(step, value);
+    }
+
+    /// Wall-clock seconds since recorder creation (Figure 4's x-axis).
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// CSV with one row per step, columns = union of series (empty cells
+    /// where a series has no point at that step).
+    pub fn to_csv(&self) -> String {
+        let mut steps: Vec<usize> = self
+            .series
+            .values()
+            .flat_map(|s| s.points.iter().map(|&(st, _)| st))
+            .collect();
+        steps.sort_unstable();
+        steps.dedup();
+        let names: Vec<&String> = self.series.keys().collect();
+        let mut out = String::from("step");
+        for n in &names {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push('\n');
+        // Index each series by step for sparse lookup.
+        let maps: Vec<BTreeMap<usize, f64>> = names
+            .iter()
+            .map(|n| self.series[*n].points.iter().cloned().collect())
+            .collect();
+        for st in steps {
+            out.push_str(&st.to_string());
+            for m in &maps {
+                out.push(',');
+                if let Some(v) = m.get(&st) {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let series = self
+            .series
+            .iter()
+            .map(|(k, v)| {
+                (
+                    k.clone(),
+                    arr(v
+                        .points
+                        .iter()
+                        .map(|&(st, val)| {
+                            arr(vec![num(st as f64), num(val)])
+                        })
+                        .collect()),
+                )
+            })
+            .collect::<BTreeMap<_, _>>();
+        obj(vec![
+            ("run", s(&self.run_name)),
+            (
+                "meta",
+                Json::Obj(
+                    self.meta
+                        .iter()
+                        .map(|(k, v)| (k.clone(), s(v)))
+                        .collect(),
+                ),
+            ),
+            ("series", Json::Obj(series)),
+        ])
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {path:?}"))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("write {path:?}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::default();
+        for (i, v) in [3.0, 2.0, 1.0, 4.0].iter().enumerate() {
+            s.push(i, *v);
+        }
+        assert_eq!(s.last(), Some(4.0));
+        assert_eq!(s.min(), Some(1.0));
+        assert_eq!(s.tail_mean(2), Some(2.5));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut r = Recorder::new("t");
+        r.push("loss", 0, 5.0);
+        r.push("loss", 1, 4.0);
+        r.push("lr", 1, 0.1);
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,loss,lr");
+        assert_eq!(lines[1], "0,5,");
+        assert_eq!(lines[2], "1,4,0.1");
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut r = Recorder::new("run1");
+        r.note("method", "grasswalk");
+        r.push("loss", 10, 3.25);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("run").unwrap().as_str(), Some("run1"));
+        let pt = parsed
+            .get("series")
+            .unwrap()
+            .get("loss")
+            .unwrap()
+            .idx(0)
+            .unwrap();
+        assert_eq!(pt.idx(0).unwrap().as_usize(), Some(10));
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("gw_metrics_test");
+        let mut r = Recorder::new("t");
+        r.push("x", 0, 1.0);
+        r.write_csv(dir.join("a.csv")).unwrap();
+        r.write_json(dir.join("a.json")).unwrap();
+        assert!(dir.join("a.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,132 @@
+//! Parameter initialization + the in-memory parameter store the trainer
+//! owns (Rust side of the positional ABI).
+
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::shapes::{LlamaPreset, ParamShape};
+
+/// A model parameter: 2-D matrices for projections/embeddings, 1-D
+/// vectors for norms.
+#[derive(Clone, Debug)]
+pub enum Param {
+    Matrix(Mat),
+    Vector(Vec<f32>),
+}
+
+impl Param {
+    pub fn numel(&self) -> usize {
+        match self {
+            Param::Matrix(m) => m.len(),
+            Param::Vector(v) => v.len(),
+        }
+    }
+
+    pub fn as_mat(&self) -> Option<&Mat> {
+        match self {
+            Param::Matrix(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_mat_mut(&mut self) -> Option<&mut Mat> {
+        match self {
+            Param::Matrix(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        match self {
+            Param::Matrix(m) => &m.data,
+            Param::Vector(v) => v,
+        }
+    }
+
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        match self {
+            Param::Matrix(m) => &mut m.data,
+            Param::Vector(v) => v,
+        }
+    }
+}
+
+/// The full parameter set in ABI order.
+pub struct ParamStore {
+    pub shapes: Vec<ParamShape>,
+    pub params: Vec<Param>,
+}
+
+impl ParamStore {
+    /// Scaled-gaussian init: std = sqrt(2 / (5 * fan_in)) for matrices
+    /// (matching python/compile/model.py::init_params), ones for norms.
+    pub fn init(preset: &LlamaPreset, seed: u64) -> ParamStore {
+        let shapes = preset.param_shapes();
+        let mut rng = Rng::new(seed);
+        let params = shapes
+            .iter()
+            .map(|s| match s.shape.len() {
+                1 => Param::Vector(vec![1.0; s.shape[0]]),
+                2 => {
+                    let std = (2.0 / (5.0 * s.shape[0] as f32)).sqrt();
+                    Param::Matrix(Mat::randn(
+                        s.shape[0],
+                        s.shape[1],
+                        std,
+                        &mut rng,
+                    ))
+                }
+                _ => unreachable!("params are 1-D or 2-D"),
+            })
+            .collect();
+        ParamStore { shapes, params }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.params.iter().map(Param::numel).sum()
+    }
+
+    pub fn n_projected(&self) -> usize {
+        self.shapes.iter().filter(|s| s.proj_type.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::shapes::TINY;
+
+    #[test]
+    fn init_matches_shape_table() {
+        let store = ParamStore::init(&TINY, 0);
+        assert_eq!(store.params.len(), store.shapes.len());
+        for (p, s) in store.params.iter().zip(&store.shapes) {
+            assert_eq!(p.numel(), s.shape.iter().product::<usize>());
+        }
+        assert_eq!(store.numel(), TINY.param_count());
+        assert_eq!(store.n_projected(), TINY.n_projected());
+    }
+
+    #[test]
+    fn norms_init_to_one_matrices_scaled() {
+        let store = ParamStore::init(&TINY, 1);
+        let last = store.params.last().unwrap(); // final_norm
+        assert!(last.flat().iter().all(|&x| x == 1.0));
+        let w = store.params[0].as_mat().unwrap(); // q_proj 64x64
+        let std = (w.fro_norm_sq() / w.len() as f64).sqrt();
+        let expect = (2.0f64 / (5.0 * 64.0)).sqrt();
+        assert!(
+            (std - expect).abs() / expect < 0.15,
+            "std {std} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = ParamStore::init(&TINY, 7);
+        let b = ParamStore::init(&TINY, 7);
+        assert_eq!(a.params[3].flat(), b.params[3].flat());
+        let c = ParamStore::init(&TINY, 8);
+        assert_ne!(a.params[3].flat(), c.params[3].flat());
+    }
+}

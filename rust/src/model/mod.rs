@@ -1,0 +1,10 @@
+//! S7: model substrate — LLaMA shape calculus (tiny…7B presets), parameter
+//! initialization / store. The forward/backward itself is the compiled L2
+//! artifact (python/compile/model.py); Rust owns shapes and state.
+
+pub mod init;
+pub mod shapes;
+
+pub use init::{Param, ParamStore};
+pub use shapes::{preset, LlamaPreset, ParamShape, LLAMA_1B, LLAMA_7B,
+                 PROJ_TYPES, SMALL, TINY};

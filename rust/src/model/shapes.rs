@@ -1,0 +1,236 @@
+//! LLaMA-architecture shape calculus.
+//!
+//! Mirrors `python/compile/model.py::param_specs` exactly for the compiled
+//! configs, and extends it to the paper-scale presets (LLaMA-1B / 7B) that
+//! the memory accountant and the Figure-1/2 layer clustering use — those
+//! run at exact paper dimensions even though training itself uses proxies.
+
+/// The seven projection types of Figure 1, in paper order.
+pub const PROJ_TYPES: [&str; 7] = [
+    "q_proj", "k_proj", "v_proj", "o_proj", "gate_proj", "up_proj",
+    "down_proj",
+];
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct LlamaPreset {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+}
+
+/// CI-sized config compiled by `make artifacts` (must match model.py TINY).
+pub const TINY: LlamaPreset = LlamaPreset {
+    name: "tiny",
+    vocab: 256,
+    dim: 64,
+    hidden: 172,
+    n_layers: 2,
+    n_heads: 4,
+    seq_len: 64,
+};
+
+pub const SMALL: LlamaPreset = LlamaPreset {
+    name: "small",
+    vocab: 2048,
+    dim: 256,
+    hidden: 688,
+    n_layers: 4,
+    n_heads: 8,
+    seq_len: 128,
+};
+
+/// The paper's LLaMA-1B: 24 decoder layers (paper §3), GaLore-style dims.
+pub const LLAMA_1B: LlamaPreset = LlamaPreset {
+    name: "llama-1b",
+    vocab: 32_000,
+    dim: 2048,
+    hidden: 5461,
+    n_layers: 24,
+    n_heads: 16,
+    seq_len: 256,
+};
+
+/// LLaMA-7B (Touvron et al., 2023).
+pub const LLAMA_7B: LlamaPreset = LlamaPreset {
+    name: "llama-7b",
+    vocab: 32_000,
+    dim: 4096,
+    hidden: 11_008,
+    n_layers: 32,
+    n_heads: 32,
+    seq_len: 256,
+};
+
+pub fn preset(name: &str) -> Option<LlamaPreset> {
+    match name {
+        "tiny" => Some(TINY),
+        "small" => Some(SMALL),
+        "llama-1b" | "1b" => Some(LLAMA_1B),
+        "llama-7b" | "7b" => Some(LLAMA_7B),
+        _ => None,
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamShape {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Projection-layer type index into PROJ_TYPES, or None for dense
+    /// (embeddings / norms) params.
+    pub proj_type: Option<usize>,
+    /// Decoder layer index for 2-D projections.
+    pub layer: Option<usize>,
+}
+
+impl LlamaPreset {
+    /// Projection shape (rows, cols) for a given type index.
+    pub fn proj_shape(&self, ty: usize) -> (usize, usize) {
+        let (d, h) = (self.dim, self.hidden);
+        match PROJ_TYPES[ty] {
+            "gate_proj" | "up_proj" => (d, h),
+            "down_proj" => (h, d),
+            _ => (d, d),
+        }
+    }
+
+    /// Full parameter list in the python ABI order: projections first
+    /// (layer-major), then embed / lm_head / norms.
+    pub fn param_shapes(&self) -> Vec<ParamShape> {
+        let mut out = Vec::new();
+        for layer in 0..self.n_layers {
+            for (ti, ty) in PROJ_TYPES.iter().enumerate() {
+                let (r, c) = self.proj_shape(ti);
+                out.push(ParamShape {
+                    name: format!("layers.{layer}.{ty}"),
+                    shape: vec![r, c],
+                    proj_type: Some(ti),
+                    layer: Some(layer),
+                });
+            }
+        }
+        out.push(ParamShape {
+            name: "embed".into(),
+            shape: vec![self.vocab, self.dim],
+            proj_type: None,
+            layer: None,
+        });
+        out.push(ParamShape {
+            name: "lm_head".into(),
+            shape: vec![self.dim, self.vocab],
+            proj_type: None,
+            layer: None,
+        });
+        for layer in 0..self.n_layers {
+            for nm in ["attn_norm", "mlp_norm"] {
+                out.push(ParamShape {
+                    name: format!("layers.{layer}.{nm}"),
+                    shape: vec![self.dim],
+                    proj_type: None,
+                    layer: Some(layer),
+                });
+            }
+        }
+        out.push(ParamShape {
+            name: "final_norm".into(),
+            shape: vec![self.dim],
+            proj_type: None,
+            layer: None,
+        });
+        out
+    }
+
+    pub fn n_projected(&self) -> usize {
+        self.n_layers * PROJ_TYPES.len()
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.param_shapes()
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Per-step projected-layer GEMM MACs for the fused optimizer update
+    /// (3 rank-r contractions per matrix; DESIGN.md §8).
+    pub fn opt_step_macs(&self, rank: usize) -> usize {
+        (0..PROJ_TYPES.len())
+            .map(|ti| {
+                let (r_, c_) = self.proj_shape(ti);
+                let (m, n) = if r_ <= c_ { (r_, c_) } else { (c_, r_) };
+                3 * m * rank.min(m) * n
+            })
+            .sum::<usize>()
+            * self.n_layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_matches_python_abi() {
+        // Mirror of python/compile/model.py::param_specs for TINY.
+        let shapes = TINY.param_shapes();
+        assert_eq!(shapes.len(), 2 * 7 + 2 + 2 * 2 + 1);
+        assert_eq!(shapes[0].name, "layers.0.q_proj");
+        assert_eq!(shapes[0].shape, vec![64, 64]);
+        assert_eq!(shapes[4].name, "layers.0.gate_proj");
+        assert_eq!(shapes[4].shape, vec![64, 172]);
+        assert_eq!(shapes[6].name, "layers.0.down_proj");
+        assert_eq!(shapes[6].shape, vec![172, 64]);
+        assert_eq!(shapes[14].name, "embed");
+        assert_eq!(shapes[14].shape, vec![256, 64]);
+        assert_eq!(shapes.last().unwrap().name, "final_norm");
+    }
+
+    #[test]
+    fn presets_have_paper_layer_counts() {
+        assert_eq!(LLAMA_1B.n_layers, 24); // paper §3: "24 decoder layers"
+        assert_eq!(LLAMA_7B.n_layers, 32);
+        assert_eq!(LLAMA_1B.n_projected(), 24 * 7);
+    }
+
+    #[test]
+    fn param_counts_in_expected_ballpark() {
+        let b1 = LLAMA_1B.param_count();
+        assert!(
+            (1.0e9..1.6e9).contains(&(b1 as f64)),
+            "1B params = {b1}"
+        );
+        let b7 = LLAMA_7B.param_count();
+        assert!(
+            (6.0e9..7.5e9).contains(&(b7 as f64)),
+            "7B params = {b7}"
+        );
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert_eq!(preset("1b").unwrap().name, "llama-1b");
+        assert_eq!(preset("tiny").unwrap(), TINY);
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn projection_shapes_cover_all_types() {
+        for ti in 0..7 {
+            let (r, c) = LLAMA_1B.proj_shape(ti);
+            assert!(r > 0 && c > 0);
+        }
+        assert_eq!(LLAMA_1B.proj_shape(4), (2048, 5461)); // gate
+        assert_eq!(LLAMA_1B.proj_shape(6), (5461, 2048)); // down
+    }
+
+    #[test]
+    fn opt_step_macs_positive_and_scales_with_rank() {
+        let a = LLAMA_1B.opt_step_macs(128);
+        let b = LLAMA_1B.opt_step_macs(512);
+        assert!(b > a);
+    }
+}

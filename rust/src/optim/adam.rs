@@ -1,0 +1,185 @@
+//! Full-state Adam(W) — the memory-hungry baseline every low-rank method
+//! is compared against (optimizer state O(2mn)).
+
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::MatrixOptimizer;
+
+#[derive(Clone, Debug)]
+pub struct AdamConfig {
+    pub alpha: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig {
+            alpha: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+        }
+    }
+}
+
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: Option<Mat>,
+    v: Option<Mat>,
+    t: usize,
+}
+
+impl Adam {
+    pub fn new(cfg: AdamConfig) -> Self {
+        Adam { cfg, m: None, v: None, t: 0 }
+    }
+}
+
+impl MatrixOptimizer for Adam {
+    fn step(&mut self, w: &mut Mat, g: &Mat, _rng: &mut Rng) {
+        assert_eq!(w.shape(), g.shape());
+        self.t += 1;
+        let c = &self.cfg;
+        if self.m.is_none() {
+            self.m = Some(Mat::zeros(g.rows, g.cols));
+            self.v = Some(Mat::zeros(g.rows, g.cols));
+        }
+        let m = self.m.as_mut().unwrap();
+        let v = self.v.as_mut().unwrap();
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        if c.weight_decay > 0.0 {
+            let wd = c.alpha * c.weight_decay;
+            for x in w.data.iter_mut() {
+                *x -= wd * *x;
+            }
+        }
+        for i in 0..g.data.len() {
+            let gi = g.data[i];
+            m.data[i] = c.beta1 * m.data[i] + (1.0 - c.beta1) * gi;
+            v.data[i] = c.beta2 * v.data[i] + (1.0 - c.beta2) * gi * gi;
+            let mh = m.data[i] / bc1;
+            let vh = v.data[i] / bc2;
+            w.data[i] -= c.alpha * mh / (vh.sqrt() + c.eps);
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.m.as_ref().map(|m| m.len()).unwrap_or(0)
+            + self.v.as_ref().map(|v| v.len()).unwrap_or(0)
+    }
+
+    fn name(&self) -> &str {
+        "adam"
+    }
+}
+
+/// Adam over a flat vector (used by the trainer for 1-D params: norms,
+/// biases) — same math, vector storage.
+pub struct AdamVec {
+    pub cfg: AdamConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+}
+
+impl AdamVec {
+    pub fn new(cfg: AdamConfig, len: usize) -> Self {
+        AdamVec { cfg, m: vec![0.0; len], v: vec![0.0; len], t: 0 }
+    }
+
+    pub fn step(&mut self, w: &mut [f32], g: &[f32]) {
+        assert_eq!(w.len(), g.len());
+        assert_eq!(w.len(), self.m.len());
+        self.t += 1;
+        let c = &self.cfg;
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        for i in 0..w.len() {
+            let gi = g[i];
+            self.m[i] = c.beta1 * self.m[i] + (1.0 - c.beta1) * gi;
+            self.v[i] = c.beta2 * self.v[i] + (1.0 - c.beta2) * gi * gi;
+            w[i] -= c.alpha * (self.m[i] / bc1)
+                / ((self.v[i] / bc2).sqrt() + c.eps);
+        }
+    }
+
+    pub fn state_floats(&self) -> usize {
+        self.m.len() + self.v.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::test_support::converges_on_quadratic;
+
+    #[test]
+    fn adam_converges() {
+        let mut opt = Adam::new(AdamConfig { alpha: 0.05, ..Default::default() });
+        let (start, end) = converges_on_quadratic(&mut opt, 12, 18, 120);
+        assert!(end < start * 0.2, "{start} -> {end}");
+    }
+
+    #[test]
+    fn first_step_is_signlike() {
+        // With zero init moments and bias correction, |Δw| ≈ alpha.
+        let mut rng = Rng::new(1);
+        let mut w = Mat::zeros(4, 4);
+        let g = Mat::randn(4, 4, 1.0, &mut rng);
+        let mut opt = Adam::new(AdamConfig { alpha: 0.1, ..Default::default() });
+        opt.step(&mut w, &g, &mut rng);
+        for (wi, gi) in w.data.iter().zip(&g.data) {
+            if gi.abs() > 1e-3 {
+                assert!((wi.abs() - 0.1).abs() < 1e-3);
+                assert!(wi.signum() == -gi.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn state_is_full_size() {
+        let mut rng = Rng::new(2);
+        let mut w = Mat::zeros(6, 9);
+        let g = Mat::randn(6, 9, 1.0, &mut rng);
+        let mut opt = Adam::new(AdamConfig::default());
+        opt.step(&mut w, &g, &mut rng);
+        assert_eq!(opt.state_floats(), 2 * 6 * 9);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let mut rng = Rng::new(3);
+        let mut w = Mat::filled(3, 3, 10.0);
+        let g = Mat::zeros(3, 3);
+        let mut opt = Adam::new(AdamConfig {
+            weight_decay: 0.1,
+            alpha: 0.1,
+            ..Default::default()
+        });
+        opt.step(&mut w, &g, &mut rng);
+        assert!(w.at(0, 0) < 10.0);
+    }
+
+    #[test]
+    fn adamvec_matches_adam_on_flat_data() {
+        let mut rng = Rng::new(4);
+        let g = Mat::randn(3, 5, 1.0, &mut rng);
+        let mut w_mat = Mat::filled(3, 5, 1.0);
+        let mut w_vec = vec![1.0f32; 15];
+        let mut a = Adam::new(AdamConfig::default());
+        let mut b = AdamVec::new(AdamConfig::default(), 15);
+        for _ in 0..5 {
+            a.step(&mut w_mat, &g, &mut rng);
+            b.step(&mut w_vec, &g.data);
+        }
+        for (x, y) in w_mat.data.iter().zip(&w_vec) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

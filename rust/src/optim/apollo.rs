@@ -1,0 +1,208 @@
+//! APOLLO (Zhu et al., 2025): SGD-like memory, AdamW-level performance.
+//!
+//! Idea: keep Adam states only in a tiny auxiliary *random* low-rank space
+//! and use them purely to estimate a channel-wise learning-rate scaling for
+//! the RAW gradient. The projection matrix is regenerated from a seed at
+//! every use, so it costs no persistent memory (the paper's trick).
+//!
+//!   G~   = P G            P: r×m gaussian / sqrt(r), seeded
+//!   M, V = Adam moments of G~          (r×n state only)
+//!   s_j  = ||G~^O_{:,j}|| / ||G~_{:,j}||     (channel-wise scaling)
+//!   W   <- W − α (G ∘ s)                      (full-rank update)
+//!
+//! `rank = 1` gives APOLLO-Mini.
+
+use crate::tensor::{matmul, Mat};
+use crate::util::rng::Rng;
+
+use super::projected::RS_NORM_FLOOR;
+use super::MatrixOptimizer;
+
+#[derive(Clone, Debug)]
+pub struct ApolloConfig {
+    pub rank: usize,
+    pub alpha: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Re-draw the random projection every `interval` steps (the paper
+    /// keeps it fixed per a seed schedule; interval=usize::MAX pins it).
+    pub interval: usize,
+    /// Clamp on the channel scaling to avoid blow-ups (paper uses norm
+    /// clipping; we cap the per-channel factor).
+    pub scale_clip: f32,
+}
+
+impl Default for ApolloConfig {
+    fn default() -> Self {
+        ApolloConfig {
+            rank: 16,
+            alpha: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            interval: 200,
+            scale_clip: 10.0,
+        }
+    }
+}
+
+pub struct Apollo {
+    pub cfg: ApolloConfig,
+    /// Seed for regenerating P (no persistent projector memory).
+    proj_seed: u64,
+    m: Option<Mat>,
+    v: Option<Mat>,
+    t: usize,
+    transposed: Option<bool>,
+}
+
+impl Apollo {
+    pub fn new(cfg: ApolloConfig) -> Self {
+        Apollo { cfg, proj_seed: 0x9E3779B9, m: None, v: None, t: 0,
+                 transposed: None }
+    }
+
+    fn projector(&self, m_rows: usize) -> Mat {
+        let r = self.cfg.rank.min(m_rows);
+        let mut rng = Rng::new(self.proj_seed);
+        Mat::randn(r, m_rows, 1.0 / (r as f32).sqrt(), &mut rng)
+    }
+
+    fn step_oriented(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
+        let c = self.cfg.clone();
+        self.t += 1;
+        if self.t > 1 && c.interval < usize::MAX
+            && (self.t - 1) % c.interval == 0
+        {
+            // Fresh random projection; states are kept (APOLLO relies on
+            // scaling robustness rather than state rotation).
+            self.proj_seed = rng.next_u64();
+        }
+        let p = self.projector(g.rows); // r×m
+        let gt = matmul(&p, g); // r×n
+        let r = gt.rows;
+        if self.m.is_none() {
+            self.m = Some(Mat::zeros(r, g.cols));
+            self.v = Some(Mat::zeros(r, g.cols));
+        }
+        let m = self.m.as_mut().unwrap();
+        let v = self.v.as_mut().unwrap();
+        m.scale_axpy(c.beta1, 1.0 - c.beta1, &gt);
+        for (vv, &gg) in v.data.iter_mut().zip(&gt.data) {
+            *vv = c.beta2 * *vv + (1.0 - c.beta2) * gg * gg;
+        }
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        let gt_o = m.zip(v, |mi, vi| {
+            (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + c.eps)
+        });
+        let num = gt_o.col_norms();
+        let den = gt.col_norms();
+        let scale: Vec<f32> = num
+            .iter()
+            .zip(&den)
+            .map(|(&a, &b)| (a / b.max(RS_NORM_FLOOR)).min(c.scale_clip))
+            .collect();
+        let mut update = g.clone();
+        update.scale_cols(&scale);
+        w.axpy(-c.alpha, &update);
+    }
+}
+
+impl MatrixOptimizer for Apollo {
+    fn step(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
+        assert_eq!(w.shape(), g.shape());
+        let transposed = *self
+            .transposed
+            .get_or_insert_with(|| w.rows > w.cols);
+        if transposed {
+            let mut wt = w.t();
+            let gt = g.t();
+            self.step_oriented(&mut wt, &gt, rng);
+            *w = wt.t();
+        } else {
+            self.step_oriented(w, g, rng);
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        // P is regenerated from the seed: only M and V persist.
+        self.m.as_ref().map(|m| m.len()).unwrap_or(0)
+            + self.v.as_ref().map(|v| v.len()).unwrap_or(0)
+    }
+
+    fn name(&self) -> &str {
+        "apollo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::test_support::converges_on_quadratic;
+
+    #[test]
+    fn apollo_converges() {
+        let mut opt = Apollo::new(ApolloConfig {
+            alpha: 0.05,
+            rank: 4,
+            ..Default::default()
+        });
+        let (start, end) = converges_on_quadratic(&mut opt, 12, 16, 150);
+        assert!(end < start * 0.5, "{start} -> {end}");
+    }
+
+    #[test]
+    fn apollo_mini_rank1_works() {
+        let mut opt = Apollo::new(ApolloConfig {
+            alpha: 0.05,
+            rank: 1,
+            ..Default::default()
+        });
+        let (start, end) = converges_on_quadratic(&mut opt, 12, 16, 200);
+        assert!(end < start, "{start} -> {end}");
+    }
+
+    #[test]
+    fn state_is_rank_by_n_only() {
+        let mut rng = Rng::new(1);
+        let mut w = Mat::zeros(32, 48);
+        let g = Mat::randn(32, 48, 1.0, &mut rng);
+        let mut opt = Apollo::new(ApolloConfig { rank: 4, ..Default::default() });
+        opt.step(&mut w, &g, &mut rng);
+        assert_eq!(opt.state_floats(), 2 * 4 * 48);
+    }
+
+    #[test]
+    fn update_direction_is_full_rank() {
+        // APOLLO scales the raw gradient — the update must not be confined
+        // to a rank-r subspace.
+        let mut rng = Rng::new(2);
+        let mut w = Mat::zeros(16, 16);
+        let g = Mat::randn(16, 16, 1.0, &mut rng);
+        let mut opt = Apollo::new(ApolloConfig { rank: 2, ..Default::default() });
+        opt.step(&mut w, &g, &mut rng);
+        let svd = crate::tensor::svd_thin(&w);
+        let nonzero = svd.s.iter().filter(|&&s| s > 1e-7).count();
+        assert!(nonzero > 2, "update rank {nonzero}");
+    }
+
+    #[test]
+    fn scale_clip_bounds_update() {
+        let mut rng = Rng::new(3);
+        let mut w = Mat::zeros(8, 8);
+        let g = Mat::randn(8, 8, 1e-6, &mut rng); // tiny grads -> big ratios
+        let mut opt = Apollo::new(ApolloConfig {
+            rank: 2,
+            scale_clip: 5.0,
+            alpha: 1.0,
+            ..Default::default()
+        });
+        opt.step(&mut w, &g, &mut rng);
+        // |Δw| <= alpha * clip * |g| columnwise.
+        for (wi, gi) in w.data.iter().zip(&g.data) {
+            assert!(wi.abs() <= 5.0 * gi.abs() + 1e-9);
+        }
+    }
+}

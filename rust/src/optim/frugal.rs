@@ -1,0 +1,289 @@
+//! FRUGAL (Zmushko et al., 2025): gradient splitting — a stateful
+//! optimizer (Adam) inside a random column subspace, a state-free one
+//! (signSGD) on the complement.
+//!
+//! We implement the column-subset variant: every `interval` steps a fresh
+//! random subset of `rank` columns (of the m-row side) is drawn. Adam
+//! moments live only on those columns; on refresh the old states are
+//! either projected (kept where the subsets overlap) or reset.
+
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::MatrixOptimizer;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StateHandling {
+    /// Keep moments for rows that remain selected, zero the rest.
+    ProjectOverlap,
+    /// Zero all moments on refresh.
+    Reset,
+}
+
+#[derive(Clone, Debug)]
+pub struct FrugalConfig {
+    /// Number of rows (of the m-side) updated statefully.
+    pub rank: usize,
+    pub interval: usize,
+    pub alpha: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// signSGD learning rate on the residual rows.
+    pub residual_lr: f32,
+    pub state_handling: StateHandling,
+}
+
+impl Default for FrugalConfig {
+    fn default() -> Self {
+        FrugalConfig {
+            rank: 16,
+            interval: 100,
+            alpha: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            residual_lr: 1e-4,
+            state_handling: StateHandling::ProjectOverlap,
+        }
+    }
+}
+
+pub struct Frugal {
+    pub cfg: FrugalConfig,
+    /// Selected row indices (the "subspace").
+    sel: Vec<usize>,
+    /// Adam moments for the selected rows: rank×n.
+    m: Option<Mat>,
+    v: Option<Mat>,
+    t: usize,
+    transposed: Option<bool>,
+}
+
+impl Frugal {
+    pub fn new(cfg: FrugalConfig) -> Self {
+        Frugal { cfg, sel: Vec::new(), m: None, v: None, t: 0,
+                 transposed: None }
+    }
+
+    fn sample_rows(&self, m_rows: usize, rng: &mut Rng) -> Vec<usize> {
+        // Sample `rank` distinct rows via partial Fisher–Yates.
+        let r = self.cfg.rank.min(m_rows);
+        let mut idx: Vec<usize> = (0..m_rows).collect();
+        for i in 0..r {
+            let j = i + rng.below(m_rows - i);
+            idx.swap(i, j);
+        }
+        let mut out = idx[..r].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    fn step_oriented(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
+        let c = self.cfg.clone();
+        self.t += 1;
+        let n = g.cols;
+        let refresh = self.sel.is_empty()
+            || (self.t > 1 && (self.t - 1) % c.interval.max(1) == 0);
+        if refresh {
+            let new_sel = self.sample_rows(g.rows, rng);
+            match (self.m.as_mut(), self.v.as_mut()) {
+                (Some(m), Some(v)) => match c.state_handling {
+                    StateHandling::Reset => {
+                        m.data.iter_mut().for_each(|x| *x = 0.0);
+                        v.data.iter_mut().for_each(|x| *x = 0.0);
+                    }
+                    StateHandling::ProjectOverlap => {
+                        // Moments move with their row: new slot k keeps the
+                        // state iff its row was previously selected.
+                        let mut m_new = Mat::zeros(new_sel.len(), n);
+                        let mut v_new = Mat::zeros(new_sel.len(), n);
+                        for (k, &row) in new_sel.iter().enumerate() {
+                            if let Some(old_k) =
+                                self.sel.iter().position(|&x| x == row)
+                            {
+                                m_new.row_mut(k).copy_from_slice(m.row(old_k));
+                                v_new.row_mut(k).copy_from_slice(v.row(old_k));
+                            }
+                        }
+                        *m = m_new;
+                        *v = v_new;
+                    }
+                },
+                _ => {
+                    self.m = Some(Mat::zeros(new_sel.len(), n));
+                    self.v = Some(Mat::zeros(new_sel.len(), n));
+                }
+            }
+            self.sel = new_sel;
+        }
+
+        let m = self.m.as_mut().unwrap();
+        let v = self.v.as_mut().unwrap();
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+
+        // Stateful Adam on selected rows; signSGD elsewhere.
+        let mut selected = vec![false; g.rows];
+        for &row in &self.sel {
+            selected[row] = true;
+        }
+        for (k, &row) in self.sel.iter().enumerate() {
+            let grow = g.row(row);
+            let wrow = w.row_mut(row);
+            let mrow = &mut m.data[k * n..(k + 1) * n];
+            let vrow = &mut v.data[k * n..(k + 1) * n];
+            for j in 0..n {
+                let gi = grow[j];
+                mrow[j] = c.beta1 * mrow[j] + (1.0 - c.beta1) * gi;
+                vrow[j] = c.beta2 * vrow[j] + (1.0 - c.beta2) * gi * gi;
+                wrow[j] -= c.alpha * (mrow[j] / bc1)
+                    / ((vrow[j] / bc2).sqrt() + c.eps);
+            }
+        }
+        for row in 0..g.rows {
+            if selected[row] {
+                continue;
+            }
+            let grow = g.row(row);
+            let wrow = w.row_mut(row);
+            for j in 0..n {
+                if grow[j] != 0.0 {
+                    wrow[j] -= c.residual_lr * grow[j].signum();
+                }
+            }
+        }
+    }
+}
+
+impl MatrixOptimizer for Frugal {
+    fn step(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
+        assert_eq!(w.shape(), g.shape());
+        let transposed = *self
+            .transposed
+            .get_or_insert_with(|| w.rows > w.cols);
+        if transposed {
+            let mut wt = w.t();
+            let gt = g.t();
+            self.step_oriented(&mut wt, &gt, rng);
+            *w = wt.t();
+        } else {
+            self.step_oriented(w, g, rng);
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.m.as_ref().map(|m| m.len()).unwrap_or(0)
+            + self.v.as_ref().map(|v| v.len()).unwrap_or(0)
+    }
+
+    fn name(&self) -> &str {
+        "frugal"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::test_support::converges_on_quadratic;
+
+    #[test]
+    fn frugal_converges() {
+        let mut opt = Frugal::new(FrugalConfig {
+            rank: 6,
+            interval: 10,
+            alpha: 0.05,
+            residual_lr: 0.01,
+            ..Default::default()
+        });
+        let (start, end) = converges_on_quadratic(&mut opt, 12, 16, 200);
+        assert!(end < start * 0.5, "{start} -> {end}");
+    }
+
+    #[test]
+    fn every_row_eventually_selected() {
+        // m <= n keeps `sel` in the original row indexing.
+        let mut rng = Rng::new(1);
+        let mut w = Mat::zeros(8, 10);
+        let g = Mat::filled(8, 10, 0.1);
+        let mut opt = Frugal::new(FrugalConfig {
+            rank: 3,
+            interval: 2,
+            ..Default::default()
+        });
+        let mut seen = vec![false; 8];
+        for _ in 0..60 {
+            opt.step(&mut w, &g, &mut rng);
+            for &r in &opt.sel {
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+
+    #[test]
+    fn unselected_rows_get_sign_updates() {
+        let mut rng = Rng::new(2);
+        let mut w = Mat::zeros(6, 10);
+        let mut g = Mat::zeros(6, 10);
+        for x in g.data.iter_mut() {
+            *x = 3.0;
+        }
+        let mut opt = Frugal::new(FrugalConfig {
+            rank: 2,
+            residual_lr: 0.01,
+            alpha: 0.1,
+            ..Default::default()
+        });
+        opt.step(&mut w, &g, &mut rng);
+        let sel = opt.sel.clone();
+        for row in 0..6 {
+            let val = w.at(row, 0);
+            if sel.contains(&row) {
+                assert!(val.abs() > 0.05, "adam row should move more");
+            } else {
+                assert!((val + 0.01).abs() < 1e-6, "sign row: {val}");
+            }
+        }
+    }
+
+    #[test]
+    fn project_overlap_keeps_surviving_state() {
+        let mut rng = Rng::new(3);
+        let mut w = Mat::zeros(6, 4);
+        let g = Mat::filled(6, 4, 1.0);
+        let mut opt = Frugal::new(FrugalConfig {
+            rank: 4,
+            interval: 3,
+            state_handling: StateHandling::ProjectOverlap,
+            ..Default::default()
+        });
+        for _ in 0..3 {
+            opt.step(&mut w, &g, &mut rng);
+        }
+        let sel_before = opt.sel.clone();
+        let m_before = opt.m.clone().unwrap();
+        opt.step(&mut w, &g, &mut rng); // refresh at t=4
+        let sel_after = opt.sel.clone();
+        let m_after = opt.m.clone().unwrap();
+        for (k_new, &row) in sel_after.iter().enumerate() {
+            if let Some(k_old) = sel_before.iter().position(|&x| x == row) {
+                // Surviving row: state evolved from previous value (not 0).
+                let evolved = m_after.at(k_new, 0);
+                let prev = m_before.at(k_old, 0);
+                let expected = 0.9 * prev + 0.1 * 1.0;
+                assert!((evolved - expected).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn state_smaller_than_full_adam() {
+        let mut rng = Rng::new(4);
+        let mut w = Mat::zeros(48, 64);
+        let g = Mat::randn(48, 64, 1.0, &mut rng);
+        let mut opt = Frugal::new(FrugalConfig { rank: 8, ..Default::default() });
+        opt.step(&mut w, &g, &mut rng);
+        assert_eq!(opt.state_floats(), 2 * 8 * 64);
+    }
+}

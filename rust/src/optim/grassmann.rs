@@ -1,0 +1,263 @@
+//! Grassmannian geometry Gr(r, m): the space of r-dimensional subspaces of
+//! R^m, represented by orthonormal bases S in R^{m×r} (Bendokat et al.,
+//! 2024). This module implements everything the paper's subspace update
+//! rules need:
+//!
+//! * horizontal (tangent) projection at S:    X_h = (I − S Sᵀ) X
+//! * the exponential map / geodesic step (paper eq 4)
+//! * random tangent sampling (GrassWalk) and random points (GrassJump)
+//! * principal angles & geodesic distance (analysis + tests)
+
+use crate::tensor::{matmul, matmul_tn, orthonormalize, rsvd, svd_thin, Mat};
+use crate::util::rng::Rng;
+
+/// Project X (m×r) onto the horizontal space at S: X − S (Sᵀ X).
+pub fn horizontal(s: &Mat, x: &Mat) -> Mat {
+    let stx = matmul_tn(s, x); // r×r
+    x.sub(&matmul(s, &stx))
+}
+
+/// Geodesic step (paper eq 4): move from span(S) along tangent X with step
+/// size `eta`, using the thin SVD X = Û Σ̂ V̂ᵀ:
+///
+///   S(η) = (S V̂) cos(Σ̂ η) V̂ᵀ + Û sin(Σ̂ η) V̂ᵀ + S (I − V̂ V̂ᵀ)
+///
+/// The paper approximates the decomposition with randomized SVD because X
+/// is random anyway; pass `rsvd_cfg = Some((oversample, power_iters))` for
+/// that path, `None` for the exact SVD.
+pub fn exp_map(
+    s: &Mat,
+    x: &Mat,
+    eta: f32,
+    rsvd_cfg: Option<(usize, usize)>,
+    rng: &mut Rng,
+) -> Mat {
+    let r = s.cols;
+    let xh = horizontal(s, x);
+    let svd = match rsvd_cfg {
+        Some((oversample, power)) => rsvd(&xh, r, oversample, power, rng),
+        None => {
+            let mut full = svd_thin(&xh);
+            full.u = full.u.take_cols(r.min(full.u.cols));
+            full.s.truncate(r);
+            full.vt = full.vt.slice_rows(0, r.min(full.vt.rows));
+            full
+        }
+    };
+    let k = svd.s.len();
+    let v = svd.vt.t(); // r×k
+
+    // (S V̂) cos(Σ̂η) V̂ᵀ + Û sin(Σ̂η) V̂ᵀ
+    let mut sv = matmul(s, &v); // m×k
+    let cos: Vec<f32> = svd.s.iter().map(|&sig| (sig * eta).cos()).collect();
+    let sin: Vec<f32> = svd.s.iter().map(|&sig| (sig * eta).sin()).collect();
+    sv.scale_cols(&cos);
+    let mut us = svd.u.clone(); // m×k
+    us.scale_cols(&sin);
+    let moved = matmul(&sv.add(&us), &svd.vt); // m×r
+
+    // + S (I − V̂ V̂ᵀ): directions with zero tangent component stay put.
+    let vvt = matmul(&v, &svd.vt); // r×r
+    let mut eye_minus = Mat::eye(r);
+    eye_minus.axpy(-1.0, &vvt);
+    let stay = matmul(s, &eye_minus);
+
+    let out = moved.add(&stay);
+    let _ = k;
+    // QR to remove rounding drift (span-preserving).
+    orthonormalize(&out)
+}
+
+/// A uniformly random r-dimensional subspace of R^m (GrassJump's update:
+/// QR of a gaussian sample gives Haar-distributed orthonormal bases).
+pub fn random_point(m: usize, r: usize, rng: &mut Rng) -> Mat {
+    orthonormalize(&Mat::randn(m, r.min(m), 1.0, rng))
+}
+
+/// A random horizontal tangent at S with unit Frobenius norm.
+pub fn random_tangent(s: &Mat, rng: &mut Rng) -> Mat {
+    let x = Mat::randn(s.rows, s.cols, 1.0, rng);
+    let xh = horizontal(s, &x);
+    let n = xh.fro_norm().max(1e-12);
+    xh.scale(1.0 / n)
+}
+
+/// Cosines of principal angles between span(A) and span(B): the singular
+/// values of Aᵀ B (clamped to [0, 1]).
+pub fn principal_angle_cosines(a: &Mat, b: &Mat) -> Vec<f32> {
+    let g = matmul_tn(a, b);
+    let svd = svd_thin(&g);
+    svd.s.iter().map(|&x| x.clamp(0.0, 1.0)).collect()
+}
+
+/// Geodesic (arc-length) distance on Gr(r, m): sqrt(sum of squared
+/// principal angles).
+pub fn geodesic_distance(a: &Mat, b: &Mat) -> f32 {
+    principal_angle_cosines(a, b)
+        .iter()
+        .map(|&c| {
+            let th = c.min(1.0).acos() as f64;
+            th * th
+        })
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
+/// Chordal distance ||A Aᵀ − B Bᵀ||_F / sqrt(2) — cheaper, used in tests.
+pub fn chordal_distance(a: &Mat, b: &Mat) -> f32 {
+    let pa = matmul(a, &a.t());
+    let pb = matmul(b, &b.t());
+    pa.sub(&pb).fro_norm() / std::f32::consts::SQRT_2
+}
+
+/// Subspace-estimation-error derivative from SubTrack++'s tracking
+/// objective E(S) = ||G − S Sᵀ G||²_F:
+///
+///   ∂E/∂S = −2 (I − S Sᵀ) G Gᵀ S
+///
+/// This is exactly the matrix whose singular-value spectrum Figure 2
+/// plots, and the (negated) tangent direction the Track rule follows.
+pub fn error_derivative(s: &Mat, g: &Mat) -> Mat {
+    let gts = matmul_tn(g, s); // Gᵀ S: n×r
+    let g_gts = matmul(g, &gts); // G (Gᵀ S): m×r
+    horizontal(s, &g_gts).scale(-2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ortho_defect;
+
+    fn basis(m: usize, r: usize, seed: u64) -> Mat {
+        random_point(m, r, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn horizontal_is_orthogonal_to_s() {
+        let mut rng = Rng::new(1);
+        let s = basis(20, 5, 1);
+        let x = Mat::randn(20, 5, 1.0, &mut rng);
+        let xh = horizontal(&s, &x);
+        let overlap = matmul_tn(&s, &xh);
+        assert!(overlap.max_abs() < 1e-5);
+    }
+
+    #[test]
+    fn exp_map_zero_eta_keeps_span() {
+        let mut rng = Rng::new(2);
+        let s = basis(16, 4, 2);
+        let x = Mat::randn(16, 4, 1.0, &mut rng);
+        let s2 = exp_map(&s, &x, 0.0, None, &mut rng);
+        assert!(chordal_distance(&s, &s2) < 1e-4);
+    }
+
+    #[test]
+    fn exp_map_output_orthonormal() {
+        let mut rng = Rng::new(3);
+        let s = basis(24, 6, 3);
+        let x = Mat::randn(24, 6, 1.0, &mut rng);
+        for eta in [0.01f32, 0.3, 1.0, 2.0] {
+            let s2 = exp_map(&s, &x, eta, None, &mut rng);
+            assert!(ortho_defect(&s2) < 1e-4, "eta={eta}");
+        }
+    }
+
+    #[test]
+    fn exp_map_small_step_moves_proportionally() {
+        // NOTE: the tangent RNG must be independent of the seed that
+        // produced `s` — a shared stream makes X = S R exactly (zero
+        // horizontal component).
+        let mut rng = Rng::new(400);
+        let s = basis(30, 5, 4);
+        let x = random_tangent(&s, &mut rng);
+        let d1 = geodesic_distance(&s, &exp_map(&s, &x, 0.05, None, &mut rng));
+        let d2 = geodesic_distance(&s, &exp_map(&s, &x, 0.10, None, &mut rng));
+        // Unit tangent => geodesic distance ≈ eta (exact up to rounding).
+        assert!((d1 - 0.05).abs() < 5e-3, "d1={d1}");
+        assert!((d2 - 0.10).abs() < 5e-3, "d2={d2}");
+    }
+
+    #[test]
+    fn exp_map_rsvd_close_to_exact() {
+        let mut rng = Rng::new(5);
+        let s = basis(40, 8, 5);
+        let x = Mat::randn(40, 8, 1.0, &mut rng);
+        let exact = exp_map(&s, &x, 0.4, None, &mut Rng::new(9));
+        let approx = exp_map(&s, &x, 0.4, Some((8, 2)), &mut Rng::new(9));
+        assert!(
+            chordal_distance(&exact, &approx) < 0.05,
+            "dist={}",
+            chordal_distance(&exact, &approx)
+        );
+    }
+
+    #[test]
+    fn random_points_are_distinct_and_orthonormal() {
+        let mut rng = Rng::new(6);
+        let a = random_point(25, 5, &mut rng);
+        let b = random_point(25, 5, &mut rng);
+        assert!(ortho_defect(&a) < 1e-5);
+        assert!(geodesic_distance(&a, &b) > 0.5);
+    }
+
+    #[test]
+    fn principal_angles_identity() {
+        let a = basis(18, 4, 7);
+        let cos = principal_angle_cosines(&a, &a);
+        for c in cos {
+            assert!((c - 1.0).abs() < 1e-4);
+        }
+        assert!(geodesic_distance(&a, &a) < 1e-3);
+    }
+
+    #[test]
+    fn distances_agree_in_order() {
+        // Chordal and geodesic distances rank pairs identically.
+        let s = basis(20, 4, 8);
+        let mut rng = Rng::new(8);
+        let x = random_tangent(&s, &mut rng);
+        let near = exp_map(&s, &x, 0.1, None, &mut rng);
+        let far = exp_map(&s, &x, 1.0, None, &mut rng);
+        assert!(geodesic_distance(&s, &near) < geodesic_distance(&s, &far));
+        assert!(chordal_distance(&s, &near) < chordal_distance(&s, &far));
+    }
+
+    #[test]
+    fn error_derivative_is_horizontal_and_zero_at_optimum() {
+        let mut rng = Rng::new(9);
+        // G exactly rank-3 inside span(S) => derivative ~ 0.
+        let s = basis(20, 3, 9);
+        let coeff = Mat::randn(3, 15, 1.0, &mut rng);
+        let g = matmul(&s, &coeff);
+        let d = error_derivative(&s, &g);
+        assert!(d.max_abs() < 1e-3, "{}", d.max_abs());
+
+        // Generic G: derivative lies in the horizontal space.
+        let g2 = Mat::randn(20, 15, 1.0, &mut rng);
+        let d2 = error_derivative(&s, &g2);
+        assert!(matmul_tn(&s, &d2).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn following_negative_error_derivative_decreases_error() {
+        let mut rng = Rng::new(10);
+        let m = 20;
+        // Gradient with a dominant subspace different from S.
+        let target = basis(m, 4, 123);
+        let coeff = Mat::randn(4, 30, 1.0, &mut rng);
+        let g = matmul(&target, &coeff);
+        let s0 = basis(m, 4, 11);
+        let err = |s: &Mat| {
+            let p = matmul(s, &matmul_tn(s, &g));
+            g.sub(&p).fro_norm()
+        };
+        let d = error_derivative(&s0, &g);
+        // Move along −∂E/∂S (d already = −2(...)·, so tangent = −d is
+        // ascent; descent direction is... E decreases along -grad: grad =
+        // -2(I-SSᵀ)GGᵀS is ∂E/∂S, so step along -grad.)
+        let tangent = d.scale(-1.0);
+        let n = tangent.fro_norm().max(1e-9);
+        let s1 = exp_map(&s0, &tangent.scale(1.0 / n), 0.2, None, &mut rng);
+        assert!(err(&s1) < err(&s0), "{} -> {}", err(&s0), err(&s1));
+    }
+}

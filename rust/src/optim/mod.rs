@@ -1,0 +1,310 @@
+//! S2–S4: the paper's optimizer suite.
+//!
+//! `MatrixOptimizer` is the per-parameter-matrix interface every method
+//! implements; [`Method`] is the user-facing registry that Table 1/2 and
+//! the Figure 3 ablation grid iterate over.
+
+pub mod adam;
+pub mod apollo;
+pub mod frugal;
+pub mod grassmann;
+pub mod ldadam;
+pub mod projected;
+pub mod schedule;
+pub mod sgd;
+
+pub use adam::{Adam, AdamConfig, AdamVec};
+pub use apollo::{Apollo, ApolloConfig};
+pub use frugal::{Frugal, FrugalConfig, StateHandling};
+pub use ldadam::{LdAdam, LdAdamConfig};
+pub use projected::{
+    ProjectedConfig, ProjectedOptimizer, SubspaceRule, RS_NORM_FLOOR,
+};
+pub use schedule::Schedule;
+pub use sgd::{Sgd, SgdConfig, SignSgd};
+
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// One optimizer instance per 2-D parameter matrix. Implementations keep
+/// their own step counters and subspace state; `rng` drives any
+/// randomized subspace updates (deterministic per seed).
+///
+/// NOT `Send`: the PJRT-backed implementation holds a client handle whose
+/// FFI types are single-threaded; the trainer steps matrices sequentially
+/// (the per-matrix GEMMs are internally thread-parallel instead — see
+/// tensor::gemm).
+pub trait MatrixOptimizer {
+    fn step(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng);
+    /// Persistent optimizer-state footprint in f32 counts (for the memory
+    /// accountant reproducing the paper's GB columns).
+    fn state_floats(&self) -> usize;
+    fn name(&self) -> &str;
+    /// Current learning-rate scale hook used by the trainer's scheduler.
+    fn set_lr_multiplier(&mut self, _mult: f32) {}
+}
+
+/// Every method the paper evaluates (Tables 1–2, Figures 3–4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    GrassWalk,
+    GrassJump,
+    GaLore,
+    Apollo,
+    Frugal,
+    LdAdam,
+    SubTrackPP,
+    Fira,
+    GoLore,
+    Adam,
+    Sgd,
+}
+
+impl Method {
+    pub const TABLE1: [Method; 7] = [
+        Method::GaLore,
+        Method::Apollo,
+        Method::LdAdam,
+        Method::Frugal,
+        Method::SubTrackPP,
+        Method::GrassWalk,
+        Method::GrassJump,
+    ];
+
+    pub const TABLE2: [Method; 3] =
+        [Method::SubTrackPP, Method::GrassWalk, Method::GrassJump];
+
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::GrassWalk,
+            Method::GrassJump,
+            Method::GaLore,
+            Method::Apollo,
+            Method::Frugal,
+            Method::LdAdam,
+            Method::SubTrackPP,
+            Method::Fira,
+            Method::GoLore,
+            Method::Adam,
+            Method::Sgd,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::GrassWalk => "grasswalk",
+            Method::GrassJump => "grassjump",
+            Method::GaLore => "galore",
+            Method::Apollo => "apollo",
+            Method::Frugal => "frugal",
+            Method::LdAdam => "ldadam",
+            Method::SubTrackPP => "subtrack++",
+            Method::Fira => "fira",
+            Method::GoLore => "golore",
+            Method::Adam => "adam",
+            Method::Sgd => "sgd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Method::all()
+            .iter()
+            .copied()
+            .find(|m| m.label().eq_ignore_ascii_case(s))
+            .or(match s.to_ascii_lowercase().as_str() {
+                "subtrack" | "subtrackpp" => Some(Method::SubTrackPP),
+                _ => None,
+            })
+    }
+
+    /// Instantiate a fresh per-matrix optimizer with shared hyperparams.
+    pub fn build(
+        &self,
+        rank: usize,
+        interval: usize,
+        alpha: f32,
+        total_steps: usize,
+    ) -> Box<dyn MatrixOptimizer> {
+        let proj = |rule, use_ao, use_rs| {
+            Box::new(ProjectedOptimizer::new(ProjectedConfig {
+                rank,
+                interval,
+                alpha,
+                rule,
+                use_ao,
+                use_rs,
+                ..Default::default()
+            })) as Box<dyn MatrixOptimizer>
+        };
+        match self {
+            Method::GrassWalk => proj(SubspaceRule::RandWalk, true, true),
+            Method::GrassJump => proj(SubspaceRule::RandJump, true, true),
+            Method::GaLore => proj(SubspaceRule::Svd, false, false),
+            Method::Fira => proj(SubspaceRule::Svd, false, true),
+            Method::SubTrackPP => proj(SubspaceRule::Track, true, true),
+            Method::GoLore => proj(
+                SubspaceRule::GoLore { switch_step: total_steps / 2 },
+                true,
+                true,
+            ),
+            Method::Apollo => Box::new(Apollo::new(ApolloConfig {
+                rank,
+                alpha,
+                interval,
+                ..Default::default()
+            })),
+            Method::Frugal => Box::new(Frugal::new(FrugalConfig {
+                rank,
+                alpha,
+                interval,
+                residual_lr: alpha * 0.1,
+                ..Default::default()
+            })),
+            Method::LdAdam => Box::new(LdAdam::new(LdAdamConfig {
+                rank,
+                alpha,
+                ..Default::default()
+            })),
+            Method::Adam => Box::new(Adam::new(AdamConfig {
+                alpha,
+                ..Default::default()
+            })),
+            Method::Sgd => Box::new(Sgd::new(SgdConfig {
+                lr: alpha,
+                momentum: 0.9,
+                ..Default::default()
+            })),
+        }
+    }
+}
+
+/// Per-step learning-rate rescaling support: since every optimizer stores
+/// its own `alpha`, the trainer scales grads instead — mathematically
+/// equivalent for first-order updates at fixed alpha ratios. (For exact
+/// LR scheduling the ProjectedOptimizer also exposes `cfg.alpha`.)
+pub fn scaled_gradient(g: &Mat, mult: f32) -> Mat {
+    if (mult - 1.0).abs() < f32::EPSILON {
+        g.clone()
+    } else {
+        g.scale(mult)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared test utilities (compiled only for tests).
+// ---------------------------------------------------------------------------
+#[cfg(test)]
+pub mod test_support {
+    use super::MatrixOptimizer;
+    use crate::tensor::Mat;
+    use crate::util::rng::Rng;
+
+    /// A random (W, G) pair for smoke steps.
+    pub fn rand_problem(m: usize, n: usize, rng: &mut Rng) -> (Mat, Mat) {
+        (Mat::randn(m, n, 1.0, rng), Mat::randn(m, n, 1.0, rng))
+    }
+
+    /// Minimize f(W) = 0.5||W − W*||² with exact gradients W − W*; returns
+    /// (initial error, final error) in Frobenius norm. Any sane optimizer
+    /// must shrink it substantially.
+    pub fn converges_on_quadratic(
+        opt: &mut dyn MatrixOptimizer,
+        m: usize,
+        n: usize,
+        steps: usize,
+    ) -> (f32, f32) {
+        let mut rng = Rng::new(12345);
+        let target = Mat::randn(m, n, 1.0, &mut rng);
+        let mut w = Mat::zeros(m, n);
+        let start = w.sub(&target).fro_norm();
+        for _ in 0..steps {
+            let g = w.sub(&target);
+            opt.step(&mut w, &g, &mut rng);
+        }
+        (start, w.sub(&target).fro_norm())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use test_support::converges_on_quadratic;
+
+    #[test]
+    fn registry_parses_labels() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.label()), Some(*m));
+        }
+        assert_eq!(Method::parse("SubTrack"), Some(Method::SubTrackPP));
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn table_lists_match_paper() {
+        assert_eq!(Method::TABLE1.len(), 7);
+        assert_eq!(Method::TABLE2.len(), 3);
+        assert!(Method::TABLE1.contains(&Method::GrassWalk));
+        assert!(Method::TABLE2.contains(&Method::GrassJump));
+    }
+
+    #[test]
+    fn every_method_builds_and_converges() {
+        for m in Method::all() {
+            let mut opt = m.build(4, 10, 0.05, 100);
+            let (start, end) = converges_on_quadratic(opt.as_mut(), 12, 16, 150);
+            assert!(
+                end < start,
+                "{}: {start} -> {end}",
+                m.label()
+            );
+        }
+    }
+
+    #[test]
+    fn low_rank_methods_use_less_state_than_adam() {
+        let mut rng = Rng::new(1);
+        let (mut w, g) = test_support::rand_problem(64, 96, &mut rng);
+        let mut adam = Method::Adam.build(16, 10, 1e-3, 100);
+        adam.step(&mut w, &g, &mut rng);
+        let adam_state = adam.state_floats();
+        for m in [
+            Method::GrassWalk,
+            Method::GrassJump,
+            Method::GaLore,
+            Method::Apollo,
+            Method::Frugal,
+            Method::SubTrackPP,
+            Method::Fira,
+        ] {
+            let mut opt = m.build(16, 10, 1e-3, 100);
+            let mut w2 = w.clone();
+            opt.step(&mut w2, &g, &mut rng);
+            assert!(
+                opt.state_floats() < adam_state,
+                "{}: {} !< {}",
+                m.label(),
+                opt.state_floats(),
+                adam_state
+            );
+        }
+    }
+
+    #[test]
+    fn grass_methods_memory_matches_galore() {
+        // Paper claim: GrassWalk/GrassJump keep GaLore-level memory.
+        let mut rng = Rng::new(2);
+        let (w, g) = test_support::rand_problem(64, 96, &mut rng);
+        let mut states = std::collections::HashMap::new();
+        for m in [Method::GaLore, Method::GrassWalk, Method::GrassJump] {
+            let mut opt = m.build(16, 10, 1e-3, 100);
+            let mut w2 = w.clone();
+            opt.step(&mut w2, &g, &mut rng);
+            states.insert(m.label(), opt.state_floats());
+        }
+        let galore = states["galore"] as f32;
+        for k in ["grasswalk", "grassjump"] {
+            let ratio = states[k] as f32 / galore;
+            assert!((ratio - 1.0).abs() < 0.01, "{k}: ratio={ratio}");
+        }
+    }
+}

@@ -1,0 +1,613 @@
+//! The unified projected-gradient optimizer (paper Algorithm 1).
+//!
+//! One engine covers the whole design space Figure 3 ablates:
+//!
+//!   subspace rule × adaptive-optimizer (AO, eqs 7–8) × recovery scaling
+//!   (RS, eqs 9–10)
+//!
+//! Instantiations (see `mod.rs::Method`):
+//!   GrassWalk  = RandWalk + AO + RS
+//!   GrassJump  = RandJump + AO + RS
+//!   GaLore     = Svd (plain Adam in-subspace, no AO, no RS)
+//!   Fira       = Svd + RS (norm-based residual scaling)
+//!   SubTrack++ = Track + AO + RS
+//!   GoLore     = Svd early, RandJump after the switch step
+//!   Frozen     = initial SVD basis kept for the whole run (+ optional RS)
+//!
+//! State lives in the optimizer orientation `m <= n` (wide matrices are
+//! handled transposed) exactly like the L1 Pallas kernel; the Rust and the
+//! compiled-artifact implementations are cross-checked in
+//! rust/tests/runtime_numerics.rs.
+
+use crate::tensor::{
+    left_singular_basis, matmul, matmul_tn, Mat,
+};
+use crate::util::rng::Rng;
+
+use super::grassmann;
+use super::MatrixOptimizer;
+
+/// Floor for the column-norm division in eq 9 — matches NORM_FLOOR in
+/// python/compile/kernels/ref.py.
+pub const RS_NORM_FLOOR: f32 = 1e-12;
+
+/// How the subspace S_t is updated every `interval` steps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SubspaceRule {
+    /// GaLore/Fira: top-r left singular vectors of the current gradient.
+    Svd,
+    /// GrassWalk: random walk — geodesic step along a random tangent.
+    RandWalk,
+    /// GrassJump: fresh Haar-random orthonormal basis.
+    RandJump,
+    /// SubTrack++: geodesic step along the (negated) estimation-error
+    /// derivative −∂E/∂S.
+    Track,
+    /// Never update after the initial SVD of G_0.
+    Frozen,
+    /// GoLore: Svd before `switch_step`, RandJump after.
+    GoLore { switch_step: usize },
+}
+
+impl SubspaceRule {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SubspaceRule::Svd => "svd",
+            SubspaceRule::RandWalk => "walk",
+            SubspaceRule::RandJump => "jump",
+            SubspaceRule::Track => "track",
+            SubspaceRule::Frozen => "frozen",
+            SubspaceRule::GoLore { .. } => "golore",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProjectedConfig {
+    pub rank: usize,
+    /// Subspace update interval T (paper: 100 for the main runs).
+    pub interval: usize,
+    pub alpha: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Recovery-scaling growth limiter ζ (eq 10).
+    pub zeta: f32,
+    /// Geodesic step size η for RandWalk / Track.
+    pub eta: f32,
+    pub rule: SubspaceRule,
+    /// Inform the optimizer of subspace updates (eqs 7–8).
+    pub use_ao: bool,
+    /// Recover the discarded residual (eqs 9–10).
+    pub use_rs: bool,
+    /// Randomized-SVD parameters for the geodesic step.
+    pub rsvd_oversample: usize,
+    pub rsvd_power: usize,
+    /// Weight decay applied AdamW-style (0 disables).
+    pub weight_decay: f32,
+}
+
+impl Default for ProjectedConfig {
+    fn default() -> Self {
+        ProjectedConfig {
+            rank: 16,
+            interval: 100,
+            alpha: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            zeta: 1.01,
+            eta: 0.5,
+            rule: SubspaceRule::RandWalk,
+            use_ao: true,
+            use_rs: true,
+            rsvd_oversample: 4,
+            rsvd_power: 0,
+            weight_decay: 0.0,
+        }
+    }
+}
+
+/// One fused projected-Adam + RS step as a pure function — the exact
+/// semantics of the L1 Pallas kernel (`projected_adam.py`) and its oracle
+/// (`ref.py`). Used by `ProjectedOptimizer` internally-equivalent logic
+/// and by rust/tests/runtime_numerics.rs to cross-validate the compiled
+/// artifact against this implementation.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_step(
+    w: &Mat,
+    g: &Mat,
+    s: &Mat,
+    m: &Mat,
+    v: &Mat,
+    rot: &Mat,
+    t: usize,
+    lam_prev: f32,
+    refresh: bool,
+    alpha: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    zeta: f32,
+) -> (Mat, Mat, Mat, f32) {
+    let gt = matmul_tn(s, g);
+    let (m_new, v_new) = if refresh {
+        let rm = matmul(rot, m);
+        let mut m_new = rm.clone();
+        m_new.scale_axpy(beta1, 1.0 - beta1, &gt);
+        let centered = v.zip(m, |vv, mm| vv - mm * mm);
+        let rot_sq = rot.map(|x| x * x);
+        let mut est = matmul(&rot_sq, &centered);
+        est.axpy(1.0, &rm.map(|x| x * x));
+        let weight = 1.0 - beta2.powi(t as i32 - 1);
+        let v_new = est.zip(&gt, |e, gg| {
+            beta2 * (weight * e.abs()) + (1.0 - beta2) * gg * gg
+        });
+        (m_new, v_new)
+    } else {
+        let mut m_new = m.clone();
+        m_new.scale_axpy(beta1, 1.0 - beta1, &gt);
+        let v_new = v.zip(&gt, |vv, gg| {
+            beta2 * vv + (1.0 - beta2) * gg * gg
+        });
+        (m_new, v_new)
+    };
+    let bc1 = 1.0 - beta1.powi(t as i32);
+    let bc2 = 1.0 - beta2.powi(t as i32);
+    let gt_o = m_new.zip(&v_new, |mm, vv| {
+        (mm / bc1) / ((vv / bc2).max(0.0).sqrt() + eps)
+    });
+    let ghat = matmul(s, &gt_o);
+    let mut lambda = g.sub(&matmul(s, &gt));
+    let num = gt_o.col_norms();
+    let den = gt.col_norms();
+    let phi: Vec<f32> = num
+        .iter()
+        .zip(&den)
+        .map(|(&a, &b)| a / b.max(RS_NORM_FLOOR))
+        .collect();
+    lambda.scale_cols(&phi);
+    let mut lam_norm = lambda.fro_norm();
+    let cap = zeta * lam_prev;
+    if lam_prev > 0.0 && lam_norm > cap {
+        lambda = lambda.scale(cap / lam_norm.max(RS_NORM_FLOOR));
+        lam_norm = cap;
+    }
+    let mut w_new = w.clone();
+    w_new.axpy(-alpha, &ghat);
+    w_new.axpy(-alpha, &lambda);
+    (w_new, m_new, v_new, lam_norm)
+}
+
+/// Per-matrix projected optimizer state.
+pub struct ProjectedOptimizer {
+    pub cfg: ProjectedConfig,
+    name: String,
+    /// Basis S_t (m×r) in optimizer orientation.
+    pub s: Option<Mat>,
+    /// First/second moments in the subspace (r×n).
+    m: Option<Mat>,
+    v: Option<Mat>,
+    /// ‖Λ_{t−1}‖ for the growth limiter; None = limiter inactive.
+    lam_prev: Option<f32>,
+    /// 1-based step counter.
+    t: usize,
+    /// Whether this matrix runs transposed (original rows > cols).
+    transposed: Option<bool>,
+    /// Diagnostics from the last step.
+    pub last_energy_ratio: f32,
+    pub last_refresh: bool,
+}
+
+impl ProjectedOptimizer {
+    pub fn new(cfg: ProjectedConfig) -> Self {
+        let name = format!(
+            "projected({}{}{})",
+            cfg.rule.label(),
+            if cfg.use_ao { "+ao" } else { "" },
+            if cfg.use_rs { "+rs" } else { "" }
+        );
+        ProjectedOptimizer {
+            cfg,
+            name,
+            s: None,
+            m: None,
+            v: None,
+            lam_prev: None,
+            t: 0,
+            transposed: None,
+            last_energy_ratio: 0.0,
+            last_refresh: false,
+        }
+    }
+
+    /// Effective rank given the matrix orientation.
+    fn rank_for(&self, rows: usize) -> usize {
+        self.cfg.rank.min(rows)
+    }
+
+    fn refresh_due(&self) -> bool {
+        if self.s.is_none() {
+            return true;
+        }
+        if self.cfg.rule == SubspaceRule::Frozen {
+            return false;
+        }
+        // t is incremented before this check; refresh every `interval`.
+        (self.t - 1) % self.cfg.interval.max(1) == 0 && self.t > 1
+    }
+
+    /// Compute the next basis according to the configured rule.
+    fn next_basis(&self, g: &Mat, rng: &mut Rng) -> Mat {
+        let r = self.rank_for(g.rows);
+        let rule = match self.cfg.rule {
+            SubspaceRule::GoLore { switch_step } => {
+                if self.t <= switch_step {
+                    SubspaceRule::Svd
+                } else {
+                    SubspaceRule::RandJump
+                }
+            }
+            other => other,
+        };
+        match rule {
+            SubspaceRule::Svd | SubspaceRule::Frozen => {
+                left_singular_basis(g, r)
+            }
+            SubspaceRule::RandJump => grassmann::random_point(g.rows, r, rng),
+            SubspaceRule::RandWalk => {
+                let s = self.s.as_ref().expect("walk needs a current basis");
+                let x = Mat::randn(s.rows, s.cols, 1.0, rng);
+                grassmann::exp_map(
+                    s,
+                    &x,
+                    self.cfg.eta,
+                    Some((self.cfg.rsvd_oversample, self.cfg.rsvd_power)),
+                    rng,
+                )
+            }
+            SubspaceRule::Track => {
+                let s = self.s.as_ref().expect("track needs a current basis");
+                // Descent direction on the manifold: −∂E/∂S, normalized.
+                let d = grassmann::error_derivative(s, g).scale(-1.0);
+                let norm = d.fro_norm();
+                if norm < 1e-12 {
+                    return s.clone();
+                }
+                grassmann::exp_map(
+                    s,
+                    &d.scale(1.0 / norm),
+                    self.cfg.eta,
+                    Some((self.cfg.rsvd_oversample, self.cfg.rsvd_power)),
+                    rng,
+                )
+            }
+            SubspaceRule::GoLore { .. } => unreachable!(),
+        }
+    }
+
+    /// One optimizer step in the canonical (m <= n) orientation.
+    fn step_oriented(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
+        let cfg = self.cfg.clone();
+        self.t += 1;
+        let t = self.t;
+
+        // ---- subspace refresh -------------------------------------------
+        let refresh = self.refresh_due();
+        self.last_refresh = refresh;
+        let mut rotation: Option<Mat> = None; // R = S_tᵀ S_{t−1}
+        if refresh {
+            let s_new = if self.s.is_none() {
+                // Initialization: every rule starts from the SVD of G_0
+                // (paper Algorithm 1), except pure random jumps which may
+                // as well start random — we follow the paper and use SVD.
+                let r = self.rank_for(g.rows);
+                left_singular_basis(g, r)
+            } else {
+                self.next_basis(g, rng)
+            };
+            if let (Some(s_old), true) = (&self.s, cfg.use_ao) {
+                rotation = Some(matmul_tn(&s_new, s_old)); // r×r
+            }
+            self.s = Some(s_new);
+        }
+        let s = self.s.as_ref().unwrap();
+        let r = s.cols;
+        let n = g.cols;
+
+        if self.m.is_none() {
+            self.m = Some(Mat::zeros(r, n));
+            self.v = Some(Mat::zeros(r, n));
+        }
+
+        // ---- project (eq 1) ---------------------------------------------
+        let gt = matmul_tn(s, g); // r×n
+        self.last_energy_ratio =
+            (gt.fro_norm() / g.fro_norm().max(RS_NORM_FLOOR)).min(1.0);
+
+        // ---- moments ------------------------------------------------------
+        let m_prev = self.m.take().unwrap();
+        let v_prev = self.v.take().unwrap();
+        let (m_new, v_new) = match (&rotation, cfg.use_ao && refresh) {
+            (Some(rot), true) => {
+                // eqs 7–8 (AO): rotate states onto the new basis.
+                let rm = matmul(rot, &m_prev);
+                let mut m_new = rm.clone();
+                m_new.scale_axpy(cfg.beta1, 1.0 - cfg.beta1, &gt);
+                let centered = v_prev.zip(&m_prev, |v, m| v - m * m);
+                let rot_sq = rot.map(|x| x * x);
+                let mut est = matmul(&rot_sq, &centered);
+                est.axpy(1.0, &rm.map(|x| x * x));
+                let weight = 1.0 - cfg.beta2.powi(t as i32 - 1);
+                let v_new = est.zip(&gt, |e, gti| {
+                    cfg.beta2 * (weight * e.abs())
+                        + (1.0 - cfg.beta2) * gti * gti
+                });
+                (m_new, v_new)
+            }
+            _ => {
+                // eqs 5–6 (regular Adam in the subspace). NOTE: when the
+                // subspace changed without AO (GaLore-style), the stale
+                // moments are knowingly misaligned — that is the paper's
+                // point about informing the optimizer.
+                let mut m_new = m_prev;
+                m_new.scale_axpy(cfg.beta1, 1.0 - cfg.beta1, &gt);
+                let mut v_new = v_prev;
+                for (vv, &gg) in v_new.data.iter_mut().zip(&gt.data) {
+                    *vv = cfg.beta2 * *vv + (1.0 - cfg.beta2) * gg * gg;
+                }
+                (m_new, v_new)
+            }
+        };
+
+        // ---- bias-corrected Adam direction --------------------------------
+        let bc1 = 1.0 - cfg.beta1.powi(t as i32);
+        let bc2 = 1.0 - cfg.beta2.powi(t as i32);
+        let gt_o = m_new.zip(&v_new, |m, v| {
+            (m / bc1) / ((v / bc2).max(0.0).sqrt() + cfg.eps)
+        });
+
+        // ---- back-project + recovery scaling ------------------------------
+        let ghat = matmul(s, &gt_o); // m×n
+
+        if cfg.weight_decay > 0.0 {
+            let wd = cfg.alpha * cfg.weight_decay;
+            for x in w.data.iter_mut() {
+                *x -= wd * *x;
+            }
+        }
+
+        if cfg.use_rs {
+            // Δ = G − S G̃;  Λ = φ ∘ Δ (eq 9); growth limiter (eq 10).
+            let mut lambda = g.sub(&matmul(s, &gt));
+            let num = gt_o.col_norms();
+            let den = gt.col_norms();
+            let phi: Vec<f32> = num
+                .iter()
+                .zip(&den)
+                .map(|(&a, &b)| a / b.max(RS_NORM_FLOOR))
+                .collect();
+            lambda.scale_cols(&phi);
+            let mut lam_norm = lambda.fro_norm();
+            if let Some(prev) = self.lam_prev {
+                let cap = cfg.zeta * prev;
+                if prev > 0.0 && lam_norm > cap {
+                    lambda = lambda.scale(cap / lam_norm.max(RS_NORM_FLOOR));
+                    lam_norm = cap;
+                }
+            }
+            self.lam_prev = Some(lam_norm);
+            // eq 11: W ← W − α Ĝ − α Λ.
+            w.axpy(-cfg.alpha, &ghat);
+            w.axpy(-cfg.alpha, &lambda);
+        } else {
+            w.axpy(-cfg.alpha, &ghat);
+        }
+
+        self.m = Some(m_new);
+        self.v = Some(v_new);
+    }
+}
+
+impl MatrixOptimizer for ProjectedOptimizer {
+    fn step(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
+        assert_eq!(w.shape(), g.shape());
+        let transposed = *self
+            .transposed
+            .get_or_insert_with(|| w.rows > w.cols);
+        if transposed {
+            let mut wt = w.t();
+            let gt = g.t();
+            self.step_oriented(&mut wt, &gt, rng);
+            *w = wt.t();
+        } else {
+            self.step_oriented(w, g, rng);
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        let s = self.s.as_ref().map(|s| s.len()).unwrap_or(0);
+        let m = self.m.as_ref().map(|m| m.len()).unwrap_or(0);
+        let v = self.v.as_ref().map(|v| v.len()).unwrap_or(0);
+        s + m + v + 1 // + lam_prev
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::test_support::{converges_on_quadratic, rand_problem};
+
+    fn cfg(rule: SubspaceRule, ao: bool, rs: bool) -> ProjectedConfig {
+        ProjectedConfig {
+            rank: 4,
+            interval: 5,
+            alpha: 0.05,
+            eta: 0.3,
+            rule,
+            use_ao: ao,
+            use_rs: rs,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_rules_converge_on_quadratic() {
+        for rule in [
+            SubspaceRule::Svd,
+            SubspaceRule::RandWalk,
+            SubspaceRule::RandJump,
+            SubspaceRule::Track,
+            SubspaceRule::Frozen,
+            SubspaceRule::GoLore { switch_step: 20 },
+        ] {
+            let mut opt = ProjectedOptimizer::new(cfg(rule, true, true));
+            let (start, end) = converges_on_quadratic(&mut opt, 16, 24, 150);
+            assert!(
+                end < start * 0.5,
+                "{:?}: {start} -> {end}",
+                rule
+            );
+        }
+    }
+
+    #[test]
+    fn rs_uses_full_gradient_information() {
+        // With RS, components orthogonal to S still move the weights.
+        let mut rng = Rng::new(3);
+        let (mut w, g) = rand_problem(8, 12, &mut rng);
+        let w0 = w.clone();
+        let mut opt = ProjectedOptimizer::new(cfg(SubspaceRule::Frozen, false, true));
+        opt.step(&mut w, &g, &mut rng);
+        let delta = w.sub(&w0);
+        // Residual directions: project delta onto the orthocomplement.
+        let s = opt.s.as_ref().unwrap();
+        let within = matmul(s, &matmul_tn(s, &delta));
+        let outside = delta.sub(&within).fro_norm();
+        assert!(outside > 1e-6, "RS should move outside the subspace");
+
+        // Without RS, the update stays strictly inside span(S).
+        let mut w2 = w0.clone();
+        let mut opt2 =
+            ProjectedOptimizer::new(cfg(SubspaceRule::Frozen, false, false));
+        opt2.step(&mut w2, &g, &mut rng);
+        let delta2 = w2.sub(&w0);
+        let s2 = opt2.s.as_ref().unwrap();
+        let within2 = matmul(s2, &matmul_tn(s2, &delta2));
+        assert!(delta2.sub(&within2).fro_norm() < 1e-5);
+    }
+
+    #[test]
+    fn growth_limiter_caps_lambda() {
+        let mut rng = Rng::new(4);
+        let (mut w, g) = rand_problem(8, 12, &mut rng);
+        let mut opt = ProjectedOptimizer::new(ProjectedConfig {
+            zeta: 1.01,
+            ..cfg(SubspaceRule::Frozen, false, true)
+        });
+        opt.step(&mut w, &g, &mut rng);
+        let lam1 = opt.lam_prev.unwrap();
+        // A much larger gradient would explode Λ without the limiter.
+        let g_big = g.scale(100.0);
+        opt.step(&mut w, &g_big, &mut rng);
+        let lam2 = opt.lam_prev.unwrap();
+        assert!(lam2 <= lam1 * 1.0101, "{lam1} -> {lam2}");
+    }
+
+    #[test]
+    fn refresh_happens_on_interval() {
+        let mut rng = Rng::new(5);
+        let (mut w, g) = rand_problem(10, 14, &mut rng);
+        let mut opt = ProjectedOptimizer::new(ProjectedConfig {
+            interval: 3,
+            ..cfg(SubspaceRule::RandJump, true, true)
+        });
+        let mut refreshes = Vec::new();
+        for _ in 0..10 {
+            opt.step(&mut w, &g, &mut rng);
+            refreshes.push(opt.last_refresh);
+        }
+        // t=1 init counts as refresh, then every 3 steps: t=4, 7, 10.
+        assert_eq!(
+            refreshes,
+            vec![true, false, false, true, false, false, true, false,
+                 false, true]
+        );
+    }
+
+    #[test]
+    fn frozen_rule_never_refreshes_after_init() {
+        let mut rng = Rng::new(6);
+        let (mut w, g) = rand_problem(10, 14, &mut rng);
+        let mut opt =
+            ProjectedOptimizer::new(cfg(SubspaceRule::Frozen, false, true));
+        opt.step(&mut w, &g, &mut rng);
+        let s0 = opt.s.clone().unwrap();
+        for _ in 0..7 {
+            opt.step(&mut w, &g, &mut rng);
+            assert!(!opt.last_refresh);
+        }
+        assert_eq!(opt.s.as_ref().unwrap().data, s0.data);
+    }
+
+    #[test]
+    fn transposed_matrices_handled() {
+        // rows > cols (like down_proj): optimizer runs in transposed
+        // orientation and still converges.
+        let mut opt = ProjectedOptimizer::new(cfg(SubspaceRule::RandWalk, true, true));
+        let (start, end) = converges_on_quadratic(&mut opt, 24, 10, 150);
+        assert!(end < start * 0.5, "{start} -> {end}");
+    }
+
+    #[test]
+    fn state_memory_matches_galore_formula() {
+        // Paper §2: optimizer state O(mr + 2nr) vs full Adam O(2mn).
+        let mut rng = Rng::new(7);
+        let (mut w, g) = rand_problem(16, 32, &mut rng);
+        let mut opt = ProjectedOptimizer::new(ProjectedConfig {
+            rank: 4,
+            ..cfg(SubspaceRule::Svd, false, false)
+        });
+        opt.step(&mut w, &g, &mut rng);
+        let expected = 16 * 4 + 2 * 32 * 4 + 1; // S + M,V + lam
+        assert_eq!(opt.state_floats(), expected);
+        assert!(opt.state_floats() < 2 * 16 * 32);
+    }
+
+    #[test]
+    fn energy_ratio_is_recorded_and_bounded() {
+        let mut rng = Rng::new(8);
+        let (mut w, g) = rand_problem(12, 20, &mut rng);
+        let mut opt = ProjectedOptimizer::new(cfg(SubspaceRule::Svd, true, true));
+        opt.step(&mut w, &g, &mut rng);
+        assert!(opt.last_energy_ratio > 0.0);
+        assert!(opt.last_energy_ratio <= 1.0);
+    }
+
+    #[test]
+    fn ao_vs_no_ao_differ_after_refresh() {
+        let mut rng_a = Rng::new(9);
+        let mut rng_b = Rng::new(9);
+        let (w0, g) = rand_problem(10, 16, &mut Rng::new(10));
+        let mut wa = w0.clone();
+        let mut wb = w0.clone();
+        let mut a = ProjectedOptimizer::new(ProjectedConfig {
+            interval: 2,
+            ..cfg(SubspaceRule::RandJump, true, false)
+        });
+        let mut b = ProjectedOptimizer::new(ProjectedConfig {
+            interval: 2,
+            ..cfg(SubspaceRule::RandJump, false, false)
+        });
+        for _ in 0..5 {
+            a.step(&mut wa, &g, &mut rng_a);
+            b.step(&mut wb, &g, &mut rng_b);
+        }
+        // Same RNG stream => same bases; AO handling must still differ.
+        assert!(wa.max_abs_diff(&wb) > 1e-7);
+    }
+}

@@ -1,0 +1,88 @@
+//! Learning-rate schedules for the trainer (constant, linear warmup,
+//! cosine decay — the standard LLM pretraining recipe).
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Linear warmup to peak over `warmup` steps, then constant.
+    Warmup { warmup: usize },
+    /// Linear warmup then cosine decay to `min_ratio * peak` at
+    /// `total_steps`.
+    WarmupCosine { warmup: usize, total_steps: usize, min_ratio: f32 },
+}
+
+impl Schedule {
+    /// Multiplier in [0, 1] applied to the peak learning rate at `step`
+    /// (1-based).
+    pub fn multiplier(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant => 1.0,
+            Schedule::Warmup { warmup } => {
+                if warmup == 0 || step >= warmup {
+                    1.0
+                } else {
+                    step as f32 / warmup as f32
+                }
+            }
+            Schedule::WarmupCosine { warmup, total_steps, min_ratio } => {
+                if step < warmup && warmup > 0 {
+                    return step as f32 / warmup as f32;
+                }
+                let total = total_steps.max(warmup + 1);
+                let progress = ((step - warmup) as f32
+                    / (total - warmup) as f32)
+                    .clamp(0.0, 1.0);
+                let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+                min_ratio + (1.0 - min_ratio) * cos
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one() {
+        assert_eq!(Schedule::Constant.multiplier(1), 1.0);
+        assert_eq!(Schedule::Constant.multiplier(10_000), 1.0);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::Warmup { warmup: 10 };
+        assert!((s.multiplier(5) - 0.5).abs() < 1e-6);
+        assert_eq!(s.multiplier(10), 1.0);
+        assert_eq!(s.multiplier(100), 1.0);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = Schedule::WarmupCosine {
+            warmup: 10,
+            total_steps: 110,
+            min_ratio: 0.1,
+        };
+        assert!((s.multiplier(10) - 1.0).abs() < 1e-5);
+        let mid = s.multiplier(60);
+        assert!(mid < 1.0 && mid > 0.1);
+        assert!((s.multiplier(110) - 0.1).abs() < 1e-5);
+        assert!((s.multiplier(500) - 0.1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = Schedule::WarmupCosine {
+            warmup: 5,
+            total_steps: 50,
+            min_ratio: 0.0,
+        };
+        let mut prev = f32::INFINITY;
+        for step in 5..=50 {
+            let v = s.multiplier(step);
+            assert!(v <= prev + 1e-6);
+            prev = v;
+        }
+    }
+}

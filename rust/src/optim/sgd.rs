@@ -1,0 +1,146 @@
+//! SGD (+momentum) and signSGD — the state-free optimizers FRUGAL applies
+//! along residual directions, and baseline fodder for the ablations.
+
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::MatrixOptimizer;
+
+#[derive(Clone, Debug)]
+pub struct SgdConfig {
+    pub lr: f32,
+    /// 0.0 = plain SGD (no state at all).
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig { lr: 1e-2, momentum: 0.0, weight_decay: 0.0 }
+    }
+}
+
+pub struct Sgd {
+    pub cfg: SgdConfig,
+    buf: Option<Mat>,
+}
+
+impl Sgd {
+    pub fn new(cfg: SgdConfig) -> Self {
+        Sgd { cfg, buf: None }
+    }
+}
+
+impl MatrixOptimizer for Sgd {
+    fn step(&mut self, w: &mut Mat, g: &Mat, _rng: &mut Rng) {
+        assert_eq!(w.shape(), g.shape());
+        let c = &self.cfg;
+        if c.weight_decay > 0.0 {
+            let wd = c.lr * c.weight_decay;
+            for x in w.data.iter_mut() {
+                *x -= wd * *x;
+            }
+        }
+        if c.momentum > 0.0 {
+            let buf = self
+                .buf
+                .get_or_insert_with(|| Mat::zeros(g.rows, g.cols));
+            for i in 0..g.data.len() {
+                buf.data[i] = c.momentum * buf.data[i] + g.data[i];
+                w.data[i] -= c.lr * buf.data[i];
+            }
+        } else {
+            w.axpy(-c.lr, g);
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.buf.as_ref().map(|b| b.len()).unwrap_or(0)
+    }
+
+    fn name(&self) -> &str {
+        "sgd"
+    }
+}
+
+/// signSGD (Bernstein et al., 2018): update by the sign of the gradient.
+/// Completely state-free — FRUGAL's residual-direction optimizer.
+pub struct SignSgd {
+    pub lr: f32,
+}
+
+impl SignSgd {
+    pub fn new(lr: f32) -> Self {
+        SignSgd { lr }
+    }
+}
+
+impl MatrixOptimizer for SignSgd {
+    fn step(&mut self, w: &mut Mat, g: &Mat, _rng: &mut Rng) {
+        assert_eq!(w.shape(), g.shape());
+        for (wi, &gi) in w.data.iter_mut().zip(&g.data) {
+            if gi != 0.0 {
+                *wi -= self.lr * gi.signum();
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &str {
+        "signsgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::test_support::converges_on_quadratic;
+
+    #[test]
+    fn sgd_converges() {
+        let mut opt = Sgd::new(SgdConfig { lr: 0.05, ..Default::default() });
+        let (start, end) = converges_on_quadratic(&mut opt, 10, 10, 200);
+        assert!(end < start * 0.2, "{start} -> {end}");
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let mut plain = Sgd::new(SgdConfig { lr: 0.02, ..Default::default() });
+        let mut mom = Sgd::new(SgdConfig {
+            lr: 0.02,
+            momentum: 0.9,
+            ..Default::default()
+        });
+        let (_, end_plain) = converges_on_quadratic(&mut plain, 10, 10, 60);
+        let (_, end_mom) = converges_on_quadratic(&mut mom, 10, 10, 60);
+        assert!(end_mom < end_plain, "{end_mom} !< {end_plain}");
+    }
+
+    #[test]
+    fn sgd_stateless_without_momentum() {
+        let mut rng = Rng::new(1);
+        let mut w = Mat::zeros(4, 4);
+        let g = Mat::randn(4, 4, 1.0, &mut rng);
+        let mut opt = Sgd::new(SgdConfig::default());
+        opt.step(&mut w, &g, &mut rng);
+        assert_eq!(opt.state_floats(), 0);
+    }
+
+    #[test]
+    fn signsgd_step_magnitude_constant() {
+        let mut rng = Rng::new(2);
+        let mut w = Mat::zeros(5, 5);
+        let g = Mat::randn(5, 5, 3.0, &mut rng);
+        let mut opt = SignSgd::new(0.01);
+        opt.step(&mut w, &g, &mut rng);
+        for (wi, gi) in w.data.iter().zip(&g.data) {
+            if *gi != 0.0 {
+                assert!((wi.abs() - 0.01).abs() < 1e-7);
+            }
+        }
+        assert_eq!(opt.state_floats(), 0);
+    }
+}

@@ -1,0 +1,243 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! from the training hot loop. This is the only place the `xla` crate is
+//! touched; the rest of the coordinator sees `Mat`/`Value` types.
+//!
+//! Interchange gotchas (see /opt/xla-example/README.md):
+//! * artifacts are HLO *text*; `HloModuleProto::from_text_file` reassigns
+//!   instruction ids, which serialized jax>=0.5 protos would violate;
+//! * lowering used `return_tuple=True`, so executions return a 1-tuple
+//!   whose element is the real output tuple — unwrapped here.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Mat;
+
+use super::manifest::{ArtifactSpec, IoSpec, Manifest};
+
+/// A runtime value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// f32 tensor with explicit dims (row-major). Scalars: dims = [].
+    F32(Vec<usize>, Vec<f32>),
+    /// i32 tensor (token batches).
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl Value {
+    pub fn scalar(x: f32) -> Value {
+        Value::F32(vec![], vec![x])
+    }
+
+    pub fn from_mat(m: &Mat) -> Value {
+        Value::F32(vec![m.rows, m.cols], m.data.clone())
+    }
+
+    pub fn vector(v: &[f32]) -> Value {
+        Value::F32(vec![v.len()], v.to_vec())
+    }
+
+    pub fn tokens(batch: usize, width: usize, data: Vec<i32>) -> Value {
+        assert_eq!(data.len(), batch * width);
+        Value::I32(vec![batch, width], data)
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32(d, _) | Value::I32(d, _) => d,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        match self {
+            Value::F32(_, v) if v.len() == 1 => Ok(v[0]),
+            _ => bail!("value is not an f32 scalar"),
+        }
+    }
+
+    pub fn as_vec(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(_, v) => Ok(v),
+            _ => bail!("value is not f32"),
+        }
+    }
+
+    pub fn into_mat(self) -> Result<Mat> {
+        match self {
+            Value::F32(d, v) if d.len() == 2 => {
+                Ok(Mat::from_vec(d[0], d[1], v))
+            }
+            Value::F32(d, v) if d.len() == 1 => {
+                Ok(Mat::from_vec(1, d[0], v))
+            }
+            _ => bail!("value is not a 2-D f32 tensor"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims_i64 = |d: &[usize]| -> Vec<i64> {
+            d.iter().map(|&x| x as i64).collect()
+        };
+        Ok(match self {
+            Value::F32(d, v) => {
+                if d.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims_i64(d))?
+                }
+            }
+            Value::I32(d, v) => {
+                if d.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims_i64(d))?
+                }
+            }
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Value> {
+        let dims = spec.shape.clone();
+        match spec.dtype.as_str() {
+            "i32" => Ok(Value::I32(dims, lit.to_vec::<i32>()?)),
+            _ => Ok(Value::F32(dims, lit.to_vec::<f32>()?)),
+        }
+    }
+}
+
+/// One compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional inputs; shape-checks against the manifest
+    /// ABI before crossing the FFI boundary.
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        let refs: Vec<&Value> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Borrowing variant of [`run`]: the training hot loop passes the
+    /// parameter set every microbatch — cloning ~all model weights per
+    /// call was the top L3 allocation cost before the perf pass
+    /// (EXPERIMENTS.md §Perf).
+    pub fn run_refs(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.key,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (v, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if v.dims() != spec.shape.as_slice() {
+                bail!(
+                    "{}: input `{}` shape {:?} != manifest {:?}",
+                    self.spec.key,
+                    spec.name,
+                    v.dims(),
+                    spec.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("empty execution result"))?
+            .to_literal_sync()?;
+        // return_tuple=True at lowering => 1-tuple wrapping the outputs.
+        let outer = first.to_tuple()?;
+        let outs = if outer.len() == 1 && self.spec.outputs.len() != 1 {
+            outer.into_iter().next().unwrap().to_tuple()?
+        } else {
+            outer
+        };
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.key,
+                self.spec.outputs.len(),
+                outs.len()
+            );
+        }
+        outs.iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// The engine owns the PJRT client, the manifest, and a compile cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Engine { manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, key: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(key) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(key)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow!("parse {:?}: {e}", spec.file))
+            .with_context(|| format!("loading artifact {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {key}: {e}"))?;
+        let exe = std::sync::Arc::new(Executable { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_roundtrip_shapes() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let v = Value::from_mat(&m);
+        assert_eq!(v.dims(), &[2, 3]);
+        assert_eq!(v.into_mat().unwrap(), m);
+        assert!(Value::scalar(1.5).as_f32().unwrap() == 1.5);
+        assert!(Value::vector(&[1.0, 2.0]).as_f32().is_err());
+    }
+
+    #[test]
+    fn tokens_value() {
+        let t = Value::tokens(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.dims(), &[2, 3]);
+        assert!(t.as_vec().is_err());
+    }
+}

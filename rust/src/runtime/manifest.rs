@@ -1,0 +1,298 @@
+//! Typed view of `artifacts/manifest.json` — the positional ABI emitted by
+//! `python/compile/aot.py`. Everything the Rust trainer knows about the
+//! compiled model (parameter order, shapes, projected-layer table, artifact
+//! IO signatures) comes from here; there is no other channel.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+    pub fn is_scalar(&self) -> bool {
+        self.shape.is_empty()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub key: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Per projected parameter: optimizer-orientation geometry.
+#[derive(Clone, Debug)]
+pub struct ProjectedSpec {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub transpose: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub config: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub rank: usize,
+    pub batch: usize,
+    pub params: Vec<ParamSpec>,
+    pub n_projected: usize,
+    pub projected: Vec<ProjectedSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelSpec,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn io_list(v: &Json) -> Result<Vec<IoSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("io list not an array"))?
+        .iter()
+        .map(|io| {
+            Ok(IoSpec {
+                name: io
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("io missing name"))?
+                    .to_string(),
+                shape: io
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("io missing shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: io
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let mj = root
+            .get("model")
+            .ok_or_else(|| anyhow!("manifest missing `model`"))?;
+        let getn = |k: &str| -> Result<usize> {
+            mj.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("model.{k} missing"))
+        };
+        let params = mj
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("model.params missing"))?
+            .iter()
+            .map(|p| ParamSpec {
+                name: p.get("name").and_then(Json::as_str).unwrap_or("").into(),
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter().map(|x| x.as_usize().unwrap_or(0)).collect()
+                    })
+                    .unwrap_or_default(),
+            })
+            .collect();
+        let projected = mj
+            .get("projected")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(|p| ProjectedSpec {
+                name: p.get("name").and_then(Json::as_str).unwrap_or("").into(),
+                m: p.get("m").and_then(Json::as_usize).unwrap_or(0),
+                n: p.get("n").and_then(Json::as_usize).unwrap_or(0),
+                transpose: p
+                    .get("transpose")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+            })
+            .collect();
+
+        let model = ModelSpec {
+            config: mj
+                .get("config")
+                .and_then(Json::as_str)
+                .unwrap_or("tiny")
+                .to_string(),
+            vocab: getn("vocab")?,
+            dim: getn("dim")?,
+            hidden: getn("hidden")?,
+            n_layers: getn("n_layers")?,
+            n_heads: getn("n_heads")?,
+            seq_len: getn("seq_len")?,
+            rank: getn("rank")?,
+            batch: getn("batch")?,
+            params,
+            n_projected: getn("n_projected")?,
+            projected,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (key, art) in root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing `artifacts`"))?
+        {
+            let file = art
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {key} missing file"))?;
+            artifacts.insert(
+                key.clone(),
+                ArtifactSpec {
+                    key: key.clone(),
+                    file: dir.join(file),
+                    inputs: io_list(
+                        art.get("inputs")
+                            .ok_or_else(|| anyhow!("{key}: inputs"))?,
+                    )?,
+                    outputs: io_list(
+                        art.get("outputs")
+                            .ok_or_else(|| anyhow!("{key}: outputs"))?,
+                    )?,
+                },
+            );
+        }
+
+        let m = Manifest { dir, model, artifacts };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.model.n_projected != self.model.n_layers * 7 {
+            bail!(
+                "n_projected {} != 7 * n_layers {}",
+                self.model.n_projected,
+                self.model.n_layers
+            );
+        }
+        if self.model.projected.len() != self.model.n_projected {
+            bail!("projected table length mismatch");
+        }
+        for p in &self.model.projected {
+            if p.m > p.n {
+                bail!("{}: optimizer orientation violated (m > n)", p.name);
+            }
+        }
+        for art in self.artifacts.values() {
+            if !art.file.exists() {
+                bail!("artifact file missing: {:?}", art.file);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("no artifact `{key}` in manifest"))
+    }
+
+    /// The fwd_bwd artifact for the manifest's model config.
+    pub fn fwd_bwd_key(&self) -> Result<String> {
+        self.artifacts
+            .keys()
+            .find(|k| k.starts_with("fwd_bwd_"))
+            .cloned()
+            .ok_or_else(|| anyhow!("no fwd_bwd artifact"))
+    }
+
+    pub fn eval_loss_key(&self) -> Result<String> {
+        self.artifacts
+            .keys()
+            .find(|k| k.starts_with("eval_loss_"))
+            .cloned()
+            .ok_or_else(|| anyhow!("no eval_loss artifact"))
+    }
+
+    /// opt_step artifact key for an (m, n, r) layer shape, if compiled.
+    pub fn opt_step_key(&self, m: usize, n: usize, r: usize) -> String {
+        format!("opt_step_{m}x{n}_r{r}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        manifest_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(manifest_dir()).unwrap();
+        assert_eq!(m.model.n_projected, m.model.n_layers * 7);
+        assert!(m.artifacts.len() >= 3);
+        assert!(m.fwd_bwd_key().is_ok());
+        assert!(m.eval_loss_key().is_ok());
+    }
+
+    #[test]
+    fn fwd_bwd_io_arity() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(manifest_dir()).unwrap();
+        let fb = m.artifact(&m.fwd_bwd_key().unwrap()).unwrap();
+        // tokens + params in; loss + grads out.
+        assert_eq!(fb.inputs.len(), 1 + m.model.params.len());
+        assert_eq!(fb.outputs.len(), 1 + m.model.params.len());
+        assert_eq!(fb.inputs[0].dtype, "i32");
+        assert!(fb.outputs[0].is_scalar());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! S5: PJRT runtime — loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Python never runs at training time.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable, Value};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelSpec, ParamSpec,
+                   ProjectedSpec};

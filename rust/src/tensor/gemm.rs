@@ -1,0 +1,260 @@
+//! Cache-blocked, thread-parallel GEMM kernels.
+//!
+//! The optimizer hot path is dominated by thin products: `S^T G` (r×m ·
+//! m×n), `S G~` (m×r · r×n), and Gram matrices. We provide the four
+//! transpose variants as explicit kernels over row-major storage so each
+//! can pick the loop order that streams unit-stride:
+//!
+//!   matmul    C = A  B     (i,k,j)  rows of B stream
+//!   matmul_tn C = A' B     (k→i,j)  both stream (A column walk = row walk of A')
+//!   matmul_nt C = A  B'    (i,j,k)  dot-product of rows
+//!
+//! Row-parallelism via `util::pool::parallel_chunks` over C's rows keeps
+//! writes disjoint. The micro-kernel unrolls 4 columns and relies on LLVM
+//! auto-vectorization (verified in the perf pass; see EXPERIMENTS.md §Perf).
+
+use super::matrix::Mat;
+use crate::util::pool;
+
+/// Rows per parallel task; tuned in the perf pass.
+const PAR_ROW_BLOCK: usize = 16;
+/// Only parallelize when the output has at least this many f32 ops.
+const PAR_THRESHOLD: usize = 1 << 16;
+
+/// C = A @ B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul inner dim");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    let work = m * k * n;
+    let body = |i0: usize, crows: &mut [f32]| {
+        let rows = crows.len() / n;
+        for di in 0..rows {
+            let i = i0 * PAR_ROW_BLOCK + di;
+            let arow = a.row(i);
+            let crow = &mut crows[di * n..(di + 1) * n];
+            for (kk, &aik) in arow.iter().enumerate().take(k) {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(kk);
+                axpy_row(crow, aik, brow);
+            }
+        }
+    };
+    if work >= PAR_THRESHOLD {
+        pool::parallel_chunks(&mut c.data, PAR_ROW_BLOCK * n, |i0, crows| {
+            body(i0, crows)
+        });
+    } else {
+        for (i0, crows) in c.data.chunks_mut(PAR_ROW_BLOCK * n).enumerate() {
+            body(i0, crows);
+        }
+    }
+    c
+}
+
+/// C = A^T @ B  (A: k×m, B: k×n, C: m×n) without materializing A^T.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn inner dim");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    let work = m * k * n;
+    let body = |i0: usize, crows: &mut [f32]| {
+        let rows = crows.len() / n;
+        for di in 0..rows {
+            let i = i0 * PAR_ROW_BLOCK + di;
+            let crow = &mut crows[di * n..(di + 1) * n];
+            for kk in 0..k {
+                let aik = a.at(kk, i);
+                if aik == 0.0 {
+                    continue;
+                }
+                axpy_row(crow, aik, b.row(kk));
+            }
+        }
+    };
+    if work >= PAR_THRESHOLD {
+        pool::parallel_chunks(&mut c.data, PAR_ROW_BLOCK * n, |i0, crows| {
+            body(i0, crows)
+        });
+    } else {
+        for (i0, crows) in c.data.chunks_mut(PAR_ROW_BLOCK * n).enumerate() {
+            body(i0, crows);
+        }
+    }
+    c
+}
+
+/// C = A @ B^T (A: m×k, B: n×k, C: m×n) — row-dot kernel.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dim");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    let work = m * k * n;
+    let body = |i0: usize, crows: &mut [f32]| {
+        let rows = crows.len() / n;
+        for di in 0..rows {
+            let i = i0 * PAR_ROW_BLOCK + di;
+            let arow = a.row(i);
+            let crow = &mut crows[di * n..(di + 1) * n];
+            for (j, cj) in crow.iter_mut().enumerate().take(n) {
+                *cj = dot(arow, b.row(j));
+            }
+        }
+    };
+    let _ = k;
+    if work >= PAR_THRESHOLD {
+        pool::parallel_chunks(&mut c.data, PAR_ROW_BLOCK * n, |i0, crows| {
+            body(i0, crows)
+        });
+    } else {
+        for (i0, crows) in c.data.chunks_mut(PAR_ROW_BLOCK * n).enumerate() {
+            body(i0, crows);
+        }
+    }
+    c
+}
+
+/// y += a * x over full rows (the GEMM micro-kernel; auto-vectorized).
+#[inline]
+fn axpy_row(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = y.len();
+    let chunks = n / 8;
+    // 8-wide unroll: one AVX2 register per iteration after vectorization.
+    for c in 0..chunks {
+        let base = c * 8;
+        for o in 0..8 {
+            y[base + o] += a * x[base + o];
+        }
+    }
+    for i in chunks * 8..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Dot product with f32 accumulation in 4 independent lanes (keeps the
+/// dependency chain short enough for vectorization).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mut acc = [0.0f32; 4];
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let b = c * 4;
+        acc[0] += x[b] * y[b];
+        acc[1] += x[b + 1] * y[b + 1];
+        acc[2] += x[b + 2] * y[b + 2];
+        acc[3] += x[b + 3] * y[b + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// matvec: y = A @ x.
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// vecmat: y = x @ A = (A^T x).
+pub fn vecmat(x: &[f32], a: &Mat) -> Vec<f32> {
+    assert_eq!(a.rows, x.len());
+    let mut y = vec![0.0f32; a.cols];
+    for (k, &xk) in x.iter().enumerate() {
+        if xk == 0.0 {
+            continue;
+        }
+        axpy_row(&mut y, xk, a.row(k));
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for k in 0..a.cols {
+                    s += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 64, 64)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-3, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_match_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(20, 12, 1.0, &mut rng);
+        let b = Mat::randn(20, 15, 1.0, &mut rng);
+        assert!(matmul_tn(&a, &b).max_abs_diff(&matmul(&a.t(), &b)) < 1e-4);
+        let b2 = Mat::randn(15, 12, 1.0, &mut rng);
+        assert!(matmul_nt(&a, &b2).max_abs_diff(&matmul(&a, &b2.t())) < 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(10, 10, 1.0, &mut rng);
+        assert!(matmul(&a, &Mat::eye(10)).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&Mat::eye(10), &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn parallel_threshold_consistency() {
+        // Large enough to trigger the parallel path; must equal naive.
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(100, 80, 1.0, &mut rng);
+        let b = Mat::randn(80, 120, 1.0, &mut rng);
+        assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 5e-3);
+    }
+
+    #[test]
+    fn matvec_consistent() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(9, 13, 1.0, &mut rng);
+        let x: Vec<f32> = (0..13).map(|i| i as f32 * 0.1).collect();
+        let y = matvec(&a, &x);
+        let xm = Mat::from_vec(13, 1, x.clone());
+        let ym = matmul(&a, &xm);
+        for i in 0..9 {
+            assert!((y[i] - ym.at(i, 0)).abs() < 1e-4);
+        }
+        let z = vecmat(&x[..9].to_vec(), &a);
+        let zm = matmul_tn(&a, &Mat::from_vec(9, 1, x[..9].to_vec()));
+        for j in 0..13 {
+            assert!((z[j] - zm.at(j, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dot_accuracy() {
+        let x = vec![1e-3f32; 4097];
+        let y = vec![1e3f32; 4097];
+        let d = dot(&x, &y);
+        assert!((d - 4097.0).abs() < 0.05, "{d}");
+    }
+}

@@ -1,0 +1,352 @@
+//! Dense row-major f32 matrix — the numeric substrate for every optimizer,
+//! subspace operation, and analysis in the repo (no BLAS offline).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Mat {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// N(0, std^2) gaussian matrix.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    /// A column vector (n x 1) from a slice.
+    pub fn col_vec(v: &[f32]) -> Mat {
+        Mat::from_vec(v.len(), 1, v.to_vec())
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] =
+                            self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy of column j as a Vec.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            *self.at_mut(i, j) = v[i];
+        }
+    }
+
+    /// First `k` columns as a new matrix (rows x k).
+    pub fn take_cols(&self, k: usize) -> Mat {
+        assert!(k <= self.cols);
+        let mut out = Mat::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..k]);
+        }
+        out
+    }
+
+    /// Rows [r0, r1) as a new matrix.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat::from_vec(
+            r1 - r0,
+            self.cols,
+            self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        )
+    }
+
+    // -- elementwise / reductions ------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        self.map(|x| x * s)
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a * b)
+    }
+
+    /// self += alpha * other (in place, allocation-free).
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self = beta*self + alpha*other.
+    pub fn scale_axpy(&mut self, beta: f32, alpha: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a = beta * *a + alpha * b;
+        }
+    }
+
+    pub fn fro_norm(&self) -> f32 {
+        // f64 accumulation: the optimizer's growth limiter compares norms
+        // across steps, so low-error reductions matter.
+        (self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+            .sqrt() as f32
+    }
+
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+    }
+
+    /// Column 2-norms (length = cols).
+    pub fn col_norms(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (j, &x) in row.iter().enumerate() {
+                acc[j] += (x as f64) * (x as f64);
+            }
+        }
+        acc.into_iter().map(|x| x.sqrt() as f32).collect()
+    }
+
+    /// Row 2-norms (length = rows).
+    pub fn row_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum::<f64>()
+                    .sqrt() as f32
+            })
+            .collect()
+    }
+
+    /// Scale column j by s[j] in place.
+    pub fn scale_cols(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.cols);
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            for (j, x) in row.iter_mut().enumerate() {
+                *x *= s[j];
+            }
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Max |a - b| between two matrices.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.at(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let i3 = Mat::eye(3);
+        assert_eq!(i3.t(), i3);
+        let m = Mat::from_fn(2, 5, |i, j| (i + j) as f32);
+        let t = m.t();
+        assert_eq!(t.shape(), (5, 2));
+        for i in 0..2 {
+            for j in 0..5 {
+                assert_eq!(m.at(i, j), t.at(j, i));
+            }
+        }
+        // Transposing twice is the identity.
+        assert_eq!(t.t(), m);
+    }
+
+    #[test]
+    fn elementwise_algebra() {
+        let a = Mat::from_fn(2, 2, |i, j| (i + j) as f32);
+        let b = Mat::filled(2, 2, 2.0);
+        assert_eq!(a.add(&b).sub(&b), a);
+        assert_eq!(a.hadamard(&b), a.scale(2.0));
+        let mut c = a.clone();
+        c.axpy(3.0, &b);
+        assert_eq!(c.at(0, 0), a.at(0, 0) + 6.0);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::from_vec(2, 2, vec![3.0, 0.0, 4.0, 0.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-6);
+        let cn = m.col_norms();
+        assert!((cn[0] - 5.0).abs() < 1e-6);
+        assert_eq!(cn[1], 0.0);
+        let rn = m.row_norms();
+        assert!((rn[0] - 3.0).abs() < 1e-6 && (rn[1] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn col_ops() {
+        let mut m = Mat::zeros(3, 2);
+        m.set_col(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(m.col(1), vec![1.0, 2.0, 3.0]);
+        m.scale_cols(&[0.0, 2.0]);
+        assert_eq!(m.col(1), vec![2.0, 4.0, 6.0]);
+        assert_eq!(m.col(0), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn take_cols_and_slice_rows() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let k = m.take_cols(2);
+        assert_eq!(k.shape(), (3, 2));
+        assert_eq!(k.at(2, 1), 9.0);
+        let s = m.slice_rows(1, 3);
+        assert_eq!(s.shape(), (2, 4));
+        assert_eq!(s.at(0, 0), 4.0);
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Rng::new(0);
+        let m = Mat::randn(100, 100, 2.0, &mut rng);
+        let mean: f64 =
+            m.data.iter().map(|&x| x as f64).sum::<f64>() / m.len() as f64;
+        let var: f64 = m.data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>()
+            / m.len() as f64;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 4.0).abs() < 0.2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 2);
+        let b = Mat::zeros(2, 3);
+        let _ = a.add(&b);
+    }
+}

@@ -1,0 +1,17 @@
+//! S1: dense f32 linear-algebra substrate (no BLAS/LAPACK offline).
+//!
+//! `Mat` + blocked parallel GEMM + Householder QR + Jacobi SVD +
+//! randomized SVD — everything the optimizer suite, the Grassmannian
+//! geometry, and the analysis code need.
+
+pub mod gemm;
+pub mod matrix;
+pub mod qr;
+pub mod rsvd;
+pub mod svd;
+
+pub use gemm::{dot, matmul, matmul_nt, matmul_tn, matvec, vecmat};
+pub use matrix::Mat;
+pub use qr::{ortho_defect, orthonormalize, qr_thin};
+pub use rsvd::{random_range, rsvd};
+pub use svd::{left_singular_basis, svd_thin, sym_eig, Svd};

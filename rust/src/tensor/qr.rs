@@ -1,0 +1,168 @@
+//! Householder QR with thin-Q accumulation.
+//!
+//! Used everywhere a subspace basis must be (re)orthonormalized: GrassJump
+//! basis sampling, geodesic-step drift correction, the randomized SVD range
+//! finder, and FRUGAL's column projectors.
+
+use super::matrix::Mat;
+
+/// Thin QR: A (m×n, m >= n) -> (Q m×n with orthonormal columns, R n×n
+/// upper triangular) such that Q R == A.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin expects m >= n (got {m}x{n})");
+    let mut r = a.clone(); // will be reduced to upper triangular (m×n)
+    // Householder vectors, stored per reflection.
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build the reflector for column k from rows k..m.
+        let mut v: Vec<f32> = (k..m).map(|i| r.at(i, k)).collect();
+        let alpha = {
+            let norm =
+                (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32;
+            if v[0] >= 0.0 {
+                -norm
+            } else {
+                norm
+            }
+        };
+        if alpha == 0.0 {
+            // Zero column below the diagonal — identity reflector.
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm_sq: f64 =
+            v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        if vnorm_sq == 0.0 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // Apply H = I - 2 v v^T / (v^T v) to R's trailing block.
+        for j in k..n {
+            let dot: f64 = (k..m)
+                .map(|i| v[i - k] as f64 * r.at(i, j) as f64)
+                .sum();
+            let c = (2.0 * dot / vnorm_sq) as f32;
+            for i in k..m {
+                *r.at_mut(i, j) -= c * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+
+    // Extract the n×n upper-triangular R.
+    let mut rr = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            *rr.at_mut(i, j) = r.at(i, j);
+        }
+    }
+
+    // Accumulate thin Q = H_0 H_1 ... H_{n-1} e_{1..n}.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        *q.at_mut(j, j) = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm_sq: f64 =
+            v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        if vnorm_sq == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let dot: f64 = (k..m)
+                .map(|i| v[i - k] as f64 * q.at(i, j) as f64)
+                .sum();
+            let c = (2.0 * dot / vnorm_sq) as f32;
+            for i in k..m {
+                *q.at_mut(i, j) -= c * v[i - k];
+            }
+        }
+    }
+    (q, rr)
+}
+
+/// Orthonormal basis of A's column span (thin Q only).
+pub fn orthonormalize(a: &Mat) -> Mat {
+    qr_thin(a).0
+}
+
+/// Orthonormality defect ||Q^T Q - I||_max — test/diagnostic helper.
+pub fn ortho_defect(q: &Mat) -> f32 {
+    let g = super::gemm::matmul_tn(q, q);
+    let mut worst = 0.0f32;
+    for i in 0..g.rows {
+        for j in 0..g.cols {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g.at(i, j) - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(1);
+        for &(m, n) in &[(5, 5), (10, 4), (64, 16), (3, 1)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let (q, r) = qr_thin(&a);
+            assert_eq!(q.shape(), (m, n));
+            assert_eq!(r.shape(), (n, n));
+            assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-4, "{m}x{n}");
+            assert!(ortho_defect(&q) < 1e-5, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(8, 5, 1.0, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 1..5 {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        // Two identical columns: Q must still be orthonormal.
+        let mut rng = Rng::new(3);
+        let mut a = Mat::randn(10, 3, 1.0, &mut rng);
+        let c0 = a.col(0);
+        a.set_col(1, &c0);
+        let (q, r) = qr_thin(&a);
+        assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-4);
+        // The second diagonal of R is ~0 (rank deficiency shows up there).
+        assert!(r.at(1, 1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn orthonormalize_of_orthonormal_is_stable() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(20, 6, 1.0, &mut rng);
+        let q1 = orthonormalize(&a);
+        let q2 = orthonormalize(&q1);
+        // Spans match: projectors equal.
+        let p1 = matmul(&q1, &q1.t());
+        let p2 = matmul(&q2, &q2.t());
+        assert!(p1.max_abs_diff(&p2) < 1e-4);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Mat::zeros(6, 3);
+        let (q, r) = qr_thin(&a);
+        assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-6);
+    }
+}

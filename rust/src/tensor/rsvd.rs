@@ -1,0 +1,118 @@
+//! Randomized SVD (Halko–Martinsson–Tropp range finder).
+//!
+//! The paper's GrassWalk update (eq 4) needs the SVD of a *random* tangent
+//! direction every T steps; computing it exactly is wasteful, so the paper
+//! (and we) use randomized SVD: sample a sketch, find an orthonormal range
+//! basis, decompose the small projected matrix.
+
+use super::gemm::{matmul, matmul_tn};
+use super::matrix::Mat;
+use super::qr::qr_thin;
+use super::svd::{svd_thin, Svd};
+use crate::util::rng::Rng;
+
+/// Rank-`r` randomized SVD of A (m×n) with `oversample` extra sketch
+/// columns and `power_iters` subspace iterations (0–2 is typical; more
+/// sharpens decaying spectra).
+pub fn rsvd(a: &Mat, r: usize, oversample: usize, power_iters: usize,
+            rng: &mut Rng) -> Svd {
+    let (m, n) = a.shape();
+    let k = (r + oversample).min(n).min(m);
+
+    // Sketch the range: Y = A Omega.
+    let omega = Mat::randn(n, k, 1.0, rng);
+    let mut y = matmul(a, &omega);
+
+    // Power iterations with QR re-orthonormalization for stability.
+    for _ in 0..power_iters {
+        let q = qr_thin(&y).0;
+        let z = matmul_tn(a, &q); // A^T Q, n×k
+        let qz = qr_thin(&z).0;
+        y = matmul(a, &qz);
+    }
+    let q = qr_thin(&y).0; // m×k orthonormal range basis
+
+    // B = Q^T A is k×n, small; exact SVD there.
+    let b = matmul_tn(&q, a);
+    let inner = svd_thin(&b);
+    let rr = r.min(inner.s.len());
+    Svd {
+        u: matmul(&q, &inner.u.take_cols(rr)),
+        s: inner.s[..rr].to_vec(),
+        vt: inner.vt.slice_rows(0, rr),
+    }
+}
+
+/// Randomized range basis only (no SVD): the cheapest subspace estimate,
+/// used by APOLLO's auxiliary space and as a GrassJump alternative.
+pub fn random_range(a: &Mat, r: usize, rng: &mut Rng) -> Mat {
+    let omega = Mat::randn(a.cols, r.min(a.cols), 1.0, rng);
+    qr_thin(&matmul(a, &omega)).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::qr::ortho_defect;
+
+    fn low_rank(m: usize, n: usize, rank: usize, rng: &mut Rng) -> Mat {
+        let u = Mat::randn(m, rank, 1.0, rng);
+        // Decaying spectrum.
+        let mut v = Mat::randn(rank, n, 1.0, rng);
+        for i in 0..rank {
+            let s = 10.0 / (i + 1) as f32;
+            for x in v.row_mut(i) {
+                *x *= s;
+            }
+        }
+        matmul(&u, &v)
+    }
+
+    #[test]
+    fn rsvd_recovers_low_rank() {
+        let mut rng = Rng::new(1);
+        let a = low_rank(40, 60, 5, &mut rng);
+        let svd = rsvd(&a, 5, 4, 1, &mut rng);
+        let mut us = svd.u.clone();
+        us.scale_cols(&svd.s);
+        let approx = matmul(&us, &svd.vt);
+        let rel = approx.sub(&a).fro_norm() / a.fro_norm();
+        assert!(rel < 1e-2, "rel={rel}");
+        assert!(ortho_defect(&svd.u) < 1e-4);
+    }
+
+    #[test]
+    fn rsvd_top_singular_value_close_to_exact() {
+        let mut rng = Rng::new(2);
+        let a = low_rank(30, 45, 8, &mut rng);
+        let exact = svd_thin(&a);
+        let approx = rsvd(&a, 8, 6, 2, &mut rng);
+        assert!(
+            (approx.s[0] - exact.s[0]).abs() / exact.s[0] < 1e-3,
+            "exact={} approx={}",
+            exact.s[0],
+            approx.s[0]
+        );
+    }
+
+    #[test]
+    fn rsvd_rank_clamped() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(10, 6, 1.0, &mut rng);
+        let svd = rsvd(&a, 20, 4, 0, &mut rng);
+        assert!(svd.s.len() <= 6);
+        assert_eq!(svd.u.rows, 10);
+    }
+
+    #[test]
+    fn random_range_spans_dominant_subspace() {
+        let mut rng = Rng::new(4);
+        let a = low_rank(25, 35, 3, &mut rng);
+        let q = random_range(&a, 6, &mut rng);
+        assert!(ortho_defect(&q) < 1e-4);
+        // Projecting A onto the range keeps nearly all its energy.
+        let proj = matmul(&q, &matmul_tn(&q, &a));
+        let rel = proj.sub(&a).fro_norm() / a.fro_norm();
+        assert!(rel < 0.05, "rel={rel}");
+    }
+}

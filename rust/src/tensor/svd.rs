@@ -1,0 +1,292 @@
+//! One-sided Jacobi SVD (thin), plus symmetric eigen-decomposition by
+//! cyclic Jacobi — the dense decompositions behind GaLore/Fira basis
+//! computation, Grassmannian geodesics, and principal-angle analysis.
+//!
+//! One-sided Jacobi orthogonalizes the *columns* of A by Givens rotations;
+//! it is simple, very accurate for small/medium matrices, and needs no
+//! bidiagonalization. For tall problems we first QR-reduce (A = QR, SVD of
+//! the small R), which is also how the randomized SVD path funnels in.
+
+use super::gemm::{dot, matmul};
+use super::matrix::Mat;
+use super::qr::qr_thin;
+
+/// Result of a thin SVD: A (m×n) = U (m×k) diag(s) V^T (k×n), k = min(m,n),
+/// singular values descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub vt: Mat,
+}
+
+const JACOBI_EPS: f64 = 1e-12;
+const MAX_SWEEPS: usize = 60;
+
+/// Thin SVD via QR reduction + one-sided Jacobi on the small factor.
+pub fn svd_thin(a: &Mat) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        // SVD(A) from SVD(A^T): A = (V s U^T)^T.
+        let t = svd_thin(&a.t());
+        return Svd { u: t.vt.t(), s: t.s, vt: t.u.t() };
+    }
+    if m > n {
+        // Tall: A = Q R (Q m×n), SVD(R) = Ur s Vt, U = Q Ur.
+        let (q, r) = qr_thin(a);
+        let inner = jacobi_svd_square(&r);
+        return Svd { u: matmul(&q, &inner.u), s: inner.s, vt: inner.vt };
+    }
+    jacobi_svd_square(a)
+}
+
+/// One-sided Jacobi on a square (n×n) matrix.
+fn jacobi_svd_square(a: &Mat) -> Svd {
+    let n = a.cols;
+    // Work on columns: W = A V, V accumulated.
+    let mut w = a.t(); // store columns of A as rows of w for locality
+    let mut v = Mat::eye(n);
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Need rows p and q of w simultaneously.
+                let (alpha, beta, gamma) = {
+                    let wp = w.row(p);
+                    let wq = w.row(q);
+                    (
+                        dot(wp, wp) as f64,
+                        dot(wq, wq) as f64,
+                        dot(wp, wq) as f64,
+                    )
+                };
+                off += gamma * gamma;
+                if gamma.abs() <= JACOBI_EPS * (alpha * beta).sqrt() {
+                    continue;
+                }
+                // Rotation angle zeroing the (p,q) Gram entry.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate_rows(&mut w, p, q, c as f32, s as f32);
+                rotate_rows(&mut v, p, q, c as f32, s as f32);
+            }
+        }
+        if off.sqrt() < JACOBI_EPS {
+            break;
+        }
+    }
+
+    // Singular values = column norms of W (rows of our transposed store).
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|i| {
+            w.row(i)
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Mat::zeros(n, n);
+    let mut vt = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (rank, &idx) in order.iter().enumerate() {
+        let norm = norms[idx];
+        s.push(norm as f32);
+        if norm > 0.0 {
+            for r in 0..n {
+                *u.at_mut(r, rank) = (w.at(idx, r) as f64 / norm) as f32;
+            }
+        } else {
+            // Null direction: leave zero; caller treats s=0 columns as free.
+            *u.at_mut(rank, rank) = 1.0;
+        }
+        for r in 0..n {
+            *vt.at_mut(rank, r) = v.at(idx, r);
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Apply a Givens rotation mixing rows p and q of m.
+fn rotate_rows(m: &mut Mat, p: usize, q: usize, c: f32, s: f32) {
+    let cols = m.cols;
+    let (pi, qi) = (p * cols, q * cols);
+    for j in 0..cols {
+        let a = m.data[pi + j];
+        let b = m.data[qi + j];
+        m.data[pi + j] = c * a - s * b;
+        m.data[qi + j] = s * a + c * b;
+    }
+}
+
+/// Top-r left singular vectors (the GaLore basis, eq 2 of the paper).
+pub fn left_singular_basis(a: &Mat, r: usize) -> Mat {
+    let svd = svd_thin(a);
+    svd.u.take_cols(r.min(svd.u.cols))
+}
+
+/// Symmetric eigendecomposition (cyclic Jacobi) for small matrices:
+/// A = Q diag(l) Q^T, eigenvalues descending. Used by principal-angle
+/// computations and LDAdam's block power refinement tests.
+pub fn sym_eig(a: &Mat) -> (Vec<f32>, Mat) {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols);
+    let mut m = a.clone();
+    let mut q = Mat::eye(n);
+    for _ in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for r in (p + 1)..n {
+                off += (m.at(p, r) as f64).powi(2);
+            }
+        }
+        if off.sqrt() < 1e-10 {
+            break;
+        }
+        for p in 0..n {
+            for r in (p + 1)..n {
+                let apq = m.at(p, r);
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(r, r);
+                let theta = 0.5 * ((aqq - app) as f64 / apq as f64);
+                let t = theta.signum()
+                    / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = (1.0 / (1.0 + t * t).sqrt()) as f32;
+                let s = (t as f32) * c;
+                // M <- J^T M J where J rotates (p, r).
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, r);
+                    *m.at_mut(k, p) = c * mkp - s * mkq;
+                    *m.at_mut(k, r) = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(r, k);
+                    *m.at_mut(p, k) = c * mpk - s * mqk;
+                    *m.at_mut(r, k) = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let qkp = q.at(k, p);
+                    let qkq = q.at(k, r);
+                    *q.at_mut(k, p) = c * qkp - s * qkq;
+                    *q.at_mut(k, r) = s * qkp + c * qkq;
+                }
+            }
+        }
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f32> = (0..n).map(|i| m.at(i, i)).collect();
+    idx.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let vals: Vec<f32> = idx.iter().map(|&i| diag[i]).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (c, &i) in idx.iter().enumerate() {
+        for r in 0..n {
+            *vecs.at_mut(r, c) = q.at(r, i);
+        }
+    }
+    (vals, vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::qr::ortho_defect;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(svd: &Svd) -> Mat {
+        let k = svd.s.len();
+        let mut us = svd.u.clone();
+        us.scale_cols(&svd.s[..k.min(us.cols)]);
+        matmul(&us, &svd.vt)
+    }
+
+    #[test]
+    fn svd_reconstructs_various_shapes() {
+        let mut rng = Rng::new(1);
+        for &(m, n) in &[(6, 6), (12, 5), (5, 12), (40, 8), (1, 4)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let svd = svd_thin(&a);
+            assert!(
+                reconstruct(&svd).max_abs_diff(&a) < 1e-3,
+                "recon {m}x{n}"
+            );
+            assert!(ortho_defect(&svd.u) < 1e-4, "U ortho {m}x{n}");
+            assert!(ortho_defect(&svd.vt.t()) < 1e-4, "V ortho {m}x{n}");
+            // Descending singular values.
+            for w in svd.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn singular_values_of_diagonal() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (4 - i) as f32 } else { 0.0 });
+        let svd = svd_thin(&a);
+        for (i, &s) in svd.s.iter().enumerate() {
+            assert!((s - (4 - i) as f32).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn low_rank_matrix_detected() {
+        let mut rng = Rng::new(2);
+        let u = Mat::randn(20, 3, 1.0, &mut rng);
+        let v = Mat::randn(3, 30, 1.0, &mut rng);
+        let a = matmul(&u, &v);
+        let svd = svd_thin(&a);
+        assert!(svd.s[2] > 1e-2);
+        assert!(svd.s[3] < 1e-3, "s3={}", svd.s[3]);
+    }
+
+    #[test]
+    fn left_singular_basis_captures_energy() {
+        let mut rng = Rng::new(3);
+        // Strong rank-2 core + tiny noise.
+        let u = Mat::randn(16, 2, 1.0, &mut rng);
+        let v = Mat::randn(2, 24, 1.0, &mut rng);
+        let mut a = matmul(&u, &v).scale(10.0);
+        a.axpy(0.01, &Mat::randn(16, 24, 1.0, &mut rng));
+        let s = left_singular_basis(&a, 2);
+        let proj = super::super::gemm::matmul_tn(&s, &a);
+        let ratio = proj.fro_norm() / a.fro_norm();
+        assert!(ratio > 0.99, "ratio={ratio}");
+    }
+
+    #[test]
+    fn sym_eig_diagonalizes() {
+        let mut rng = Rng::new(4);
+        let b = Mat::randn(6, 6, 1.0, &mut rng);
+        let a = matmul(&b, &b.t()); // SPD
+        let (vals, vecs) = sym_eig(&a);
+        assert!(ortho_defect(&vecs) < 1e-4);
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4);
+        }
+        // A V = V diag(l)
+        let av = matmul(&a, &vecs);
+        let mut vl = vecs.clone();
+        vl.scale_cols(&vals);
+        assert!(av.max_abs_diff(&vl) < 1e-3);
+    }
+
+    #[test]
+    fn svd_of_orthonormal_has_unit_singular_values() {
+        let mut rng = Rng::new(5);
+        let q = crate::tensor::qr::orthonormalize(&Mat::randn(15, 5, 1.0, &mut rng));
+        let svd = svd_thin(&q);
+        for &s in &svd.s {
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Self-contained benchmark harness (criterion is unavailable offline).
+//!
+//! `Bench::run` warms up, then samples a closure until a time budget or
+//! sample count is reached, and reports min / median / mean / p95 in a
+//! criterion-like line. `benches/*.rs` use `harness = false`, so each bench
+//! file is a plain binary printing the tables the paper reports.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_samples: 200,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl Stats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}   n={}",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.p95),
+            self.samples
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "min", "median", "mean", "p95"
+    )
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            max_samples: 50,
+        }
+    }
+
+    /// Time `f` repeatedly; `f` must include its own work only (setup goes
+    /// outside). Returns robust stats over the samples.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            samples.push(Duration::ZERO);
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let stats = Stats {
+            name: name.to_string(),
+            samples: n,
+            min: *samples.first().unwrap_or(&Duration::ZERO),
+            median: samples[(n / 2).min(n - 1)],
+            mean,
+            p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        };
+        println!("{}", stats.line());
+        stats
+    }
+}
+
+/// Simple throughput helper: items/sec given a duration.
+pub fn throughput(items: usize, d: Duration) -> f64 {
+    items as f64 / d.as_secs_f64().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            max_samples: 10,
+        };
+        let s = b.run("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.samples >= 1);
+        assert!(s.min <= s.p95);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_dur(Duration::from_nanos(10)), "10ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let t = throughput(100, Duration::from_secs(2));
+        assert!((t - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,144 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args,
+//! with typed getters and a generated `--help` listing.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+    /// (name, help, default) for --help output.
+    registered: Vec<(String, String, String)>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0] and an optional
+    /// subcommand that the caller consumed). `bool_flags` lists options
+    /// that never take a value, resolving the `--flag positional`
+    /// ambiguity.
+    pub fn parse_with_flags(
+        raw: impl Iterator<Item = String>,
+        bool_flags: &[&str],
+    ) -> Args {
+        let mut a = Args::default();
+        let raw: Vec<String> = raw.collect();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    a.flags.push(body.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    a.opts.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.pos.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn parse(raw: impl Iterator<Item = String>) -> Args {
+        Self::parse_with_flags(raw, &[])
+    }
+
+    pub fn register(&mut self, name: &str, help: &str, default: &str) {
+        self.registered
+            .push((name.to_string(), help.to_string(), default.to_string()));
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag) || self.opts.contains_key(flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.replace('_', "").parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.replace('_', "").parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+
+    pub fn help(&self, prog: &str, about: &str) -> String {
+        let mut out = format!("{prog} — {about}\n\nOptions:\n");
+        for (name, help, default) in &self.registered {
+            out.push_str(&format!("  --{name:<24} {help}"));
+            if !default.is_empty() {
+                out.push_str(&format!(" [default: {default}]"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = Args::parse_with_flags(
+            ["--steps", "100", "--rank=16", "--verbose", "train"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["verbose"],
+        );
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.usize_or("rank", 0), 16);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["train".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[]);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 0.5), 0.5);
+        assert_eq!(a.get_or("missing", "x"), "x");
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args(&["--dry-run"]);
+        assert!(a.has("dry-run"));
+    }
+}

@@ -1,0 +1,9 @@
+//! In-repo substrates replacing crates unavailable offline: PRNG, thread
+//! pool, JSON, TOML subset, CLI parsing, and a bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,163 @@
+//! Minimal work-stealing-free scoped thread pool.
+//!
+//! The hot loops (GEMM tiles, per-layer optimizer updates, data-parallel
+//! workers) need fork-join parallelism; with no rayon available offline we
+//! provide a small fixed pool with a `scope`-style API built on
+//! `std::thread::scope` channels.
+//!
+//! Design: `parallel_for` slices an index range into contiguous chunks and
+//! runs them on up to `threads()` OS threads. Closures must be `Sync`
+//! (read-only capture) and write through disjoint `&mut` chunks provided by
+//! the caller (`parallel_chunks`), mirroring rayon's `par_chunks_mut`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+static POOL_THREADS: OnceLock<usize> = OnceLock::new();
+
+/// Number of worker threads used by `parallel_for` (min 1).
+/// Override with the env var `GRASSWALK_THREADS`.
+pub fn threads() -> usize {
+    *POOL_THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("GRASSWALK_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Run `f(i)` for every `i` in `0..n`, dynamically load-balanced over the
+/// pool with a shared atomic cursor and block size `block`.
+pub fn parallel_for<F>(n: usize, block: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let nt = threads().min(n.max(1));
+    if nt <= 1 || n <= block {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(block, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + block).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Split `data` into `chunk`-sized mutable pieces and process each with
+/// `f(chunk_index, piece)` in parallel — the disjoint-writes primitive the
+/// GEMM row-blocking uses.
+pub fn parallel_chunks<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len().div_ceil(chunk.max(1));
+    let nt = threads().min(n.max(1));
+    if nt <= 1 || n <= 1 {
+        for (i, piece) in data.chunks_mut(chunk.max(1)).enumerate() {
+            f(i, piece);
+        }
+        return;
+    }
+    let pieces: Vec<(usize, &mut [T])> =
+        data.chunks_mut(chunk.max(1)).enumerate().collect();
+    let cursor = AtomicUsize::new(0);
+    let pieces = std::sync::Mutex::new(
+        pieces.into_iter().map(Some).collect::<Vec<_>>(),
+    );
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            s.spawn(|| loop {
+                let idx = cursor.fetch_add(1, Ordering::Relaxed);
+                let item = {
+                    let mut guard = pieces.lock().unwrap();
+                    if idx >= guard.len() {
+                        None
+                    } else {
+                        guard[idx].take()
+                    }
+                };
+                match item {
+                    Some((i, piece)) => f(i, piece),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Map `0..n` in parallel, collecting results in order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    parallel_chunks(&mut out, 1, |i, piece| {
+        piece[0] = f(i);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(1000, 16, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_chunks_disjoint_writes() {
+        let mut v = vec![0u32; 257];
+        parallel_chunks(&mut v, 10, |i, piece| {
+            for p in piece.iter_mut() {
+                *p = i as u32 + 1;
+            }
+        });
+        for (j, x) in v.iter().enumerate() {
+            assert_eq!(*x, (j / 10) as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(100, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn small_n_runs_serial() {
+        let mut hit = vec![false; 3];
+        let hits = std::sync::Mutex::new(&mut hit);
+        parallel_for(3, 64, |i| {
+            hits.lock().unwrap()[i] = true;
+        });
+        assert!(hit.iter().all(|&b| b));
+    }
+}

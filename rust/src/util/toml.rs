@@ -1,0 +1,211 @@
+//! Minimal TOML-subset parser for the config system.
+//!
+//! Supports exactly what `configs/*.toml` use: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! boolean / array-of-scalar values, `#` comments, and bare or quoted keys.
+//! Everything is flattened to `section.sub.key` -> scalar, which the typed
+//! config layer (`config.rs`) consumes.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flattened key -> value table.
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+pub fn parse(src: &str) -> Result<TomlTable, String> {
+    let mut table = TomlTable::new();
+    let mut prefix = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: bad section", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.starts_with('[') {
+                return Err(format!(
+                    "line {}: array-of-tables unsupported",
+                    lineno + 1
+                ));
+            }
+            prefix = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim().trim_matches('"').to_string();
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+        let full = if prefix.is_empty() {
+            key
+        } else {
+            format!("{prefix}.{key}")
+        };
+        table.insert(full, value);
+    }
+    Ok(table)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of a quoted string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    let clean = s.replace('_', "");
+    if !clean.contains('.') && !clean.contains('e') && !clean.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+/// Split on commas that are not inside quotes.
+fn split_top(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let t = parse(
+            r#"
+# global
+name = "run1"
+steps = 500          # inline comment
+[model]
+dim = 64
+rope_theta = 1e4
+[optim.grasswalk]
+eta = 0.5
+enabled = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(t["name"].as_str(), Some("run1"));
+        assert_eq!(t["steps"].as_i64(), Some(500));
+        assert_eq!(t["model.dim"].as_i64(), Some(64));
+        assert_eq!(t["model.rope_theta"].as_f64(), Some(1e4));
+        assert_eq!(t["optim.grasswalk.eta"].as_f64(), Some(0.5));
+        assert_eq!(t["optim.grasswalk.enabled"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse(r#"ranks = [8, 16, 32]"#).unwrap();
+        match &t["ranks"] {
+            TomlValue::Arr(v) => {
+                assert_eq!(v.len(), 3);
+                assert_eq!(v[1].as_i64(), Some(16));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let t = parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(t["tag"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let t = parse("n = 1_000_000").unwrap();
+        assert_eq!(t["n"].as_i64(), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(parse("just words").is_err());
+        assert!(parse("[unclosed").is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! Failure-injection tests: the runtime must fail loudly and precisely —
+//! wrong shapes, corrupt artifacts, missing files, and ABI drift are the
+//! real-world failure modes of an AOT pipeline.
+
+use grasswalk::runtime::{Engine, Value};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn missing_artifacts_dir_is_a_clear_error() {
+    let Err(err) = Engine::new("/definitely/not/here") else {
+        panic!("must fail")
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest") || msg.contains("artifacts"),
+            "unhelpful error: {msg}");
+}
+
+#[test]
+fn wrong_input_arity_rejected_before_ffi() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new(artifacts_dir()).unwrap();
+    let key = engine.manifest.opt_step_key(64, 64, 16);
+    let exe = engine.load(&key).unwrap();
+    let err = exe.run(&[Value::scalar(1.0)]).unwrap_err();
+    assert!(format!("{err}").contains("expected"), "{err}");
+}
+
+#[test]
+fn wrong_input_shape_rejected_with_name() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new(artifacts_dir()).unwrap();
+    let key = engine.manifest.opt_step_key(64, 64, 16);
+    let exe = engine.load(&key).unwrap();
+    // Build inputs with W shaped 2x2 instead of 64x64.
+    let mut inputs: Vec<Value> = exe
+        .spec
+        .inputs
+        .iter()
+        .map(|io| {
+            if io.dtype == "i32" {
+                Value::I32(io.shape.clone(),
+                           vec![0; io.shape.iter().product::<usize>().max(1)])
+            } else if io.shape.is_empty() {
+                Value::scalar(0.0)
+            } else {
+                Value::F32(io.shape.clone(),
+                           vec![0.0; io.shape.iter().product()])
+            }
+        })
+        .collect();
+    inputs[0] = Value::F32(vec![2, 2], vec![0.0; 4]);
+    let err = exe.run(&inputs).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains('W') && msg.contains("shape"), "{msg}");
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_load_not_execute() {
+    if !have_artifacts() {
+        return;
+    }
+    // Copy artifacts into a temp dir, truncate one HLO file.
+    let src = artifacts_dir();
+    let dst = std::env::temp_dir().join("gw_corrupt_artifacts");
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in std::fs::read_dir(&src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+    let victim = dst.join("opt_step_64x64_r16.hlo.txt");
+    std::fs::write(&victim, "HloModule garbage {{{ not hlo").unwrap();
+    let engine = Engine::new(&dst).unwrap();
+    let Err(err) = engine.load("opt_step_64x64_r16") else {
+        panic!("must fail")
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("opt_step_64x64_r16"),
+        "error must name the artifact: {msg}"
+    );
+    let _ = std::fs::remove_dir_all(dst);
+}
+
+#[test]
+fn manifest_missing_file_caught_at_validation() {
+    if !have_artifacts() {
+        return;
+    }
+    let src = artifacts_dir();
+    let dst = std::env::temp_dir().join("gw_missing_artifact");
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(&dst).unwrap();
+    // Copy only the manifest — every referenced file is now missing.
+    std::fs::copy(src.join("manifest.json"), dst.join("manifest.json"))
+        .unwrap();
+    let Err(err) = Engine::new(&dst) else { panic!("must fail") };
+    assert!(format!("{err:#}").contains("missing"), "{err:#}");
+    let _ = std::fs::remove_dir_all(dst);
+}
+
+#[test]
+fn unknown_artifact_key_is_an_error() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new(artifacts_dir()).unwrap();
+    assert!(engine.load("opt_step_9999x9999_r1").is_err());
+}
+
+#[test]
+fn trainer_lr_zero_is_stable_not_nan() {
+    // Degenerate hyperparameters must not produce NaNs.
+    use grasswalk::optim::Method;
+    use grasswalk::tensor::Mat;
+    use grasswalk::util::rng::Rng;
+    let mut rng = Rng::new(1);
+    let g = Mat::randn(8, 12, 1.0, &mut rng);
+    for method in Method::all() {
+        let mut opt = method.build(4, 5, 0.0, 50);
+        let mut w = Mat::randn(8, 12, 1.0, &mut rng);
+        let w0 = w.clone();
+        for _ in 0..5 {
+            opt.step(&mut w, &g, &mut rng);
+        }
+        assert!(w.all_finite(), "{}", method.label());
+        assert!(
+            w.max_abs_diff(&w0) < 1e-4,
+            "{}: lr=0 must not move weights",
+            method.label()
+        );
+    }
+}
+
+#[test]
+fn optimizer_survives_zero_gradient() {
+    use grasswalk::optim::Method;
+    use grasswalk::tensor::Mat;
+    use grasswalk::util::rng::Rng;
+    let mut rng = Rng::new(2);
+    let g = Mat::zeros(8, 12);
+    for method in Method::all() {
+        let mut opt = method.build(4, 3, 1e-2, 50);
+        let mut w = Mat::randn(8, 12, 1.0, &mut rng);
+        for _ in 0..7 {
+            opt.step(&mut w, &g, &mut rng);
+        }
+        assert!(w.all_finite(), "{} NaN on zero grads", method.label());
+    }
+}
+
+#[test]
+fn optimizer_survives_huge_gradient() {
+    use grasswalk::optim::Method;
+    use grasswalk::tensor::Mat;
+    use grasswalk::util::rng::Rng;
+    let mut rng = Rng::new(3);
+    let g = Mat::randn(8, 12, 1e6, &mut rng);
+    for method in Method::all() {
+        let mut opt = method.build(4, 3, 1e-3, 50);
+        let mut w = Mat::zeros(8, 12);
+        for _ in 0..5 {
+            opt.step(&mut w, &g, &mut rng);
+        }
+        assert!(w.all_finite(), "{} NaN on huge grads", method.label());
+    }
+}

@@ -1,0 +1,389 @@
+//! Property-based tests (in-repo harness — proptest is unavailable
+//! offline): randomized invariants over the linalg substrate, the
+//! Grassmannian geometry, the optimizer suite, the collective, and the
+//! serialization formats. Each property runs across many seeded cases;
+//! failures print the seed for replay.
+
+use grasswalk::coordinator::Ring;
+use grasswalk::data::{Corpus, CorpusConfig, Tokenizer};
+use grasswalk::optim::{grassmann, projected::reference_step, Method};
+use grasswalk::tensor::{
+    matmul, matmul_nt, matmul_tn, ortho_defect, orthonormalize, qr_thin,
+    rsvd, svd_thin, Mat,
+};
+use grasswalk::util::json::Json;
+use grasswalk::util::rng::Rng;
+
+const CASES: u64 = 25;
+
+fn dims(rng: &mut Rng) -> (usize, usize) {
+    let m = 2 + rng.below(30);
+    let n = m + rng.below(40);
+    (m, n)
+}
+
+// ---------------------------------------------------------------------------
+// Linalg substrate
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gemm_associates_with_identity_and_transpose() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let (m, n) = dims(&mut rng);
+        let k = 1 + rng.below(20);
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        // (A B)^T == B^T A^T
+        let ab_t = matmul(&a, &b).t();
+        let bt_at = matmul(&b.t(), &a.t());
+        assert!(ab_t.max_abs_diff(&bt_at) < 1e-3, "seed {seed}");
+        // tn/nt kernels consistent with explicit transposes.
+        assert!(
+            matmul_tn(&a, &a).max_abs_diff(&matmul(&a.t(), &a)) < 1e-3,
+            "seed {seed}"
+        );
+        assert!(
+            matmul_nt(&b, &b).max_abs_diff(&matmul(&b, &b.t())) < 1e-3,
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_qr_reconstructs_and_q_orthonormal() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(100 + seed);
+        let (n, m) = dims(&mut rng); // m >= n
+        let a = Mat::randn(m, n, 1.0, &mut rng);
+        let (q, r) = qr_thin(&a);
+        assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-3, "seed {seed}");
+        assert!(ortho_defect(&q) < 1e-4, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_svd_reconstructs_and_values_descend() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(200 + seed);
+        let (m, n) = dims(&mut rng);
+        let a = Mat::randn(m, n, 1.0, &mut rng);
+        let svd = svd_thin(&a);
+        let mut us = svd.u.clone();
+        us.scale_cols(&svd.s);
+        assert!(
+            matmul(&us, &svd.vt).max_abs_diff(&a) < 5e-3,
+            "seed {seed}"
+        );
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-4, "seed {seed}: not descending");
+        }
+        // Frobenius norm preserved by singular values.
+        let fro_s: f64 =
+            svd.s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let rel = (fro_s.sqrt() - a.fro_norm() as f64).abs()
+            / a.fro_norm() as f64;
+        assert!(rel < 1e-3, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_rsvd_never_beats_exact_but_close_on_lowrank() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(300 + seed);
+        let m = 10 + rng.below(20);
+        let n = m + rng.below(20);
+        let r = 1 + rng.below(5);
+        let u = Mat::randn(m, r, 1.0, &mut rng);
+        let v = Mat::randn(r, n, 1.0, &mut rng);
+        let a = matmul(&u, &v);
+        let approx = rsvd(&a, r, 5, 1, &mut rng);
+        let exact = svd_thin(&a);
+        // Top singular value: rsvd <= exact (projection property).
+        assert!(
+            approx.s[0] <= exact.s[0] * (1.0 + 1e-3),
+            "seed {seed}: {} > {}",
+            approx.s[0],
+            exact.s[0]
+        );
+        assert!(
+            (approx.s[0] - exact.s[0]).abs() / exact.s[0] < 0.05,
+            "seed {seed}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grassmannian geometry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_exp_map_preserves_orthonormality_any_eta() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(400 + seed);
+        let m = 6 + rng.below(25);
+        let r = 1 + rng.below(m.min(6));
+        let s = grassmann::random_point(m, r, &mut rng);
+        let x = Mat::randn(m, r, 1.0, &mut rng);
+        let eta = rng.uniform() * 3.0;
+        let s2 = grassmann::exp_map(&s, &x, eta, None, &mut rng);
+        assert!(ortho_defect(&s2) < 1e-4, "seed {seed} eta {eta}");
+    }
+}
+
+#[test]
+fn prop_geodesic_distance_is_metric_like() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(500 + seed);
+        let m = 8 + rng.below(20);
+        let r = 1 + rng.below(4);
+        let a = grassmann::random_point(m, r, &mut rng);
+        let b = grassmann::random_point(m, r, &mut rng);
+        let dab = grassmann::geodesic_distance(&a, &b);
+        let dba = grassmann::geodesic_distance(&b, &a);
+        assert!((dab - dba).abs() < 1e-3, "seed {seed}: symmetry");
+        assert!(dab >= 0.0);
+        // acos near 1 amplifies f32 rounding: cos = 1 − ε gives
+        // θ = sqrt(2ε), so tolerance is sqrt-scale.
+        assert!(
+            grassmann::geodesic_distance(&a, &a) < 5e-3,
+            "seed {seed}: identity"
+        );
+        // Invariance under basis rotation: a right-orthogonal transform
+        // of the basis spans the same subspace.
+        let rot = orthonormalize(&Mat::randn(r, r, 1.0, &mut rng));
+        let a_rot = matmul(&a, &rot);
+        assert!(
+            grassmann::geodesic_distance(&a, &a_rot) < 1e-2,
+            "seed {seed}: rotation invariance"
+        );
+    }
+}
+
+#[test]
+fn prop_error_derivative_always_horizontal() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(600 + seed);
+        let (m, n) = dims(&mut rng);
+        let r = 1 + rng.below(m.min(6));
+        let s = grassmann::random_point(m, r, &mut rng);
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        let d = grassmann::error_derivative(&s, &g);
+        assert!(
+            matmul_tn(&s, &d).max_abs() < 1e-3 * d.max_abs().max(1.0),
+            "seed {seed}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Optimizer invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_reference_step_rs_zero_residual_when_full_rank() {
+    // r == m: projection is lossless, so Λ ≈ 0 and the update equals the
+    // plain back-projected Adam direction.
+    for seed in 0..10 {
+        let mut rng = Rng::new(700 + seed);
+        let m = 3 + rng.below(8);
+        let n = m + rng.below(10);
+        let w = Mat::randn(m, n, 1.0, &mut rng);
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        let s = orthonormalize(&Mat::randn(m, m, 1.0, &mut rng));
+        let mm = Mat::zeros(m, n);
+        let v = Mat::zeros(m, n);
+        let (_, _, _, lam) = reference_step(
+            &w, &g, &s, &mm, &v, &Mat::eye(m), 1, 0.0, false, 1e-3, 0.9,
+            0.999, 1e-8, 1.01,
+        );
+        assert!(lam < 1e-3 * g.fro_norm(), "seed {seed}: lam {lam}");
+    }
+}
+
+#[test]
+fn prop_all_methods_bounded_update_magnitude() {
+    // No optimizer should produce a step larger than a few times alpha
+    // per element on the first step (Adam-style normalization).
+    for seed in 0..8 {
+        let mut rng = Rng::new(800 + seed);
+        let (m, n) = dims(&mut rng);
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        for method in Method::all() {
+            if *method == Method::Sgd {
+                continue; // unnormalized by design
+            }
+            let mut opt = method.build(4, 10, 1e-3, 100);
+            let mut w = Mat::zeros(m, n);
+            opt.step(&mut w, &g, &mut rng);
+            let max = w.max_abs();
+            assert!(
+                max < 0.5,
+                "seed {seed} {}: first-step max |Δw| = {max}",
+                method.label()
+            );
+            assert!(w.all_finite(), "{}", method.label());
+        }
+    }
+}
+
+#[test]
+fn prop_optimizers_deterministic_given_seed() {
+    for method in Method::all() {
+        let mut rng1 = Rng::new(42);
+        let mut rng2 = Rng::new(42);
+        let g = Mat::randn(8, 12, 1.0, &mut Rng::new(1));
+        let mut w1 = Mat::zeros(8, 12);
+        let mut w2 = Mat::zeros(8, 12);
+        let mut o1 = method.build(4, 3, 1e-2, 50);
+        let mut o2 = method.build(4, 3, 1e-2, 50);
+        for _ in 0..7 {
+            o1.step(&mut w1, &g, &mut rng1);
+            o2.step(&mut w2, &g, &mut rng2);
+        }
+        assert_eq!(w1.data, w2.data, "{}", method.label());
+    }
+}
+
+#[test]
+fn prop_state_floats_stable_after_first_step() {
+    // Memory accounting relies on state size not growing over time.
+    for method in Method::all() {
+        let mut rng = Rng::new(7);
+        let g = Mat::randn(10, 16, 1.0, &mut rng);
+        let mut w = Mat::zeros(10, 16);
+        let mut opt = method.build(4, 3, 1e-2, 50);
+        opt.step(&mut w, &g, &mut rng);
+        let s1 = opt.state_floats();
+        for _ in 0..9 {
+            opt.step(&mut w, &g, &mut rng);
+        }
+        assert_eq!(opt.state_floats(), s1, "{}", method.label());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Collective
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allreduce_invariant_to_worker_permutation() {
+    for seed in 0..10 {
+        let mut rng = Rng::new(900 + seed);
+        let n = 2 + rng.below(6);
+        let len = 1 + rng.below(200);
+        let base: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let mut a = base.clone();
+        Ring::new(n).all_reduce_sum(&mut a);
+        let mut b: Vec<Vec<f32>> = base.iter().rev().cloned().collect();
+        Ring::new(n).all_reduce_sum(&mut b);
+        for (x, y) in a[0].iter().zip(&b[0]) {
+            assert!((x - y).abs() < 1e-3, "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data + serialization fuzz
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tokenizer_roundtrips_random_bytes() {
+    for seed in 0..15 {
+        let mut rng = Rng::new(1000 + seed);
+        let train: Vec<u8> =
+            (0..500).map(|_| rng.below(64) as u8 + 32).collect();
+        let tok = Tokenizer::train(&train, 30);
+        let sample: Vec<u8> =
+            (0..200).map(|_| rng.below(256) as u8).collect();
+        assert_eq!(
+            tok.decode(&tok.encode(&sample)),
+            sample,
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_corpus_statistics_stable_across_shards() {
+    let cfg = CorpusConfig::default();
+    let mut entropies = Vec::new();
+    for shard in 0..4 {
+        let tokens = Corpus::for_shard(&cfg, shard, 4).batch(1, 20_000);
+        let mut counts = vec![0f64; cfg.vocab];
+        for &t in &tokens {
+            counts[t as usize] += 1.0;
+        }
+        let total: f64 = counts.iter().sum();
+        let h: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0.0)
+            .map(|&c| {
+                let p = c / total;
+                -p * p.ln()
+            })
+            .sum();
+        entropies.push(h);
+    }
+    let max = entropies.iter().cloned().fold(f64::MIN, f64::max);
+    let min = entropies.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max - min < 0.5, "{entropies:?}");
+}
+
+#[test]
+fn prop_json_roundtrip_random_structures() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64),
+            3 => Json::Str(format!("s{}", rng.next_u64() % 1000)),
+            4 => Json::Arr(
+                (0..rng.below(4))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| {
+                        (format!("k{i}"), random_json(rng, depth - 1))
+                    })
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..25 {
+        let mut rng = Rng::new(1100 + seed);
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back, "seed {seed}: {text}");
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrips_random_payloads() {
+    use grasswalk::coordinator::Checkpoint;
+    for seed in 0..10 {
+        let mut rng = Rng::new(1200 + seed);
+        let n = 1 + rng.below(5000);
+        let mut params = vec![0.0f32; n];
+        rng.fill_normal(&mut params, 10.0);
+        let ck = Checkpoint {
+            step: rng.next_u64() % 100000,
+            seed: rng.next_u64(),
+            params,
+        };
+        let path = std::env::temp_dir()
+            .join(format!("gw_prop_ckpt_{seed}.bin"));
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck, "seed {seed}");
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,208 @@
+//! End-to-end trainer tests over the real artifacts: the full L3→L2→L1
+//! stack must train (loss goes down), be deterministic per seed, agree
+//! between the Rust and PJRT optimizer engines, support multi-worker
+//! data-parallel with grad accumulation, and checkpoint/restore.
+//!
+//! Requires `make artifacts` (skips otherwise).
+
+use std::sync::Arc;
+
+use grasswalk::coordinator::{
+    restore_trainer, save_trainer, OptEngine, TrainConfig, Trainer,
+};
+use grasswalk::metrics::Recorder;
+use grasswalk::optim::Method;
+use grasswalk::runtime::Engine;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Engine::new(dir).expect("engine")))
+}
+
+fn base_cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        method: Method::GrassWalk,
+        steps,
+        rank: 8,
+        interval: 10,
+        lr: 1e-2,
+        dense_lr: 1e-2,
+        eval_every: 0,
+        eval_batches: 2,
+        log_every: 0,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn loss_decreases_over_training() {
+    let Some(engine) = engine() else { return };
+    let mut rec = Recorder::new("e2e");
+    let mut t = Trainer::new(engine, base_cfg(30)).unwrap();
+    let report = t.run(&mut rec).unwrap();
+    let losses = &rec.get("train_loss").unwrap().points;
+    let first: f64 =
+        losses[..5].iter().map(|&(_, v)| v).sum::<f64>() / 5.0;
+    let last: f64 = losses[losses.len() - 5..]
+        .iter()
+        .map(|&(_, v)| v)
+        .sum::<f64>()
+        / 5.0;
+    assert!(
+        last < first - 0.3,
+        "train loss {first:.3} -> {last:.3} did not improve"
+    );
+    assert!(report.final_eval_loss.is_finite());
+    assert!(report.optimizer_state_floats > 0);
+}
+
+#[test]
+fn deterministic_per_seed() {
+    let Some(engine) = engine() else { return };
+    let run = |seed: u64| {
+        let mut rec = Recorder::new("det");
+        let mut cfg = base_cfg(6);
+        cfg.seed = seed;
+        let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+        t.run(&mut rec).unwrap();
+        rec.get("train_loss").unwrap().points.clone()
+    };
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(a, b, "same seed must reproduce bit-identically");
+    let c = run(8);
+    assert_ne!(a, c, "different seed must differ");
+}
+
+#[test]
+fn pjrt_opt_engine_matches_rust_engine_loss_scale() {
+    // The compiled opt_step bakes alpha=1e-3; run both engines at that lr
+    // and check the loss trajectories stay close (identical math modulo
+    // rSVD randomness in the walk; use GrassJump whose refresh is QR of
+    // the SAME rng stream... bases still differ across engines, so only
+    // demand close losses, not identical).
+    let Some(engine) = engine() else { return };
+    let run = |opt_engine| {
+        let cfg = TrainConfig {
+            opt_engine,
+            method: Method::GrassJump,
+            lr: 1e-3,
+            steps: 12,
+            interval: 6,
+            rank: 16, // must match compiled artifact rank
+            ..base_cfg(12)
+        };
+        let mut rec = Recorder::new("engines");
+        let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+        let rep = t.run(&mut rec).unwrap();
+        rep.final_train_loss
+    };
+    let rust = run(OptEngine::Rust);
+    let pjrt = run(OptEngine::Pjrt);
+    assert!(
+        (rust - pjrt).abs() < 0.05,
+        "rust {rust} vs pjrt {pjrt}"
+    );
+}
+
+#[test]
+fn multi_worker_grad_accum_trains() {
+    let Some(engine) = engine() else { return };
+    let cfg = TrainConfig {
+        workers: 2,
+        grad_accum: 2,
+        ..base_cfg(10)
+    };
+    let mut rec = Recorder::new("dp");
+    let mut t = Trainer::new(engine, cfg).unwrap();
+    let report = t.run(&mut rec).unwrap();
+    assert!(report.final_train_loss.is_finite());
+    let losses = &rec.get("train_loss").unwrap().points;
+    assert!(losses.last().unwrap().1 < losses[0].1 + 0.1);
+}
+
+#[test]
+fn single_vs_multi_worker_same_expected_signal() {
+    // With workers=2 the all-reduced gradient is a mean over two shards;
+    // training should still converge to a comparable loss band.
+    let Some(engine) = engine() else { return };
+    let run = |workers| {
+        let cfg = TrainConfig { workers, ..base_cfg(15) };
+        let mut rec = Recorder::new("w");
+        let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+        t.run(&mut rec).unwrap().final_train_loss
+    };
+    let w1 = run(1);
+    let w2 = run(2);
+    assert!((w1 - w2).abs() < 0.8, "w1={w1} w2={w2}");
+}
+
+#[test]
+fn checkpoint_restore_resumes() {
+    let Some(engine) = engine() else { return };
+    let path = std::env::temp_dir().join("gw_e2e_ckpt.bin");
+
+    // Train 8 steps, checkpoint.
+    let mut rec = Recorder::new("ck1");
+    let mut t1 = Trainer::new(engine.clone(), base_cfg(8)).unwrap();
+    t1.run(&mut rec).unwrap();
+    save_trainer(&t1, &path).unwrap();
+
+    // Fresh trainer, restore: parameters must match bit-for-bit and the
+    // step counter must resume (eval streams are position-dependent, so
+    // compare state, then check both evaluate identically on the SAME
+    // stream position of fresh trainers).
+    let mut t2 = Trainer::new(engine.clone(), base_cfg(8)).unwrap();
+    let step = restore_trainer(&mut t2, &path).unwrap();
+    assert_eq!(step, 8);
+    assert_eq!(t1.params_flat(), t2.params_flat());
+    let loss_a = t2.eval().unwrap();
+    let mut t3 = Trainer::new(engine.clone(), base_cfg(8)).unwrap();
+    restore_trainer(&mut t3, &path).unwrap();
+    let loss_b = t3.eval().unwrap();
+    assert!((loss_a - loss_b).abs() < 1e-6, "{loss_a} vs {loss_b}");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn every_table1_method_trains_on_stack() {
+    let Some(engine) = engine() else { return };
+    for method in Method::TABLE1 {
+        let cfg = TrainConfig { method, ..base_cfg(6) };
+        let mut rec = Recorder::new("m");
+        let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+        let rep = t.run(&mut rec).unwrap();
+        assert!(
+            rep.final_train_loss.is_finite(),
+            "{} diverged",
+            method.label()
+        );
+    }
+}
+
+#[test]
+fn analysis_stream_records_all_layer_types() {
+    let Some(engine) = engine() else { return };
+    let cfg = TrainConfig {
+        analysis_every: Some(4),
+        ..base_cfg(8)
+    };
+    let mut rec = Recorder::new("an");
+    let mut t = Trainer::new(engine, cfg).unwrap();
+    t.run(&mut rec).unwrap();
+    for ty in grasswalk::model::shapes::PROJ_TYPES {
+        let s = rec
+            .get(&format!("energy/{ty}"))
+            .unwrap_or_else(|| panic!("missing energy/{ty}"));
+        assert!(!s.points.is_empty());
+        for &(_, v) in &s.points {
+            assert!((0.0..=1.0).contains(&v), "{ty}: {v}");
+        }
+    }
+}
