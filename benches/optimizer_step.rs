@@ -3,14 +3,72 @@
 //! L3 target is the projected step within 2× of its GEMM roofline.
 //!
 //!   cargo bench --bench optimizer_step
+//!
+//! Three additions over the original harness (EXPERIMENTS.md §Workspace):
+//!
+//! 1. **Allocation counting** — a `GlobalAlloc` wrapper counts heap
+//!    allocations; the steady-state step of every CPU optimizer except
+//!    LDAdam (whose per-step power iteration + QR allocates by design)
+//!    is asserted to perform ZERO allocations. Counting runs inside
+//!    `pool::run_serial` so thread-spawn bookkeeping (which belongs to
+//!    the pool, not the optimizer) cannot leak into the count.
+//! 2. **Legacy vs workspace** — `reference_step` is the historical
+//!    fully-allocating implementation of the same math; benching it
+//!    against `ProjectedOptimizer::step` measures exactly what the
+//!    workspace refactor bought on one thread.
+//! 3. **Per-matrix parallel stepping** — the trainer-shaped fan-out
+//!    (N independent matrices across the pool) vs the sequential loop.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use grasswalk::optim::{Method, MatrixOptimizer, SubspaceRule};
+use grasswalk::optim::projected::reference_step;
+use grasswalk::optim::{
+    CpuMatrixOptimizer, MatrixOptimizer, Method, SubspaceRule,
+};
 use grasswalk::runtime::Engine;
-use grasswalk::tensor::{Mat, matmul, matmul_tn};
+use grasswalk::tensor::{matmul, matmul_tn, Mat};
 use grasswalk::util::bench::{header, Bench};
+use grasswalk::util::pool;
 use grasswalk::util::rng::Rng;
+
+/// Counts every allocation routed through the global allocator.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by `f` on this thread path (single-threaded
+/// callers only — run under `pool::run_serial`).
+fn alloc_count(f: impl FnOnce()) -> u64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    f();
+    ALLOCS.load(Ordering::Relaxed) - before
+}
 
 fn main() {
     let b = Bench::default();
@@ -32,12 +90,59 @@ fn main() {
         });
         let roofline = stats.median;
 
+        // Legacy path: the historical allocating implementation of the
+        // projected+AO+RS step (reference_step is that code, preserved
+        // verbatim as the numerical oracle).
+        let legacy = {
+            let mut w = Mat::randn(m, n, 1.0, &mut rng);
+            let mut ms = Mat::zeros(r, n);
+            let mut vs = Mat::zeros(r, n);
+            let rot = Mat::eye(r);
+            let mut lam = 0.0f32;
+            let mut t = 1usize;
+            b.run(&format!("legacy alloc step (ref)  {m}x{n}"), || {
+                let (w2, m2, v2, l2) = reference_step(
+                    &w, &g, &s, &ms, &vs, &rot, t, lam, false, 1e-3, 0.9,
+                    0.999, 1e-8, 1.01,
+                );
+                w = w2;
+                ms = m2;
+                vs = v2;
+                lam = l2;
+                t += 1;
+            })
+        };
+
+        let mut grass_median = None;
         for method in Method::all() {
             let mut opt = method.build(r, 1_000_000, 1e-3, 1000);
             let mut w = Mat::randn(m, n, 1.0, &mut rng);
             let mut step_rng = Rng::new(7);
-            // init
+            // Two warmup steps: t=1 initializes state (refresh), t=2
+            // sizes every steady-state workspace buffer.
             opt.step(&mut w, &g, &mut step_rng);
+            opt.step(&mut w, &g, &mut step_rng);
+
+            // Zero-allocation assertion for the steady state, measured
+            // on the serial path so pool spawns don't pollute the count.
+            let allocs = pool::run_serial(|| {
+                alloc_count(|| opt.step(&mut w, &g, &mut step_rng))
+            });
+            if *method == Method::LdAdam {
+                println!(
+                    "    {: <24} steady-state allocs/step: {} \
+                     (per-step QR; documented exception)",
+                    method.label(),
+                    allocs
+                );
+            } else {
+                assert_eq!(
+                    allocs, 0,
+                    "{}: steady-state step must not allocate",
+                    method.label()
+                );
+            }
+
             let st = b.run(
                 &format!("{:<24} {m}x{n}", method.label()),
                 || {
@@ -45,11 +150,18 @@ fn main() {
                 },
             );
             if *method == Method::GrassWalk {
+                grass_median = Some(st.median);
                 println!(
                     "    -> grasswalk steady-state vs roofline: {:.2}x",
                     st.median.as_secs_f64() / roofline.as_secs_f64()
                 );
             }
+        }
+        if let Some(gm) = grass_median {
+            println!(
+                "    -> workspace vs legacy single-thread speedup: {:.2}x",
+                legacy.median.as_secs_f64() / gm.as_secs_f64()
+            );
         }
 
         // Refresh cost per rule (the every-T step).
@@ -73,6 +185,52 @@ fn main() {
                 },
             );
         }
+    }
+
+    // Per-matrix parallel stepping: the trainer's fan-out shape. N
+    // independent (optimizer, W, G, RNG) tuples stepped sequentially vs
+    // across the pool — scaling comes on top of the single-thread
+    // workspace win because steps share nothing.
+    println!("-- per-matrix parallel stepping ({} threads) --",
+             pool::threads());
+    let (m, n, r) = (256usize, 688usize, 64usize);
+    for n_mats in [4usize, 16] {
+        struct Slot {
+            opt: Box<dyn CpuMatrixOptimizer>,
+            w: Mat,
+            g: Mat,
+            rng: Rng,
+        }
+        let mut slots: Vec<Slot> = (0..n_mats)
+            .map(|i| {
+                let mut srng = Rng::new(100 + i as u64);
+                let mut slot = Slot {
+                    opt: Method::GrassWalk.build_cpu(r, 1_000_000, 1e-3,
+                                                     1000),
+                    w: Mat::randn(m, n, 1.0, &mut srng),
+                    g: Mat::randn(m, n, 1.0, &mut srng),
+                    rng: srng,
+                };
+                let Slot { opt, w, g, rng } = &mut slot;
+                opt.step(w, g, rng);
+                opt.step(w, g, rng);
+                slot
+            })
+            .collect();
+        let seq = b.run(&format!("sequential {n_mats} matrices"), || {
+            for s in slots.iter_mut() {
+                s.opt.step(&mut s.w, &s.g, &mut s.rng);
+            }
+        });
+        let par = b.run(&format!("pool fan-out {n_mats} matrices"), || {
+            pool::parallel_items(&mut slots, |_, s| {
+                s.opt.step(&mut s.w, &s.g, &mut s.rng);
+            });
+        });
+        println!(
+            "    -> parallel speedup {n_mats} matrices: {:.2}x",
+            seq.median.as_secs_f64() / par.median.as_secs_f64()
+        );
     }
 
     // PJRT fused-kernel path, if artifacts exist.

@@ -14,8 +14,20 @@ use grasswalk::optim::Method;
 use grasswalk::runtime::Engine;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Engine: PJRT CPU client + the compiled HLO artifacts.
-    let engine = Arc::new(Engine::new("artifacts")?);
+    // 1. Engine: PJRT CPU client + the compiled HLO artifacts. Without
+    // artifacts (or without the `pjrt` feature) this is a graceful
+    // no-op, so CI can smoke-run the example on a bare checkout.
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts` first)");
+        return Ok(());
+    }
+    let engine = match Engine::new("artifacts") {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            eprintln!("SKIP: engine unavailable ({e:#})");
+            return Ok(());
+        }
+    };
     println!("platform: {}", engine.platform());
     let m = &engine.manifest.model;
     println!(

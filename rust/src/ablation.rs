@@ -35,7 +35,7 @@ pub fn run_variant(
         (0..n)
             .map(|_| {
                 Box::new(ProjectedOptimizer::new(proj_cfg.clone()))
-                    as Box<dyn crate::optim::MatrixOptimizer>
+                    as Box<dyn crate::optim::CpuMatrixOptimizer>
             })
             .collect(),
     );

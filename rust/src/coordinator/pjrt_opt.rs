@@ -9,11 +9,18 @@
 
 use std::sync::Arc;
 
-use crate::optim::{grassmann, MatrixOptimizer, SubspaceRule};
+use crate::optim::{
+    grassmann, with_orientation, MatrixOptimizer, OrientBufs, SubspaceRule,
+};
 use crate::runtime::{Engine, Executable, Value};
 use crate::tensor::{left_singular_basis, matmul_tn, Mat};
 use crate::util::rng::Rng;
 
+/// NOTE: this type deliberately implements only the base
+/// [`MatrixOptimizer`] trait (not `CpuMatrixOptimizer`): the PJRT client
+/// handle is engine-bound and its FFI types are single-threaded, so the
+/// trainer keeps the PJRT path on the sequential per-matrix loop while
+/// the pure-Rust suite fans out across the pool.
 pub struct PjrtProjected {
     engine: Arc<Engine>,
     exe: Option<Arc<Executable>>,
@@ -28,6 +35,7 @@ pub struct PjrtProjected {
     t: usize,
     transposed: Option<bool>,
     name: String,
+    orient: OrientBufs,
 }
 
 impl PjrtProjected {
@@ -52,6 +60,7 @@ impl PjrtProjected {
             t: 0,
             transposed: None,
             name: format!("pjrt-projected({})", rule.label()),
+            orient: OrientBufs::default(),
         }
     }
 
@@ -83,7 +92,7 @@ impl PjrtProjected {
             }
             self.s = Some(s_new);
         }
-        let s = self.s.as_ref().unwrap().clone();
+        let s = self.s.as_ref().unwrap();
         if self.m.is_none() {
             self.m = Some(Mat::zeros(r, g.cols));
             self.v = Some(Mat::zeros(r, g.cols));
@@ -103,7 +112,7 @@ impl PjrtProjected {
             .run(&[
                 Value::from_mat(w),
                 Value::from_mat(g),
-                Value::from_mat(&s),
+                Value::from_mat(s),
                 Value::from_mat(self.m.as_ref().unwrap()),
                 Value::from_mat(self.v.as_ref().unwrap()),
                 Value::from_mat(&rot),
@@ -124,14 +133,10 @@ impl MatrixOptimizer for PjrtProjected {
         assert_eq!(w.shape(), g.shape());
         let transposed =
             *self.transposed.get_or_insert_with(|| w.rows > w.cols);
-        if transposed {
-            let mut wt = w.t();
-            let gt = g.t();
-            self.step_oriented(&mut wt, &gt, rng);
-            *w = wt.t();
-        } else {
-            self.step_oriented(w, g, rng);
-        }
+        let mut orient = std::mem::take(&mut self.orient);
+        with_orientation(&mut orient, transposed, w, g, rng,
+            |wo, go, rr| self.step_oriented(wo, go, rr));
+        self.orient = orient;
     }
 
     fn state_floats(&self) -> usize {

@@ -5,6 +5,23 @@
 //! metrics, and (optionally) the per-layer subspace analysis stream that
 //! regenerates Figures 1–2. The model fwd/bwd is the compiled L2 artifact
 //! executed through PJRT; Python never runs here.
+//!
+//! ## Per-matrix parallel stepping
+//!
+//! With the Rust optimizer engine every per-matrix optimizer is
+//! `CpuMatrixOptimizer` (= `Send`), so `train_step` fans the projected
+//! parameter updates across `util::pool` — one task per matrix, each
+//! owning its optimizer state, weight, gradient and a pre-forked RNG, so
+//! tasks need zero synchronization. Parallelizing per-matrix rather than
+//! per-GEMM is the right grain: a projected step is several thin GEMMs
+//! plus elementwise sweeps whose fork-join overhead would dominate at
+//! rank-r sizes, while whole steps are large, independent, and
+//! load-balanced by the pool's work queue (the GEMM kernels detect
+//! they're inside a worker via `pool::in_worker()` and run serially —
+//! same FLOPs, no nested spawning). RNG streams are forked in matrix
+//! order before the fan-out, so results are bitwise identical to the
+//! sequential loop. The PJRT engine path keeps the sequential loop: its
+//! FFI client types are single-threaded.
 
 use std::sync::Arc;
 
@@ -15,11 +32,12 @@ use crate::data::{CorpusConfig, SyncLoader, TokenBatch};
 use crate::metrics::Recorder;
 use crate::model::shapes::PROJ_TYPES;
 use crate::optim::{
-    AdamConfig, AdamVec, MatrixOptimizer, Method, Schedule,
+    AdamConfig, AdamVec, CpuMatrixOptimizer, MatrixOptimizer, Method,
+    Schedule,
 };
 use crate::runtime::{Engine, Executable, Value};
 use crate::tensor::Mat;
-use crate::util::rng::Rng;
+use crate::util::{pool, rng::Rng};
 
 use super::allreduce::Ring;
 
@@ -89,6 +107,41 @@ pub struct TrainReport {
     pub optimizer_state_floats: usize,
 }
 
+/// Projected-parameter optimizers, split by stepping capability: the
+/// CPU suite is `Send` and fans across the pool; engine-bound (PJRT)
+/// optimizers step sequentially.
+enum ProjOpts {
+    Cpu(Vec<Box<dyn CpuMatrixOptimizer>>),
+    Engine(Vec<Box<dyn MatrixOptimizer>>),
+}
+
+impl ProjOpts {
+    fn len(&self) -> usize {
+        match self {
+            ProjOpts::Cpu(v) => v.len(),
+            ProjOpts::Engine(v) => v.len(),
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        match self {
+            ProjOpts::Cpu(v) => v.iter().map(|o| o.state_floats()).sum(),
+            ProjOpts::Engine(v) => v.iter().map(|o| o.state_floats()).sum(),
+        }
+    }
+}
+
+/// One per-matrix unit of work for the parallel fan-out: the optimizer,
+/// its weight matrix (moved out of `params`), the scaled gradient, and a
+/// pre-forked RNG stream. Everything owned or exclusively borrowed, so
+/// steps run lock-free.
+struct StepJob<'a> {
+    opt: &'a mut dyn CpuMatrixOptimizer,
+    w: Mat,
+    g: Mat,
+    rng: Rng,
+}
+
 /// The trainer owns everything mutable about a run.
 pub struct Trainer {
     engine: Arc<Engine>,
@@ -98,7 +151,7 @@ pub struct Trainer {
     /// Parameters in ABI order, as runtime Values (dims + data).
     pub params: Vec<Value>,
     /// One optimizer per projected (2-D, leading) parameter.
-    proj_opts: Vec<Box<dyn MatrixOptimizer>>,
+    proj_opts: ProjOpts,
     /// Dense Adam for embeddings / norms (everything past n_projected).
     dense_opts: Vec<AdamVec>,
     loaders: Vec<SyncLoader>,
@@ -130,35 +183,41 @@ impl Trainer {
         }
 
         // Optimizers. The PJRT opt engine routes the fused Pallas artifact
-        // onto the hot path for the Grass family; other methods (and
-        // shapes without a compiled artifact) use the Rust suite.
-        let mut proj_opts: Vec<Box<dyn MatrixOptimizer>> = Vec::new();
-        for _ in 0..model.n_projected {
-            let opt: Box<dyn MatrixOptimizer> = match (cfg.opt_engine,
-                                                       cfg.method) {
-                (OptEngine::Pjrt, Method::GrassWalk) => {
-                    Box::new(super::pjrt_opt::PjrtProjected::new(
-                        engine.clone(),
-                        crate::optim::SubspaceRule::RandWalk,
-                        cfg.rank,
-                        cfg.interval,
-                        0.5,
-                    ))
-                }
-                (OptEngine::Pjrt, Method::GrassJump) => {
-                    Box::new(super::pjrt_opt::PjrtProjected::new(
-                        engine.clone(),
-                        crate::optim::SubspaceRule::RandJump,
-                        cfg.rank,
-                        cfg.interval,
-                        0.5,
-                    ))
-                }
-                _ => cfg.method.build(cfg.rank, cfg.interval, cfg.lr,
-                                      cfg.steps),
-            };
-            proj_opts.push(opt);
-        }
+        // onto the hot path for the Grass family (engine-bound, stepped
+        // sequentially); every other configuration uses the Rust suite,
+        // which is Send and fans across the pool in train_step.
+        let pjrt_rule = match (cfg.opt_engine, cfg.method) {
+            (OptEngine::Pjrt, Method::GrassWalk) => {
+                Some(crate::optim::SubspaceRule::RandWalk)
+            }
+            (OptEngine::Pjrt, Method::GrassJump) => {
+                Some(crate::optim::SubspaceRule::RandJump)
+            }
+            _ => None,
+        };
+        let proj_opts = match pjrt_rule {
+            Some(rule) => ProjOpts::Engine(
+                (0..model.n_projected)
+                    .map(|_| {
+                        Box::new(super::pjrt_opt::PjrtProjected::new(
+                            engine.clone(),
+                            rule,
+                            cfg.rank,
+                            cfg.interval,
+                            0.5,
+                        )) as Box<dyn MatrixOptimizer>
+                    })
+                    .collect(),
+            ),
+            None => ProjOpts::Cpu(
+                (0..model.n_projected)
+                    .map(|_| {
+                        cfg.method.build_cpu(cfg.rank, cfg.interval, cfg.lr,
+                                             cfg.steps)
+                    })
+                    .collect(),
+            ),
+        };
         let dense_opts = model.params[model.n_projected..]
             .iter()
             .map(|p| {
@@ -282,34 +341,85 @@ impl Trainer {
 
         // --- LR schedule (applied as gradient scaling; see optim docs) --
         let mult = self.cfg.schedule.multiplier(self.step);
+        let scale = (mult - 1.0).abs() >= f32::EPSILON;
 
-        // --- projected params ------------------------------------------
-        for i in 0..model.n_projected {
-            let shape = model.params[i].shape.clone();
-            let mut w = std::mem::replace(
-                &mut self.params[i],
-                Value::F32(vec![], vec![0.0]),
-            )
-            .into_mat()?;
-            let g_mat = grads[i].clone().into_mat()?;
-            let g_scaled =
-                if (mult - 1.0).abs() < f32::EPSILON {
-                    g_mat
-                } else {
-                    g_mat.scale(mult)
-                };
-            let mut fork = self.rng.fork(i as u64);
-            self.proj_opts[i].step(&mut w, &g_scaled, &mut fork);
-            self.params[i] = Value::F32(shape, w.data);
+        // --- projected params: per-matrix optimizer steps ---------------
+        // Gradients are moved (not cloned) out of the unflattened vec and
+        // scaled in place. RNG streams are forked in matrix order BEFORE
+        // any stepping, so the parallel fan-out below is bitwise
+        // identical to a sequential loop.
+        let n_proj = model.n_projected;
+        let mut grad_iter = grads.into_iter();
+        let mut proj_grads: Vec<Mat> = Vec::with_capacity(n_proj);
+        for gv in grad_iter.by_ref().take(n_proj) {
+            let mut gm = gv.into_mat()?;
+            if scale {
+                for x in gm.data.iter_mut() {
+                    *x *= mult;
+                }
+            }
+            proj_grads.push(gm);
+        }
+        let rngs: Vec<Rng> =
+            (0..n_proj).map(|i| self.rng.fork(i as u64)).collect();
+
+        match &mut self.proj_opts {
+            ProjOpts::Cpu(opts) => {
+                // One job per matrix: optimizer state, weight, gradient
+                // and RNG are all owned/exclusive, so the pool steps them
+                // lock-free; the GEMMs inside run serially (in_worker).
+                let mut jobs: Vec<StepJob> = Vec::with_capacity(n_proj);
+                for ((i, opt), (g, rng)) in opts
+                    .iter_mut()
+                    .enumerate()
+                    .zip(proj_grads.into_iter().zip(rngs))
+                {
+                    let w = std::mem::replace(
+                        &mut self.params[i],
+                        Value::F32(Vec::new(), Vec::new()),
+                    )
+                    .into_mat()?;
+                    jobs.push(StepJob { opt: &mut **opt, w, g, rng });
+                }
+                pool::parallel_items(&mut jobs, |_, job| {
+                    job.opt.step(&mut job.w, &job.g, &mut job.rng);
+                });
+                for (i, job) in jobs.into_iter().enumerate() {
+                    self.params[i] = Value::F32(
+                        model.params[i].shape.clone(),
+                        job.w.data,
+                    );
+                }
+            }
+            ProjOpts::Engine(opts) => {
+                // PJRT path: the client is single-threaded; sequential.
+                for (i, ((opt, g), mut rng)) in
+                    opts.iter_mut().zip(proj_grads).zip(rngs).enumerate()
+                {
+                    let shape = model.params[i].shape.clone();
+                    let mut w = std::mem::replace(
+                        &mut self.params[i],
+                        Value::F32(Vec::new(), Vec::new()),
+                    )
+                    .into_mat()?;
+                    opt.step(&mut w, &g, &mut rng);
+                    self.params[i] = Value::F32(shape, w.data);
+                }
+            }
         }
 
         // --- dense params ------------------------------------------------
-        for (k, i) in (model.n_projected..n_params).enumerate() {
-            let g = grads[i].as_vec()?.to_vec();
-            let g_scaled: Vec<f32> =
-                g.iter().map(|&x| x * mult).collect();
-            if let Value::F32(_, w) = &mut self.params[i] {
-                self.dense_opts[k].step(w, &g_scaled);
+        for (k, gv) in grad_iter.enumerate() {
+            let i = n_proj + k;
+            if let Value::F32(_, mut gdata) = gv {
+                if scale {
+                    for x in gdata.iter_mut() {
+                        *x *= mult;
+                    }
+                }
+                if let Value::F32(_, w) = &mut self.params[i] {
+                    self.dense_opts[k].step(w, &gdata);
+                }
             }
         }
 
@@ -426,7 +536,7 @@ impl Trainer {
 
     /// Total persistent optimizer-state footprint (f32 counts).
     pub fn state_floats(&self) -> usize {
-        self.proj_opts.iter().map(|o| o.state_floats()).sum::<usize>()
+        self.proj_opts.state_floats()
             + self
                 .dense_opts
                 .iter()
@@ -443,12 +553,13 @@ impl Trainer {
     }
 
     /// Swap in custom per-matrix optimizers (ablation grid support).
+    /// CPU (`Send`) optimizers only — replacements step in parallel.
     pub fn replace_projected_optimizers(
         &mut self,
-        opts: Vec<Box<dyn MatrixOptimizer>>,
+        opts: Vec<Box<dyn CpuMatrixOptimizer>>,
     ) {
         assert_eq!(opts.len(), self.proj_opts.len());
-        self.proj_opts = opts;
+        self.proj_opts = ProjOpts::Cpu(opts);
     }
 
     /// Restore trainer position (checkpoint support).

@@ -76,7 +76,11 @@ impl Loader {
                         return;
                     }
                     q.buf.push_back(item);
-                    producer.can_pop.notify_one();
+                    // notify_all, not notify_one: `next()` poppers and
+                    // `wait_buffered()` watchers wait on the same
+                    // condvar; a single token could be swallowed by a
+                    // watcher that re-waits, deadlocking a popper.
+                    producer.can_pop.notify_all();
                 }
             })
             .expect("spawn loader thread");
@@ -98,6 +102,20 @@ impl Loader {
     /// Number of batches currently buffered (diagnostics / tests).
     pub fn buffered(&self) -> usize {
         self.shared.q.lock().unwrap().buf.len()
+    }
+
+    /// Block until at least `n` batches are buffered (capped at the
+    /// prefetch capacity — the producer can never exceed it) and return
+    /// the buffered count. Condvar-based: the producer signals `can_pop`
+    /// on every push, so this needs no sleeps and is deterministic —
+    /// tests use it instead of timing assumptions.
+    pub fn wait_buffered(&self, n: usize) -> usize {
+        let target = n.min(self.shared.cap);
+        let mut q = self.shared.q.lock().unwrap();
+        while q.buf.len() < target && !q.closed {
+            q = self.shared.can_pop.wait(q).unwrap();
+        }
+        q.buf.len()
     }
 }
 
@@ -171,13 +189,28 @@ mod tests {
 
     #[test]
     fn prefetch_respects_backpressure() {
+        // Deterministic, sleep-free: wait (condvar) until the producer
+        // has filled the queue to capacity, then verify it stalled
+        // exactly there. By construction (push happens under the same
+        // mutex that checks the cap) the buffer can never exceed the
+        // cap; waiting proves the producer reaches — and then holds —
+        // the high-water mark rather than racing a timer.
         let l = Loader::spawn(cfg(), 0, 1, 1, 17, 3);
-        // Give the producer time; it must stall at the cap.
-        std::thread::sleep(std::time::Duration::from_millis(100));
-        assert!(l.buffered() <= 3);
+        assert_eq!(l.wait_buffered(3), 3);
+        assert_eq!(l.buffered(), 3);
+        // Draining one slot lets the producer top the queue back up to
+        // the cap — again observed via the condvar, not a sleep.
         let _ = l.next();
-        std::thread::sleep(std::time::Duration::from_millis(50));
-        assert!(l.buffered() <= 3);
+        assert_eq!(l.wait_buffered(3), 3);
+        assert_eq!(l.buffered(), 3);
+    }
+
+    #[test]
+    fn wait_buffered_caps_at_prefetch_capacity() {
+        let l = Loader::spawn(cfg(), 0, 1, 1, 9, 2);
+        // Requesting more than the cap must not deadlock: the target is
+        // clamped to the producer's backpressure budget.
+        assert_eq!(l.wait_buffered(100), 2);
     }
 
     #[test]

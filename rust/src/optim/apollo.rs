@@ -12,10 +12,11 @@
 //!
 //! `rank = 1` gives APOLLO-Mini.
 
-use crate::tensor::{matmul, Mat};
+use crate::tensor::{matmul_into, Mat};
 use crate::util::rng::Rng;
 
 use super::projected::RS_NORM_FLOOR;
+use super::workspace::{with_orientation, OrientBufs, StepWorkspace};
 use super::MatrixOptimizer;
 
 #[derive(Clone, Debug)]
@@ -55,23 +56,35 @@ pub struct Apollo {
     v: Option<Mat>,
     t: usize,
     transposed: Option<bool>,
+    /// Scratch: the regenerated projector P lives in `ws.geff`-adjacent
+    /// buffers; like all workspace memory it is excluded from
+    /// `state_floats` (P is derivable from `proj_seed`, which is the
+    /// paper's memory trick — the buffer is reused, never persisted
+    /// state).
+    ws: StepWorkspace,
+    /// Projector buffer (r×m), refilled from `proj_seed` every step.
+    proj: Mat,
+    orient: OrientBufs,
 }
 
 impl Apollo {
     pub fn new(cfg: ApolloConfig) -> Self {
-        Apollo { cfg, proj_seed: 0x9E3779B9, m: None, v: None, t: 0,
-                 transposed: None }
-    }
-
-    fn projector(&self, m_rows: usize) -> Mat {
-        let r = self.cfg.rank.min(m_rows);
-        let mut rng = Rng::new(self.proj_seed);
-        Mat::randn(r, m_rows, 1.0 / (r as f32).sqrt(), &mut rng)
+        Apollo {
+            cfg,
+            proj_seed: 0x9E3779B9,
+            m: None,
+            v: None,
+            t: 0,
+            transposed: None,
+            ws: StepWorkspace::new(),
+            proj: Mat::default(),
+            orient: OrientBufs::default(),
+        }
     }
 
     fn step_oriented(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
-        let c = self.cfg.clone();
         self.t += 1;
+        let c = &self.cfg;
         if self.t > 1 && c.interval < usize::MAX
             && (self.t - 1) % c.interval == 0
         {
@@ -79,34 +92,39 @@ impl Apollo {
             // scaling robustness rather than state rotation).
             self.proj_seed = rng.next_u64();
         }
-        let p = self.projector(g.rows); // r×m
-        let gt = matmul(&p, g); // r×n
-        let r = gt.rows;
+        let mut ws = std::mem::take(&mut self.ws);
+        // Regenerate P from the seed into the reusable buffer (r×m).
+        let r = c.rank.min(g.rows);
+        self.proj.resize_to(r, g.rows);
+        let mut prng = Rng::new(self.proj_seed);
+        prng.fill_normal(&mut self.proj.data, 1.0 / (r as f32).sqrt());
+        matmul_into(&self.proj, g, &mut ws.gt); // r×n
         if self.m.is_none() {
             self.m = Some(Mat::zeros(r, g.cols));
             self.v = Some(Mat::zeros(r, g.cols));
         }
         let m = self.m.as_mut().unwrap();
         let v = self.v.as_mut().unwrap();
-        m.scale_axpy(c.beta1, 1.0 - c.beta1, &gt);
-        for (vv, &gg) in v.data.iter_mut().zip(&gt.data) {
+        m.scale_axpy(c.beta1, 1.0 - c.beta1, &ws.gt);
+        for (vv, &gg) in v.data.iter_mut().zip(&ws.gt.data) {
             *vv = c.beta2 * *vv + (1.0 - c.beta2) * gg * gg;
         }
         let bc1 = 1.0 - c.beta1.powi(self.t as i32);
         let bc2 = 1.0 - c.beta2.powi(self.t as i32);
-        let gt_o = m.zip(v, |mi, vi| {
+        ws.dir.assign_zip(m, v, |mi, vi| {
             (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + c.eps)
         });
-        let num = gt_o.col_norms();
-        let den = gt.col_norms();
-        let scale: Vec<f32> = num
-            .iter()
-            .zip(&den)
-            .map(|(&a, &b)| (a / b.max(RS_NORM_FLOOR)).min(c.scale_clip))
-            .collect();
-        let mut update = g.clone();
-        update.scale_cols(&scale);
-        w.axpy(-c.alpha, &update);
+        ws.dir.col_norms_into(&mut ws.col_acc, &mut ws.num);
+        ws.gt.col_norms_into(&mut ws.col_acc, &mut ws.den);
+        ws.phi.clear();
+        ws.phi.extend(ws.num.iter().zip(&ws.den).map(|(&a, &b)| {
+            (a / b.max(RS_NORM_FLOOR)).min(c.scale_clip)
+        }));
+        // Full-rank update: the raw gradient, channel-scaled.
+        ws.geff.copy_from(g);
+        ws.geff.scale_cols(&ws.phi);
+        w.axpy(-c.alpha, &ws.geff);
+        self.ws = ws;
     }
 }
 
@@ -116,14 +134,10 @@ impl MatrixOptimizer for Apollo {
         let transposed = *self
             .transposed
             .get_or_insert_with(|| w.rows > w.cols);
-        if transposed {
-            let mut wt = w.t();
-            let gt = g.t();
-            self.step_oriented(&mut wt, &gt, rng);
-            *w = wt.t();
-        } else {
-            self.step_oriented(w, g, rng);
-        }
+        let mut orient = std::mem::take(&mut self.orient);
+        with_orientation(&mut orient, transposed, w, g, rng,
+            |wo, go, rr| self.step_oriented(wo, go, rr));
+        self.orient = orient;
     }
 
     fn state_floats(&self) -> usize {

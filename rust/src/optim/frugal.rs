@@ -10,6 +10,7 @@
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
+use super::workspace::{with_orientation, OrientBufs, StepWorkspace};
 use super::MatrixOptimizer;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -52,18 +53,29 @@ impl Default for FrugalConfig {
 pub struct Frugal {
     pub cfg: FrugalConfig,
     /// Selected row indices (the "subspace").
-    sel: Vec<usize>,
+    pub sel: Vec<usize>,
     /// Adam moments for the selected rows: rank×n.
     m: Option<Mat>,
     v: Option<Mat>,
     t: usize,
     transposed: Option<bool>,
+    /// Scratch (row mask) — steady-state steps allocate nothing.
+    ws: StepWorkspace,
+    orient: OrientBufs,
 }
 
 impl Frugal {
     pub fn new(cfg: FrugalConfig) -> Self {
-        Frugal { cfg, sel: Vec::new(), m: None, v: None, t: 0,
-                 transposed: None }
+        Frugal {
+            cfg,
+            sel: Vec::new(),
+            m: None,
+            v: None,
+            t: 0,
+            transposed: None,
+            ws: StepWorkspace::new(),
+            orient: OrientBufs::default(),
+        }
     }
 
     fn sample_rows(&self, m_rows: usize, rng: &mut Rng) -> Vec<usize> {
@@ -123,8 +135,11 @@ impl Frugal {
         let bc1 = 1.0 - c.beta1.powi(self.t as i32);
         let bc2 = 1.0 - c.beta2.powi(self.t as i32);
 
-        // Stateful Adam on selected rows; signSGD elsewhere.
-        let mut selected = vec![false; g.rows];
+        // Stateful Adam on selected rows; signSGD elsewhere. The row
+        // mask lives in the reusable workspace (no per-step Vec).
+        let selected = &mut self.ws.mask;
+        selected.clear();
+        selected.resize(g.rows, false);
         for &row in &self.sel {
             selected[row] = true;
         }
@@ -162,14 +177,10 @@ impl MatrixOptimizer for Frugal {
         let transposed = *self
             .transposed
             .get_or_insert_with(|| w.rows > w.cols);
-        if transposed {
-            let mut wt = w.t();
-            let gt = g.t();
-            self.step_oriented(&mut wt, &gt, rng);
-            *w = wt.t();
-        } else {
-            self.step_oriented(w, g, rng);
-        }
+        let mut orient = std::mem::take(&mut self.orient);
+        with_orientation(&mut orient, transposed, w, g, rng,
+            |wo, go, rr| self.step_oriented(wo, go, rr));
+        self.orient = orient;
     }
 
     fn state_floats(&self) -> usize {

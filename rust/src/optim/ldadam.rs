@@ -10,10 +10,20 @@
 //!
 //! The error buffer is m×n — this is why LDAdam's measured footprint in
 //! Table 1 sits above GaLore's despite low-rank moments.
+//!
+//! Workspace note: LDAdam refreshes its basis EVERY step (that is the
+//! method), so unlike the projected family it has no allocation-free
+//! steady state — the power step + QR allocate by design. The
+//! projection, direction, back-projection and error-feedback buffers
+//! are still workspace-backed, removing the five largest per-step
+//! allocations (all m×n / r×n).
 
-use crate::tensor::{matmul, matmul_tn, orthonormalize, Mat};
+use crate::tensor::{
+    matmul, matmul_into, matmul_tn, matmul_tn_into, orthonormalize, Mat,
+};
 use crate::util::rng::Rng;
 
+use super::workspace::{with_orientation, OrientBufs, StepWorkspace};
 use super::MatrixOptimizer;
 
 #[derive(Clone, Debug)]
@@ -50,12 +60,24 @@ pub struct LdAdam {
     err: Option<Mat>,
     t: usize,
     transposed: Option<bool>,
+    /// Reusable step scratch (projection / direction / back-projection).
+    ws: StepWorkspace,
+    orient: OrientBufs,
 }
 
 impl LdAdam {
     pub fn new(cfg: LdAdamConfig) -> Self {
-        LdAdam { cfg, s: None, m: None, v: None, err: None, t: 0,
-                 transposed: None }
+        LdAdam {
+            cfg,
+            s: None,
+            m: None,
+            v: None,
+            err: None,
+            t: 0,
+            transposed: None,
+            ws: StepWorkspace::new(),
+            orient: OrientBufs::default(),
+        }
     }
 
     fn step_oriented(&mut self, w: &mut Mat, g_raw: &Mat, _rng: &mut Rng) {
@@ -64,23 +86,26 @@ impl LdAdam {
         let t = self.t;
         let r = c.rank.min(g_raw.rows);
         let n = g_raw.cols;
+        let mut ws = std::mem::take(&mut self.ws);
 
-        // Error feedback: G_eff = G + E.
-        let g = match &self.err {
-            Some(e) => g_raw.add(e),
-            None => g_raw.clone(),
-        };
+        // Error feedback: G_eff = G + E, in the reusable buffer.
+        ws.geff.copy_from(g_raw);
+        if let Some(e) = &self.err {
+            ws.geff.axpy(1.0, e);
+        }
+        let g = &ws.geff;
 
         // Basis update: one block power step on G_eff, interpolated with
-        // the previous basis, then re-orthonormalized.
-        let s_prev = self.s.clone();
+        // the previous basis, then re-orthonormalized. `take` instead of
+        // `clone`: self.s is reassigned below, so the old basis moves.
+        let s_prev = self.s.take();
         let s_new = match &s_prev {
-            None => crate::tensor::left_singular_basis(&g, r),
+            None => crate::tensor::left_singular_basis(g, r),
             Some(s_old) => {
                 // Power step: orth(G (Gᵀ S_old)) tracks the dominant left
                 // subspace of the running gradients.
-                let gts = matmul_tn(&g, s_old); // n×r
-                let power = matmul(&g, &gts); // m×r
+                let gts = matmul_tn(g, s_old); // n×r
+                let power = matmul(g, &gts); // m×r
                 let norm = power.fro_norm().max(1e-12);
                 let mut blend = s_old.scale(1.0 - c.rho);
                 blend.axpy(c.rho / norm * (s_old.fro_norm().max(1.0)), &power);
@@ -89,7 +114,7 @@ impl LdAdam {
         };
 
         // Rotation-aware moment update (the estimator form of eqs 7–8).
-        let gt = matmul_tn(&s_new, &g); // r×n
+        matmul_tn_into(&s_new, g, &mut ws.gt); // r×n
         if self.m.is_none() {
             self.m = Some(Mat::zeros(r, n));
             self.v = Some(Mat::zeros(r, n));
@@ -101,13 +126,13 @@ impl LdAdam {
                 let rot = matmul_tn(&s_new, s_old); // r×r
                 let rm = matmul(&rot, &m_prev);
                 let mut m_new = rm.clone();
-                m_new.scale_axpy(c.beta1, 1.0 - c.beta1, &gt);
+                m_new.scale_axpy(c.beta1, 1.0 - c.beta1, &ws.gt);
                 let centered = v_prev.zip(&m_prev, |v, m| v - m * m);
                 let rot_sq = rot.map(|x| x * x);
                 let mut est = matmul(&rot_sq, &centered);
                 est.axpy(1.0, &rm.map(|x| x * x));
                 let weight = 1.0 - c.beta2.powi(t as i32 - 1);
-                let v_new = est.zip(&gt, |e, gti| {
+                let v_new = est.zip(&ws.gt, |e, gti| {
                     c.beta2 * (weight * e.abs())
                         + (1.0 - c.beta2) * gti * gti
                 });
@@ -115,9 +140,9 @@ impl LdAdam {
             }
             None => {
                 let mut m_new = m_prev;
-                m_new.scale_axpy(c.beta1, 1.0 - c.beta1, &gt);
+                m_new.scale_axpy(c.beta1, 1.0 - c.beta1, &ws.gt);
                 let mut v_new = v_prev;
-                for (vv, &gg) in v_new.data.iter_mut().zip(&gt.data) {
+                for (vv, &gg) in v_new.data.iter_mut().zip(&ws.gt.data) {
                     *vv = c.beta2 * *vv + (1.0 - c.beta2) * gg * gg;
                 }
                 (m_new, v_new)
@@ -126,19 +151,23 @@ impl LdAdam {
 
         let bc1 = 1.0 - c.beta1.powi(t as i32);
         let bc2 = 1.0 - c.beta2.powi(t as i32);
-        let gt_o = m_new.zip(&v_new, |m, v| {
+        ws.dir.assign_zip(&m_new, &v_new, |m, v| {
             (m / bc1) / ((v / bc2).max(0.0).sqrt() + c.eps)
         });
 
-        // Update inside the subspace; store the residual as error feedback.
-        let ghat = matmul(&s_new, &gt_o);
-        w.axpy(-c.alpha, &ghat);
-        let projected = matmul(&s_new, &gt);
-        self.err = Some(g.sub(&projected));
+        // Update inside the subspace; store the residual as error
+        // feedback, reusing the persistent buffer in place.
+        matmul_into(&s_new, &ws.dir, &mut ws.ghat);
+        w.axpy(-c.alpha, &ws.ghat);
+        let mut err = self.err.take().unwrap_or_default();
+        matmul_into(&s_new, &ws.gt, &mut err); // S G̃
+        err.zip_apply(g, |p, gi| gi - p); // E = G_eff − S G̃
+        self.err = Some(err);
 
         self.s = Some(s_new);
         self.m = Some(m_new);
         self.v = Some(v_new);
+        self.ws = ws;
     }
 }
 
@@ -148,14 +177,10 @@ impl MatrixOptimizer for LdAdam {
         let transposed = *self
             .transposed
             .get_or_insert_with(|| w.rows > w.cols);
-        if transposed {
-            let mut wt = w.t();
-            let gt = g.t();
-            self.step_oriented(&mut wt, &gt, rng);
-            *w = wt.t();
-        } else {
-            self.step_oriented(w, g, rng);
-        }
+        let mut orient = std::mem::take(&mut self.orient);
+        with_orientation(&mut orient, transposed, w, g, rng,
+            |wo, go, rr| self.step_oriented(wo, go, rr));
+        self.orient = orient;
     }
 
     fn state_floats(&self) -> usize {

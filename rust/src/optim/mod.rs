@@ -3,6 +3,38 @@
 //! `MatrixOptimizer` is the per-parameter-matrix interface every method
 //! implements; [`Method`] is the user-facing registry that Table 1/2 and
 //! the Figure 3 ablation grid iterate over.
+//!
+//! ## The workspace hot path
+//!
+//! Every CPU optimizer owns a [`workspace::StepWorkspace`] (plus
+//! [`workspace::OrientBufs`] for tall matrices): all step intermediates
+//! live in reusable buffers routed through the `_into` GEMM variants
+//! (`tensor::gemm`) and the in-place `Mat` ops, so a steady-state
+//! (non-refresh) `step` performs **zero** heap allocations. The every-T
+//! subspace refresh (SVD/QR/geodesic) may still allocate — it is off the
+//! hot path by construction. LDAdam is the documented exception: its
+//! per-step power-iteration basis update runs a QR each step, so only
+//! its projection/direction/back-projection buffers are workspace-backed.
+//! Workspace memory is scratch and excluded from `state_floats()`
+//! exactly like activations are excluded from the paper's memory
+//! accounting. Equivalence with the old allocating math is pinned
+//! bitwise in rust/tests/workspace_props.rs.
+//!
+//! ## The `Send` split
+//!
+//! [`MatrixOptimizer`] is the object-safe base every implementation
+//! (including the engine-bound PJRT path, whose FFI client types are
+//! single-threaded) satisfies. [`CpuMatrixOptimizer`] is the `Send`
+//! refinement — blanket-implemented for every `MatrixOptimizer + Send`
+//! type, i.e. the whole pure-Rust suite. The trainer stores CPU
+//! optimizers as `Box<dyn CpuMatrixOptimizer>` and fans the per-matrix
+//! steps across `util::pool` (per-matrix, not per-GEMM: each step keeps
+//! its own state, weight and gradient, so steps are embarrassingly
+//! parallel with zero synchronization, while the GEMMs inside degrade to
+//! their serial loops via `pool::in_worker()` — the same FLOPs without
+//! nested thread spawn). PJRT-backed optimizers stay on the sequential
+//! path. Use [`Method::build_cpu`] for the parallel trainer path and
+//! [`Method::build`] where a plain `Box<dyn MatrixOptimizer>` suffices.
 
 pub mod adam;
 pub mod apollo;
@@ -12,6 +44,7 @@ pub mod ldadam;
 pub mod projected;
 pub mod schedule;
 pub mod sgd;
+pub mod workspace;
 
 pub use adam::{Adam, AdamConfig, AdamVec};
 pub use apollo::{Apollo, ApolloConfig};
@@ -22,6 +55,7 @@ pub use projected::{
 };
 pub use schedule::Schedule;
 pub use sgd::{Sgd, SgdConfig, SignSgd};
+pub use workspace::{with_orientation, OrientBufs, StepWorkspace};
 
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
@@ -30,18 +64,51 @@ use crate::util::rng::Rng;
 /// their own step counters and subspace state; `rng` drives any
 /// randomized subspace updates (deterministic per seed).
 ///
-/// NOT `Send`: the PJRT-backed implementation holds a client handle whose
-/// FFI types are single-threaded; the trainer steps matrices sequentially
-/// (the per-matrix GEMMs are internally thread-parallel instead — see
-/// tensor::gemm).
+/// Deliberately not `Send`-bound: the PJRT-backed implementation holds a
+/// client handle whose FFI types are single-threaded. The pure-Rust
+/// suite is `Send` and additionally implements [`CpuMatrixOptimizer`],
+/// which is what lets the trainer step matrices in parallel.
 pub trait MatrixOptimizer {
     fn step(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng);
     /// Persistent optimizer-state footprint in f32 counts (for the memory
-    /// accountant reproducing the paper's GB columns).
+    /// accountant reproducing the paper's GB columns). Workspace scratch
+    /// buffers are excluded by convention (see `optim::workspace`).
     fn state_floats(&self) -> usize;
     fn name(&self) -> &str;
     /// Current learning-rate scale hook used by the trainer's scheduler.
     fn set_lr_multiplier(&mut self, _mult: f32) {}
+}
+
+/// The `Send`-safe CPU refinement of [`MatrixOptimizer`]: anything the
+/// trainer may step from a pool worker thread. Blanket-implemented for
+/// every `MatrixOptimizer + Send` type, i.e. the whole pure-Rust suite;
+/// where a base-trait view of a boxed CPU optimizer is needed, wrap it
+/// (see `CpuAsBase`) instead of relying on trait-object upcasting.
+pub trait CpuMatrixOptimizer: MatrixOptimizer + Send {}
+
+impl<T: MatrixOptimizer + Send> CpuMatrixOptimizer for T {}
+
+/// Adapter presenting a boxed CPU optimizer through the base trait —
+/// lets [`Method::build`] share one construction path with
+/// [`Method::build_cpu`] without trait-object upcasting.
+struct CpuAsBase(Box<dyn CpuMatrixOptimizer>);
+
+impl MatrixOptimizer for CpuAsBase {
+    fn step(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
+        self.0.step(w, g, rng)
+    }
+
+    fn state_floats(&self) -> usize {
+        self.0.state_floats()
+    }
+
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+
+    fn set_lr_multiplier(&mut self, mult: f32) {
+        self.0.set_lr_multiplier(mult)
+    }
 }
 
 /// Every method the paper evaluates (Tables 1–2, Figures 3–4).
@@ -118,6 +185,8 @@ impl Method {
     }
 
     /// Instantiate a fresh per-matrix optimizer with shared hyperparams.
+    /// Convenience wrapper over [`Method::build_cpu`] for call sites that
+    /// only need the base trait.
     pub fn build(
         &self,
         rank: usize,
@@ -125,6 +194,18 @@ impl Method {
         alpha: f32,
         total_steps: usize,
     ) -> Box<dyn MatrixOptimizer> {
+        Box::new(CpuAsBase(self.build_cpu(rank, interval, alpha, total_steps)))
+    }
+
+    /// Instantiate a fresh per-matrix optimizer as a `Send`-safe CPU
+    /// optimizer — the form the trainer fans across the thread pool.
+    pub fn build_cpu(
+        &self,
+        rank: usize,
+        interval: usize,
+        alpha: f32,
+        total_steps: usize,
+    ) -> Box<dyn CpuMatrixOptimizer> {
         let proj = |rule, use_ao, use_rs| {
             Box::new(ProjectedOptimizer::new(ProjectedConfig {
                 rank,
@@ -134,7 +215,7 @@ impl Method {
                 use_ao,
                 use_rs,
                 ..Default::default()
-            })) as Box<dyn MatrixOptimizer>
+            })) as Box<dyn CpuMatrixOptimizer>
         };
         match self {
             Method::GrassWalk => proj(SubspaceRule::RandWalk, true, true),
@@ -245,6 +326,17 @@ mod tests {
         assert_eq!(Method::TABLE2.len(), 3);
         assert!(Method::TABLE1.contains(&Method::GrassWalk));
         assert!(Method::TABLE2.contains(&Method::GrassJump));
+    }
+
+    #[test]
+    fn build_cpu_matches_build_and_is_send() {
+        fn assert_send<T: Send + ?Sized>(_: &T) {}
+        for m in Method::all() {
+            let a = m.build(4, 10, 0.05, 100);
+            let b = m.build_cpu(4, 10, 0.05, 100);
+            assert_eq!(a.name(), b.name(), "{}", m.label());
+            assert_send(b.as_ref());
+        }
     }
 
     #[test]

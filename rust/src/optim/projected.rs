@@ -20,11 +20,13 @@
 //! rust/tests/runtime_numerics.rs.
 
 use crate::tensor::{
-    left_singular_basis, matmul, matmul_tn, Mat,
+    left_singular_basis, matmul, matmul_into, matmul_tn, matmul_tn_into,
+    Mat,
 };
 use crate::util::rng::Rng;
 
 use super::grassmann;
+use super::workspace::{with_orientation, OrientBufs, StepWorkspace};
 use super::MatrixOptimizer;
 
 /// Floor for the column-norm division in eq 9 — matches NORM_FLOOR in
@@ -197,6 +199,10 @@ pub struct ProjectedOptimizer {
     /// Diagnostics from the last step.
     pub last_energy_ratio: f32,
     pub last_refresh: bool,
+    /// Reusable step scratch — the zero-allocation hot path.
+    ws: StepWorkspace,
+    /// Reusable transpose buffers for tall matrices.
+    orient: OrientBufs,
 }
 
 impl ProjectedOptimizer {
@@ -218,6 +224,8 @@ impl ProjectedOptimizer {
             transposed: None,
             last_energy_ratio: 0.0,
             last_refresh: false,
+            ws: StepWorkspace::new(),
+            orient: OrientBufs::default(),
         }
     }
 
@@ -287,12 +295,17 @@ impl ProjectedOptimizer {
     }
 
     /// One optimizer step in the canonical (m <= n) orientation.
+    ///
+    /// The steady-state (non-refresh) path routes every intermediate
+    /// through the owned [`StepWorkspace`] and performs zero heap
+    /// allocations; only the every-T refresh (SVD/geodesic + AO state
+    /// rotation) allocates. Numerically identical to the historical
+    /// allocating implementation (pinned in tests/workspace_props.rs).
     fn step_oriented(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
-        let cfg = self.cfg.clone();
         self.t += 1;
         let t = self.t;
 
-        // ---- subspace refresh -------------------------------------------
+        // ---- subspace refresh (off the hot path; may allocate) ----------
         let refresh = self.refresh_due();
         self.last_refresh = refresh;
         let mut rotation: Option<Mat> = None; // R = S_tᵀ S_{t−1}
@@ -306,11 +319,14 @@ impl ProjectedOptimizer {
             } else {
                 self.next_basis(g, rng)
             };
-            if let (Some(s_old), true) = (&self.s, cfg.use_ao) {
+            if let (Some(s_old), true) = (&self.s, self.cfg.use_ao) {
                 rotation = Some(matmul_tn(&s_new, s_old)); // r×r
             }
             self.s = Some(s_new);
         }
+
+        let mut ws = std::mem::take(&mut self.ws);
+        let cfg = &self.cfg;
         let s = self.s.as_ref().unwrap();
         let r = s.cols;
         let n = g.cols;
@@ -319,56 +335,56 @@ impl ProjectedOptimizer {
             self.m = Some(Mat::zeros(r, n));
             self.v = Some(Mat::zeros(r, n));
         }
+        let m = self.m.as_mut().unwrap();
+        let v = self.v.as_mut().unwrap();
 
         // ---- project (eq 1) ---------------------------------------------
-        let gt = matmul_tn(s, g); // r×n
+        matmul_tn_into(s, g, &mut ws.gt); // r×n
         self.last_energy_ratio =
-            (gt.fro_norm() / g.fro_norm().max(RS_NORM_FLOOR)).min(1.0);
+            (ws.gt.fro_norm() / g.fro_norm().max(RS_NORM_FLOOR)).min(1.0);
 
         // ---- moments ------------------------------------------------------
-        let m_prev = self.m.take().unwrap();
-        let v_prev = self.v.take().unwrap();
-        let (m_new, v_new) = match (&rotation, cfg.use_ao && refresh) {
+        match (&rotation, cfg.use_ao && refresh) {
             (Some(rot), true) => {
                 // eqs 7–8 (AO): rotate states onto the new basis.
-                let rm = matmul(rot, &m_prev);
+                // Refresh-only path: plain allocating ops for clarity.
+                let rm = matmul(rot, m);
                 let mut m_new = rm.clone();
-                m_new.scale_axpy(cfg.beta1, 1.0 - cfg.beta1, &gt);
-                let centered = v_prev.zip(&m_prev, |v, m| v - m * m);
+                m_new.scale_axpy(cfg.beta1, 1.0 - cfg.beta1, &ws.gt);
+                let centered = v.zip(m, |vv, mm| vv - mm * mm);
                 let rot_sq = rot.map(|x| x * x);
                 let mut est = matmul(&rot_sq, &centered);
                 est.axpy(1.0, &rm.map(|x| x * x));
                 let weight = 1.0 - cfg.beta2.powi(t as i32 - 1);
-                let v_new = est.zip(&gt, |e, gti| {
+                let v_new = est.zip(&ws.gt, |e, gti| {
                     cfg.beta2 * (weight * e.abs())
                         + (1.0 - cfg.beta2) * gti * gti
                 });
-                (m_new, v_new)
+                *m = m_new;
+                *v = v_new;
             }
             _ => {
-                // eqs 5–6 (regular Adam in the subspace). NOTE: when the
-                // subspace changed without AO (GaLore-style), the stale
-                // moments are knowingly misaligned — that is the paper's
-                // point about informing the optimizer.
-                let mut m_new = m_prev;
-                m_new.scale_axpy(cfg.beta1, 1.0 - cfg.beta1, &gt);
-                let mut v_new = v_prev;
-                for (vv, &gg) in v_new.data.iter_mut().zip(&gt.data) {
+                // eqs 5–6 (regular Adam in the subspace), fully in place.
+                // NOTE: when the subspace changed without AO
+                // (GaLore-style), the stale moments are knowingly
+                // misaligned — that is the paper's point about informing
+                // the optimizer.
+                m.scale_axpy(cfg.beta1, 1.0 - cfg.beta1, &ws.gt);
+                for (vv, &gg) in v.data.iter_mut().zip(&ws.gt.data) {
                     *vv = cfg.beta2 * *vv + (1.0 - cfg.beta2) * gg * gg;
                 }
-                (m_new, v_new)
             }
-        };
+        }
 
         // ---- bias-corrected Adam direction --------------------------------
         let bc1 = 1.0 - cfg.beta1.powi(t as i32);
         let bc2 = 1.0 - cfg.beta2.powi(t as i32);
-        let gt_o = m_new.zip(&v_new, |m, v| {
-            (m / bc1) / ((v / bc2).max(0.0).sqrt() + cfg.eps)
+        ws.dir.assign_zip(m, v, |mm, vv| {
+            (mm / bc1) / ((vv / bc2).max(0.0).sqrt() + cfg.eps)
         });
 
         // ---- back-project + recovery scaling ------------------------------
-        let ghat = matmul(s, &gt_o); // m×n
+        matmul_into(s, &ws.dir, &mut ws.ghat); // m×n
 
         if cfg.weight_decay > 0.0 {
             let wd = cfg.alpha * cfg.weight_decay;
@@ -379,33 +395,30 @@ impl ProjectedOptimizer {
 
         if cfg.use_rs {
             // Δ = G − S G̃;  Λ = φ ∘ Δ (eq 9); growth limiter (eq 10).
-            let mut lambda = g.sub(&matmul(s, &gt));
-            let num = gt_o.col_norms();
-            let den = gt.col_norms();
-            let phi: Vec<f32> = num
-                .iter()
-                .zip(&den)
-                .map(|(&a, &b)| a / b.max(RS_NORM_FLOOR))
-                .collect();
-            lambda.scale_cols(&phi);
-            let mut lam_norm = lambda.fro_norm();
+            matmul_into(s, &ws.gt, &mut ws.resid); // S G̃
+            ws.resid.zip_apply(g, |p, gi| gi - p); // G − S G̃
+            ws.dir.col_norms_into(&mut ws.col_acc, &mut ws.num);
+            ws.gt.col_norms_into(&mut ws.col_acc, &mut ws.den);
+            ws.compute_phi(RS_NORM_FLOOR);
+            ws.resid.scale_cols(&ws.phi);
+            let mut lam_norm = ws.resid.fro_norm();
             if let Some(prev) = self.lam_prev {
                 let cap = cfg.zeta * prev;
                 if prev > 0.0 && lam_norm > cap {
-                    lambda = lambda.scale(cap / lam_norm.max(RS_NORM_FLOOR));
+                    let shrink = cap / lam_norm.max(RS_NORM_FLOOR);
+                    ws.resid.apply(|x| x * shrink);
                     lam_norm = cap;
                 }
             }
             self.lam_prev = Some(lam_norm);
             // eq 11: W ← W − α Ĝ − α Λ.
-            w.axpy(-cfg.alpha, &ghat);
-            w.axpy(-cfg.alpha, &lambda);
+            w.axpy(-cfg.alpha, &ws.ghat);
+            w.axpy(-cfg.alpha, &ws.resid);
         } else {
-            w.axpy(-cfg.alpha, &ghat);
+            w.axpy(-cfg.alpha, &ws.ghat);
         }
 
-        self.m = Some(m_new);
-        self.v = Some(v_new);
+        self.ws = ws;
     }
 }
 
@@ -415,14 +428,10 @@ impl MatrixOptimizer for ProjectedOptimizer {
         let transposed = *self
             .transposed
             .get_or_insert_with(|| w.rows > w.cols);
-        if transposed {
-            let mut wt = w.t();
-            let gt = g.t();
-            self.step_oriented(&mut wt, &gt, rng);
-            *w = wt.t();
-        } else {
-            self.step_oriented(w, g, rng);
-        }
+        let mut orient = std::mem::take(&mut self.orient);
+        with_orientation(&mut orient, transposed, w, g, rng,
+            |wo, go, r| self.step_oriented(wo, go, r));
+        self.orient = orient;
     }
 
     fn state_floats(&self) -> usize {

@@ -1,5 +1,9 @@
 //! SGD (+momentum) and signSGD — the state-free optimizers FRUGAL applies
 //! along residual directions, and baseline fodder for the ablations.
+//!
+//! Both are allocation-free in steady state (the momentum buffer is
+//! lazily sized once); the fused iterator sweep keeps the hot loop
+//! bounds-check free.
 
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
@@ -45,9 +49,14 @@ impl MatrixOptimizer for Sgd {
             let buf = self
                 .buf
                 .get_or_insert_with(|| Mat::zeros(g.rows, g.cols));
-            for i in 0..g.data.len() {
-                buf.data[i] = c.momentum * buf.data[i] + g.data[i];
-                w.data[i] -= c.lr * buf.data[i];
+            for ((bi, &gi), wi) in buf
+                .data
+                .iter_mut()
+                .zip(&g.data)
+                .zip(w.data.iter_mut())
+            {
+                *bi = c.momentum * *bi + gi;
+                *wi -= c.lr * *bi;
             }
         } else {
             w.axpy(-c.lr, g);

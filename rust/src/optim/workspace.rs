@@ -1,0 +1,164 @@
+//! Reusable per-matrix step workspaces — the allocation-free hot path.
+//!
+//! Before this module, every optimizer step allocated a fresh `Mat` for
+//! nearly every intermediate (`map`/`zip`/`add`/`scale`, the projected
+//! gradient, the back-projection, the residual, both column-norm
+//! vectors, plus two transposes for tall matrices): ~10 heap
+//! allocations and ~3·m·n floats of allocator traffic per step per
+//! matrix. The paper's point is that the projected-gradient update is
+//! *cheap*; at our matrix sizes the malloc/free churn rivaled the GEMM
+//! cost (EXPERIMENTS.md §Workspace).
+//!
+//! [`StepWorkspace`] owns every intermediate buffer a projected-Adam
+//! style step needs. All buffers start empty (`Mat::default` does not
+//! allocate), are sized on first use via `Mat::resize_to`, and are
+//! reused verbatim afterwards: the steady-state step performs **zero**
+//! heap allocations (asserted by `benches/optimizer_step.rs` under a
+//! counting global allocator). Workspace buffers are scratch, not
+//! optimizer state — `state_floats()` deliberately excludes them, the
+//! same way the paper's memory accounting excludes activations.
+//!
+//! The borrow pattern: an optimizer stores the workspace as a field and
+//! `std::mem::take`s it at the top of `step` (free — empty buffers),
+//! which dodges the "cannot borrow `self` twice" problem of passing
+//! `&mut self.ws` into `&mut self` methods. Panics lose the warm
+//! buffers, never correctness.
+//!
+//! [`OrientBufs`]/[`with_orientation`] factor out the transposed-matrix
+//! handling every optimizer repeated: state lives in the `m <= n`
+//! orientation, and tall matrices are stepped through reusable
+//! transpose buffers instead of three fresh allocations per step.
+
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// Scratch buffers for one optimizer step in the canonical (`m <= n`)
+/// orientation. Field names follow the paper's Algorithm 1.
+#[derive(Default)]
+pub struct StepWorkspace {
+    /// Projected gradient G̃ = SᵀG (r×n) — or PG for APOLLO.
+    pub gt: Mat,
+    /// Bias-corrected adaptive direction G̃ᴼ (r×n).
+    pub dir: Mat,
+    /// Back-projection Ĝ = S G̃ᴼ (m×n).
+    pub ghat: Mat,
+    /// Residual buffer: S G̃, then Λ = φ ∘ (G − S G̃) (m×n).
+    pub resid: Mat,
+    /// Effective-gradient buffer (LDAdam's G + E; APOLLO's scaled G).
+    pub geff: Mat,
+    /// f64 accumulator for column norms.
+    pub col_acc: Vec<f64>,
+    /// Column norms of `dir` (eq 9 numerator).
+    pub num: Vec<f32>,
+    /// Column norms of `gt` (eq 9 denominator).
+    pub den: Vec<f32>,
+    /// Per-column recovery scaling φ (eq 9).
+    pub phi: Vec<f32>,
+    /// Row-selection mask (FRUGAL).
+    pub mask: Vec<bool>,
+}
+
+impl StepWorkspace {
+    pub fn new() -> StepWorkspace {
+        StepWorkspace::default()
+    }
+
+    /// φ[j] = num[j] / max(den[j], floor) into the reusable `phi` buffer.
+    pub fn compute_phi(&mut self, floor: f32) {
+        self.phi.clear();
+        self.phi.extend(
+            self.num
+                .iter()
+                .zip(&self.den)
+                .map(|(&a, &b)| a / b.max(floor)),
+        );
+    }
+}
+
+/// Reusable transpose buffers for optimizers whose state lives in the
+/// `m <= n` orientation.
+#[derive(Default)]
+pub struct OrientBufs {
+    wt: Mat,
+    gt: Mat,
+}
+
+/// Run `f(w_oriented, g_oriented, rng)` with transposition handled
+/// through `bufs`: a no-op pass-through when `transposed` is false,
+/// otherwise W and G are transposed into the reusable buffers, `f` runs
+/// on them, and the updated W is transposed back — zero allocations once
+/// the buffers are warm (previously: three fresh `Mat`s per step).
+pub fn with_orientation(
+    bufs: &mut OrientBufs,
+    transposed: bool,
+    w: &mut Mat,
+    g: &Mat,
+    rng: &mut Rng,
+    f: impl FnOnce(&mut Mat, &Mat, &mut Rng),
+) {
+    if !transposed {
+        f(w, g, rng);
+        return;
+    }
+    w.t_into(&mut bufs.wt);
+    g.t_into(&mut bufs.gt);
+    f(&mut bufs.wt, &bufs.gt, rng);
+    bufs.wt.t_into(w);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_workspace_holds_no_heap() {
+        let ws = StepWorkspace::new();
+        assert_eq!(ws.gt.data.capacity(), 0);
+        assert_eq!(ws.col_acc.capacity(), 0);
+        // mem::take is therefore allocation-free.
+        let mut owner = StepWorkspace::new();
+        let taken = std::mem::take(&mut owner);
+        assert_eq!(taken.dir.data.capacity(), 0);
+    }
+
+    #[test]
+    fn compute_phi_applies_floor() {
+        let mut ws = StepWorkspace::new();
+        ws.num = vec![2.0, 4.0];
+        ws.den = vec![1.0, 0.0];
+        ws.compute_phi(1e-12);
+        assert_eq!(ws.phi[0], 2.0);
+        assert!(ws.phi[1] > 1e11); // divided by the floor, not by zero
+    }
+
+    #[test]
+    fn orientation_roundtrip_identity_math() {
+        // f subtracts G from W in the oriented frame; the effect in the
+        // original frame must be exactly W - G.
+        let mut rng = Rng::new(3);
+        let mut w = Mat::randn(9, 4, 1.0, &mut rng); // tall => transposed
+        let g = Mat::randn(9, 4, 1.0, &mut rng);
+        let expect = w.sub(&g);
+        let mut bufs = OrientBufs::default();
+        with_orientation(&mut bufs, true, &mut w, &g, &mut rng,
+            |wo, go, _| {
+                assert_eq!(wo.shape(), (4, 9));
+                wo.axpy(-1.0, go);
+            });
+        assert_eq!(w, expect);
+    }
+
+    #[test]
+    fn orientation_passthrough_when_wide() {
+        let mut rng = Rng::new(4);
+        let mut w = Mat::randn(3, 8, 1.0, &mut rng);
+        let g = Mat::randn(3, 8, 1.0, &mut rng);
+        let expect = w.add(&g);
+        let mut bufs = OrientBufs::default();
+        with_orientation(&mut bufs, false, &mut w, &g, &mut rng,
+            |wo, go, _| wo.axpy(1.0, go));
+        assert_eq!(w, expect);
+        // Pass-through leaves the buffers untouched (still unallocated).
+        assert_eq!(bufs.wt.data.capacity(), 0);
+    }
+}

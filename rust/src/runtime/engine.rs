@@ -14,6 +14,13 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+// Without the `pjrt` feature the in-tree stub stands in for the external
+// `xla` crate: same API, every FFI entry point returns a descriptive
+// error (see xla_stub.rs). With the feature, `xla::` resolves to the
+// real crate via the extern prelude.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 use crate::tensor::Mat;
 
 use super::manifest::{ArtifactSpec, IoSpec, Manifest};

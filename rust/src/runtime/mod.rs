@@ -4,6 +4,8 @@
 
 pub mod engine;
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+mod xla_stub;
 
 pub use engine::{Engine, Executable, Value};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelSpec, ParamSpec,

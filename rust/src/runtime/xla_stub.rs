@@ -1,0 +1,129 @@
+//! Offline stub for the external `xla` crate (PJRT bindings).
+//!
+//! The container builds with no crates.io registry, so the real PJRT
+//! runtime is behind the off-by-default `pjrt` Cargo feature. When that
+//! feature is disabled, this module satisfies the exact API surface
+//! `engine.rs` touches; every entry point that would reach the FFI
+//! returns [`XlaError`], so `Engine::new` fails with a descriptive
+//! message and every artifact-dependent test/bench/example skips —
+//! identical behavior to a machine where `make artifacts` never ran.
+
+use std::fmt;
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+     (the external `xla` crate is not vendored offline)";
+
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(UNAVAILABLE.to_string()))
+}
+
+/// Element types a [`Literal`] can carry (f32 / i32 here).
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host-side tensor value. The stub never holds real device data; it
+/// only needs to typecheck the conversion paths in `engine.rs`.
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(
+        _path: impl AsRef<Path>,
+    ) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

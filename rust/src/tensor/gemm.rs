@@ -9,9 +9,24 @@
 //!   matmul_tn C = A' B     (k→i,j)  both stream (A column walk = row walk of A')
 //!   matmul_nt C = A  B'    (i,j,k)  dot-product of rows
 //!
+//! ## The `_into` workspace API
+//!
+//! Every kernel exists in two forms: the allocating convenience
+//! (`matmul(a, b) -> Mat`) and the workspace form
+//! (`matmul_into(a, b, &mut c)`) that writes into a caller-owned buffer,
+//! resizing it only when the geometry changes. The optimizer suite's
+//! `StepWorkspace` (see `optim::workspace`) routes every steady-state
+//! product through the `_into` forms, which is what makes a steady-state
+//! optimizer step allocation-free. Both forms run the identical loop
+//! nest, so their results are bitwise equal (pinned by
+//! rust/tests/workspace_props.rs).
+//!
 //! Row-parallelism via `util::pool::parallel_chunks` over C's rows keeps
-//! writes disjoint. The micro-kernel unrolls 4 columns and relies on LLVM
-//! auto-vectorization (verified in the perf pass; see EXPERIMENTS.md §Perf).
+//! writes disjoint. When the caller is itself a pool worker (the trainer
+//! fans whole optimizer steps across matrices), `pool::in_worker()` makes
+//! these kernels run serially instead of spawning a nested layer of
+//! threads — same numbers, no oversubscription. The micro-kernel unrolls
+//! and relies on LLVM auto-vectorization (see EXPERIMENTS.md §Perf).
 
 use super::matrix::Mat;
 use crate::util::pool;
@@ -23,9 +38,17 @@ const PAR_THRESHOLD: usize = 1 << 16;
 
 /// C = A @ B.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::default();
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B into a reusable buffer (allocation-free once `c` is warm).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows, "matmul inner dim");
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
+    c.resize_to(m, n);
+    c.data.fill(0.0);
     let work = m * k * n;
     let body = |i0: usize, crows: &mut [f32]| {
         let rows = crows.len() / n;
@@ -42,7 +65,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
             }
         }
     };
-    if work >= PAR_THRESHOLD {
+    if work >= PAR_THRESHOLD && !pool::in_worker() {
         pool::parallel_chunks(&mut c.data, PAR_ROW_BLOCK * n, |i0, crows| {
             body(i0, crows)
         });
@@ -51,14 +74,21 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
             body(i0, crows);
         }
     }
-    c
 }
 
 /// C = A^T @ B  (A: k×m, B: k×n, C: m×n) without materializing A^T.
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::default();
+    matmul_tn_into(a, b, &mut c);
+    c
+}
+
+/// C = A^T @ B into a reusable buffer (allocation-free once `c` is warm).
+pub fn matmul_tn_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.rows, b.rows, "matmul_tn inner dim");
     let (k, m, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
+    c.resize_to(m, n);
+    c.data.fill(0.0);
     let work = m * k * n;
     let body = |i0: usize, crows: &mut [f32]| {
         let rows = crows.len() / n;
@@ -74,7 +104,7 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
             }
         }
     };
-    if work >= PAR_THRESHOLD {
+    if work >= PAR_THRESHOLD && !pool::in_worker() {
         pool::parallel_chunks(&mut c.data, PAR_ROW_BLOCK * n, |i0, crows| {
             body(i0, crows)
         });
@@ -83,14 +113,20 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
             body(i0, crows);
         }
     }
-    c
 }
 
 /// C = A @ B^T (A: m×k, B: n×k, C: m×n) — row-dot kernel.
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::default();
+    matmul_nt_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B^T into a reusable buffer (allocation-free once `c` is warm).
+pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.cols, "matmul_nt inner dim");
     let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Mat::zeros(m, n);
+    c.resize_to(m, n);
     let work = m * k * n;
     let body = |i0: usize, crows: &mut [f32]| {
         let rows = crows.len() / n;
@@ -104,7 +140,7 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
         }
     };
     let _ = k;
-    if work >= PAR_THRESHOLD {
+    if work >= PAR_THRESHOLD && !pool::in_worker() {
         pool::parallel_chunks(&mut c.data, PAR_ROW_BLOCK * n, |i0, crows| {
             body(i0, crows)
         });
@@ -113,7 +149,6 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
             body(i0, crows);
         }
     }
-    c
 }
 
 /// y += a * x over full rows (the GEMM micro-kernel; auto-vectorized).
@@ -206,6 +241,24 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_reuse_dirty_buffers() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(9, 13, 1.0, &mut rng);
+        let b = Mat::randn(13, 6, 1.0, &mut rng);
+        let mut c = Mat::filled(3, 3, 42.0); // wrong shape, dirty
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c, matmul(&a, &b));
+
+        let at = a.t();
+        matmul_tn_into(&at, &b, &mut c); // c reused again
+        assert_eq!(c, matmul_tn(&at, &b));
+
+        let bt = b.t();
+        matmul_nt_into(&a, &bt, &mut c);
+        assert_eq!(c, matmul_nt(&a, &bt));
+    }
+
+    #[test]
     fn tn_and_nt_match_explicit_transpose() {
         let mut rng = Rng::new(2);
         let a = Mat::randn(20, 12, 1.0, &mut rng);
@@ -230,6 +283,19 @@ mod tests {
         let a = Mat::randn(100, 80, 1.0, &mut rng);
         let b = Mat::randn(80, 120, 1.0, &mut rng);
         assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 5e-3);
+    }
+
+    #[test]
+    fn serial_path_is_bitwise_equal_to_parallel() {
+        // The trainer steps matrices from inside pool workers, where the
+        // kernels degrade to their serial loop; the two paths partition
+        // rows identically, so results must match bitwise.
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(100, 80, 1.0, &mut rng);
+        let b = Mat::randn(80, 120, 1.0, &mut rng);
+        let par = matmul(&a, &b);
+        let ser = crate::util::pool::run_serial(|| matmul(&a, &b));
+        assert_eq!(par.data, ser.data);
     }
 
     #[test]

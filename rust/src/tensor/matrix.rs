@@ -3,7 +3,10 @@
 
 use crate::util::rng::Rng;
 
-#[derive(Clone, Debug, PartialEq)]
+/// `Default` is the empty 0×0 matrix — what workspace buffers start
+/// from (`Vec::new` does not allocate, so `std::mem::take` on a buffer
+/// is free).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
@@ -91,6 +94,15 @@ impl Mat {
 
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
+        self.t_into(&mut out);
+        out
+    }
+
+    /// Transpose into an existing buffer (resized as needed; no
+    /// allocation once `out` has the right geometry). Identical loop
+    /// order to [`Mat::t`], so results are bitwise equal.
+    pub fn t_into(&self, out: &mut Mat) {
+        out.resize_to(self.cols, self.rows);
         // Blocked transpose for cache friendliness.
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
@@ -103,7 +115,23 @@ impl Mat {
                 }
             }
         }
-        out
+    }
+
+    /// Reshape in place to `rows`×`cols`, reusing the existing
+    /// allocation when the element count already matches (the workspace
+    /// steady-state). Contents are unspecified afterwards.
+    pub fn resize_to(&mut self, rows: usize, cols: usize) {
+        if self.data.len() != rows * cols {
+            self.data.resize(rows * cols, 0.0);
+        }
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Become an element-wise copy of `src` (resizing as needed).
+    pub fn copy_from(&mut self, src: &Mat) {
+        self.resize_to(src.rows, src.cols);
+        self.data.copy_from_slice(&src.data);
     }
 
     /// Copy of column j as a Vec.
@@ -178,6 +206,44 @@ impl Mat {
         self.zip(other, |a, b| a * b)
     }
 
+    // -- allocation-free variants (the optimizer workspace hot path) -------
+
+    /// In-place map: `self[i] = f(self[i])`.
+    pub fn apply(&mut self, f: impl Fn(f32) -> f32) {
+        for x in self.data.iter_mut() {
+            *x = f(*x);
+        }
+    }
+
+    /// In-place zip: `self[i] = f(self[i], other[i])`.
+    pub fn zip_apply(&mut self, other: &Mat, f: impl Fn(f32, f32) -> f32) {
+        assert_eq!(self.shape(), other.shape());
+        for (x, &y) in self.data.iter_mut().zip(&other.data) {
+            *x = f(*x, y);
+        }
+    }
+
+    /// `self = f(a)` element-wise, resizing `self` as needed — the
+    /// allocation-free counterpart of [`Mat::map`].
+    pub fn assign_map(&mut self, a: &Mat, f: impl Fn(f32) -> f32) {
+        self.resize_to(a.rows, a.cols);
+        for (x, &v) in self.data.iter_mut().zip(&a.data) {
+            *x = f(v);
+        }
+    }
+
+    /// `self = f(a, b)` element-wise, resizing `self` as needed — the
+    /// allocation-free counterpart of [`Mat::zip`].
+    pub fn assign_zip(&mut self, a: &Mat, b: &Mat, f: impl Fn(f32, f32) -> f32) {
+        assert_eq!(a.shape(), b.shape());
+        self.resize_to(a.rows, a.cols);
+        for ((x, &va), &vb) in
+            self.data.iter_mut().zip(&a.data).zip(&b.data)
+        {
+            *x = f(va, vb);
+        }
+    }
+
     /// self += alpha * other (in place, allocation-free).
     pub fn axpy(&mut self, alpha: f32, other: &Mat) {
         assert_eq!(self.shape(), other.shape());
@@ -207,14 +273,27 @@ impl Mat {
 
     /// Column 2-norms (length = cols).
     pub fn col_norms(&self) -> Vec<f32> {
-        let mut acc = vec![0.0f64; self.cols];
+        let mut acc = Vec::new();
+        let mut out = Vec::new();
+        self.col_norms_into(&mut acc, &mut out);
+        out
+    }
+
+    /// Column 2-norms into caller-provided buffers: `acc` is the f64
+    /// accumulator (same summation order as [`Mat::col_norms`], so
+    /// results are bitwise equal), `out` receives the norms. Neither
+    /// allocates once warmed to `cols` length.
+    pub fn col_norms_into(&self, acc: &mut Vec<f64>, out: &mut Vec<f32>) {
+        acc.clear();
+        acc.resize(self.cols, 0.0);
         for i in 0..self.rows {
             let row = self.row(i);
             for (j, &x) in row.iter().enumerate() {
                 acc[j] += (x as f64) * (x as f64);
             }
         }
-        acc.into_iter().map(|x| x.sqrt() as f32).collect()
+        out.clear();
+        out.extend(acc.iter().map(|&x| x.sqrt() as f32));
     }
 
     /// Row 2-norms (length = rows).
@@ -348,5 +427,64 @@ mod tests {
         let a = Mat::zeros(2, 2);
         let b = Mat::zeros(2, 3);
         let _ = a.add(&b);
+    }
+
+    #[test]
+    fn t_into_matches_t_with_dirty_buffer() {
+        let m = Mat::from_fn(5, 9, |i, j| (i * 9 + j) as f32);
+        let mut out = Mat::filled(2, 2, 7.0); // wrong shape, dirty data
+        m.t_into(&mut out);
+        assert_eq!(out, m.t());
+    }
+
+    #[test]
+    fn in_place_variants_match_allocating_ops() {
+        let mut rng = Rng::new(17);
+        let a = Mat::randn(6, 7, 1.0, &mut rng);
+        let b = Mat::randn(6, 7, 1.0, &mut rng);
+
+        let mut c = a.clone();
+        c.apply(|x| x * 2.0 + 1.0);
+        assert_eq!(c, a.map(|x| x * 2.0 + 1.0));
+
+        let mut d = a.clone();
+        d.zip_apply(&b, |x, y| x - 3.0 * y);
+        assert_eq!(d, a.zip(&b, |x, y| x - 3.0 * y));
+
+        let mut e = Mat::default();
+        e.assign_map(&a, |x| x.abs());
+        assert_eq!(e, a.map(|x| x.abs()));
+
+        let mut f = Mat::filled(1, 1, 9.0);
+        f.assign_zip(&a, &b, |x, y| x * y);
+        assert_eq!(f, a.hadamard(&b));
+    }
+
+    #[test]
+    fn col_norms_into_matches_and_reuses_buffers() {
+        let mut rng = Rng::new(18);
+        let m = Mat::randn(11, 5, 2.0, &mut rng);
+        let mut acc = Vec::new();
+        let mut out = Vec::new();
+        m.col_norms_into(&mut acc, &mut out);
+        assert_eq!(out, m.col_norms());
+        // Second call reuses buffers (no growth needed).
+        let cap_acc = acc.capacity();
+        let cap_out = out.capacity();
+        m.col_norms_into(&mut acc, &mut out);
+        assert_eq!(out, m.col_norms());
+        assert_eq!(acc.capacity(), cap_acc);
+        assert_eq!(out.capacity(), cap_out);
+    }
+
+    #[test]
+    fn resize_and_copy_from() {
+        let mut m = Mat::zeros(2, 3);
+        m.resize_to(3, 2);
+        assert_eq!(m.shape(), (3, 2));
+        assert_eq!(m.len(), 6);
+        let src = Mat::from_fn(4, 4, |i, j| (i + j) as f32);
+        m.copy_from(&src);
+        assert_eq!(m, src);
     }
 }

@@ -10,7 +10,10 @@ pub mod qr;
 pub mod rsvd;
 pub mod svd;
 
-pub use gemm::{dot, matmul, matmul_nt, matmul_tn, matvec, vecmat};
+pub use gemm::{
+    dot, matmul, matmul_into, matmul_nt, matmul_nt_into, matmul_tn,
+    matmul_tn_into, matvec, vecmat,
+};
 pub use matrix::Mat;
 pub use qr::{ortho_defect, orthonormalize, qr_thin};
 pub use rsvd::{random_range, rsvd};

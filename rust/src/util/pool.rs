@@ -1,6 +1,6 @@
 //! Minimal work-stealing-free scoped thread pool.
 //!
-//! The hot loops (GEMM tiles, per-layer optimizer updates, data-parallel
+//! The hot loops (GEMM tiles, per-matrix optimizer steps, data-parallel
 //! workers) need fork-join parallelism; with no rayon available offline we
 //! provide a small fixed pool with a `scope`-style API built on
 //! `std::thread::scope` channels.
@@ -9,11 +9,28 @@
 //! runs them on up to `threads()` OS threads. Closures must be `Sync`
 //! (read-only capture) and write through disjoint `&mut` chunks provided by
 //! the caller (`parallel_chunks`), mirroring rayon's `par_chunks_mut`.
+//!
+//! ## Nesting
+//!
+//! Since the trainer now fans *per-matrix* optimizer steps across the
+//! pool (see `coordinator::trainer`), the GEMMs inside each step would
+//! naively spawn a second layer of threads — `threads()²` oversubscription.
+//! Every worker therefore marks itself with a thread-local flag and all
+//! primitives here degrade to the serial path when invoked from inside a
+//! worker ([`in_worker`]). [`run_serial`] exposes the same flag to
+//! callers that need a guaranteed spawn-free region (the allocation-count
+//! benches assert on it).
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 static POOL_THREADS: OnceLock<usize> = OnceLock::new();
+
+thread_local! {
+    /// True on pool worker threads and inside `run_serial` regions.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
 
 /// Number of worker threads used by `parallel_for` (min 1).
 /// Override with the env var `GRASSWALK_THREADS`.
@@ -30,6 +47,25 @@ pub fn threads() -> usize {
     })
 }
 
+/// Whether the current thread is a pool worker (or a `run_serial`
+/// region). Parallel primitives — including the GEMM row-blocking —
+/// check this and run serially to avoid nested thread spawning.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|c| c.get())
+}
+
+/// Run `f` with all pool primitives forced onto their serial paths on
+/// this thread (no `std::thread` spawns, hence no spawn allocations).
+/// Nested calls are fine; the previous state is restored on exit.
+pub fn run_serial<R>(f: impl FnOnce() -> R) -> R {
+    IN_WORKER.with(|c| {
+        let prev = c.replace(true);
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
 /// Run `f(i)` for every `i` in `0..n`, dynamically load-balanced over the
 /// pool with a shared atomic cursor and block size `block`.
 pub fn parallel_for<F>(n: usize, block: usize, f: F)
@@ -37,7 +73,7 @@ where
     F: Fn(usize) + Sync,
 {
     let nt = threads().min(n.max(1));
-    if nt <= 1 || n <= block {
+    if nt <= 1 || n <= block || in_worker() {
         for i in 0..n {
             f(i);
         }
@@ -46,14 +82,17 @@ where
     let cursor = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..nt {
-            s.spawn(|| loop {
-                let start = cursor.fetch_add(block, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + block).min(n);
-                for i in start..end {
-                    f(i);
+            s.spawn(|| {
+                IN_WORKER.with(|c| c.set(true));
+                loop {
+                    let start = cursor.fetch_add(block, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + block).min(n);
+                    for i in start..end {
+                        f(i);
+                    }
                 }
             });
         }
@@ -70,7 +109,7 @@ where
 {
     let n = data.len().div_ceil(chunk.max(1));
     let nt = threads().min(n.max(1));
-    if nt <= 1 || n <= 1 {
+    if nt <= 1 || n <= 1 || in_worker() {
         for (i, piece) in data.chunks_mut(chunk.max(1)).enumerate() {
             f(i, piece);
         }
@@ -84,23 +123,37 @@ where
     );
     std::thread::scope(|s| {
         for _ in 0..nt {
-            s.spawn(|| loop {
-                let idx = cursor.fetch_add(1, Ordering::Relaxed);
-                let item = {
-                    let mut guard = pieces.lock().unwrap();
-                    if idx >= guard.len() {
-                        None
-                    } else {
-                        guard[idx].take()
+            s.spawn(|| {
+                IN_WORKER.with(|c| c.set(true));
+                loop {
+                    let idx = cursor.fetch_add(1, Ordering::Relaxed);
+                    let item = {
+                        let mut guard = pieces.lock().unwrap();
+                        if idx >= guard.len() {
+                            None
+                        } else {
+                            guard[idx].take()
+                        }
+                    };
+                    match item {
+                        Some((i, piece)) => f(i, piece),
+                        None => break,
                     }
-                };
-                match item {
-                    Some((i, piece)) => f(i, piece),
-                    None => break,
                 }
             });
         }
     });
+}
+
+/// Process every element of `items` with `f(index, &mut item)`, one pool
+/// task per element — the trainer's per-matrix fan-out. Equivalent to
+/// `parallel_chunks(items, 1, ..)` but with the element unwrapped.
+pub fn parallel_items<T, F>(items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    parallel_chunks(items, 1, |i, piece| f(i, &mut piece[0]));
 }
 
 /// Map `0..n` in parallel, collecting results in order.
@@ -144,6 +197,17 @@ mod tests {
     }
 
     #[test]
+    fn parallel_items_each_element_once() {
+        let mut v = vec![0u32; 97];
+        parallel_items(&mut v, |i, x| {
+            *x = i as u32 * 3;
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u32 * 3);
+        }
+    }
+
+    #[test]
     fn parallel_map_ordered() {
         let out = parallel_map(100, |i| i * i);
         for (i, v) in out.iter().enumerate() {
@@ -159,5 +223,37 @@ mod tests {
             hits.lock().unwrap()[i] = true;
         });
         assert!(hit.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn workers_are_marked_and_nested_calls_serialize() {
+        assert!(!in_worker());
+        // Big enough to take the threaded path when threads() > 1.
+        let mut seen = vec![false; 64];
+        parallel_items(&mut seen, |_, s| {
+            // Inside a worker (or on the serial fallback path when the
+            // pool has one thread) nested primitives must not spawn.
+            if in_worker() {
+                let mut inner = vec![0u8; 8];
+                parallel_items(&mut inner, |_, x| *x = 1);
+                assert!(inner.iter().all(|&x| x == 1));
+            }
+            *s = true;
+        });
+        assert!(seen.iter().all(|&b| b));
+        assert!(!in_worker(), "flag must not leak to the caller");
+    }
+
+    #[test]
+    fn run_serial_forces_and_restores() {
+        assert!(!in_worker());
+        let r = run_serial(|| {
+            assert!(in_worker());
+            let mut v = vec![0u32; 500];
+            parallel_items(&mut v, |i, x| *x = i as u32);
+            v.iter().map(|&x| x as u64).sum::<u64>()
+        });
+        assert_eq!(r, (0..500u64).sum());
+        assert!(!in_worker());
     }
 }

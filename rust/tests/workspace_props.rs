@@ -1,0 +1,219 @@
+//! Property tests for the workspace (allocation-free) hot path — the
+//! in-repo seeded-case harness (proptest is unavailable offline; the
+//! idiom follows rust/tests/properties.rs: each property sweeps many
+//! seeded random cases and prints the seed on failure).
+//!
+//! Pinned invariants:
+//! * `matmul*_into` ≡ their allocating forms, bitwise, including into
+//!   dirty, wrong-shaped, reused buffers;
+//! * QR: QᵀQ ≈ I across random shapes;
+//! * the workspace `ProjectedOptimizer::step` reproduces the legacy
+//!   allocating math (`reference_step`, preserved verbatim as oracle)
+//!   BITWISE over multi-step trajectories, in both orientations;
+//! * per-matrix parallel stepping (the trainer fan-out) is bitwise
+//!   identical to the sequential loop.
+
+use grasswalk::optim::projected::reference_step;
+use grasswalk::optim::{
+    CpuMatrixOptimizer, MatrixOptimizer, Method, ProjectedConfig,
+    ProjectedOptimizer, SubspaceRule,
+};
+use grasswalk::tensor::{
+    left_singular_basis, matmul, matmul_into, matmul_nt, matmul_nt_into,
+    matmul_tn, matmul_tn_into, ortho_defect, orthonormalize, qr_thin, Mat,
+};
+use grasswalk::util::pool;
+use grasswalk::util::rng::Rng;
+
+const CASES: u64 = 25;
+
+#[test]
+fn prop_gemm_into_bitwise_matches_allocating_forms() {
+    // One dirty buffer reused across every case and kernel: `_into` must
+    // resize + overwrite correctly regardless of previous contents.
+    let mut c = Mat::filled(3, 3, f32::NAN);
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let m = 1 + rng.below(40);
+        let k = 1 + rng.below(40);
+        let n = 1 + rng.below(40);
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c.data, matmul(&a, &b).data, "seed {seed} matmul");
+
+        let at = a.t(); // k×m
+        matmul_tn_into(&at, &b, &mut c);
+        assert_eq!(c.data, matmul_tn(&at, &b).data, "seed {seed} tn");
+
+        let bt = b.t(); // n×k
+        matmul_nt_into(&a, &bt, &mut c);
+        assert_eq!(c.data, matmul_nt(&a, &bt).data, "seed {seed} nt");
+    }
+}
+
+#[test]
+fn prop_qr_q_is_orthonormal() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2100 + seed);
+        let n = 1 + rng.below(20);
+        let m = n + rng.below(30); // m >= n
+        let a = Mat::randn(m, n, 1.0, &mut rng);
+        let (q, _r) = qr_thin(&a);
+        // QᵀQ ≈ I.
+        let qtq = matmul_tn(&q, &q);
+        let defect = qtq.sub(&Mat::eye(n)).max_abs();
+        assert!(defect < 1e-4, "seed {seed}: QᵀQ defect {defect}");
+        assert!(ortho_defect(&orthonormalize(&a)) < 1e-4, "seed {seed}");
+    }
+}
+
+/// Drive `reference_step` (the legacy allocating implementation) along
+/// the exact trajectory a frozen-basis, no-AO `ProjectedOptimizer`
+/// takes, and demand bitwise agreement.
+fn check_against_reference(seed: u64, m: usize, n: usize, steps: usize) {
+    let mut rng = Rng::new(seed);
+    let r = 1 + rng.below(m.min(8));
+    let cfg = ProjectedConfig {
+        rank: r,
+        interval: 1000,
+        rule: SubspaceRule::Frozen,
+        use_ao: false,
+        use_rs: true,
+        ..Default::default()
+    };
+    let (alpha, b1, b2, eps, zeta) =
+        (cfg.alpha, cfg.beta1, cfg.beta2, cfg.eps, cfg.zeta);
+    let mut opt = ProjectedOptimizer::new(cfg);
+    let mut opt_rng = Rng::new(seed ^ 0xF00D);
+
+    let w0 = Mat::randn(m, n, 1.0, &mut rng);
+    let mut w_opt = w0.clone();
+    let mut w_ref = w0;
+    let mut s_ref = Mat::default();
+    let mut m_ref = Mat::default();
+    let mut v_ref = Mat::default();
+    let mut lam_ref = 0.0f32;
+
+    for t in 1..=steps {
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        opt.step(&mut w_opt, &g, &mut opt_rng);
+        if t == 1 {
+            // Same init the optimizer performs: SVD basis of G_1, zero
+            // moments — in the optimizer's (m <= n) orientation.
+            let g_or = if m > n { g.t() } else { g.clone() };
+            s_ref = left_singular_basis(&g_or, r.min(g_or.rows));
+            m_ref = Mat::zeros(s_ref.cols, g_or.cols);
+            v_ref = Mat::zeros(s_ref.cols, g_or.cols);
+        }
+        let g_or = if m > n { g.t() } else { g.clone() };
+        let (w2, m2, v2, l2) = reference_step(
+            &(if m > n { w_ref.t() } else { w_ref.clone() }),
+            &g_or,
+            &s_ref,
+            &m_ref,
+            &v_ref,
+            &Mat::eye(s_ref.cols),
+            t,
+            lam_ref,
+            false,
+            alpha,
+            b1,
+            b2,
+            eps,
+            zeta,
+        );
+        w_ref = if m > n { w2.t() } else { w2 };
+        m_ref = m2;
+        v_ref = v2;
+        lam_ref = l2;
+
+        let d = w_opt.max_abs_diff(&w_ref);
+        assert!(
+            d == 0.0,
+            "seed {seed} ({m}x{n} r{r}) t={t}: workspace vs legacy \
+             diverged, max |diff| = {d}"
+        );
+    }
+}
+
+#[test]
+fn prop_workspace_step_bitwise_matches_legacy_wide() {
+    for seed in 0..15 {
+        let mut rng = Rng::new(2200 + seed);
+        let m = 2 + rng.below(20);
+        let n = m + rng.below(30); // wide: m <= n, no transpose path
+        check_against_reference(2200 + seed, m, n, 6);
+    }
+}
+
+#[test]
+fn prop_workspace_step_bitwise_matches_legacy_tall() {
+    for seed in 0..10 {
+        let mut rng = Rng::new(2300 + seed);
+        let n = 2 + rng.below(15);
+        let m = n + 1 + rng.below(25); // tall: exercises OrientBufs
+        check_against_reference(2300 + seed, m, n, 5);
+    }
+}
+
+#[test]
+fn prop_parallel_fanout_bitwise_matches_sequential() {
+    // The trainer's claim: stepping N independent matrices across the
+    // pool gives exactly the sequential result. Two identical optimizer
+    // fleets, same seeds; one runs sequentially, one through
+    // pool::parallel_items.
+    struct Slot {
+        opt: Box<dyn CpuMatrixOptimizer>,
+        w: Mat,
+        g: Mat,
+        rng: Rng,
+    }
+    let build_fleet = |n_mats: usize| -> Vec<Slot> {
+        (0..n_mats)
+            .map(|i| {
+                let mut srng = Rng::new(3000 + i as u64);
+                let (m, n) = (8 + i % 5, 20 + i % 7);
+                Slot {
+                    opt: Method::GrassWalk.build_cpu(4, 3, 1e-2, 50),
+                    w: Mat::randn(m, n, 1.0, &mut srng),
+                    g: Mat::randn(m, n, 1.0, &mut srng),
+                    rng: Rng::new(7000 + i as u64),
+                }
+            })
+            .collect()
+    };
+    let mut seq = build_fleet(9);
+    let mut par = build_fleet(9);
+    for _round in 0..8 {
+        for s in seq.iter_mut() {
+            s.opt.step(&mut s.w, &s.g, &mut s.rng);
+        }
+        pool::parallel_items(&mut par, |_, s| {
+            s.opt.step(&mut s.w, &s.g, &mut s.rng);
+        });
+    }
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(a.w.data, b.w.data, "matrix {i} diverged");
+    }
+}
+
+#[test]
+fn prop_all_methods_deterministic_under_run_serial() {
+    // The GEMM serial fallback (used inside pool workers) must not
+    // change any optimizer's numbers.
+    for method in Method::all() {
+        let g = Mat::randn(24, 40, 1.0, &mut Rng::new(5));
+        let mut w1 = Mat::zeros(24, 40);
+        let mut w2 = Mat::zeros(24, 40);
+        let mut o1 = method.build(6, 4, 1e-2, 50);
+        let mut o2 = method.build(6, 4, 1e-2, 50);
+        let mut r1 = Rng::new(11);
+        let mut r2 = Rng::new(11);
+        for _ in 0..5 {
+            o1.step(&mut w1, &g, &mut r1);
+            pool::run_serial(|| o2.step(&mut w2, &g, &mut r2));
+        }
+        assert_eq!(w1.data, w2.data, "{}", method.label());
+    }
+}

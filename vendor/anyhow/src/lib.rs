@@ -1,0 +1,212 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! re-implements the (small) API surface the repository actually uses:
+//!
+//! * [`Error`] — a message plus an optional boxed source chain,
+//! * [`Result<T>`] with the `Error` default,
+//! * [`anyhow!`] / [`bail!`] — format-string constructors,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * `?`-conversion from any `std::error::Error + Send + Sync + 'static`.
+//!
+//! Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error` — that is what makes the blanket `From` impl
+//! coherent. `{:#}` formatting prints the full cause chain, matching
+//! anyhow's alternate Display.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic error: message + optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error value, preserving it as source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap with an outer context message (the `Context` machinery).
+    fn wrap<C: fmt::Display>(self, context: C) -> Error {
+        // Flatten: the previous error becomes part of the chain text.
+        // We keep the chain as a rendered string tail since `Error`
+        // itself is not a `std::error::Error`.
+        let mut chained = self.msg;
+        if let Some(src) = &self.source {
+            let mut cur: Option<&(dyn StdError + 'static)> = Some(src.as_ref());
+            while let Some(e) = cur {
+                chained.push_str(": ");
+                chained.push_str(&e.to_string());
+                cur = e.source();
+            }
+        }
+        Error {
+            msg: format!("{context}: {chained}"),
+            source: None,
+        }
+    }
+
+    /// Iterate the rendered cause chain (outermost first).
+    fn chain_string(&self) -> String {
+        let mut out = self.msg.clone();
+        if let Some(src) = &self.source {
+            let mut cur: Option<&(dyn StdError + 'static)> = Some(src.as_ref());
+            while let Some(e) = cur {
+                out.push_str(": ");
+                out.push_str(&e.to_string());
+                cur = e.source();
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, like anyhow.
+            write!(f, "{}", self.chain_string())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `Result::unwrap` and `fn main() -> Result<()>` route through
+        // Debug; show the full chain there.
+        write!(f, "{}", self.chain_string())
+    }
+}
+
+// `?` conversion from any standard error. Coherent because `Error`
+// itself does not implement `std::error::Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>` — alias with the dynamic error default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazy or eager context to fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("gone"));
+    }
+
+    #[test]
+    fn context_wraps_and_alternate_prints_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "opening file").unwrap_err();
+        let full = format!("{e:#}");
+        assert!(full.starts_with("opening file"), "{full}");
+        assert!(full.contains("gone"), "{full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {} of {}", 1, 2);
+        assert_eq!(format!("{e}"), "bad 1 of 2");
+        fn f() -> Result<()> {
+            bail!("nope {}", 9)
+        }
+        assert!(format!("{:#}", f().unwrap_err()).contains("nope 9"));
+    }
+}
