@@ -7,8 +7,13 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use grasswalk::comm::{
+    build_collective, Collective, CommMode, GradLayout, RingTransport,
+    Transport,
+};
 use grasswalk::coordinator::{Ring, TrainConfig, Trainer};
 use grasswalk::data::{CorpusConfig, Loader, SyncLoader};
+use grasswalk::model::shapes::TINY;
 use grasswalk::optim::Method;
 use grasswalk::runtime::Engine;
 use grasswalk::util::bench::{header, throughput, Bench};
@@ -37,6 +42,57 @@ fn main() -> anyhow::Result<()> {
                 bytes / stats.median.as_secs_f64() / 1e9
             );
         }
+    }
+
+    // Persistent ring transport vs the legacy per-call respawn above:
+    // same schedule, but threads + links are created once, so the delta
+    // is pure spawn overhead removed from every training step.
+    for &workers in &[2usize, 4, 8] {
+        for &len in &[1usize << 12, 1 << 16, 1 << 20] {
+            let transport = RingTransport::new(workers);
+            let stats = b.run(
+                &format!("persistent ring w={workers} len={len}"),
+                || {
+                    let mut bufs: Vec<Vec<f32>> =
+                        (0..workers).map(|_| vec![1.0f32; len]).collect();
+                    std::hint::black_box(
+                        transport.all_reduce_sum(&mut bufs),
+                    );
+                },
+            );
+            let bytes = 2.0 * (workers - 1) as f64 / workers as f64
+                * (len * 4) as f64;
+            println!(
+                "    -> {:.2} GB/s effective per worker (no respawn)",
+                bytes / stats.median.as_secs_f64() / 1e9
+            );
+        }
+    }
+
+    // Collective regimes on the proxy-model (TINY) gradient layout:
+    // dense full exchange vs shared-seed low-rank factors.
+    let shapes: Vec<Vec<usize>> =
+        TINY.param_shapes().iter().map(|p| p.shape.clone()).collect();
+    let layout = GradLayout::from_shapes(&shapes);
+    for mode in [CommMode::Dense, CommMode::LowRank] {
+        let mut coll = build_collective(mode, 4, 16, 0);
+        let mut payload = 0usize;
+        let s = b.run(
+            &format!("collective {} w=4 (TINY layout)", mode.label()),
+            || {
+                let mut bufs: Vec<Vec<f32>> = (0..4)
+                    .map(|_| vec![1.0f32; layout.total_floats])
+                    .collect();
+                let stats =
+                    coll.all_reduce_mean(&mut bufs, &layout).unwrap();
+                payload = stats.bytes_per_worker;
+                std::hint::black_box(bufs);
+            },
+        );
+        println!(
+            "    -> {payload} wire bytes/worker/step, {:.1} rounds/s",
+            throughput(1, s.median)
+        );
     }
 
     // Loader: sync vs prefetching throughput.

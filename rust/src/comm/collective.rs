@@ -1,0 +1,243 @@
+//! The collective layer of the `comm` subsystem: *what* is exchanged per
+//! gradient round, on top of a [`Transport`] that decides *how*.
+//!
+//! [`Collective::all_reduce_mean`] is the trainer-facing contract: given
+//! every worker's flat gradient vector and the parameter layout, leave
+//! the (possibly compressed) mean gradient in every buffer and report
+//! [`CommStats`]. [`DenseAllReduce`] exchanges the full vectors —
+//! bitwise-equivalent to the legacy `coordinator::allreduce::Ring` path.
+//! The subspace-compressed variant lives in [`super::lowrank`].
+
+use anyhow::{bail, Result};
+
+use super::transport::Transport;
+
+/// One parameter's slice of the flat gradient vector.
+#[derive(Clone, Copy, Debug)]
+pub struct GradRegion {
+    /// Start offset into the flat vector.
+    pub offset: usize,
+    /// Element count (rows × cols).
+    pub len: usize,
+    /// Matrix geometry; 1-D parameters are (len, 1).
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl GradRegion {
+    /// Whether this region is a genuine matrix (compressible): both
+    /// dimensions non-trivial.
+    pub fn is_matrix(&self) -> bool {
+        self.rows > 1 && self.cols > 1
+    }
+
+    /// (long, short) dimensions — the shared-seed basis lives on the
+    /// long side, the exchanged factor is r × short.
+    pub fn oriented(&self) -> (usize, usize) {
+        if self.rows >= self.cols {
+            (self.rows, self.cols)
+        } else {
+            (self.cols, self.rows)
+        }
+    }
+
+    /// Floats the low-rank collective exchanges for this region at the
+    /// given rank: r·short for matrices (capped at the exact size), the
+    /// raw length for 1-D parameters (never compressed).
+    pub fn factor_floats(&self, rank: usize) -> usize {
+        if self.is_matrix() {
+            let (long, short) = self.oriented();
+            rank.min(long) * short
+        } else {
+            self.len
+        }
+    }
+}
+
+/// The flat-gradient layout: one region per parameter, in ABI order.
+#[derive(Clone, Debug)]
+pub struct GradLayout {
+    pub regions: Vec<GradRegion>,
+    pub total_floats: usize,
+}
+
+impl GradLayout {
+    /// Build from parameter shapes (ABI order). Shapes with other than
+    /// two dimensions are treated as flat 1-D regions.
+    pub fn from_shapes(shapes: &[Vec<usize>]) -> GradLayout {
+        let mut regions = Vec::with_capacity(shapes.len());
+        let mut off = 0usize;
+        for sh in shapes {
+            let len: usize = sh.iter().product();
+            let (rows, cols) =
+                if sh.len() == 2 { (sh[0], sh[1]) } else { (len, 1) };
+            regions.push(GradRegion { offset: off, len, rows, cols });
+            off += len;
+        }
+        GradLayout { regions, total_floats: off }
+    }
+
+    /// Floats per worker the low-rank collective puts on the wire.
+    pub fn packed_floats(&self, rank: usize) -> usize {
+        self.regions.iter().map(|r| r.factor_floats(rank)).sum()
+    }
+}
+
+/// Per-round collective accounting, recorded into the metrics stream.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Bytes sent by the busiest worker this round.
+    pub bytes_per_worker: usize,
+    /// Floats exchanged per worker buffer (the wire payload length).
+    pub payload_floats: usize,
+    /// Floats a dense exchange would have carried (layout total).
+    pub dense_floats: usize,
+    /// dense_floats / payload_floats.
+    pub compression: f64,
+    /// Mean-over-workers Frobenius norm of the error-feedback residual
+    /// accumulators after this round (0 for dense).
+    pub residual_norm: f64,
+    /// Transport hops per worker.
+    pub hops: usize,
+}
+
+/// A gradient collective: reduces per-worker flat gradients to their
+/// mean, in place (every buffer equal on return).
+pub trait Collective: Send {
+    fn label(&self) -> &'static str;
+
+    fn all_reduce_mean(
+        &mut self,
+        workers: &mut [Vec<f32>],
+        layout: &GradLayout,
+    ) -> Result<CommStats>;
+
+    /// Re-align any round-dependent schedule (the low-rank collective's
+    /// shared-basis derivation) with a restored trainer step, so a
+    /// resumed run regenerates the same basis sequence a continuous run
+    /// would — and drop trajectory-dependent state (error-feedback
+    /// residuals) accumulated on the abandoned trajectory. Default no-op
+    /// for stateless collectives.
+    fn set_round(&mut self, _round: u64) {}
+}
+
+/// Full-gradient exchange: the layout is ignored beyond a length check;
+/// results are bitwise-identical to the legacy single-shot ring (pinned
+/// in rust/tests/comm_props.rs).
+pub struct DenseAllReduce {
+    transport: Box<dyn Transport>,
+}
+
+impl DenseAllReduce {
+    pub fn new(transport: Box<dyn Transport>) -> DenseAllReduce {
+        DenseAllReduce { transport }
+    }
+}
+
+impl Collective for DenseAllReduce {
+    fn label(&self) -> &'static str {
+        "dense"
+    }
+
+    fn all_reduce_mean(
+        &mut self,
+        workers: &mut [Vec<f32>],
+        layout: &GradLayout,
+    ) -> Result<CommStats> {
+        let n = self.transport.world_size();
+        if workers.len() != n {
+            bail!("dense collective: {} buffers for world {n}", workers.len());
+        }
+        if workers.iter().any(|w| w.len() != layout.total_floats) {
+            bail!(
+                "dense collective: buffer length != layout total {}",
+                layout.total_floats
+            );
+        }
+        let tstats = self.transport.all_reduce_sum(workers);
+        // Mean, applied exactly like the legacy Ring::all_reduce_mean.
+        let inv = 1.0 / n as f32;
+        for b in workers.iter_mut() {
+            for x in b.iter_mut() {
+                *x *= inv;
+            }
+        }
+        Ok(CommStats {
+            bytes_per_worker: tstats.bytes_sent_per_worker,
+            payload_floats: layout.total_floats,
+            dense_floats: layout.total_floats,
+            compression: 1.0,
+            residual_norm: 0.0,
+            hops: tstats.hops,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::RingTransport;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn layout_regions_cover_flat_vector() {
+        let layout = GradLayout::from_shapes(&[
+            vec![4, 6],
+            vec![10],
+            vec![3, 2],
+        ]);
+        assert_eq!(layout.total_floats, 24 + 10 + 6);
+        assert_eq!(layout.regions[1].offset, 24);
+        assert!(!layout.regions[1].is_matrix());
+        assert!(layout.regions[2].is_matrix());
+        assert_eq!(layout.regions[2].oriented(), (3, 2));
+    }
+
+    #[test]
+    fn factor_floats_cap_at_exact_size() {
+        let r = GradRegion { offset: 0, len: 12, rows: 3, cols: 4 };
+        // rank beyond the long dim degenerates to an exact transform.
+        assert_eq!(r.factor_floats(100), 4 * 3);
+        assert_eq!(r.factor_floats(2), 2 * 3);
+    }
+
+    #[test]
+    fn dense_means_over_workers() {
+        let layout = GradLayout::from_shapes(&[vec![5, 2]]);
+        let mut c =
+            DenseAllReduce::new(Box::new(RingTransport::new(4)));
+        let mut rng = Rng::new(3);
+        let mut bufs: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                let mut v = vec![0.0f32; 10];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let mut expect = vec![0.0f32; 10];
+        for b in &bufs {
+            for (e, x) in expect.iter_mut().zip(b) {
+                *e += *x / 4.0;
+            }
+        }
+        let stats = c.all_reduce_mean(&mut bufs, &layout).unwrap();
+        assert_eq!(stats.payload_floats, 10);
+        assert!((stats.compression - 1.0).abs() < 1e-12);
+        for b in &bufs {
+            for (&got, &want) in b.iter().zip(&expect) {
+                assert!((got - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_rejects_bad_shapes() {
+        let layout = GradLayout::from_shapes(&[vec![4]]);
+        let mut c =
+            DenseAllReduce::new(Box::new(RingTransport::new(2)));
+        let mut wrong_world = vec![vec![0.0f32; 4]];
+        assert!(c.all_reduce_mean(&mut wrong_world, &layout).is_err());
+        let mut wrong_len = vec![vec![0.0f32; 3], vec![0.0f32; 3]];
+        assert!(c.all_reduce_mean(&mut wrong_len, &layout).is_err());
+    }
+}

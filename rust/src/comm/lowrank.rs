@@ -1,0 +1,458 @@
+//! Subspace-compressed all-reduce with error feedback.
+//!
+//! The paper's core observation — most gradient energy lives in a small
+//! rank-r subspace while a non-trivial residual stays in the bulk —
+//! applies to the data-parallel collective exactly as it does to
+//! optimizer state. [`LowRankAllReduce`] exploits the part that makes it
+//! free for communication: the random basis needs **zero traffic**,
+//! because every worker regenerates the identical basis locally from a
+//! shared seed ([`crate::optim::shared_seed_basis`], the same sampler
+//! GrassJump's subspace refresh uses).
+//!
+//! Per gradient matrix G (oriented long × short) and per round t:
+//!
+//!   1. every worker regenerates the shared Haar basis `P_t` (long × r);
+//!   2. worker w forms `G'_w = G_w + E_w` (its error-feedback residual
+//!      from prior rounds) and exchanges only the factor `F_w = P_tᵀ G'_w`
+//!      (r × short instead of long × short);
+//!   3. the factors are ring-all-reduced; every worker reconstructs the
+//!      same mean gradient `P_t · mean(F_w)` locally;
+//!   4. worker w keeps `E_w ← G'_w − P_t F_w` — the bulk energy it failed
+//!      to transmit this round, reinjected into step 2 next round.
+//!
+//! Error feedback makes the scheme *lossless over time*: the identity
+//! `mean(G_w) + mean(E_w_before) = reconstructed + mean(E_w_after)` holds
+//! exactly (up to fp), and with Haar bases the untransmitted residual
+//! contracts by ≈ (1 − r/long) per round — both pinned in
+//! rust/tests/comm_props.rs. 1-D parameters (norms) are exchanged dense.
+
+use anyhow::{bail, Result};
+
+use crate::optim::shared_seed_basis;
+use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Mat};
+
+use super::collective::{Collective, CommStats, GradLayout};
+use super::transport::Transport;
+
+pub struct LowRankAllReduce {
+    transport: Box<dyn Transport>,
+    rank: usize,
+    seed: u64,
+    /// Round counter — part of the shared basis derivation, so the basis
+    /// walks every round without any coordination traffic. Re-aligned to
+    /// the trainer step on checkpoint restore ([`Collective::set_round`]).
+    round: u64,
+    /// Per-worker, per-region error-feedback residuals (empty 0×0 mats
+    /// for 1-D regions; lazily sized on the first round). Deliberately
+    /// NOT checkpointed — like optimizer subspace state, they are
+    /// transient deferred energy; a restore drops at most one round's
+    /// untransmitted bulk.
+    residuals: Vec<Vec<Mat>>,
+    /// Reusable scratch (per-worker wire buffers + pack/reconstruct
+    /// intermediates): steady-state rounds do no heap allocation here —
+    /// only the shared-basis regeneration (QR of a fresh gaussian, the
+    /// scheme's defining cost) allocates.
+    packed: Vec<Vec<f32>>,
+    g: Mat,
+    factor: Mat,
+    recon: Mat,
+}
+
+impl LowRankAllReduce {
+    pub fn new(
+        transport: Box<dyn Transport>,
+        rank: usize,
+        seed: u64,
+    ) -> LowRankAllReduce {
+        assert!(rank >= 1);
+        LowRankAllReduce {
+            transport,
+            rank,
+            seed,
+            round: 0,
+            residuals: Vec::new(),
+            packed: Vec::new(),
+            g: Mat::default(),
+            factor: Mat::default(),
+            recon: Mat::default(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Rounds completed so far (= the round index the *next* call will
+    /// derive its bases from is `rounds_done()`).
+    pub fn rounds_done(&self) -> u64 {
+        self.round
+    }
+
+    /// Test/diagnostic access to a worker's residual accumulator.
+    pub fn residual(&self, worker: usize, region: usize) -> Option<&Mat> {
+        self.residuals.get(worker)?.get(region)
+    }
+
+    /// The shared basis for `region` at round `round` of this collective
+    /// (what every worker regenerates locally). Exposed so tests and the
+    /// analysis tooling can reproduce the exact wire view.
+    pub fn basis_for(&self, round: u64, region: usize, long: usize) -> Mat {
+        shared_seed_basis(
+            self.seed,
+            round,
+            region as u64,
+            long,
+            self.rank.min(long),
+        )
+    }
+}
+
+impl Collective for LowRankAllReduce {
+    fn label(&self) -> &'static str {
+        "lowrank"
+    }
+
+    fn set_round(&mut self, round: u64) {
+        self.round = round;
+        // A restore abandons the current trajectory: stale deferred
+        // energy from it must not leak into the resumed run's gradients.
+        // Residuals re-initialize to zero on the next round.
+        self.residuals.clear();
+    }
+
+    fn all_reduce_mean(
+        &mut self,
+        workers: &mut [Vec<f32>],
+        layout: &GradLayout,
+    ) -> Result<CommStats> {
+        let n = self.transport.world_size();
+        if workers.len() != n {
+            bail!(
+                "lowrank collective: {} buffers for world {n}",
+                workers.len()
+            );
+        }
+        if workers.iter().any(|w| w.len() != layout.total_floats) {
+            bail!(
+                "lowrank collective: buffer length != layout total {}",
+                layout.total_floats
+            );
+        }
+        let packed_len = layout.packed_floats(self.rank);
+        let dense = layout.total_floats;
+        let compression = dense as f64 / packed_len.max(1) as f64;
+        if n == 1 {
+            // Nothing crosses a wire with one worker: pass the gradient
+            // through untouched (no deferral via error feedback either),
+            // keeping --comm lowrank ≡ dense at world size 1.
+            return Ok(CommStats {
+                bytes_per_worker: 0,
+                payload_floats: packed_len,
+                dense_floats: dense,
+                compression,
+                residual_norm: 0.0,
+                hops: 0,
+            });
+        }
+
+        if self.residuals.is_empty() {
+            self.residuals = (0..n)
+                .map(|_| {
+                    layout
+                        .regions
+                        .iter()
+                        .map(|reg| {
+                            if reg.is_matrix() {
+                                Mat::zeros(reg.rows, reg.cols)
+                            } else {
+                                Mat::default()
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+        }
+
+        // Shared bases for this round — identical on every worker by
+        // construction, so they never touch the transport.
+        let round = self.round;
+        let bases: Vec<Mat> = layout
+            .regions
+            .iter()
+            .enumerate()
+            .map(|(k, reg)| {
+                if reg.is_matrix() {
+                    let (long, _) = reg.oriented();
+                    self.basis_for(round, k, long)
+                } else {
+                    Mat::default()
+                }
+            })
+            .collect();
+
+        // Split field borrows: scratch, residuals and the transport are
+        // used side by side below.
+        let rank = self.rank;
+        let Self { transport, residuals, packed, g, factor, recon, .. } =
+            self;
+
+        // ---- pack: per worker, factors for matrices + raw 1-D tails ----
+        // All intermediates live in the owned scratch; steady-state
+        // rounds allocate nothing on this path.
+        if packed.len() != n {
+            *packed =
+                (0..n).map(|_| Vec::with_capacity(packed_len)).collect();
+        }
+        for (w, buf) in workers.iter().enumerate() {
+            let p = &mut packed[w];
+            p.clear();
+            for (k, reg) in layout.regions.iter().enumerate() {
+                let slice = &buf[reg.offset..reg.offset + reg.len];
+                if reg.is_matrix() {
+                    g.resize_to(reg.rows, reg.cols);
+                    g.data.copy_from_slice(slice);
+                    g.axpy(1.0, &residuals[w][k]); // G' = G + E
+                    let basis = &bases[k];
+                    if reg.rows >= reg.cols {
+                        matmul_tn_into(basis, g, factor); // r × cols
+                        matmul_into(basis, factor, recon);
+                    } else {
+                        matmul_into(g, basis, factor); // rows × r
+                        matmul_nt_into(factor, basis, recon);
+                    }
+                    // Error feedback in place: E ← G' − transmitted.
+                    residuals[w][k].assign_zip(g, recon, |a, b| a - b);
+                    p.extend_from_slice(&factor.data);
+                } else {
+                    p.extend_from_slice(slice);
+                }
+            }
+            debug_assert_eq!(p.len(), packed_len);
+        }
+
+        // ---- the only traffic: ring all-reduce over the packed factors --
+        let tstats = transport.all_reduce_sum(packed);
+
+        // ---- mean + local reconstruction (identical on every worker) ---
+        let inv = 1.0 / n as f32;
+        let mean = &mut packed[0];
+        for x in mean.iter_mut() {
+            *x *= inv;
+        }
+        let (first, rest) = workers.split_first_mut().unwrap();
+        let mut poff = 0usize;
+        for (k, reg) in layout.regions.iter().enumerate() {
+            let fl = reg.factor_floats(rank);
+            let src = &mean[poff..poff + fl];
+            let dst = &mut first[reg.offset..reg.offset + reg.len];
+            if reg.is_matrix() {
+                let basis = &bases[k];
+                if reg.rows >= reg.cols {
+                    factor.resize_to(basis.cols, reg.cols);
+                    factor.data.copy_from_slice(src);
+                    matmul_into(basis, factor, recon);
+                } else {
+                    factor.resize_to(reg.rows, basis.cols);
+                    factor.data.copy_from_slice(src);
+                    matmul_nt_into(factor, basis, recon);
+                }
+                dst.copy_from_slice(&recon.data);
+            } else {
+                dst.copy_from_slice(src);
+            }
+            poff += fl;
+        }
+        for w in rest.iter_mut() {
+            w.copy_from_slice(first);
+        }
+
+        let residual_norm = residuals
+            .iter()
+            .map(|per_region| {
+                per_region
+                    .iter()
+                    .map(|e| e.fro_norm_sq())
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .sum::<f64>()
+            / n as f64;
+
+        self.round += 1;
+        Ok(CommStats {
+            bytes_per_worker: tstats.bytes_sent_per_worker,
+            payload_floats: packed_len,
+            dense_floats: dense,
+            compression,
+            residual_norm,
+            hops: tstats.hops,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::RingTransport;
+    use crate::util::rng::Rng;
+
+    fn layout() -> GradLayout {
+        // Tall matrix, wide matrix, and a 1-D tail.
+        GradLayout::from_shapes(&[vec![10, 6], vec![5, 12], vec![7]])
+    }
+
+    fn rand_workers(n: usize, total: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; total];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_workers_get_identical_reconstruction() {
+        let layout = layout();
+        let mut c = LowRankAllReduce::new(
+            Box::new(RingTransport::new(3)),
+            4,
+            11,
+        );
+        let mut bufs = rand_workers(3, layout.total_floats, 1);
+        c.all_reduce_mean(&mut bufs, &layout).unwrap();
+        assert_eq!(bufs[0], bufs[1]);
+        assert_eq!(bufs[0], bufs[2]);
+    }
+
+    #[test]
+    fn dense_tail_is_exact_mean() {
+        let layout = layout();
+        let mut c = LowRankAllReduce::new(
+            Box::new(RingTransport::new(2)),
+            4,
+            5,
+        );
+        let mut bufs = rand_workers(2, layout.total_floats, 2);
+        let tail = layout.regions[2];
+        let expect: Vec<f32> = (0..tail.len)
+            .map(|i| {
+                (bufs[0][tail.offset + i] + bufs[1][tail.offset + i]) / 2.0
+            })
+            .collect();
+        c.all_reduce_mean(&mut bufs, &layout).unwrap();
+        for (i, &want) in expect.iter().enumerate() {
+            let got = bufs[0][tail.offset + i];
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn single_worker_is_passthrough() {
+        let layout = layout();
+        let mut c = LowRankAllReduce::new(
+            Box::new(RingTransport::new(1)),
+            4,
+            5,
+        );
+        let mut bufs = rand_workers(1, layout.total_floats, 3);
+        let before = bufs[0].clone();
+        let stats = c.all_reduce_mean(&mut bufs, &layout).unwrap();
+        assert_eq!(bufs[0], before);
+        assert_eq!(stats.bytes_per_worker, 0);
+        assert!(stats.compression > 1.0);
+    }
+
+    #[test]
+    fn set_round_realigns_basis_schedule() {
+        // A fresh collective fast-forwarded with set_round(3) must be
+        // bitwise-equivalent to one that already ran 3 rounds with zero
+        // gradients (zero input leaves residuals at zero, isolating the
+        // schedule) — the checkpoint-restore contract.
+        let layout = layout();
+        let mk = || {
+            LowRankAllReduce::new(Box::new(RingTransport::new(2)), 4, 5)
+        };
+        let mut advanced = mk();
+        for _ in 0..3 {
+            let mut z: Vec<Vec<f32>> =
+                (0..2).map(|_| vec![0.0f32; layout.total_floats]).collect();
+            advanced.all_reduce_mean(&mut z, &layout).unwrap();
+        }
+        let mut restored = mk();
+        restored.set_round(3);
+        assert_eq!(restored.rounds_done(), 3);
+        let bufs = rand_workers(2, layout.total_floats, 17);
+        let mut x = bufs.clone();
+        let mut y = bufs.clone();
+        advanced.all_reduce_mean(&mut x, &layout).unwrap();
+        restored.all_reduce_mean(&mut y, &layout).unwrap();
+        assert_eq!(x[0], y[0], "restored schedule must match continuous");
+        // Without realignment the basis (hence the output) differs.
+        let mut fresh = mk();
+        let mut w = bufs;
+        fresh.all_reduce_mean(&mut w, &layout).unwrap();
+        assert_ne!(x[0], w[0]);
+    }
+
+    #[test]
+    fn set_round_clears_stale_residuals() {
+        // Restoring into an already-run collective must not leak the
+        // abandoned trajectory's deferred energy into the resumed run.
+        let layout = layout();
+        let mut c = LowRankAllReduce::new(
+            Box::new(RingTransport::new(2)),
+            4,
+            5,
+        );
+        let mut bufs = rand_workers(2, layout.total_floats, 9);
+        c.all_reduce_mean(&mut bufs, &layout).unwrap();
+        assert!(
+            c.residual(0, 0).map(|e| e.fro_norm() > 0.0).unwrap_or(false),
+            "round with real gradients must leave a residual"
+        );
+        c.set_round(0);
+        assert!(
+            c.residual(0, 0).is_none(),
+            "restore must drop stale deferred energy"
+        );
+        // And the collective keeps working after the reset.
+        let mut bufs = rand_workers(2, layout.total_floats, 10);
+        c.all_reduce_mean(&mut bufs, &layout).unwrap();
+        assert_eq!(bufs[0], bufs[1]);
+    }
+
+    #[test]
+    fn steady_state_rounds_reuse_scratch() {
+        // Many rounds on one collective must keep working with the
+        // reusable scratch (shape cycling across regions included).
+        let layout = layout();
+        let mut c = LowRankAllReduce::new(
+            Box::new(RingTransport::new(2)),
+            4,
+            8,
+        );
+        for seed in 0..10 {
+            let mut bufs = rand_workers(2, layout.total_floats, 200 + seed);
+            let stats = c.all_reduce_mean(&mut bufs, &layout).unwrap();
+            assert_eq!(stats.payload_floats, layout.packed_floats(4));
+            assert_eq!(bufs[0], bufs[1]);
+        }
+        assert_eq!(c.rounds_done(), 10);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let layout = layout();
+        let mut c = LowRankAllReduce::new(
+            Box::new(RingTransport::new(2)),
+            4,
+            5,
+        );
+        let mut wrong_world = rand_workers(1, layout.total_floats, 4);
+        assert!(c.all_reduce_mean(&mut wrong_world, &layout).is_err());
+        let mut wrong_len = vec![vec![0.0f32; 3], vec![0.0f32; 3]];
+        assert!(c.all_reduce_mean(&mut wrong_len, &layout).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! The transport layer of the `comm` subsystem: how raw f32 payloads move
+//! between data-parallel workers.
+//!
+//! [`Transport`] abstracts one synchronous collective round over N worker
+//! endpoints so that backends can be swapped without touching the
+//! [`super::Collective`] layer above: the in-process [`RingTransport`]
+//! here stands in for NCCL; a socket backend for real multi-host rings
+//! only has to implement the same two methods (the schedule below is
+//! already expressed purely in terms of point-to-point send/recv pairs).
+//!
+//! ## Persistent ring workers
+//!
+//! The legacy `coordinator::allreduce::Ring` spawned N scoped threads and
+//! N channels on *every* `all_reduce_sum` call — one full thread
+//! fork/join per training step. `RingTransport` creates the N worker
+//! threads and the N neighbor links once, at construction, and reuses
+//! them for every round: a round is one bounded-channel handoff of each
+//! worker's buffer in and out. Steady-state collective rounds therefore
+//! perform zero thread spawns.
+//!
+//! The wire schedule is the classic bandwidth-optimal two-phase ring —
+//! reduce-scatter (N−1 hops) then all-gather (N−1 hops), ~2·(N−1)/N of
+//! the buffer sent per worker — with chunk boundaries and add order kept
+//! *identical* to the legacy implementation, so results are bitwise equal
+//! (pinned in rust/tests/comm_props.rs).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+/// Per-round transport accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransportStats {
+    /// Bytes sent by the busiest worker this round (f32 payload × 4).
+    pub bytes_sent_per_worker: usize,
+    /// Point-to-point hops per worker (2·(N−1) for the ring schedule).
+    pub hops: usize,
+}
+
+/// One synchronous all-reduce round over N worker endpoints.
+///
+/// `Send` (not `Sync`): a transport is owned by one coordinator — the
+/// trainer — and driven from its thread; worker-side parallelism lives
+/// behind the implementation.
+pub trait Transport: Send {
+    fn world_size(&self) -> usize;
+
+    /// All-reduce (sum) the per-worker vectors in place. Every vector
+    /// must have the same length; on return every vector holds the sum.
+    fn all_reduce_sum(&self, buffers: &mut [Vec<f32>]) -> TransportStats;
+}
+
+/// Persistent in-process ring: N worker threads + N neighbor links
+/// created once, reused for every collective round.
+pub struct RingTransport {
+    n: usize,
+    /// Per-worker round dispatch (buffer ownership moves in).
+    jobs: Vec<SyncSender<Vec<f32>>>,
+    /// Per-worker round completion (buffer + bytes-sent move out).
+    done: Vec<Receiver<(Vec<f32>, usize)>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl RingTransport {
+    pub fn new(n: usize) -> RingTransport {
+        assert!(n >= 1);
+        if n == 1 {
+            // Degenerate world: no threads, every round is a no-op.
+            return RingTransport {
+                n,
+                jobs: Vec::new(),
+                done: Vec::new(),
+                handles: Vec::new(),
+            };
+        }
+        // Neighbor links: link_tx[i] feeds worker (i+1) % n.
+        let mut link_tx: Vec<Option<SyncSender<Vec<f32>>>> =
+            (0..n).map(|_| None).collect();
+        let mut link_rx: Vec<Option<Receiver<Vec<f32>>>> =
+            (0..n).map(|_| None).collect();
+        for i in 0..n {
+            let (tx, rx) = sync_channel::<Vec<f32>>(1);
+            link_tx[i] = Some(tx);
+            link_rx[(i + 1) % n] = Some(rx);
+        }
+        let mut jobs = Vec::with_capacity(n);
+        let mut done = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for rank in 0..n {
+            let (job_tx, job_rx) = sync_channel::<Vec<f32>>(1);
+            let (done_tx, done_rx) = sync_channel::<(Vec<f32>, usize)>(1);
+            let tx = link_tx[rank].take().unwrap();
+            let rx = link_rx[rank].take().unwrap();
+            let handle = std::thread::Builder::new()
+                .name(format!("comm-ring-{rank}"))
+                .spawn(move || ring_worker(rank, n, job_rx, done_tx, tx, rx))
+                .expect("spawn comm ring worker");
+            jobs.push(job_tx);
+            done.push(done_rx);
+            handles.push(handle);
+        }
+        RingTransport { n, jobs, done, handles }
+    }
+}
+
+impl Transport for RingTransport {
+    fn world_size(&self) -> usize {
+        self.n
+    }
+
+    fn all_reduce_sum(&self, buffers: &mut [Vec<f32>]) -> TransportStats {
+        let n = self.n;
+        assert_eq!(buffers.len(), n, "one buffer per ring worker");
+        if n == 1 {
+            return TransportStats { bytes_sent_per_worker: 0, hops: 0 };
+        }
+        let len = buffers[0].len();
+        assert!(buffers.iter().all(|b| b.len() == len));
+        // Dispatch every buffer, then collect every result. Workers run
+        // in lockstep through their links; the coordinator never starts
+        // round k+1 before every worker reported round k, so links carry
+        // exactly one round's chunks at a time.
+        for (i, buf) in buffers.iter_mut().enumerate() {
+            self.jobs[i]
+                .send(std::mem::take(buf))
+                .expect("comm ring worker gone");
+        }
+        let mut bytes = 0usize;
+        for (i, buf) in buffers.iter_mut().enumerate() {
+            let (out, sent) =
+                self.done[i].recv().expect("comm ring worker gone");
+            *buf = out;
+            bytes = bytes.max(sent);
+        }
+        TransportStats { bytes_sent_per_worker: bytes, hops: 2 * (n - 1) }
+    }
+}
+
+impl Drop for RingTransport {
+    fn drop(&mut self) {
+        // Closing the job channels makes every worker's recv fail -> exit.
+        self.jobs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One persistent ring worker: blocks for a round's buffer, runs the
+/// two-phase schedule through its neighbor links, hands the buffer back.
+/// Chunk math and accumulation order mirror the legacy
+/// `coordinator::allreduce::Ring` loop for bitwise equality.
+fn ring_worker(
+    rank: usize,
+    n: usize,
+    job_rx: Receiver<Vec<f32>>,
+    done_tx: SyncSender<(Vec<f32>, usize)>,
+    link_tx: SyncSender<Vec<f32>>,
+    link_rx: Receiver<Vec<f32>>,
+) {
+    while let Ok(mut buf) = job_rx.recv() {
+        let len = buf.len();
+        // Chunk boundaries (chunk c: [starts[c], starts[c+1])).
+        let starts: Vec<usize> = (0..=n).map(|c| c * len / n).collect();
+        let mut sent = 0usize;
+        // Phase 1: reduce-scatter.
+        for step in 0..n - 1 {
+            let send_chunk = (rank + n - step) % n;
+            let (s0, s1) = (starts[send_chunk], starts[send_chunk + 1]);
+            if link_tx.send(buf[s0..s1].to_vec()).is_err() {
+                return;
+            }
+            sent += (s1 - s0) * 4;
+            let recv_chunk = (rank + n - step - 1 + n) % n;
+            let Ok(data) = link_rx.recv() else { return };
+            let (r0, r1) = (starts[recv_chunk], starts[recv_chunk + 1]);
+            for (dst, src) in buf[r0..r1].iter_mut().zip(&data) {
+                *dst += *src;
+            }
+        }
+        // Phase 2: all-gather.
+        for step in 0..n - 1 {
+            let send_chunk = (rank + 1 + n - step) % n;
+            let (s0, s1) = (starts[send_chunk], starts[send_chunk + 1]);
+            if link_tx.send(buf[s0..s1].to_vec()).is_err() {
+                return;
+            }
+            sent += (s1 - s0) * 4;
+            let recv_chunk = (rank + n - step) % n;
+            let Ok(data) = link_rx.recv() else { return };
+            let (r0, r1) = (starts[recv_chunk], starts[recv_chunk + 1]);
+            buf[r0..r1].copy_from_slice(&data);
+        }
+        if done_tx.send((buf, sent)).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn make_buffers(n: usize, len: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let mut expect = vec![0.0f32; len];
+        for b in &bufs {
+            for (e, x) in expect.iter_mut().zip(b) {
+                *e += *x;
+            }
+        }
+        (bufs, expect)
+    }
+
+    #[test]
+    fn sum_matches_serial_reduction() {
+        for n in [2usize, 3, 4, 8] {
+            let t = RingTransport::new(n);
+            for len in [1usize, 7, 64, 1000] {
+                let (mut bufs, expect) = make_buffers(n, len, len as u64);
+                t.all_reduce_sum(&mut bufs);
+                for (w, b) in bufs.iter().enumerate() {
+                    for (i, (&got, &want)) in b.iter().zip(&expect).enumerate()
+                    {
+                        assert!(
+                            (got - want).abs() < 1e-3,
+                            "n={n} len={len} worker={w} i={i}: {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_workers_survive_many_rounds() {
+        // One transport, many rounds of varying payload lengths — the
+        // whole point of the persistent ring (no per-round respawn).
+        let t = RingTransport::new(4);
+        for round in 0..50u64 {
+            let len = 1 + (round as usize * 37) % 300;
+            let (mut bufs, expect) = make_buffers(4, len, round);
+            let stats = t.all_reduce_sum(&mut bufs);
+            assert_eq!(stats.hops, 6);
+            for b in &bufs {
+                for (&got, &want) in b.iter().zip(&expect) {
+                    assert!((got - want).abs() < 1e-3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_noop() {
+        let t = RingTransport::new(1);
+        let mut bufs = vec![vec![1.0f32, 2.0]];
+        let stats = t.all_reduce_sum(&mut bufs);
+        assert_eq!(stats.hops, 0);
+        assert_eq!(stats.bytes_sent_per_worker, 0);
+        assert_eq!(bufs[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn bandwidth_optimal_traffic() {
+        let (n, len) = (4usize, 1000usize);
+        let t = RingTransport::new(n);
+        let (mut bufs, _) = make_buffers(n, len, 9);
+        let stats = t.all_reduce_sum(&mut bufs);
+        let ideal = 2.0 * (n - 1) as f64 / n as f64 * (len * 4) as f64;
+        let actual = stats.bytes_sent_per_worker as f64;
+        assert!(
+            (actual - ideal).abs() / ideal < 0.05,
+            "actual {actual} ideal {ideal}"
+        );
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let t = RingTransport::new(3);
+        let (mut bufs, _) = make_buffers(3, 16, 1);
+        t.all_reduce_sum(&mut bufs);
+        drop(t); // must not hang
+    }
+}

@@ -5,6 +5,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::comm::CommMode;
 use crate::coordinator::{OptEngine, TrainConfig};
 use crate::optim::{Method, Schedule};
 use crate::util::toml::{parse as parse_toml, TomlTable};
@@ -65,6 +66,11 @@ impl ExperimentConfig {
         tr.steps = get_usize(&t, "train.steps", tr.steps);
         tr.grad_accum = get_usize(&t, "train.grad_accum", tr.grad_accum);
         tr.workers = get_usize(&t, "train.workers", tr.workers);
+        if let Some(c) = t.get("train.comm").and_then(|v| v.as_str()) {
+            tr.comm = CommMode::parse(c)
+                .ok_or_else(|| anyhow!("unknown comm mode `{c}`"))?;
+        }
+        tr.comm_rank = get_usize(&t, "train.comm_rank", tr.comm_rank);
         tr.seed = get_usize(&t, "train.seed", tr.seed as usize) as u64;
         tr.eval_every = get_usize(&t, "train.eval_every", tr.eval_every);
         tr.eval_batches =
@@ -121,6 +127,8 @@ lr = 1e-3
 steps = 500
 grad_accum = 2
 workers = 2
+comm = "lowrank"
+comm_rank = 8
 schedule = "cosine"
 warmup = 50
 analysis_every = 100
@@ -131,6 +139,8 @@ opt_engine = "pjrt"
         assert_eq!(cfg.name, "table1-grasswalk");
         assert_eq!(cfg.train.method, Method::GrassWalk);
         assert_eq!(cfg.train.workers, 2);
+        assert_eq!(cfg.train.comm, CommMode::LowRank);
+        assert_eq!(cfg.train.comm_rank, 8);
         assert_eq!(cfg.train.opt_engine, OptEngine::Pjrt);
         assert_eq!(cfg.train.analysis_every, Some(100));
         match cfg.train.schedule {
@@ -147,12 +157,22 @@ opt_engine = "pjrt"
         let cfg = ExperimentConfig::from_toml_str("name = \"x\"").unwrap();
         assert_eq!(cfg.train.method, Method::GrassWalk);
         assert_eq!(cfg.train.opt_engine, OptEngine::Rust);
+        assert_eq!(cfg.train.comm, CommMode::Dense);
+        assert_eq!(cfg.train.comm_rank, 16);
     }
 
     #[test]
     fn rejects_unknown_method() {
         let r = ExperimentConfig::from_toml_str(
             "[train]\nmethod = \"bogus\"",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_comm_mode() {
+        let r = ExperimentConfig::from_toml_str(
+            "[train]\ncomm = \"carrier-pigeon\"",
         );
         assert!(r.is_err());
     }

@@ -1,10 +1,18 @@
-//! Ring all-reduce over in-process workers — the collective substrate of
-//! the simulated data-parallel runtime (DESIGN.md §7: stands in for the
-//! multi-GPU NCCL ring the paper's 7B runs rely on).
+//! Ring all-reduce over in-process workers — the *legacy single-shot*
+//! collective (DESIGN.md §7: stands in for the multi-GPU NCCL ring the
+//! paper's 7B runs rely on).
 //!
 //! Implements the classic two-phase ring: reduce-scatter (N−1 steps) then
 //! all-gather (N−1 steps), each worker owning chunk `rank` at the end of
 //! phase 1. Workers are threads; "links" are bounded channels.
+//!
+//! Superseded on the trainer path by `crate::comm`: this implementation
+//! respawns N threads and N channels on every call, where
+//! `comm::RingTransport` keeps persistent ring workers and
+//! `comm::DenseAllReduce` reproduces this exact schedule bitwise (pinned
+//! in rust/tests/comm_props.rs — which is why this file stays: it is the
+//! independently-written oracle). Benches also use it to quantify the
+//! respawn overhead the persistent transport removes.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Barrier};

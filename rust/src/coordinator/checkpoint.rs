@@ -1,62 +1,152 @@
 //! S13: checkpointing — binary save/restore of the trainer's parameters
 //! and position.
 //!
-//! Format (little-endian):
-//!   magic "GWCKPT01" | step u64 | seed u64 | n_floats u64 | f32 data...
-//!   | crc32 of the data section
+//! Current format `GWCKPT02` (little-endian):
+//!   magic "GWCKPT02" | step u64 | seed u64 | rng state u64×4
+//!   | n_loaders u64 | loader cursors u64×n | eval cursor u64
+//!   | n_floats u64 | f32 data... | crc32 over everything after the magic
+//!
+//! The v2 additions close the resume-determinism gap: v1 restored params
+//! + step but not the trainer RNG or the loader positions, so a resumed
+//! run replayed data from the start of its stream. v2 carries the raw
+//! xoshiro state and one deterministic cursor per loader (worker shards
+//! plus the eval stream); restore fast-forwards each stream to its saved
+//! position. `GWCKPT01` files are still readable (their extras default to
+//! "unknown": RNG untouched, cursors not fast-forwarded).
+//!
+//! Writes are atomic: the file is streamed to `<path>.tmp` and renamed
+//! into place, so a crash mid-write never leaves a corrupt file at the
+//! canonical location.
 //!
 //! Subspace/optimizer state is intentionally NOT serialized: every method
 //! re-initializes its basis from the first post-restore gradient (the
 //! paper's own init rule), which keeps checkpoints method-portable. The
 //! restore-then-continue loss curve is validated in the trainer e2e test.
+//! The low-rank collective's error-feedback residuals follow the same
+//! policy (transient deferred energy, restarted empty — at most one
+//! round's untransmitted bulk is dropped); its shared-basis round
+//! schedule IS realigned on restore via the step counter, so a resumed
+//! run regenerates the same basis sequence a continuous run would.
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-const MAGIC: &[u8; 8] = b"GWCKPT01";
+const MAGIC_V1: &[u8; 8] = b"GWCKPT01";
+const MAGIC_V2: &[u8; 8] = b"GWCKPT02";
+
+/// CRC32 (IEEE) lookup table, computed once at compile time (the per-call
+/// rebuild used to dominate small-checkpoint load cost).
+const fn build_crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = build_crc32_table();
+
+/// Simple CRC32 (IEEE) for integrity.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFFFFFFu32;
+    for &b in data {
+        crc = CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFFFFFF
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub step: u64,
     pub seed: u64,
     pub params: Vec<f32>,
+    /// Trainer RNG state (v2; `None` when loaded from a v1 file).
+    pub rng_state: Option<[u64; 4]>,
+    /// Per-worker loader cursors in shard order (v2; empty for v1).
+    pub loader_cursors: Vec<u64>,
+    /// Eval-stream cursor (v2; 0 for v1).
+    pub eval_cursor: u64,
 }
 
-/// Simple CRC32 (IEEE) for integrity.
-fn crc32(data: &[u8]) -> u32 {
-    let mut table = [0u32; 256];
-    for (i, t) in table.iter_mut().enumerate() {
-        let mut c = i as u32;
-        for _ in 0..8 {
-            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
-        }
-        *t = c;
+/// `<path>.tmp` sibling used for atomic writes.
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+fn read_u64(cur: &mut &[u8]) -> Result<u64> {
+    if cur.len() < 8 {
+        bail!("truncated checkpoint");
     }
-    let mut crc = 0xFFFFFFFFu32;
-    for &b in data {
-        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
-    }
-    crc ^ 0xFFFFFFFF
+    let (head, tail) = cur.split_at(8);
+    *cur = tail;
+    Ok(u64::from_le_bytes(head.try_into().unwrap()))
 }
 
 impl Checkpoint {
+    /// Convenience constructor for params-only checkpoints (tests,
+    /// tooling); trainer saves carry the full v2 position.
+    pub fn bare(step: u64, seed: u64, params: Vec<f32>) -> Checkpoint {
+        Checkpoint {
+            step,
+            seed,
+            params,
+            rng_state: None,
+            loader_cursors: Vec::new(),
+            eval_cursor: 0,
+        }
+    }
+
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("create {path:?}"))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&self.step.to_le_bytes())?;
-        f.write_all(&self.seed.to_le_bytes())?;
-        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
-        let bytes: Vec<u8> =
-            self.params.iter().flat_map(|x| x.to_le_bytes()).collect();
-        f.write_all(&bytes)?;
-        f.write_all(&crc32(&bytes).to_le_bytes())?;
+        // Serialize the payload (everything between magic and crc) so the
+        // checksum covers header fields as well as the data section.
+        let mut payload = Vec::with_capacity(
+            8 * (7 + self.loader_cursors.len()) + 4 * self.params.len(),
+        );
+        payload.extend_from_slice(&self.step.to_le_bytes());
+        payload.extend_from_slice(&self.seed.to_le_bytes());
+        for s in self.rng_state.unwrap_or([0; 4]) {
+            payload.extend_from_slice(&s.to_le_bytes());
+        }
+        payload.extend_from_slice(
+            &(self.loader_cursors.len() as u64).to_le_bytes(),
+        );
+        for c in &self.loader_cursors {
+            payload.extend_from_slice(&c.to_le_bytes());
+        }
+        payload.extend_from_slice(&self.eval_cursor.to_le_bytes());
+        payload.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        for x in &self.params {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+
+        // Atomic write: stream to `<path>.tmp`, then rename into place.
+        let tmp = tmp_path(path);
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("create {tmp:?}"))?;
+            f.write_all(MAGIC_V2)?;
+            f.write_all(&payload)?;
+            f.write_all(&crc32(&payload).to_le_bytes())?;
+            f.sync_all().ok(); // best-effort durability before the rename
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
         Ok(())
     }
 
@@ -66,9 +156,63 @@ impl Checkpoint {
             .with_context(|| format!("open {path:?}"))?;
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("bad checkpoint magic");
+        match &magic {
+            m if m == MAGIC_V2 => Self::load_v2(&mut f),
+            m if m == MAGIC_V1 => Self::load_v1(&mut f),
+            _ => bail!("bad checkpoint magic"),
         }
+    }
+
+    fn load_v2(f: &mut std::fs::File) -> Result<Checkpoint> {
+        let mut rest = Vec::new();
+        f.read_to_end(&mut rest)?;
+        if rest.len() < 4 {
+            bail!("truncated checkpoint");
+        }
+        let (payload, crc_bytes) = rest.split_at(rest.len() - 4);
+        let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        if crc32(payload) != want {
+            bail!("checkpoint CRC mismatch (corrupt file)");
+        }
+        let mut cur = payload;
+        let step = read_u64(&mut cur)?;
+        let seed = read_u64(&mut cur)?;
+        let mut rng = [0u64; 4];
+        for s in rng.iter_mut() {
+            *s = read_u64(&mut cur)?;
+        }
+        // All-zero is not a valid xoshiro state — it is the "absent"
+        // encoding (a bare checkpoint), not a restorable stream.
+        let rng_state = if rng == [0u64; 4] { None } else { Some(rng) };
+        let n_loaders = read_u64(&mut cur)? as usize;
+        if n_loaders > cur.len() / 8 {
+            bail!("truncated checkpoint (loader cursors)");
+        }
+        let mut loader_cursors = Vec::with_capacity(n_loaders);
+        for _ in 0..n_loaders {
+            loader_cursors.push(read_u64(&mut cur)?);
+        }
+        let eval_cursor = read_u64(&mut cur)?;
+        let n = read_u64(&mut cur)? as usize;
+        if cur.len() != n * 4 {
+            bail!("checkpoint length mismatch");
+        }
+        let params = cur
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint {
+            step,
+            seed,
+            params,
+            rng_state,
+            loader_cursors,
+            eval_cursor,
+        })
+    }
+
+    /// Legacy v1 layout: step | seed | n_floats | data | crc32(data).
+    fn load_v1(f: &mut std::fs::File) -> Result<Checkpoint> {
         let mut u64buf = [0u8; 8];
         f.read_exact(&mut u64buf)?;
         let step = u64::from_le_bytes(u64buf);
@@ -87,11 +231,11 @@ impl Checkpoint {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        Ok(Checkpoint { step, seed, params })
+        Ok(Checkpoint::bare(step, seed, params))
     }
 }
 
-/// Save the trainer's current state.
+/// Save the trainer's current state (params + full stream position).
 pub fn save_trainer(
     trainer: &super::trainer::Trainer,
     path: impl AsRef<Path>,
@@ -100,12 +244,16 @@ pub fn save_trainer(
         step: trainer.current_step() as u64,
         seed: trainer.cfg.seed,
         params: trainer.params_flat(),
+        rng_state: Some(trainer.rng_state()),
+        loader_cursors: trainer.loader_cursors(),
+        eval_cursor: trainer.eval_cursor(),
     }
     .save(path)
 }
 
-/// Restore parameters + step into an existing trainer (must be built with
-/// the same model config).
+/// Restore parameters + position into an existing trainer (must be built
+/// with the same model config). v2 checkpoints additionally restore the
+/// trainer RNG and fast-forward every data stream to its saved cursor.
 pub fn restore_trainer(
     trainer: &mut super::trainer::Trainer,
     path: impl AsRef<Path>,
@@ -113,6 +261,12 @@ pub fn restore_trainer(
     let ck = Checkpoint::load(path)?;
     trainer.load_params_flat(&ck.params)?;
     trainer.set_step(ck.step as usize);
+    if let Some(state) = ck.rng_state {
+        trainer.set_rng_state(state);
+    }
+    if !ck.loader_cursors.is_empty() {
+        trainer.fast_forward_loaders(&ck.loader_cursors, ck.eval_cursor)?;
+    }
     Ok(ck.step)
 }
 
@@ -121,11 +275,14 @@ mod tests {
     use super::*;
 
     #[test]
-    fn roundtrip() {
+    fn roundtrip_v2_with_position() {
         let ck = Checkpoint {
             step: 42,
             seed: 7,
             params: (0..1000).map(|i| i as f32 * 0.5).collect(),
+            rng_state: Some([1, 2, 3, 0xDEADBEEF]),
+            loader_cursors: vec![84, 84, 83],
+            eval_cursor: 12,
         };
         let path = std::env::temp_dir().join("gw_ckpt_test.bin");
         ck.save(&path).unwrap();
@@ -135,8 +292,46 @@ mod tests {
     }
 
     #[test]
+    fn save_leaves_no_tmp_file() {
+        let path = std::env::temp_dir().join("gw_ckpt_atomic.bin");
+        Checkpoint::bare(1, 2, vec![1.0; 16]).save(&path).unwrap();
+        assert!(path.exists());
+        assert!(
+            !super::tmp_path(&path).exists(),
+            "tmp staging file must be renamed away"
+        );
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn reads_legacy_v1_files() {
+        // Hand-write the GWCKPT01 layout: the extras must default to
+        // "unknown" rather than fail.
+        let params: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"GWCKPT01");
+        bytes.extend_from_slice(&9u64.to_le_bytes()); // step
+        bytes.extend_from_slice(&4u64.to_le_bytes()); // seed
+        bytes.extend_from_slice(&(params.len() as u64).to_le_bytes());
+        let data: Vec<u8> =
+            params.iter().flat_map(|x| x.to_le_bytes()).collect();
+        bytes.extend_from_slice(&data);
+        bytes.extend_from_slice(&super::crc32(&data).to_le_bytes());
+        let path = std::env::temp_dir().join("gw_ckpt_v1.bin");
+        std::fs::write(&path, bytes).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.step, 9);
+        assert_eq!(ck.seed, 4);
+        assert_eq!(ck.params, params);
+        assert_eq!(ck.rng_state, None);
+        assert!(ck.loader_cursors.is_empty());
+        assert_eq!(ck.eval_cursor, 0);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
     fn corrupt_file_rejected() {
-        let ck = Checkpoint { step: 1, seed: 2, params: vec![1.0; 64] };
+        let ck = Checkpoint::bare(1, 2, vec![1.0; 64]);
         let path = std::env::temp_dir().join("gw_ckpt_corrupt.bin");
         ck.save(&path).unwrap();
         // Flip a byte in the data section.
@@ -149,9 +344,36 @@ mod tests {
     }
 
     #[test]
+    fn corrupt_header_rejected() {
+        // v2's CRC covers the header too: flipping a cursor byte fails.
+        let ck = Checkpoint {
+            loader_cursors: vec![1000, 1000],
+            ..Checkpoint::bare(3, 4, vec![2.0; 8])
+        };
+        let path = std::env::temp_dir().join("gw_ckpt_header.bin");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[16] ^= 0x01; // inside step/seed/rng header region
+        std::fs::write(&path, bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
     fn wrong_magic_rejected() {
         let path = std::env::temp_dir().join("gw_ckpt_magic.bin");
         std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let ck = Checkpoint::bare(1, 2, vec![1.0; 64]);
+        let path = std::env::temp_dir().join("gw_ckpt_trunc.bin");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
         assert!(Checkpoint::load(&path).is_err());
         let _ = std::fs::remove_file(path);
     }

@@ -11,6 +11,7 @@
 //!
 //! (Table 1: 31.1, 32.0, 32.1, 32.6, 34.9, 35.5, 39.3 GB.)
 
+use crate::comm::{CommMode, GradLayout};
 use crate::model::shapes::LlamaPreset;
 use crate::optim::Method;
 
@@ -24,6 +25,9 @@ pub struct MemoryBreakdown {
     /// Transient workspace the method's subspace update materializes
     /// (e.g. full SVD workspace for GaLore, tangent sketch for walks).
     pub workspace: usize,
+    /// Comm-subsystem footprint (exchange buffers + error-feedback
+    /// residuals); 0 unless filled via [`MemoryModel::breakdown_with_comm`].
+    pub comm: usize,
     /// Allocator slack + CUDA context (constant per testbed).
     pub overhead: usize,
 }
@@ -35,11 +39,33 @@ impl MemoryBreakdown {
             + self.activations
             + self.optim_state
             + self.workspace
+            + self.comm
             + self.overhead
     }
 
     pub fn total_gib(&self) -> f64 {
         self.total() as f64 / (1u64 << 30) as f64
+    }
+}
+
+/// Comm-subsystem memory accounting for one training process hosting
+/// `workers` in-process data-parallel shards.
+#[derive(Clone, Copy, Debug)]
+pub struct CommMemory {
+    pub mode: CommMode,
+    /// Per-worker collective exchange buffers (the wire payload every
+    /// worker stages per round): full flat gradient for dense, packed
+    /// rank-r factors + 1-D tail for lowrank.
+    pub buffers: usize,
+    /// Error-feedback residual accumulators (lowrank only): one full
+    /// matrix copy per worker per 2-D parameter — the price of making
+    /// the compressed collective lossless over time.
+    pub residuals: usize,
+}
+
+impl CommMemory {
+    pub fn total(&self) -> usize {
+        self.buffers + self.residuals
     }
 }
 
@@ -175,8 +201,64 @@ impl MemoryModel {
             activations,
             optim_state: state_floats * self.dtype_bytes,
             workspace: ws_floats * self.dtype_bytes,
+            comm: 0,
             overhead: self.fixed_overhead,
         }
+    }
+
+    /// Comm-subsystem footprint for `workers` in-process shards under the
+    /// given collective regime.
+    pub fn comm_memory(
+        &self,
+        preset: &LlamaPreset,
+        mode: CommMode,
+        comm_rank: usize,
+        workers: usize,
+    ) -> CommMemory {
+        let shapes: Vec<Vec<usize>> = preset
+            .param_shapes()
+            .iter()
+            .map(|p| p.shape.clone())
+            .collect();
+        let layout = GradLayout::from_shapes(&shapes);
+        let w = workers.max(1);
+        match mode {
+            CommMode::Dense => CommMemory {
+                mode,
+                buffers: w * layout.total_floats * self.dtype_bytes,
+                residuals: 0,
+            },
+            CommMode::LowRank => {
+                let matrix_floats: usize = layout
+                    .regions
+                    .iter()
+                    .filter(|r| r.is_matrix())
+                    .map(|r| r.len)
+                    .sum();
+                CommMemory {
+                    mode,
+                    buffers: w
+                        * layout.packed_floats(comm_rank)
+                        * self.dtype_bytes,
+                    residuals: w * matrix_floats * self.dtype_bytes,
+                }
+            }
+        }
+    }
+
+    /// [`MemoryModel::breakdown`] with the comm component filled in.
+    pub fn breakdown_with_comm(
+        &self,
+        preset: &LlamaPreset,
+        method: Method,
+        rank: usize,
+        mode: CommMode,
+        comm_rank: usize,
+        workers: usize,
+    ) -> MemoryBreakdown {
+        let mut b = self.breakdown(preset, method, rank);
+        b.comm = self.comm_memory(preset, mode, comm_rank, workers).total();
+        b
     }
 
     /// Paper Table-1 style rows: (method, peak GiB).
@@ -277,10 +359,47 @@ mod tests {
         let b = m.breakdown(&LLAMA_1B, Method::GrassWalk, 512);
         assert!(b.weights > 0 && b.grads > 0 && b.activations > 0);
         assert!(b.optim_state > 0 && b.workspace > 0);
+        assert_eq!(b.comm, 0, "plain breakdown carries no comm component");
         assert_eq!(
             b.total(),
             b.weights + b.grads + b.activations + b.optim_state
-                + b.workspace + b.overhead
+                + b.workspace + b.comm + b.overhead
         );
+    }
+
+    #[test]
+    fn lowrank_comm_buffers_beat_dense() {
+        let m = model_1b();
+        let dense = m.comm_memory(&LLAMA_1B, CommMode::Dense, 512, 4);
+        let lr = m.comm_memory(&LLAMA_1B, CommMode::LowRank, 512, 4);
+        assert_eq!(dense.residuals, 0);
+        assert!(lr.residuals > 0, "EF residuals must be accounted");
+        assert!(
+            lr.buffers * 2 < dense.buffers,
+            "lowrank wire buffers {} !<< dense {}",
+            lr.buffers,
+            dense.buffers
+        );
+        // ...but the residual accumulators are the honest cost: one full
+        // gradient copy per worker across the 2-D params.
+        assert!(lr.total() > lr.buffers);
+    }
+
+    #[test]
+    fn comm_scales_with_workers() {
+        let m = model_1b();
+        let w2 = m.comm_memory(&LLAMA_1B, CommMode::LowRank, 512, 2);
+        let w4 = m.comm_memory(&LLAMA_1B, CommMode::LowRank, 512, 4);
+        assert_eq!(w4.total(), 2 * w2.total());
+        let b = m.breakdown_with_comm(
+            &LLAMA_1B,
+            Method::GrassWalk,
+            512,
+            CommMode::LowRank,
+            512,
+            4,
+        );
+        assert_eq!(b.comm, w4.total());
+        assert!(b.total() > m.breakdown(&LLAMA_1B, Method::GrassWalk, 512).total());
     }
 }

@@ -1,6 +1,9 @@
-//! S8/S9/S13: the L3 coordination layer — trainer event loop, simulated
-//! data-parallel collective, analytic memory accountant, PJRT-backed
-//! optimizer hot path, and checkpointing.
+//! S8/S9/S13: the L3 coordination layer — trainer event loop, analytic
+//! memory accountant, PJRT-backed optimizer hot path, and checkpointing.
+//! The data-parallel gradient collective lives in [`crate::comm`]
+//! (persistent ring transport + dense/low-rank collectives); the
+//! single-shot [`allreduce::Ring`] here is kept as the legacy reference
+//! the comm subsystem is pinned against bitwise.
 
 pub mod allreduce;
 pub mod checkpoint;
@@ -10,6 +13,6 @@ pub mod trainer;
 
 pub use allreduce::{Ring, RingStats};
 pub use checkpoint::{restore_trainer, save_trainer, Checkpoint};
-pub use memory::{MemoryBreakdown, MemoryModel};
+pub use memory::{CommMemory, MemoryBreakdown, MemoryModel};
 pub use pjrt_opt::PjrtProjected;
 pub use trainer::{OptEngine, TrainConfig, Trainer, TrainReport};

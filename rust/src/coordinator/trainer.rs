@@ -22,12 +22,29 @@
 //! order before the fan-out, so results are bitwise identical to the
 //! sequential loop. The PJRT engine path keeps the sequential loop: its
 //! FFI client types are single-threaded.
+//!
+//! ## Parallel worker shards + the comm subsystem
+//!
+//! The per-worker microbatch forward/backward also fans across
+//! `util::pool`: each data-parallel worker owns its loader shard and its
+//! gradient accumulator, so `--workers N` runs N shards concurrently
+//! instead of N× slower (per-worker work is fully independent and
+//! microbatch losses are re-folded in worker order afterwards, so the
+//! fan-out is bitwise identical to the sequential loop; the `pjrt` build
+//! keeps the sequential loop — its FFI client types are
+//! single-threaded). The reduced gradient then flows through the
+//! configured `comm::Collective` — `--comm dense` for the bitwise-legacy
+//! full exchange over the *persistent* ring transport, `--comm lowrank`
+//! for the shared-seed subspace-compressed exchange with error feedback
+//! — and the per-round `CommStats` land in the metrics stream
+//! (`comm/bytes`, `comm/compression`, `comm/residual`).
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::analysis;
+use crate::comm::{self, Collective, CommMode, CommStats, GradLayout};
 use crate::data::{CorpusConfig, SyncLoader, TokenBatch};
 use crate::metrics::Recorder;
 use crate::model::shapes::PROJ_TYPES;
@@ -38,8 +55,6 @@ use crate::optim::{
 use crate::runtime::{Engine, Executable, Value};
 use crate::tensor::Mat;
 use crate::util::{pool, rng::Rng};
-
-use super::allreduce::Ring;
 
 /// Which engine applies the projected-optimizer update on the hot path.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -65,6 +80,10 @@ pub struct TrainConfig {
     /// Simulated data-parallel world size (worker shards + ring
     /// all-reduce). The compiled artifact fixes the per-microbatch size.
     pub workers: usize,
+    /// Gradient-collective regime (`--comm dense|lowrank`).
+    pub comm: CommMode,
+    /// Rank of the shared-seed factor exchange for `CommMode::LowRank`.
+    pub comm_rank: usize,
     pub seed: u64,
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -86,6 +105,8 @@ impl Default for TrainConfig {
             steps: 200,
             grad_accum: 1,
             workers: 1,
+            comm: CommMode::Dense,
+            comm_rank: 16,
             seed: 0,
             eval_every: 50,
             eval_batches: 2,
@@ -142,6 +163,38 @@ struct StepJob<'a> {
     rng: Rng,
 }
 
+/// One data-parallel worker's unit of work for the microbatch fan-out:
+/// its loader shard (exclusively borrowed), its microbatch losses in
+/// order, and its accumulated flat gradient. Workers share only the
+/// read-only executable + parameters, so they run lock-free.
+struct AccumJob<'a> {
+    loader: &'a mut SyncLoader,
+    losses: Vec<f64>,
+    grad: Vec<f32>,
+    failed: Option<anyhow::Error>,
+}
+
+/// Fan the per-worker forward/backward jobs across the pool. The `pjrt`
+/// build keeps the sequential loop: the real FFI client types are
+/// single-threaded (the in-tree stub/CPU build is `Sync`).
+#[cfg(not(feature = "pjrt"))]
+fn fan_out_workers<'a>(
+    jobs: &mut [AccumJob<'a>],
+    run: impl Fn(&mut AccumJob<'a>) + Sync,
+) {
+    pool::parallel_items(jobs, |_, job| run(job));
+}
+
+#[cfg(feature = "pjrt")]
+fn fan_out_workers<'a>(
+    jobs: &mut [AccumJob<'a>],
+    run: impl Fn(&mut AccumJob<'a>),
+) {
+    for job in jobs.iter_mut() {
+        run(job);
+    }
+}
+
 /// The trainer owns everything mutable about a run.
 pub struct Trainer {
     engine: Arc<Engine>,
@@ -156,7 +209,12 @@ pub struct Trainer {
     dense_opts: Vec<AdamVec>,
     loaders: Vec<SyncLoader>,
     eval_loader: SyncLoader,
-    ring: Ring,
+    /// The configured gradient collective over the persistent transport.
+    collective: Box<dyn Collective>,
+    /// Flat-gradient geometry shared with the collective.
+    grad_layout: GradLayout,
+    /// Stats from the most recent collective round.
+    last_comm: Option<CommStats>,
     rng: Rng,
     step: usize,
 }
@@ -229,6 +287,52 @@ impl Trainer {
             .collect();
 
         // Data: one shard per worker + a held-out eval shard.
+        let (loaders, eval_loader) = Self::build_loaders(&cfg, &model);
+
+        // Comm subsystem: flat-gradient layout + the configured
+        // collective over a persistent ring of `workers` endpoints
+        // (threads + links created once here, reused every step).
+        let shapes: Vec<Vec<usize>> =
+            model.params.iter().map(|p| p.shape.clone()).collect();
+        let grad_layout = GradLayout::from_shapes(&shapes);
+        let collective = comm::build_collective(
+            cfg.comm,
+            cfg.workers.max(1),
+            cfg.comm_rank,
+            cfg.seed ^ 0xC033,
+        );
+
+        Ok(Trainer {
+            collective,
+            grad_layout,
+            last_comm: None,
+            engine,
+            cfg,
+            fwd_bwd,
+            eval_exe,
+            params,
+            proj_opts,
+            dense_opts,
+            loaders,
+            eval_loader,
+            rng,
+            step: 0,
+        })
+    }
+
+    fn model(&self) -> &crate::runtime::ModelSpec {
+        &self.engine.manifest.model
+    }
+
+    /// Fresh deterministic data streams: one shard per worker + the
+    /// held-out eval shard. Used at construction and again on checkpoint
+    /// restore (streams are rebuilt, then fast-forwarded, so restore
+    /// works whether the target position is ahead of or behind the
+    /// trainer's current one).
+    fn build_loaders(
+        cfg: &TrainConfig,
+        model: &crate::runtime::ModelSpec,
+    ) -> (Vec<SyncLoader>, SyncLoader) {
         let corpus = CorpusConfig {
             vocab: model.vocab,
             seed: cfg.seed ^ 0xDA7A,
@@ -252,78 +356,119 @@ impl Trainer {
             model.batch,
             model.seq_len + 1,
         );
-
-        Ok(Trainer {
-            ring: Ring::new(cfg.workers.max(1)),
-            engine,
-            cfg,
-            fwd_bwd,
-            eval_exe,
-            params,
-            proj_opts,
-            dense_opts,
-            loaders,
-            eval_loader,
-            rng,
-            step: 0,
-        })
-    }
-
-    fn model(&self) -> &crate::runtime::ModelSpec {
-        &self.engine.manifest.model
+        (loaders, eval_loader)
     }
 
     /// One fwd/bwd on `batch`, returning (loss, grads-in-ABI-order).
     /// Borrows params (run_refs): no per-microbatch weight clone.
-    fn forward_backward(&self, batch: &TokenBatch) -> Result<(f64, Vec<Value>)> {
+    /// Associated form so pool workers can call it without `&self`.
+    fn fwd_bwd_once(
+        exe: &Executable,
+        params: &[Value],
+        batch: &TokenBatch,
+    ) -> Result<(f64, Vec<Value>)> {
         let tokens = Value::I32(
             vec![batch.batch, batch.width],
             batch.tokens.clone(),
         );
-        let mut inputs: Vec<&Value> = Vec::with_capacity(1 + self.params.len());
+        let mut inputs: Vec<&Value> = Vec::with_capacity(1 + params.len());
         inputs.push(&tokens);
-        inputs.extend(self.params.iter());
-        let mut outs = self.fwd_bwd.run_refs(&inputs)?;
+        inputs.extend(params.iter());
+        let mut outs = exe.run_refs(&inputs)?;
         let loss = outs.remove(0).as_f32()? as f64;
         Ok((loss, outs))
     }
 
-    /// Gradient step `t`: microbatch accumulation per worker, ring
-    /// all-reduce across workers, then the per-matrix optimizers.
+    fn forward_backward(&self, batch: &TokenBatch) -> Result<(f64, Vec<Value>)> {
+        Self::fwd_bwd_once(&self.fwd_bwd, &self.params, batch)
+    }
+
+    /// Gradient step `t`: parallel microbatch accumulation across the
+    /// worker shards, the configured collective over the persistent
+    /// transport, then the per-matrix optimizers.
     pub fn train_step(&mut self) -> Result<f64> {
         self.step += 1;
         let accum = self.cfg.grad_accum.max(1);
         let workers = self.cfg.workers.max(1);
         let n_params = self.params.len();
 
-        // --- per-worker gradient accumulation --------------------------
-        let mut worker_grads: Vec<Vec<f32>> = Vec::with_capacity(workers);
-        let mut loss_sum = 0.0;
-        for w in 0..workers {
-            let mut flat: Option<Vec<f32>> = None;
-            for _ in 0..accum {
-                let batch = self.loaders[w].next();
-                let (loss, grads) = self.forward_backward(&batch)?;
-                loss_sum += loss;
-                let mut off = 0usize;
-                let total: usize =
-                    grads.iter().map(|g| g.as_vec().unwrap().len()).sum();
-                let flat = flat.get_or_insert_with(|| vec![0.0f32; total]);
-                for g in &grads {
-                    let v = g.as_vec().unwrap();
-                    for (dst, &src) in flat[off..off + v.len()].iter_mut().zip(v)
-                    {
-                        *dst += src / accum as f32;
+        // --- per-worker gradient accumulation (pool fan-out) -----------
+        // Each worker exclusively owns its loader shard and gradient
+        // accumulator; the executable and parameters are shared
+        // read-only. Microbatch losses are re-folded in (worker,
+        // microbatch) order below, so the fan-out is bitwise identical
+        // to the old sequential loop.
+        let (loss_sum, mut worker_grads) = {
+            let fwd_bwd: &Executable = &self.fwd_bwd;
+            let params: &[Value] = &self.params;
+            let mut jobs: Vec<AccumJob> = self
+                .loaders
+                .iter_mut()
+                .map(|loader| AccumJob {
+                    loader,
+                    losses: Vec::with_capacity(accum),
+                    grad: Vec::new(),
+                    failed: None,
+                })
+                .collect();
+            fan_out_workers(&mut jobs, |job| {
+                for _ in 0..accum {
+                    let batch = job.loader.next();
+                    let (loss, grads) =
+                        match Trainer::fwd_bwd_once(fwd_bwd, params, &batch)
+                        {
+                            Ok(r) => r,
+                            Err(e) => {
+                                job.failed = Some(e);
+                                return;
+                            }
+                        };
+                    job.losses.push(loss);
+                    if job.grad.is_empty() {
+                        let total: usize = grads
+                            .iter()
+                            .map(|g| g.as_vec().map_or(0, |v| v.len()))
+                            .sum();
+                        job.grad = vec![0.0f32; total];
                     }
-                    off += v.len();
+                    let mut off = 0usize;
+                    for g in &grads {
+                        let v = match g.as_vec() {
+                            Ok(v) => v,
+                            Err(e) => {
+                                job.failed = Some(e);
+                                return;
+                            }
+                        };
+                        for (dst, &src) in
+                            job.grad[off..off + v.len()].iter_mut().zip(v)
+                        {
+                            *dst += src / accum as f32;
+                        }
+                        off += v.len();
+                    }
                 }
+            });
+            let mut loss_sum = 0.0f64;
+            let mut grads = Vec::with_capacity(workers);
+            for job in jobs {
+                if let Some(e) = job.failed {
+                    return Err(e);
+                }
+                for l in job.losses {
+                    loss_sum += l;
+                }
+                grads.push(job.grad);
             }
-            worker_grads.push(flat.unwrap());
-        }
+            (loss_sum, grads)
+        };
         let mean_loss = loss_sum / (workers * accum) as f64;
 
-        // --- collective: ring all-reduce mean over workers --------------
-        self.ring.all_reduce_mean(&mut worker_grads);
+        // --- collective: configured comm regime over the worker shards --
+        let stats = self
+            .collective
+            .all_reduce_mean(&mut worker_grads, &self.grad_layout)?;
+        self.last_comm = Some(stats);
         let flat = worker_grads.into_iter().next().unwrap();
 
         // --- unflatten into ABI-ordered grad matrices -------------------
@@ -411,15 +556,20 @@ impl Trainer {
         // --- dense params ------------------------------------------------
         for (k, gv) in grad_iter.enumerate() {
             let i = n_proj + k;
-            if let Value::F32(_, mut gdata) = gv {
-                if scale {
-                    for x in gdata.iter_mut() {
-                        *x *= mult;
-                    }
+            // A non-F32 gradient here is a runtime-ABI bug; dropping it
+            // silently (the old behavior) would freeze the parameter.
+            let Value::F32(_, mut gdata) = gv else {
+                return Err(anyhow!(
+                    "non-f32 gradient for dense parameter {i}"
+                ));
+            };
+            if scale {
+                for x in gdata.iter_mut() {
+                    *x *= mult;
                 }
-                if let Value::F32(_, w) = &mut self.params[i] {
-                    self.dense_opts[k].step(w, &gdata);
-                }
+            }
+            if let Value::F32(_, w) = &mut self.params[i] {
+                self.dense_opts[k].step(w, &gdata);
             }
         }
 
@@ -495,6 +645,8 @@ impl Trainer {
         rec.note("interval", self.cfg.interval);
         rec.note("workers", self.cfg.workers);
         rec.note("grad_accum", self.cfg.grad_accum);
+        rec.note("comm", self.collective.label());
+        rec.note("comm_rank", self.cfg.comm_rank);
         let mut last_train = f64::NAN;
         let mut last_eval = f64::NAN;
         for s in 1..=self.cfg.steps {
@@ -502,6 +654,11 @@ impl Trainer {
             last_train = loss;
             rec.push("train_loss", s, loss);
             rec.push("wall_s", s, rec.elapsed_s());
+            if let Some(c) = self.last_comm {
+                rec.push("comm/bytes", s, c.bytes_per_worker as f64);
+                rec.push("comm/compression", s, c.compression);
+                rec.push("comm/residual", s, c.residual_norm);
+            }
             if self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
                 eprintln!(
                     "[{}] step {s}/{} loss {loss:.4} ({:.1}s)",
@@ -562,9 +719,67 @@ impl Trainer {
         self.proj_opts = ProjOpts::Cpu(opts);
     }
 
-    /// Restore trainer position (checkpoint support).
+    /// Stats from the most recent collective round.
+    pub fn last_comm(&self) -> Option<CommStats> {
+        self.last_comm
+    }
+
+    /// Restore trainer position (checkpoint support). Also re-aligns the
+    /// collective's round counter: one collective round runs per step,
+    /// so the shared-basis schedule continues exactly where the saved
+    /// run left off. (Error-feedback residuals are NOT checkpointed —
+    /// like optimizer subspace state, they restart empty; at most one
+    /// round's untransmitted bulk is dropped at the restore boundary.)
     pub(crate) fn set_step(&mut self, step: usize) {
         self.step = step;
+        self.collective.set_round(step as u64);
+    }
+
+    /// Raw trainer RNG state (checkpoint support).
+    pub(crate) fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    pub(crate) fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
+
+    /// Deterministic per-worker data cursors, in shard order.
+    pub(crate) fn loader_cursors(&self) -> Vec<u64> {
+        self.loaders.iter().map(|l| l.cursor()).collect()
+    }
+
+    pub(crate) fn eval_cursor(&self) -> u64 {
+        self.eval_loader.cursor()
+    }
+
+    /// Move every data stream to its checkpointed position, so a resumed
+    /// run consumes exactly the batches a continuous run would. Streams
+    /// are rebuilt from their seeds before fast-forwarding (a cursor can
+    /// only advance), so restoring a checkpoint from *before* the
+    /// trainer's current position rewinds correctly instead of silently
+    /// keeping the later stream state.
+    pub(crate) fn fast_forward_loaders(
+        &mut self,
+        cursors: &[u64],
+        eval: u64,
+    ) -> Result<()> {
+        if cursors.len() != self.loaders.len() {
+            return Err(anyhow!(
+                "checkpoint has {} loader cursors, trainer has {} workers",
+                cursors.len(),
+                self.loaders.len()
+            ));
+        }
+        let (loaders, eval_loader) =
+            Self::build_loaders(&self.cfg, &self.engine.manifest.model);
+        self.loaders = loaders;
+        self.eval_loader = eval_loader;
+        for (l, &c) in self.loaders.iter_mut().zip(cursors) {
+            l.fast_forward(c);
+        }
+        self.eval_loader.fast_forward(eval);
+        Ok(())
     }
 
     pub fn params_flat(&self) -> Vec<f32> {

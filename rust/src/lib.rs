@@ -10,6 +10,8 @@
 //! * [`runtime`] — PJRT engine loading AOT HLO-text artifacts
 //! * [`data`] — synthetic-C4 corpus, tokenizer, sharded prefetch loader
 //! * [`model`] — LLaMA shape calculus, init, pure-Rust reference forward
+//! * [`comm`] — collective-communication subsystem: persistent ring
+//!   transport, dense + subspace-compressed (error-feedback) all-reduce
 //! * [`coordinator`] — trainer loop, grad accumulation, data-parallel
 //!   workers with ring all-reduce, memory accountant, checkpoints
 //! * [`metrics`] — time series recording + CSV/JSON emission
@@ -19,6 +21,7 @@
 
 pub mod ablation;
 pub mod analysis;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;

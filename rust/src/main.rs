@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use grasswalk::comm::CommMode;
 use grasswalk::config::ExperimentConfig;
 use grasswalk::coordinator::{
     MemoryModel, OptEngine, TrainConfig, Trainer,
@@ -61,6 +62,11 @@ fn train_config_from_args(args: &Args) -> Result<TrainConfig> {
     cfg.steps = args.usize_or("steps", cfg.steps);
     cfg.grad_accum = args.usize_or("grad-accum", cfg.grad_accum);
     cfg.workers = args.usize_or("workers", cfg.workers);
+    if let Some(c) = args.get("comm") {
+        cfg.comm = CommMode::parse(c)
+            .ok_or_else(|| anyhow::anyhow!("unknown comm mode `{c}`"))?;
+    }
+    cfg.comm_rank = args.usize_or("comm-rank", cfg.comm_rank);
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
     cfg.log_every = args.usize_or("log-every", cfg.log_every);
@@ -107,6 +113,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20 info         manifest + PJRT platform report\n\n\
                  common options: --artifacts DIR --out DIR --method NAME\n\
                  \x20 --steps N --rank R --interval T --workers W --seed S\n\
+                 \x20 --comm dense|lowrank --comm-rank R (collective regime)\n\
                  \x20 --pjrt (fused-kernel hot path) --config FILE.toml"
             );
             Ok(())
@@ -133,6 +140,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.wall_seconds,
         report.optimizer_state_floats
     );
+    if let (Some(bytes), Some(ratio)) = (
+        rec.get("comm/bytes").and_then(|s| s.mean()),
+        rec.get("comm/compression").and_then(|s| s.last()),
+    ) {
+        println!(
+            "comm={} bytes/step={bytes:.0} compression={ratio:.2}x \
+             residual={:.4}",
+            trainer.cfg.comm.label(),
+            rec.get("comm/residual").and_then(|s| s.last()).unwrap_or(0.0)
+        );
+    }
     if let Some(path) = args.get("save-checkpoint") {
         grasswalk::coordinator::save_trainer(&trainer, path)?;
         println!("checkpoint -> {path}");
@@ -337,6 +355,21 @@ fn cmd_plan_memory(args: &Args) -> Result<()> {
             gib(b.optim_state),
             gib(b.workspace),
             b.total_gib()
+        );
+    }
+    let workers = args.usize_or("workers", 4);
+    let comm_rank = args.usize_or("comm-rank", rank);
+    println!(
+        "\n-- comm subsystem ({workers} workers, comm-rank {comm_rank}) --"
+    );
+    for mode in [CommMode::Dense, CommMode::LowRank] {
+        let c = mem.comm_memory(&preset, mode, comm_rank, workers);
+        println!(
+            "{:<8} buffers {:>8.2} GB  residuals {:>8.2} GB  total {:>8.2} GB",
+            mode.label(),
+            gib(c.buffers),
+            gib(c.residuals),
+            gib(c.total())
         );
     }
     Ok(())

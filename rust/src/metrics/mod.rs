@@ -32,6 +32,17 @@ impl Series {
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
+    /// Mean over all points (e.g. average comm bytes/step of a run).
+    pub fn mean(&self) -> Option<f64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        Some(
+            self.points.iter().map(|&(_, v)| v).sum::<f64>()
+                / self.points.len() as f64,
+        )
+    }
+
     /// Mean of the final `k` values (smoothed eval metric).
     pub fn tail_mean(&self, k: usize) -> Option<f64> {
         if self.points.is_empty() {
@@ -178,7 +189,9 @@ mod tests {
         }
         assert_eq!(s.last(), Some(4.0));
         assert_eq!(s.min(), Some(1.0));
+        assert_eq!(s.mean(), Some(2.5));
         assert_eq!(s.tail_mean(2), Some(2.5));
+        assert_eq!(Series::default().mean(), None);
     }
 
     #[test]

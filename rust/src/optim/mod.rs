@@ -259,6 +259,26 @@ impl Method {
     }
 }
 
+/// Deterministic shared-seed basis regeneration — the piece that makes
+/// the low-rank collective's basis *free*: every data-parallel worker
+/// derives the identical Haar-orthonormal `m×r` basis locally from the
+/// run seed, the collective round counter, and the region index, so no
+/// basis bytes ever cross the transport. Reuses the projection sampler
+/// GrassJump's subspace refresh uses ([`grassmann::random_point`]).
+pub fn shared_seed_basis(
+    seed: u64,
+    round: u64,
+    region: u64,
+    m: usize,
+    r: usize,
+) -> Mat {
+    let mut rng = Rng::new(
+        seed ^ round.wrapping_mul(0x9E3779B97F4A7C15)
+            ^ region.wrapping_mul(0xD1B54A32D192ED03),
+    );
+    grassmann::random_point(m, r, &mut rng)
+}
+
 /// Per-step learning-rate rescaling support: since every optimizer stores
 /// its own `alpha`, the trainer scales grads instead — mathematically
 /// equivalent for first-order updates at fixed alpha ratios. (For exact
@@ -336,6 +356,27 @@ mod tests {
             let b = m.build_cpu(4, 10, 0.05, 100);
             assert_eq!(a.name(), b.name(), "{}", m.label());
             assert_send(b.as_ref());
+        }
+    }
+
+    #[test]
+    fn shared_seed_basis_is_deterministic_and_orthonormal() {
+        let a = shared_seed_basis(7, 3, 2, 20, 4);
+        let b = shared_seed_basis(7, 3, 2, 20, 4);
+        assert_eq!(a.data, b.data, "same derivation must be bitwise equal");
+        assert_ne!(a.data, shared_seed_basis(7, 4, 2, 20, 4).data);
+        assert_ne!(a.data, shared_seed_basis(7, 3, 1, 20, 4).data);
+        assert_ne!(a.data, shared_seed_basis(8, 3, 2, 20, 4).data);
+        let gram = crate::tensor::matmul_tn(&a, &a);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (gram.at(i, j) - want).abs() < 1e-4,
+                    "gram[{i}][{j}] = {}",
+                    gram.at(i, j)
+                );
+            }
         }
     }
 

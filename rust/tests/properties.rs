@@ -379,6 +379,14 @@ fn prop_checkpoint_roundtrips_random_payloads() {
             step: rng.next_u64() % 100000,
             seed: rng.next_u64(),
             params,
+            rng_state: Some([
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+            ]),
+            loader_cursors: (0..rng.below(4)).map(|_| rng.next_u64()).collect(),
+            eval_cursor: rng.next_u64(),
         };
         let path = std::env::temp_dir()
             .join(format!("gw_prop_ckpt_{seed}.bin"));
