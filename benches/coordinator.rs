@@ -1,6 +1,7 @@
-//! Bench: coordinator substrates — ring all-reduce scaling, loader
-//! throughput/backpressure, and the full train-step breakdown (fwd/bwd vs
-//! optimizer vs data) that the §Perf L3 pass optimizes against.
+//! Bench: coordinator substrates — ring all-reduce scaling, persistent
+//! worker-pool fork-join, loader throughput/backpressure, and the full
+//! train-step breakdown (fwd/bwd vs optimizer vs data) that the §Perf
+//! L3 pass optimizes against.
 //!
 //!   cargo bench --bench coordinator
 
@@ -17,6 +18,7 @@ use grasswalk::model::shapes::TINY;
 use grasswalk::optim::Method;
 use grasswalk::runtime::Engine;
 use grasswalk::util::bench::{header, throughput, Bench};
+use grasswalk::util::pool;
 
 fn main() -> anyhow::Result<()> {
     let b = Bench::default();
@@ -67,6 +69,47 @@ fn main() -> anyhow::Result<()> {
                 bytes / stats.median.as_secs_f64() / 1e9
             );
         }
+    }
+
+    // Persistent worker-pool fork-join (the primitive under every GEMM
+    // tile, per-matrix optimizer fan-out and per-worker fwd/bwd
+    // fan-out): steady-state dispatch reuses long-lived workers, so the
+    // spawn delta across every row below must be zero.
+    {
+        let mut warm = vec![0f32; 1 << 12];
+        pool::parallel_chunks(&mut warm, 1 << 8, |_, p| {
+            for x in p.iter_mut() {
+                *x += 1.0;
+            }
+        });
+        let spawns_before = pool::spawn_count();
+        for &len in &[1usize << 12, 1 << 16, 1 << 20] {
+            let mut v = vec![0f32; len];
+            let chunk = len.div_ceil(pool::threads().max(1)).max(1);
+            let stats = b.run(
+                &format!(
+                    "pool parallel_chunks t={} len={len}",
+                    pool::threads()
+                ),
+                || {
+                    pool::parallel_chunks(&mut v, chunk, |_, piece| {
+                        for x in piece.iter_mut() {
+                            *x += 1.0;
+                        }
+                    });
+                },
+            );
+            println!(
+                "    -> {:.2} GB/s touched",
+                (len * 4) as f64 / stats.median.as_secs_f64() / 1e9
+            );
+        }
+        assert_eq!(
+            pool::spawn_count() - spawns_before,
+            0,
+            "steady-state pool dispatch must not spawn threads"
+        );
+        println!("    -> spawns across all rows: 0 (persistent pool)");
     }
 
     // Collective regimes on the proxy-model (TINY) gradient layout:

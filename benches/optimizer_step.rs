@@ -4,20 +4,26 @@
 //!
 //!   cargo bench --bench optimizer_step
 //!
-//! Three additions over the original harness (EXPERIMENTS.md §Workspace):
+//! Four additions over the original harness (EXPERIMENTS.md §Workspace
+//! and §Pool):
 //!
 //! 1. **Allocation counting** — a `GlobalAlloc` wrapper counts heap
 //!    allocations; the steady-state step of every CPU optimizer except
 //!    LDAdam (whose per-step power iteration + QR allocates by design)
 //!    is asserted to perform ZERO allocations. Counting runs inside
-//!    `pool::run_serial` so thread-spawn bookkeeping (which belongs to
-//!    the pool, not the optimizer) cannot leak into the count.
+//!    `pool::run_serial` so pool dispatch (which belongs to the pool,
+//!    not the optimizer) cannot leak into the count.
 //! 2. **Legacy vs workspace** — `reference_step` is the historical
 //!    fully-allocating implementation of the same math; benching it
 //!    against `ProjectedOptimizer::step` measures exactly what the
 //!    workspace refactor bought on one thread.
 //! 3. **Per-matrix parallel stepping** — the trainer-shaped fan-out
 //!    (N independent matrices across the pool) vs the sequential loop.
+//! 4. **Persistent-pool steady state** — THREADED `parallel_chunks` /
+//!    `parallel_for` regions (not `run_serial`) are hard-asserted to
+//!    perform 0 thread spawns (`pool::spawn_count`) and 0 heap
+//!    allocations across every thread in the process: the fork-join
+//!    dispatch itself is free once the pool is warm (ISSUE 3).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -231,6 +237,63 @@ fn main() {
             "    -> parallel speedup {n_mats} matrices: {:.2}x",
             seq.median.as_secs_f64() / par.median.as_secs_f64()
         );
+    }
+
+    // Persistent-pool steady state (ISSUE 3 acceptance): a THREADED
+    // parallel section must spawn no threads and allocate nothing once
+    // the pool is warm. Measured OUTSIDE run_serial so the real
+    // dispatch path runs; the counting allocator is global, so worker
+    // threads' allocations (there must be none) are counted too.
+    println!(
+        "-- persistent pool steady state ({} threads) --",
+        pool::threads()
+    );
+    {
+        let n = 1usize << 14;
+        let mut buf = vec![0u64; n];
+        let sink = AtomicU64::new(0);
+        // Warm: the first threaded call lazily spawns the workers.
+        pool::parallel_chunks(&mut buf, 256, |i, piece| {
+            for p in piece.iter_mut() {
+                *p = i as u64;
+            }
+        });
+        pool::parallel_for(n, 256, |i| {
+            sink.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        let spawns_before = pool::spawn_count();
+        let allocs = alloc_count(|| {
+            for round in 0..16u64 {
+                pool::parallel_chunks(&mut buf, 256, |i, piece| {
+                    for p in piece.iter_mut() {
+                        *p = p.wrapping_add(i as u64 + round);
+                    }
+                });
+                pool::parallel_for(n, 256, |i| {
+                    sink.fetch_add(i as u64, Ordering::Relaxed);
+                });
+            }
+        });
+        let spawned = pool::spawn_count() - spawns_before;
+        println!(
+            "    threaded parallel_chunks+parallel_for x16: \
+             {allocs} allocs, {spawned} spawns"
+        );
+        assert_eq!(
+            spawned, 0,
+            "steady-state parallel sections must not spawn threads"
+        );
+        assert_eq!(
+            allocs, 0,
+            "steady-state parallel dispatch must not allocate"
+        );
+        // Fork-join latency of a no-op region: the fixed cost every
+        // GEMM tile / fan-out now pays instead of threads() spawns.
+        b.run("pool dispatch (no-op region)", || {
+            pool::parallel_for(n, 256, |_| {});
+        });
+        std::hint::black_box(&buf);
+        std::hint::black_box(sink.load(Ordering::Relaxed));
     }
 
     // PJRT fused-kernel path, if artifacts exist.

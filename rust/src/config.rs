@@ -29,73 +29,147 @@ impl Default for ExperimentConfig {
     }
 }
 
-fn get_usize(t: &TomlTable, key: &str, default: usize) -> usize {
-    t.get(key)
-        .and_then(|v| v.as_i64())
-        .map(|v| v as usize)
-        .unwrap_or(default)
+// Typed accessors: a present key with the wrong TOML type is an ERROR
+// naming the key and the expected type — the old `unwrap_or(default)`
+// silently trained with the default (e.g. `rank = "16"` ran rank 16's
+// default instead of 16). Only an absent key yields the default.
+
+fn get_usize(t: &TomlTable, key: &str, default: usize) -> Result<usize> {
+    let Some(v) = t.get(key) else { return Ok(default) };
+    let i = v.as_i64().ok_or_else(|| {
+        anyhow!("config: `{key}` expects an integer, got {}", v.type_name())
+    })?;
+    usize::try_from(i)
+        .map_err(|_| anyhow!("config: `{key}` must be non-negative, got {i}"))
 }
 
-fn get_f32(t: &TomlTable, key: &str, default: f32) -> f32 {
-    t.get(key).and_then(|v| v.as_f64()).map(|v| v as f32).unwrap_or(default)
+fn get_f32(t: &TomlTable, key: &str, default: f32) -> Result<f32> {
+    let Some(v) = t.get(key) else { return Ok(default) };
+    v.as_f64().map(|v| v as f32).ok_or_else(|| {
+        anyhow!("config: `{key}` expects a number, got {}", v.type_name())
+    })
 }
 
-fn get_str<'a>(t: &'a TomlTable, key: &str, default: &'a str) -> &'a str {
-    t.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+fn get_str<'a>(
+    t: &'a TomlTable,
+    key: &str,
+    default: &'a str,
+) -> Result<&'a str> {
+    let Some(v) = t.get(key) else { return Ok(default) };
+    v.as_str().ok_or_else(|| {
+        anyhow!("config: `{key}` expects a string, got {}", v.type_name())
+    })
 }
+
+/// Every key accepted under `[train]`; anything else is rejected so a
+/// typo (`comm_rnak = 8`) fails loudly instead of silently running with
+/// the default.
+const TRAIN_KEYS: &[&str] = &[
+    "method",
+    "rank",
+    "interval",
+    "lr",
+    "dense_lr",
+    "steps",
+    "grad_accum",
+    "workers",
+    "comm",
+    "comm_rank",
+    "seed",
+    "eval_every",
+    "eval_batches",
+    "log_every",
+    "opt_engine",
+    "warmup",
+    "schedule",
+    "min_lr_ratio",
+    "analysis_every",
+];
 
 impl ExperimentConfig {
     pub fn from_toml_str(src: &str) -> Result<ExperimentConfig> {
         let t = parse_toml(src).map_err(|e| anyhow!("config: {e}"))?;
+        // Reject every unknown key, not just unknown keys under
+        // [train]: a typo'd section header (`[trian]`) flattens to
+        // `trian.rank`, which a train.*-only check would silently skip
+        // — the run would then train with every default.
+        for key in t.keys() {
+            let known = key == "name"
+                || key == "paths.artifacts"
+                || key == "paths.out"
+                || key
+                    .strip_prefix("train.")
+                    .is_some_and(|sub| TRAIN_KEYS.contains(&sub));
+            if !known {
+                return Err(anyhow!(
+                    "config: unknown key `{key}` (expected `name`, \
+                     `paths.artifacts`, `paths.out`, or [train] keys: {})",
+                    TRAIN_KEYS.join(", ")
+                ));
+            }
+        }
         let mut cfg = ExperimentConfig {
-            name: get_str(&t, "name", "default").to_string(),
-            artifacts_dir: get_str(&t, "paths.artifacts", "artifacts")
+            name: get_str(&t, "name", "default")?.to_string(),
+            artifacts_dir: get_str(&t, "paths.artifacts", "artifacts")?
                 .to_string(),
-            out_dir: get_str(&t, "paths.out", "results").to_string(),
+            out_dir: get_str(&t, "paths.out", "results")?.to_string(),
             train: TrainConfig::default(),
         };
         let tr = &mut cfg.train;
-        if let Some(m) = t.get("train.method").and_then(|v| v.as_str()) {
+        if t.get("train.method").is_some() {
+            let m = get_str(&t, "train.method", "")?;
             tr.method = Method::parse(m)
                 .ok_or_else(|| anyhow!("unknown method `{m}`"))?;
         }
-        tr.rank = get_usize(&t, "train.rank", tr.rank);
-        tr.interval = get_usize(&t, "train.interval", tr.interval);
-        tr.lr = get_f32(&t, "train.lr", tr.lr);
-        tr.dense_lr = get_f32(&t, "train.dense_lr", tr.dense_lr);
-        tr.steps = get_usize(&t, "train.steps", tr.steps);
-        tr.grad_accum = get_usize(&t, "train.grad_accum", tr.grad_accum);
-        tr.workers = get_usize(&t, "train.workers", tr.workers);
-        if let Some(c) = t.get("train.comm").and_then(|v| v.as_str()) {
+        tr.rank = get_usize(&t, "train.rank", tr.rank)?;
+        tr.interval = get_usize(&t, "train.interval", tr.interval)?;
+        tr.lr = get_f32(&t, "train.lr", tr.lr)?;
+        tr.dense_lr = get_f32(&t, "train.dense_lr", tr.dense_lr)?;
+        tr.steps = get_usize(&t, "train.steps", tr.steps)?;
+        tr.grad_accum = get_usize(&t, "train.grad_accum", tr.grad_accum)?;
+        tr.workers = get_usize(&t, "train.workers", tr.workers)?;
+        if t.get("train.comm").is_some() {
+            let c = get_str(&t, "train.comm", "")?;
             tr.comm = CommMode::parse(c)
                 .ok_or_else(|| anyhow!("unknown comm mode `{c}`"))?;
         }
-        tr.comm_rank = get_usize(&t, "train.comm_rank", tr.comm_rank);
-        tr.seed = get_usize(&t, "train.seed", tr.seed as usize) as u64;
-        tr.eval_every = get_usize(&t, "train.eval_every", tr.eval_every);
+        tr.comm_rank = get_usize(&t, "train.comm_rank", tr.comm_rank)?;
+        tr.seed = get_usize(&t, "train.seed", tr.seed as usize)? as u64;
+        tr.eval_every = get_usize(&t, "train.eval_every", tr.eval_every)?;
         tr.eval_batches =
-            get_usize(&t, "train.eval_batches", tr.eval_batches);
-        tr.log_every = get_usize(&t, "train.log_every", tr.log_every);
-        match get_str(&t, "train.opt_engine", "rust") {
+            get_usize(&t, "train.eval_batches", tr.eval_batches)?;
+        tr.log_every = get_usize(&t, "train.log_every", tr.log_every)?;
+        match get_str(&t, "train.opt_engine", "rust")? {
             "pjrt" => tr.opt_engine = OptEngine::Pjrt,
-            _ => tr.opt_engine = OptEngine::Rust,
+            "rust" => tr.opt_engine = OptEngine::Rust,
+            other => {
+                return Err(anyhow!(
+                    "config: unknown opt_engine `{other}` \
+                     (expected `rust` or `pjrt`)"
+                ))
+            }
         }
-        let warmup = get_usize(&t, "train.warmup", 0);
-        match get_str(&t, "train.schedule", "constant") {
+        let warmup = get_usize(&t, "train.warmup", 0)?;
+        match get_str(&t, "train.schedule", "constant")? {
             "warmup" => tr.schedule = Schedule::Warmup { warmup },
             "cosine" => {
                 tr.schedule = Schedule::WarmupCosine {
                     warmup,
                     total_steps: tr.steps,
-                    min_ratio: get_f32(&t, "train.min_lr_ratio", 0.1),
+                    min_ratio: get_f32(&t, "train.min_lr_ratio", 0.1)?,
                 }
             }
-            _ => tr.schedule = Schedule::Constant,
+            "constant" => tr.schedule = Schedule::Constant,
+            other => {
+                return Err(anyhow!(
+                    "config: unknown schedule `{other}` \
+                     (expected `constant`, `warmup`, or `cosine`)"
+                ))
+            }
         }
-        if let Some(every) =
-            t.get("train.analysis_every").and_then(|v| v.as_i64())
-        {
-            tr.analysis_every = Some(every as usize);
+        if t.get("train.analysis_every").is_some() {
+            tr.analysis_every =
+                Some(get_usize(&t, "train.analysis_every", 0)?);
         }
         Ok(cfg)
     }
@@ -175,5 +249,74 @@ opt_engine = "pjrt"
             "[train]\ncomm = \"carrier-pigeon\"",
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_type_instead_of_silent_default() {
+        // `rank = "16"` used to silently fall back to the default rank;
+        // now it errors, naming the key and the expected type.
+        let err = ExperimentConfig::from_toml_str(
+            "[train]\nrank = \"16\"",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("train.rank"), "{err}");
+        assert!(err.contains("integer"), "{err}");
+
+        let err = ExperimentConfig::from_toml_str("[train]\nlr = \"fast\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("train.lr") && err.contains("number"), "{err}");
+
+        let err = ExperimentConfig::from_toml_str("[train]\nmethod = 3")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("train.method"), "{err}");
+    }
+
+    #[test]
+    fn rejects_negative_counts() {
+        let err = ExperimentConfig::from_toml_str("[train]\nsteps = -5")
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("train.steps") && err.contains("non-negative"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rejects_unknown_keys_everywhere() {
+        // A typo'd key must not silently train with the default.
+        let err = ExperimentConfig::from_toml_str(
+            "[train]\ncomm_rnak = 8",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("train.comm_rnak"), "{err}");
+        // A typo'd SECTION header must not silently drop every setting
+        // under it (`[trian]` flattens to `trian.rank`).
+        let err = ExperimentConfig::from_toml_str("[trian]\nrank = 8")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("trian.rank"), "{err}");
+        // Ditto top-level typos and unknown paths.* keys.
+        assert!(ExperimentConfig::from_toml_str("nmae = \"x\"").is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[paths]\nextra = \"ok\""
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_schedule_and_engine() {
+        assert!(ExperimentConfig::from_toml_str(
+            "[train]\nschedule = \"linear\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[train]\nopt_engine = \"cuda\""
+        )
+        .is_err());
     }
 }

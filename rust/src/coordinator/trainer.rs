@@ -18,7 +18,11 @@
 //! rank-r sizes, while whole steps are large, independent, and
 //! load-balanced by the pool's work queue (the GEMM kernels detect
 //! they're inside a worker via `pool::in_worker()` and run serially —
-//! same FLOPs, no nested spawning). RNG streams are forked in matrix
+//! same FLOPs, no nested dispatch). The pool is the persistent
+//! `util::pool::WorkerPool`: both fan-outs below reuse long-lived
+//! workers, so a steady-state train step spawns zero OS threads (the
+//! old scoped pool paid `threads()` spawns per GEMM tile, per optimizer
+//! fan-out AND per worker fan-out). RNG streams are forked in matrix
 //! order before the fan-out, so results are bitwise identical to the
 //! sequential loop. The PJRT engine path keeps the sequential loop: its
 //! FFI client types are single-threaded.

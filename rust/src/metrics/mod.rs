@@ -25,14 +25,20 @@ impl Series {
         self.points.last().map(|&(_, v)| v)
     }
 
+    /// Minimum over all points. NaN-total ordering (`f64::total_cmp`):
+    /// a diverged run that records NaN losses must not abort the
+    /// end-of-run summary the way the old `partial_cmp(..).unwrap()`
+    /// did. Under the total order +NaN sorts above every real value
+    /// (min stays the smallest real point) while -NaN sorts below
+    /// (min reports NaN) — either way the summary prints instead of
+    /// crashing, and a NaN min makes the divergence visible.
     pub fn min(&self) -> Option<f64> {
-        self.points
-            .iter()
-            .map(|&(_, v)| v)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+        self.points.iter().map(|&(_, v)| v).min_by(f64::total_cmp)
     }
 
     /// Mean over all points (e.g. average comm bytes/step of a run).
+    /// NaN points propagate: the mean of a series with any NaN is NaN,
+    /// so summaries print `NaN` instead of a silently-wrong number.
     pub fn mean(&self) -> Option<f64> {
         if self.points.is_empty() {
             return None;
@@ -43,7 +49,9 @@ impl Series {
         )
     }
 
-    /// Mean of the final `k` values (smoothed eval metric).
+    /// Mean of the final `k` values (smoothed eval metric). Like
+    /// [`Series::mean`], NaN tail values propagate to a NaN result
+    /// rather than crashing or being skipped.
     pub fn tail_mean(&self, k: usize) -> Option<f64> {
         if self.points.is_empty() {
             return None;
@@ -192,6 +200,24 @@ mod tests {
         assert_eq!(s.mean(), Some(2.5));
         assert_eq!(s.tail_mean(2), Some(2.5));
         assert_eq!(Series::default().mean(), None);
+    }
+
+    #[test]
+    fn nan_points_do_not_panic_summaries() {
+        // A diverged loss records NaN; every summary statistic must
+        // stay total (no panic) and make the NaN visible.
+        let mut s = Series::default();
+        for (i, v) in [3.0, f64::NAN, 1.0, 4.0].iter().enumerate() {
+            s.push(i, *v);
+        }
+        assert_eq!(s.min(), Some(1.0)); // +NaN sorts above all reals
+        assert!(s.mean().unwrap().is_nan());
+        assert!(s.tail_mean(3).unwrap().is_nan());
+        assert_eq!(s.last(), Some(4.0));
+        // All-NaN series: min is NaN, still no panic.
+        let mut all_nan = Series::default();
+        all_nan.push(0, f64::NAN);
+        assert!(all_nan.min().unwrap().is_nan());
     }
 
     #[test]

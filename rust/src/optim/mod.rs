@@ -32,7 +32,10 @@
 //! its own state, weight and gradient, so steps are embarrassingly
 //! parallel with zero synchronization, while the GEMMs inside degrade to
 //! their serial loops via `pool::in_worker()` — the same FLOPs without
-//! nested thread spawn). PJRT-backed optimizers stay on the sequential
+//! nested fork-join dispatch). The pool itself is persistent
+//! (`util::pool::WorkerPool`): the fan-out reuses long-lived workers, so
+//! a steady-state training step performs zero thread spawns end to end.
+//! PJRT-backed optimizers stay on the sequential
 //! path. Use [`Method::build_cpu`] for the parallel trainer path and
 //! [`Method::build`] where a plain `Box<dyn MatrixOptimizer>` suffices.
 

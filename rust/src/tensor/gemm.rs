@@ -22,11 +22,15 @@
 //! rust/tests/workspace_props.rs).
 //!
 //! Row-parallelism via `util::pool::parallel_chunks` over C's rows keeps
-//! writes disjoint. When the caller is itself a pool worker (the trainer
-//! fans whole optimizer steps across matrices), `pool::in_worker()` makes
-//! these kernels run serially instead of spawning a nested layer of
-//! threads — same numbers, no oversubscription. The micro-kernel unrolls
-//! and relies on LLVM auto-vectorization (see EXPERIMENTS.md §Perf).
+//! writes disjoint. The pool is persistent (`util::pool::WorkerPool`):
+//! a tile dispatch wakes long-lived workers over a condvar instead of
+//! spawning OS threads, so a steady-state GEMM costs zero spawns and
+//! zero dispatch allocations (asserted in benches/optimizer_step.rs).
+//! When the caller is itself inside a pool job (the trainer fans whole
+//! optimizer steps across matrices), `pool::in_worker()` makes these
+//! kernels run serially instead of dispatching a nested fork-join layer
+//! — same numbers, no oversubscription. The micro-kernel unrolls and
+//! relies on LLVM auto-vectorization (see EXPERIMENTS.md §Perf).
 
 use super::matrix::Mat;
 use crate::util::pool;

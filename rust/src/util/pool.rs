@@ -1,62 +1,167 @@
-//! Minimal work-stealing-free scoped thread pool.
+//! Persistent fork-join worker pool for the hot paths.
 //!
 //! The hot loops (GEMM tiles, per-matrix optimizer steps, data-parallel
-//! workers) need fork-join parallelism; with no rayon available offline we
-//! provide a small fixed pool with a `scope`-style API built on
-//! `std::thread::scope` channels.
+//! worker shards) need fork-join parallelism; with no rayon available
+//! offline we provide a small fixed pool. Earlier revisions rebuilt it
+//! with `std::thread::scope` on *every* parallel call — `threads()` OS
+//! thread spawns per GEMM, per optimizer fan-out, per worker fan-out,
+//! several times per training step. This revision keeps one persistent
+//! [`WorkerPool`]: `threads() - 1` worker threads are spawned lazily on
+//! the first parallel call and then reused forever, fed fork-join
+//! regions through a condvar-signalled job slot. A steady-state
+//! `parallel_for`/`parallel_chunks` call performs **zero thread spawns
+//! and zero heap allocations** (hard-asserted by
+//! `benches/optimizer_step.rs` via [`spawn_count`] and the counting
+//! global allocator).
 //!
-//! Design: `parallel_for` slices an index range into contiguous chunks and
-//! runs them on up to `threads()` OS threads. Closures must be `Sync`
-//! (read-only capture) and write through disjoint `&mut` chunks provided by
-//! the caller (`parallel_chunks`), mirroring rayon's `par_chunks_mut`.
+//! Design: a fork-join *region* publishes one type-erased closure; each
+//! participating executor (the calling thread — which works instead of
+//! blocking idle — plus up to `work units - 1` workers, whichever wake
+//! first, so a 2-chunk region never barriers on the scheduling of every
+//! idle worker) runs that closure once. The
+//! closure drains a caller-stack atomic cursor, so work is dynamically
+//! load-balanced exactly like the old scoped version and chunk
+//! boundaries — hence results — are identical to the serial loop
+//! (bitwise equivalence is pinned by rust/tests/workspace_props.rs and
+//! rust/tests/comm_props.rs). `parallel_chunks` hands disjoint `&mut`
+//! sub-slices to executors by index arithmetic over a shared base
+//! pointer — no per-call `Vec<Option<..>>`/`Mutex` dispatch list.
+//! Regions from concurrent top-level callers serialize on a region lock;
+//! the job payloads borrow the caller's stack, which stays valid because
+//! a region never returns (not even by unwinding) before every executor
+//! has finished.
 //!
 //! ## Nesting
 //!
-//! Since the trainer now fans *per-matrix* optimizer steps across the
-//! pool (see `coordinator::trainer`), the GEMMs inside each step would
-//! naively spawn a second layer of threads — `threads()²` oversubscription.
-//! Every worker therefore marks itself with a thread-local flag and all
-//! primitives here degrade to the serial path when invoked from inside a
-//! worker ([`in_worker`]). [`run_serial`] exposes the same flag to
-//! callers that need a guaranteed spawn-free region (the allocation-count
-//! benches assert on it).
+//! Since the trainer fans *per-matrix* optimizer steps across the pool
+//! (see `coordinator::trainer`), the GEMMs inside each step would
+//! naively dispatch a second fork-join layer. Every executor therefore
+//! marks itself with a thread-local flag for the duration of a job and
+//! all primitives here degrade to the serial path when invoked from
+//! inside one ([`in_worker`]) — nested calls can never deadlock on the
+//! region lock. [`run_serial`] exposes the same flag to callers that
+//! need a guaranteed dispatch-free region (the allocation-count benches
+//! assert on it).
+//!
+//! ## Panics
+//!
+//! A panic inside a parallel job is propagated to the caller of the
+//! primitive with its original payload preserved (the old
+//! `std::thread::scope` version aborted the scope with a generic
+//! message), but the pool itself survives: workers catch the unwind,
+//! hand the payload back, and keep serving later regions. The caller's
+//! `in_worker` flag is restored on the unwind path, so it never leaks
+//! (pinned by rust/tests/pool_props.rs).
+//!
+//! ## Shutdown
+//!
+//! Dropping an owned [`WorkerPool`] signals shutdown and joins every
+//! worker — no detached threads ([`exit_count`] observes the joins).
+//! The process-wide pool behind the public primitives lives in a static
+//! and is intentionally never dropped: its workers idle in a condvar
+//! wait and hold no resources, the same lifetime rayon's global pool
+//! has.
 
 use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
 
 static POOL_THREADS: OnceLock<usize> = OnceLock::new();
+static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
+/// Lifetime count of OS threads spawned by all pools in this process.
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+/// Lifetime count of pool worker threads that have exited (shutdown).
+static EXITED: AtomicUsize = AtomicUsize::new(0);
 
 thread_local! {
-    /// True on pool worker threads and inside `run_serial` regions.
+    /// True on executors while they run a pool job and inside
+    /// `run_serial` regions.
     static IN_WORKER: Cell<bool> = const { Cell::new(false) };
 }
 
-/// Number of worker threads used by `parallel_for` (min 1).
-/// Override with the env var `GRASSWALK_THREADS`.
+/// Number of executors used by the parallel primitives (min 1).
+/// Override with the env var `GRASSWALK_THREADS` (see
+/// [`resolve_threads`] for the exact parsing rules; invalid values warn
+/// once on stderr and fall back, documented in EXPERIMENTS.md §Pool).
 pub fn threads() -> usize {
     *POOL_THREADS.get_or_init(|| {
-        if let Ok(v) = std::env::var("GRASSWALK_THREADS") {
-            if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
-            }
+        let raw = std::env::var("GRASSWALK_THREADS").ok();
+        let (n, warning) = resolve_threads(raw.as_deref(), default_threads());
+        if let Some(msg) = warning {
+            eprintln!("warning: {msg}");
         }
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
+        n
     })
 }
 
-/// Whether the current thread is a pool worker (or a `run_serial`
-/// region). Parallel primitives — including the GEMM row-blocking —
-/// check this and run serially to avoid nested thread spawning.
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Pure parsing seam for `GRASSWALK_THREADS`, unit-testable without
+/// touching the process environment. Returns the thread count plus an
+/// optional warning the caller should surface (once) on stderr:
+///
+/// - unset (`None`) → `default` (available parallelism), no warning;
+/// - a positive integer → that count, no warning;
+/// - `0` → clamped to 1 (serial) **with** a warning — silently running
+///   serial used to hide typos in perf experiments;
+/// - anything non-numeric → `default` **with** a warning instead of the
+///   old silent ignore.
+pub fn resolve_threads(
+    raw: Option<&str>,
+    default: usize,
+) -> (usize, Option<String>) {
+    let Some(raw) = raw else {
+        return (default, None);
+    };
+    let trimmed = raw.trim();
+    match trimmed.parse::<usize>() {
+        Ok(0) => (
+            1,
+            Some(
+                "GRASSWALK_THREADS=0 is not a valid thread count; \
+                 clamping to 1 (serial)"
+                    .to_string(),
+            ),
+        ),
+        Ok(n) => (n, None),
+        Err(_) => (
+            default,
+            Some(format!(
+                "GRASSWALK_THREADS={trimmed:?} is not a positive integer; \
+                 using the default of {default} (available parallelism)"
+            )),
+        ),
+    }
+}
+
+/// Total pool worker threads ever spawned in this process. Steady-state
+/// parallel sections must leave this unchanged — the perf benches assert
+/// a zero delta across their measured regions.
+pub fn spawn_count() -> usize {
+    SPAWNED.load(Ordering::SeqCst)
+}
+
+/// Total pool worker threads that have exited after a shutdown signal.
+/// `WorkerPool::drop` joins its workers, so after a drop returns the
+/// delta here equals the pool's worker count (no detached threads).
+pub fn exit_count() -> usize {
+    EXITED.load(Ordering::SeqCst)
+}
+
+/// Whether the current thread is executing a pool job (or a
+/// `run_serial` region). Parallel primitives — including the GEMM
+/// row-blocking — check this and run serially to avoid nested dispatch.
 pub fn in_worker() -> bool {
     IN_WORKER.with(|c| c.get())
 }
 
 /// Run `f` with all pool primitives forced onto their serial paths on
-/// this thread (no `std::thread` spawns, hence no spawn allocations).
-/// Nested calls are fine; the previous state is restored on exit.
+/// this thread (no dispatch, hence no pool interaction at all). Nested
+/// calls are fine; the previous state is restored on exit.
 pub fn run_serial<R>(f: impl FnOnce() -> R) -> R {
     IN_WORKER.with(|c| {
         let prev = c.replace(true);
@@ -66,83 +171,325 @@ pub fn run_serial<R>(f: impl FnOnce() -> R) -> R {
     })
 }
 
-/// Run `f(i)` for every `i` in `0..n`, dynamically load-balanced over the
-/// pool with a shared atomic cursor and block size `block`.
+/// A fork-join job: each participating executor runs it once per
+/// region. The `'static` is a lie told by `WorkerPool::run_limited` —
+/// the reference actually borrows the caller's stack and is only
+/// dereferenced while `run_limited` blocks on region completion.
+type Job = &'static (dyn Fn() + Sync);
+
+struct PoolState {
+    /// The active region's job, if any.
+    job: Option<Job>,
+    /// Region counter; workers run the job at most once per new epoch.
+    epoch: u64,
+    /// Worker executors (beyond the caller) the active region wants —
+    /// a region with k work units gains nothing from more than k - 1
+    /// helpers, and capping keeps a small fan-out from barriering on
+    /// the scheduling of every idle worker.
+    participants: usize,
+    /// Participation slots already claimed for the active epoch.
+    claimed: usize,
+    /// Claimed workers that still have to finish the active region.
+    remaining: usize,
+    /// First worker panic payload of the active region, re-raised to
+    /// the region's caller so diagnostics survive the pool boundary.
+    panic_payload: Option<Box<dyn std::any::Any + Send>>,
+    /// Signals workers to exit.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Signalled when a new region is published or shutdown is set.
+    work_cv: Condvar,
+    /// Signalled when the last worker finishes a region.
+    done_cv: Condvar,
+}
+
+/// Lock that shrugs off poisoning: every critical section below is a
+/// handful of panic-free field assignments, so a poisoned mutex (from a
+/// propagated job panic crossing a caller frame) is still consistent.
+fn lock(m: &Mutex<PoolState>) -> MutexGuard<'_, PoolState> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut s = lock(&shared.state);
+            loop {
+                if s.shutdown {
+                    drop(s);
+                    EXITED.fetch_add(1, Ordering::SeqCst);
+                    return;
+                }
+                match s.job {
+                    Some(j) if s.epoch != last_epoch => {
+                        last_epoch = s.epoch;
+                        // Claim a participation slot; a region that is
+                        // already fully staffed is skipped (the job is
+                        // a cursor drain — extra hands gain nothing).
+                        if s.claimed < s.participants {
+                            s.claimed += 1;
+                            break j;
+                        }
+                    }
+                    _ => {}
+                }
+                s = shared
+                    .work_cv
+                    .wait(s)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        IN_WORKER.with(|c| c.set(true));
+        let result = catch_unwind(AssertUnwindSafe(|| job()));
+        IN_WORKER.with(|c| c.set(false));
+        let mut s = lock(&shared.state);
+        if let Err(payload) = result {
+            if s.panic_payload.is_none() {
+                s.panic_payload = Some(payload);
+            }
+        }
+        s.remaining -= 1;
+        if s.remaining == 0 {
+            drop(s);
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// A persistent fork-join pool: `executors - 1` worker threads plus the
+/// calling thread cooperate on each [`run`](WorkerPool::run) region.
+/// The public primitives route through a lazily-created process-wide
+/// instance; owned instances exist for tests (drop/shutdown semantics).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Build a pool that runs regions on `executors` threads total: the
+    /// caller of [`run`](WorkerPool::run) plus `executors - 1` spawned
+    /// workers (0 workers for `executors <= 1` — `run` then degrades to
+    /// a plain call).
+    pub fn new(executors: usize) -> WorkerPool {
+        let workers = executors.saturating_sub(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                participants: 0,
+                claimed: 0,
+                remaining: 0,
+                panic_payload: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                SPAWNED.fetch_add(1, Ordering::SeqCst);
+                std::thread::Builder::new()
+                    .name(format!("gw-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of spawned worker threads (excludes the caller).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f` once on every executor (each worker plus the calling
+    /// thread) concurrently, returning once ALL executors have
+    /// finished. See [`run_limited`](WorkerPool::run_limited) for the
+    /// semantics; this is `run_limited` with an unbounded helper cap.
+    pub fn run(&self, f: &(dyn Fn() + Sync)) {
+        self.run_limited(f, usize::MAX);
+    }
+
+    /// Run `f` concurrently on the calling thread plus up to
+    /// `extra_workers` pool workers (whichever wake first claim the
+    /// slots), returning once all participating executors have
+    /// finished. `f` typically drains a shared atomic cursor, so which
+    /// and how many executors run it does not affect what work gets
+    /// done — a region with k work units passes `k - 1` so a small
+    /// fan-out never barriers on the scheduling of idle workers.
+    /// Concurrent top-level regions serialize. Panics from any
+    /// executor's share propagate to the caller after the region
+    /// completes; the pool stays usable. Must not be called from
+    /// inside a pool job — the public primitives guard via
+    /// [`in_worker`].
+    pub fn run_limited(&self, f: &(dyn Fn() + Sync), extra_workers: usize) {
+        // SAFETY of the lifetime transmute: workers dereference `job`
+        // only between the epoch publish below and the remaining == 0
+        // join at the end of this function, and this function does not
+        // return — not even by unwinding — before that join, so the
+        // reference never outlives the data it borrows.
+        let job: Job = unsafe { std::mem::transmute(f) };
+        {
+            let mut s = lock(&self.shared.state);
+            // One region at a time: a competing top-level caller parks
+            // here until the active region's join below clears `job`.
+            while s.job.is_some() {
+                s = self
+                    .shared
+                    .done_cv
+                    .wait(s)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+            s.job = Some(job);
+            s.epoch = s.epoch.wrapping_add(1);
+            s.participants = self.handles.len().min(extra_workers);
+            s.claimed = 0;
+            s.remaining = s.participants;
+            s.panic_payload = None;
+            drop(s);
+            // notify_all (not `participants` notify_ones): every worker
+            // wakes and either claims a slot or re-parks after a cheap
+            // check, which guarantees all `participants` slots get
+            // claimed — a notify_one can be absorbed by a worker that
+            // is between regions and would strand the region short.
+            self.shared.work_cv.notify_all();
+        }
+        // The caller participates as an executor, marked as a worker so
+        // nested primitives inside `f` take their serial paths. The
+        // flag is restored before any panic is re-raised.
+        let caller_result = {
+            let prev = IN_WORKER.with(|c| c.replace(true));
+            let out = catch_unwind(AssertUnwindSafe(|| f()));
+            IN_WORKER.with(|c| c.set(prev));
+            out
+        };
+        // Join the region. This must complete even when the caller's
+        // share panicked: workers may still be running `job`, which
+        // borrows this stack frame.
+        let worker_panic = {
+            let mut s = lock(&self.shared.state);
+            while s.remaining != 0 {
+                s = self
+                    .shared
+                    .done_cv
+                    .wait(s)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+            s.job = None;
+            let p = s.panic_payload.take();
+            drop(s);
+            // Wake any caller parked in the publish wait above.
+            self.shared.done_cv.notify_all();
+            p
+        };
+        // The caller's own payload wins if both panicked; either way
+        // the original payload is re-raised, so diagnostics survive.
+        if let Err(payload) = caller_result {
+            resume_unwind(payload);
+        }
+        if let Some(payload) = worker_panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut s = lock(&self.shared.state);
+            s.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool behind the public primitives, created on the
+/// first threaded dispatch (never when `threads() <= 1`).
+fn global_pool() -> &'static WorkerPool {
+    GLOBAL_POOL.get_or_init(|| WorkerPool::new(threads()))
+}
+
+/// Run `f(i)` for every `i` in `0..n`, dynamically load-balanced over
+/// the pool with a shared atomic cursor and block size `block`.
 pub fn parallel_for<F>(n: usize, block: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    let nt = threads().min(n.max(1));
-    if nt <= 1 || n <= block || in_worker() {
+    let block = block.max(1);
+    if threads() <= 1 || n <= block || in_worker() {
         for i in 0..n {
             f(i);
         }
         return;
     }
+    let blocks = n.div_ceil(block);
     let cursor = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..nt {
-            s.spawn(|| {
-                IN_WORKER.with(|c| c.set(true));
-                loop {
-                    let start = cursor.fetch_add(block, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + block).min(n);
-                    for i in start..end {
-                        f(i);
-                    }
-                }
-            });
+    let drain = || loop {
+        let start = cursor.fetch_add(block, Ordering::Relaxed);
+        if start >= n {
+            break;
         }
-    });
+        let end = (start + block).min(n);
+        for i in start..end {
+            f(i);
+        }
+    };
+    // The caller is one executor; k blocks need at most k - 1 helpers.
+    global_pool().run_limited(&drain, blocks - 1);
 }
 
+/// `*mut T` that may cross threads: the dispatch below hands each chunk
+/// index to exactly one executor, so derived `&mut` slices are disjoint.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
 /// Split `data` into `chunk`-sized mutable pieces and process each with
-/// `f(chunk_index, piece)` in parallel — the disjoint-writes primitive the
-/// GEMM row-blocking uses.
+/// `f(chunk_index, piece)` in parallel — the disjoint-writes primitive
+/// the GEMM row-blocking uses. Dispatch is a base pointer plus an atomic
+/// chunk cursor: no per-call piece list, no allocation.
 pub fn parallel_chunks<T, F>(data: &mut [T], chunk: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
-    let n = data.len().div_ceil(chunk.max(1));
-    let nt = threads().min(n.max(1));
-    if nt <= 1 || n <= 1 || in_worker() {
-        for (i, piece) in data.chunks_mut(chunk.max(1)).enumerate() {
+    let chunk = chunk.max(1);
+    let n = data.len().div_ceil(chunk);
+    if threads() <= 1 || n <= 1 || in_worker() {
+        for (i, piece) in data.chunks_mut(chunk).enumerate() {
             f(i, piece);
         }
         return;
     }
-    let pieces: Vec<(usize, &mut [T])> =
-        data.chunks_mut(chunk.max(1)).enumerate().collect();
+    let len = data.len();
+    let base = SendPtr(data.as_mut_ptr());
     let cursor = AtomicUsize::new(0);
-    let pieces = std::sync::Mutex::new(
-        pieces.into_iter().map(Some).collect::<Vec<_>>(),
-    );
-    std::thread::scope(|s| {
-        for _ in 0..nt {
-            s.spawn(|| {
-                IN_WORKER.with(|c| c.set(true));
-                loop {
-                    let idx = cursor.fetch_add(1, Ordering::Relaxed);
-                    let item = {
-                        let mut guard = pieces.lock().unwrap();
-                        if idx >= guard.len() {
-                            None
-                        } else {
-                            guard[idx].take()
-                        }
-                    };
-                    match item {
-                        Some((i, piece)) => f(i, piece),
-                        None => break,
-                    }
-                }
-            });
+    let drain = || loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
         }
-    });
+        let start = i * chunk;
+        let end = (start + chunk).min(len);
+        // SAFETY: the atomic cursor yields each index in 0..n exactly
+        // once across all executors, indices map to non-overlapping
+        // ranges of `data`, and `run` does not return until every
+        // executor has finished — so each `&mut [T]` piece is unique
+        // for its lifetime and never outlives the borrow of `data`.
+        let piece = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(start), end - start)
+        };
+        f(i, piece);
+    };
+    // The caller is one executor; n chunks need at most n - 1 helpers.
+    global_pool().run_limited(&drain, n - 1);
 }
 
 /// Process every element of `items` with `f(index, &mut item)`, one pool
@@ -173,6 +520,23 @@ where
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn resolve_threads_seam() {
+        assert_eq!(resolve_threads(None, 8), (8, None));
+        assert_eq!(resolve_threads(Some("4"), 8), (4, None));
+        assert_eq!(resolve_threads(Some(" 3 "), 8), (3, None));
+        let (n, warn) = resolve_threads(Some("0"), 8);
+        assert_eq!(n, 1);
+        assert!(warn.unwrap().contains("GRASSWALK_THREADS=0"));
+        let (n, warn) = resolve_threads(Some("lots"), 8);
+        assert_eq!(n, 8);
+        let warn = warn.unwrap();
+        assert!(warn.contains("lots") && warn.contains("8"));
+        let (n, warn) = resolve_threads(Some("-2"), 8);
+        assert_eq!(n, 8);
+        assert!(warn.is_some());
+    }
 
     #[test]
     fn parallel_for_covers_all_indices_once() {
@@ -231,8 +595,8 @@ mod tests {
         // Big enough to take the threaded path when threads() > 1.
         let mut seen = vec![false; 64];
         parallel_items(&mut seen, |_, s| {
-            // Inside a worker (or on the serial fallback path when the
-            // pool has one thread) nested primitives must not spawn.
+            // Inside a job (or on the serial fallback path when the
+            // pool has one thread) nested primitives must not dispatch.
             if in_worker() {
                 let mut inner = vec![0u8; 8];
                 parallel_items(&mut inner, |_, x| *x = 1);
@@ -255,5 +619,28 @@ mod tests {
         });
         assert_eq!(r, (0..500u64).sum());
         assert!(!in_worker());
+    }
+
+    #[test]
+    fn steady_state_dispatch_spawns_no_threads() {
+        // Warm the global pool (first threaded call may spawn).
+        let mut v = vec![0u32; 4096];
+        parallel_chunks(&mut v, 64, |i, p| {
+            for x in p.iter_mut() {
+                *x = i as u32;
+            }
+        });
+        let before = spawn_count();
+        for _ in 0..50 {
+            parallel_chunks(&mut v, 64, |i, p| {
+                for x in p.iter_mut() {
+                    *x = x.wrapping_add(i as u32);
+                }
+            });
+            parallel_for(4096, 64, |_| {});
+        }
+        // Other tests in this binary only use the (already warm) global
+        // pool, so the lifetime spawn counter must not have moved.
+        assert_eq!(spawn_count(), before, "steady state must not spawn");
     }
 }

@@ -43,6 +43,18 @@ impl TomlValue {
             _ => None,
         }
     }
+
+    /// Human-readable type label for config error messages
+    /// ("expects an integer, got string").
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            TomlValue::Str(_) => "string",
+            TomlValue::Int(_) => "integer",
+            TomlValue::Float(_) => "float",
+            TomlValue::Bool(_) => "boolean",
+            TomlValue::Arr(_) => "array",
+        }
+    }
 }
 
 /// Flattened key -> value table.

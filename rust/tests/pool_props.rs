@@ -1,0 +1,255 @@
+//! Pool-level property/stress tests for the persistent `WorkerPool`
+//! (ISSUE 3 tentpole): nested/re-entrant dispatch, panic-in-job
+//! recovery, drop/shutdown joining, ordering under contention, and the
+//! steady-state no-spawn guarantee. These run identically under
+//! `GRASSWALK_THREADS=1` (everything degrades to the serial paths) and
+//! `GRASSWALK_THREADS=4` (real dispatch) — CI exercises both.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use grasswalk::util::pool::{self, WorkerPool};
+
+/// Gate for tests that construct owned pools or assert on the global
+/// spawn counter: serializes them against each other so one test's pool
+/// construction can't shift another's counter delta.
+static SPAWN_GATE: Mutex<()> = Mutex::new(());
+
+/// Warm the process-wide pool so later spawn-count deltas are clean.
+fn warm_global_pool() {
+    let mut v = vec![0u8; 1024];
+    pool::parallel_chunks(&mut v, 16, |i, p| {
+        for x in p.iter_mut() {
+            *x = i as u8;
+        }
+    });
+}
+
+#[test]
+fn panic_in_job_propagates_and_pool_survives() {
+    let _g = SPAWN_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    warm_global_pool();
+    for round in 0..3 {
+        let hits = AtomicU64::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool::parallel_for(1024, 8, |i| {
+                hits.fetch_add(1, Ordering::Relaxed);
+                if i == 777 {
+                    panic!("payload panic (round {round})");
+                }
+            });
+        }));
+        let payload = match r {
+            Ok(()) => panic!("the job panic must propagate to the caller"),
+            Err(p) => p,
+        };
+        // The ORIGINAL payload survives the pool boundary, whether the
+        // panicking index ran on the caller or on a worker.
+        let msg = payload
+            .downcast_ref::<String>()
+            .map(|s| s.as_str())
+            .unwrap_or("");
+        assert!(
+            msg.contains("payload panic"),
+            "original panic payload must be preserved, got {msg:?}"
+        );
+        assert!(
+            !pool::in_worker(),
+            "in_worker must not leak through an unwinding region"
+        );
+        // The pool survives the payload panic: the very next parallel
+        // call dispatches again and is fully correct.
+        let mut v = vec![0u32; 2048];
+        pool::parallel_chunks(&mut v, 32, |i, p| {
+            for x in p.iter_mut() {
+                *x = i as u32 + 1;
+            }
+        });
+        for (j, x) in v.iter().enumerate() {
+            assert_eq!(*x, (j / 32) as u32 + 1, "post-panic round {round}");
+        }
+    }
+}
+
+#[test]
+fn panic_inside_parallel_map_leaves_pool_usable() {
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        let _ = pool::parallel_map(512, |i| {
+            if i == 13 {
+                panic!("map panic");
+            }
+            i as u64
+        });
+    }));
+    assert!(r.is_err());
+    assert!(!pool::in_worker());
+    let out = pool::parallel_map(64, |i| i * 7);
+    for (i, v) in out.iter().enumerate() {
+        assert_eq!(*v, i * 7);
+    }
+}
+
+#[test]
+fn nested_and_reentrant_calls_serialize_without_deadlock() {
+    let mut outer = vec![0u64; 64];
+    pool::parallel_items(&mut outer, |i, slot| {
+        // Every primitive invoked from inside a job must take its
+        // serial path (no second fork-join layer, no deadlock on the
+        // region slot) and stay correct.
+        let mut inner = vec![0u64; 33];
+        pool::parallel_chunks(&mut inner, 4, |j, p| {
+            for x in p.iter_mut() {
+                *x = j as u64;
+            }
+        });
+        let chunk_sum: u64 = inner.iter().sum();
+        let mapped = pool::parallel_map(8, |k| k as u64);
+        let map_sum: u64 = mapped.iter().sum();
+        // Two levels deep: a parallel call inside run_serial inside a
+        // pool job still serializes cleanly.
+        let deep = pool::run_serial(|| {
+            let mut d = vec![0u64; 5];
+            pool::parallel_items(&mut d, |k, x| *x = k as u64);
+            d.iter().sum::<u64>()
+        });
+        *slot = chunk_sum + map_sum + deep + i as u64;
+    });
+    let chunk_sum: u64 = (0..33u64).map(|j| j / 4).sum();
+    for (i, v) in outer.iter().enumerate() {
+        assert_eq!(*v, chunk_sum + 28 + 10 + i as u64);
+    }
+    assert!(!pool::in_worker(), "flag must not leak after nested regions");
+}
+
+#[test]
+fn parallel_map_ordering_under_contention() {
+    // Hammer the pool from several top-level threads at once: regions
+    // serialize internally, every caller gets its own results in input
+    // order, and nothing deadlocks.
+    let threads: Vec<_> = (0..4u64)
+        .map(|t| {
+            std::thread::spawn(move || {
+                for r in 0..25u64 {
+                    let out =
+                        pool::parallel_map(129, move |i| {
+                            i as u64 * 3 + t * 1000 + r
+                        });
+                    for (i, v) in out.iter().enumerate() {
+                        assert_eq!(*v, i as u64 * 3 + t * 1000 + r);
+                    }
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().expect("contending caller panicked");
+    }
+}
+
+#[test]
+fn parallel_equals_serial_bitwise() {
+    // Same float math through the dispatch path and the serial path
+    // must be bitwise identical (chunk boundaries are identical).
+    let n = 4096usize;
+    let src: Vec<f32> =
+        (0..n).map(|i| ((i * 2654435761) % 1000) as f32 * 1e-3).collect();
+    let run = |serial: bool| -> Vec<f32> {
+        let mut out = vec![0f32; n];
+        let body = |i: usize, p: &mut [f32]| {
+            for (k, x) in p.iter_mut().enumerate() {
+                let j = i * 64 + k;
+                *x = (src[j] * 1.5 + 0.25).sin();
+            }
+        };
+        if serial {
+            pool::run_serial(|| pool::parallel_chunks(&mut out, 64, body));
+        } else {
+            pool::parallel_chunks(&mut out, 64, body);
+        }
+        out
+    };
+    let par = run(false);
+    let ser = run(true);
+    assert_eq!(par, ser, "parallel and serial results must match bitwise");
+}
+
+#[test]
+fn owned_pool_runs_every_executor_and_drop_joins_all_workers() {
+    let _g = SPAWN_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    warm_global_pool();
+    let spawned_before = pool::spawn_count();
+    let exited_before = pool::exit_count();
+
+    let p = WorkerPool::new(4);
+    assert_eq!(p.workers(), 3);
+    assert_eq!(pool::spawn_count() - spawned_before, 3);
+
+    // Every executor (3 workers + the caller) runs the job exactly once
+    // per region; the barrier proves they run concurrently.
+    let ran = AtomicU64::new(0);
+    let barrier = Barrier::new(4);
+    let job = || {
+        barrier.wait();
+        ran.fetch_add(1, Ordering::SeqCst);
+    };
+    p.run(&job);
+    assert_eq!(ran.load(Ordering::SeqCst), 4);
+
+    // A second region reuses the same workers — no new spawns.
+    p.run(&job);
+    assert_eq!(ran.load(Ordering::SeqCst), 8);
+    assert_eq!(pool::spawn_count() - spawned_before, 3);
+
+    // Drop signals shutdown and JOINS: by the time drop returns, every
+    // worker has exited — no detached threads at process exit.
+    drop(p);
+    assert_eq!(
+        pool::exit_count() - exited_before,
+        3,
+        "drop must join all workers"
+    );
+}
+
+#[test]
+fn zero_and_single_executor_pools_degrade_to_plain_calls() {
+    let _g = SPAWN_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    for execs in [0usize, 1] {
+        let p = WorkerPool::new(execs);
+        assert_eq!(p.workers(), 0);
+        let ran = AtomicU64::new(0);
+        let job = || {
+            ran.fetch_add(1, Ordering::SeqCst);
+        };
+        p.run(&job);
+        assert_eq!(ran.load(Ordering::SeqCst), 1, "caller still runs f");
+    }
+}
+
+#[test]
+fn steady_state_regions_never_spawn() {
+    let _g = SPAWN_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    warm_global_pool();
+    let before = pool::spawn_count();
+    let mut v = vec![0u64; 1 << 12];
+    let sink = AtomicU64::new(0);
+    for round in 0..100u64 {
+        pool::parallel_chunks(&mut v, 64, |i, p| {
+            for x in p.iter_mut() {
+                *x = x.wrapping_add(i as u64 + round);
+            }
+        });
+        pool::parallel_for(1 << 12, 64, |i| {
+            sink.fetch_add(i as u64, Ordering::Relaxed);
+        });
+    }
+    assert_eq!(
+        pool::spawn_count(),
+        before,
+        "steady-state parallel sections must not spawn threads"
+    );
+    assert_eq!(
+        sink.load(Ordering::Relaxed),
+        100 * ((1u64 << 12) - 1) * (1 << 12) / 2
+    );
+}
