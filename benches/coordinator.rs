@@ -3,15 +3,65 @@
 //! train-step breakdown (fwd/bwd vs optimizer vs data) that the §Perf
 //! L3 pass optimizes against.
 //!
+//! Comm additions (EXPERIMENTS.md §Net):
+//! * **Zero-alloc comm round** — a `GlobalAlloc` wrapper counts heap
+//!   allocations process-wide (ring workers included); the steady-state
+//!   dense collective round is hard-asserted to perform ZERO (the chunk
+//!   buffers ping-pong around the ring instead of the old 2·(N−1)
+//!   `to_vec` allocations per worker per round). The low-rank
+//!   collective's per-round basis QR remains the documented exception.
+//! * **In-process vs tcp-loopback latency** — the same ring schedule
+//!   over channel handoffs vs real loopback sockets (frame
+//!   encode/decode + CRC + syscalls), the cost model for §Net.
+//!
 //!   cargo bench --bench coordinator
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use grasswalk::comm::net::{NetConfig, TcpRingTransport, WorldConfig};
 use grasswalk::comm::{
     build_collective, Collective, CommMode, GradLayout, RingTransport,
     Transport,
 };
+
+/// Counts every allocation routed through the global allocator (same
+/// idiom as benches/optimizer_step.rs) — across ALL threads, so the
+/// persistent ring workers are covered too.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// N distinct free loopback peer addresses for the tcp-loopback rows.
+fn free_peers(n: usize) -> Vec<String> {
+    grasswalk::comm::net::launch::free_loopback_peers(n).unwrap()
+}
 use grasswalk::coordinator::{Ring, TrainConfig, Trainer};
 use grasswalk::data::{CorpusConfig, Loader, SyncLoader};
 use grasswalk::model::shapes::TINY;
@@ -58,7 +108,7 @@ fn main() -> anyhow::Result<()> {
                     let mut bufs: Vec<Vec<f32>> =
                         (0..workers).map(|_| vec![1.0f32; len]).collect();
                     std::hint::black_box(
-                        transport.all_reduce_sum(&mut bufs),
+                        transport.all_reduce_sum(&mut bufs).unwrap(),
                     );
                 },
             );
@@ -69,6 +119,95 @@ fn main() -> anyhow::Result<()> {
                 bytes / stats.median.as_secs_f64() / 1e9
             );
         }
+    }
+
+    // Zero-alloc steady-state comm round (the ring-worker ping-pong
+    // satellite): after warmup, NOTHING on the dense collective path
+    // allocates — not the coordinator, not the N ring workers. Counted
+    // process-wide by the GlobalAlloc wrapper, asserted hard.
+    {
+        let layout =
+            GradLayout::from_shapes(&[vec![256, 64], vec![128]]);
+        let mut coll = build_collective(CommMode::Dense, 4, 16, 0);
+        let mut bufs: Vec<Vec<f32>> = (0..4)
+            .map(|_| vec![1.0f32; layout.total_floats])
+            .collect();
+        // Warmup: grows every circulating chunk buffer to capacity.
+        for _ in 0..5 {
+            coll.all_reduce_mean(&mut bufs, &layout).unwrap();
+        }
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let rounds = 20;
+        for _ in 0..rounds {
+            coll.all_reduce_mean(&mut bufs, &layout).unwrap();
+        }
+        let delta = ALLOCS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            delta, 0,
+            "steady-state dense comm round must perform zero allocations"
+        );
+        println!(
+            "zero-alloc comm round: 0 allocations across {rounds} rounds \
+             (dense, w=4; lowrank's basis QR is the documented exception)"
+        );
+    }
+
+    // In-process vs tcp-loopback round latency (§Net): the identical
+    // ring schedule over channel handoffs vs real loopback sockets with
+    // frame encode/decode + CRC. 2 ranks — the coordinator drives rank
+    // 0, a companion thread runs rank 1 in lockstep.
+    for &len in &[1usize << 12, 1 << 16] {
+        let (warmup, rounds) = (5usize, 50usize);
+        let inproc = RingTransport::new(2);
+        let mut bufs: Vec<Vec<f32>> =
+            (0..2).map(|_| vec![1.0f32; len]).collect();
+        for _ in 0..warmup {
+            inproc.all_reduce_sum(&mut bufs).unwrap();
+        }
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            inproc.all_reduce_sum(&mut bufs).unwrap();
+        }
+        let inproc_ms = t0.elapsed().as_secs_f64() * 1e3 / rounds as f64;
+
+        let peers = free_peers(2);
+        let mk_cfg = |rank: usize, peers: Vec<String>| {
+            let mut cfg = WorldConfig::new(
+                NetConfig { world: 2, rank, peers },
+                0,
+                0,
+            );
+            cfg.connect_timeout = Duration::from_secs(10);
+            cfg.io_timeout = Duration::from_secs(10);
+            cfg
+        };
+        let peer_cfg = mk_cfg(1, peers.clone());
+        let companion = std::thread::spawn(move || {
+            let t = TcpRingTransport::establish(&peer_cfg).unwrap();
+            let mut bufs = vec![vec![1.0f32; len]];
+            for _ in 0..warmup + rounds {
+                t.all_reduce_sum(&mut bufs).unwrap();
+            }
+        });
+        let t = TcpRingTransport::establish(&mk_cfg(0, peers)).unwrap();
+        let mut bufs = vec![vec![1.0f32; len]];
+        for _ in 0..warmup {
+            t.all_reduce_sum(&mut bufs).unwrap();
+        }
+        let t0 = Instant::now();
+        let mut wire = 0usize;
+        for _ in 0..rounds {
+            wire = t
+                .all_reduce_sum(&mut bufs)
+                .unwrap()
+                .bytes_sent_per_worker;
+        }
+        let tcp_ms = t0.elapsed().as_secs_f64() * 1e3 / rounds as f64;
+        companion.join().unwrap();
+        println!(
+            "ring round w=2 len={len}: inproc {inproc_ms:.3} ms vs \
+             tcp-loopback {tcp_ms:.3} ms ({wire} wire B/rank/round)"
+        );
     }
 
     // Persistent worker-pool fork-join (the primitive under every GEMM

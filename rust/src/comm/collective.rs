@@ -81,6 +81,28 @@ impl GradLayout {
     pub fn packed_floats(&self, rank: usize) -> usize {
         self.regions.iter().map(|r| r.factor_floats(rank)).sum()
     }
+
+    /// Deterministic 64-bit fingerprint of the layout geometry (FNV-1a
+    /// over every region's offset/len/rows/cols plus the total). The
+    /// `comm::net` handshake exchanges it so two processes whose models
+    /// disagree — different config, different parameter order — are
+    /// rejected by name before the first gradient round instead of
+    /// silently reducing mismatched bytes.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mix = |h: u64, x: u64| (h ^ x).wrapping_mul(PRIME);
+        h = mix(h, self.total_floats as u64);
+        h = mix(h, self.regions.len() as u64);
+        for r in &self.regions {
+            h = mix(h, r.offset as u64);
+            h = mix(h, r.len as u64);
+            h = mix(h, r.rows as u64);
+            h = mix(h, r.cols as u64);
+        }
+        h
+    }
 }
 
 /// Per-round collective accounting, recorded into the metrics stream.
@@ -103,8 +125,17 @@ pub struct CommStats {
 
 /// A gradient collective: reduces per-worker flat gradients to their
 /// mean, in place (every buffer equal on return).
+///
+/// `workers` holds one buffer per LOCAL endpoint of the underlying
+/// transport — all N of them for the in-process ring, exactly one for a
+/// TCP rank — while the mean is always over the global world size.
 pub trait Collective: Send {
     fn label(&self) -> &'static str;
+
+    /// The transport this collective reduces over — the trainer uses it
+    /// for world topology (`world_size`/`local_endpoints`) and the loss
+    /// sidecar gather, so those stay in lockstep with the gradient path.
+    fn transport(&self) -> &dyn Transport;
 
     fn all_reduce_mean(
         &mut self,
@@ -139,14 +170,23 @@ impl Collective for DenseAllReduce {
         "dense"
     }
 
+    fn transport(&self) -> &dyn Transport {
+        &*self.transport
+    }
+
     fn all_reduce_mean(
         &mut self,
         workers: &mut [Vec<f32>],
         layout: &GradLayout,
     ) -> Result<CommStats> {
         let n = self.transport.world_size();
-        if workers.len() != n {
-            bail!("dense collective: {} buffers for world {n}", workers.len());
+        let local = self.transport.local_endpoints();
+        if workers.len() != local {
+            bail!(
+                "dense collective: {} buffers for {local} local endpoints \
+                 (world {n})",
+                workers.len()
+            );
         }
         if workers.iter().any(|w| w.len() != layout.total_floats) {
             bail!(
@@ -154,7 +194,7 @@ impl Collective for DenseAllReduce {
                 layout.total_floats
             );
         }
-        let tstats = self.transport.all_reduce_sum(workers);
+        let tstats = self.transport.all_reduce_sum(workers)?;
         // Mean, applied exactly like the legacy Ring::all_reduce_mean.
         let inv = 1.0 / n as f32;
         for b in workers.iter_mut() {
@@ -191,6 +231,18 @@ mod tests {
         assert!(!layout.regions[1].is_matrix());
         assert!(layout.regions[2].is_matrix());
         assert_eq!(layout.regions[2].oriented(), (3, 2));
+    }
+
+    #[test]
+    fn fingerprint_tracks_geometry() {
+        let a = GradLayout::from_shapes(&[vec![4, 6], vec![10]]);
+        let b = GradLayout::from_shapes(&[vec![4, 6], vec![10]]);
+        // Same element count, transposed geometry: must differ.
+        let c = GradLayout::from_shapes(&[vec![6, 4], vec![10]]);
+        let d = GradLayout::from_shapes(&[vec![4, 6]]);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_ne!(a.fingerprint(), d.fingerprint());
     }
 
     #[test]

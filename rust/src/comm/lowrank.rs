@@ -112,6 +112,10 @@ impl Collective for LowRankAllReduce {
         "lowrank"
     }
 
+    fn transport(&self) -> &dyn Transport {
+        &*self.transport
+    }
+
     fn set_round(&mut self, round: u64) {
         self.round = round;
         // A restore abandons the current trajectory: stale deferred
@@ -126,9 +130,11 @@ impl Collective for LowRankAllReduce {
         layout: &GradLayout,
     ) -> Result<CommStats> {
         let n = self.transport.world_size();
-        if workers.len() != n {
+        let local = self.transport.local_endpoints();
+        if workers.len() != local {
             bail!(
-                "lowrank collective: {} buffers for world {n}",
+                "lowrank collective: {} buffers for {local} local \
+                 endpoints (world {n})",
                 workers.len()
             );
         }
@@ -156,7 +162,7 @@ impl Collective for LowRankAllReduce {
         }
 
         if self.residuals.is_empty() {
-            self.residuals = (0..n)
+            self.residuals = (0..local)
                 .map(|_| {
                     layout
                         .regions
@@ -199,9 +205,9 @@ impl Collective for LowRankAllReduce {
         // ---- pack: per worker, factors for matrices + raw 1-D tails ----
         // All intermediates live in the owned scratch; steady-state
         // rounds allocate nothing on this path.
-        if packed.len() != n {
+        if packed.len() != local {
             *packed =
-                (0..n).map(|_| Vec::with_capacity(packed_len)).collect();
+                (0..local).map(|_| Vec::with_capacity(packed_len)).collect();
         }
         for (w, buf) in workers.iter().enumerate() {
             let p = &mut packed[w];
@@ -231,7 +237,7 @@ impl Collective for LowRankAllReduce {
         }
 
         // ---- the only traffic: ring all-reduce over the packed factors --
-        let tstats = transport.all_reduce_sum(packed);
+        let tstats = transport.all_reduce_sum(packed)?;
 
         // ---- mean + local reconstruction (identical on every worker) ---
         let inv = 1.0 / n as f32;
@@ -266,6 +272,10 @@ impl Collective for LowRankAllReduce {
             w.copy_from_slice(first);
         }
 
+        // Mean over the residual accumulators living in THIS process:
+        // all n workers for the in-process transport, just our own rank's
+        // for a socket backend (residuals are per-worker local state that
+        // never crosses the wire).
         let residual_norm = residuals
             .iter()
             .map(|per_region| {
@@ -276,7 +286,7 @@ impl Collective for LowRankAllReduce {
                     .sqrt()
             })
             .sum::<f64>()
-            / n as f64;
+            / local as f64;
 
         self.round += 1;
         Ok(CommStats {

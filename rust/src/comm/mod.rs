@@ -1,11 +1,16 @@
 //! S14: the collective-communication subsystem.
 //!
-//! Three pillars, bottom-up:
+//! Four pillars, bottom-up:
 //!
 //! * [`transport`] — *how* payloads move: [`Transport`] with the
 //!   persistent in-process [`RingTransport`] backend (N worker threads +
 //!   N bounded neighbor links created once per trainer, reused every
-//!   round; a socket backend slots in behind the same trait).
+//!   round).
+//! * [`net`] — the multi-host backend: [`net::TcpRingTransport`] runs
+//!   the SAME ring schedule over persistent TCP links between N
+//!   processes (CRC-checked frames, handshake-validated worlds, a local
+//!   `--spawn-local N` launcher), bitwise-identical to the in-process
+//!   transport.
 //! * [`collective`] — *what* is exchanged: [`Collective`] with
 //!   [`DenseAllReduce`] (bitwise-equivalent to the legacy single-shot
 //!   ring, bandwidth-optimal reduce-scatter/all-gather schedule and its
@@ -18,11 +23,15 @@
 //!   the bulk gradient energy outside the core subspace is reinjected
 //!   over subsequent rounds rather than lost.
 //!
-//! The trainer selects a regime via [`CommMode`] (`--comm dense|lowrank`,
-//! `--comm-rank R`); every CLI command that trains inherits the axis.
+//! The two axes compose orthogonally: the trainer selects a comm regime
+//! via [`CommMode`] (`--comm dense|lowrank`, `--comm-rank R`) and a
+//! transport via [`TransportMode`] (`--transport inproc|tcp`, with
+//! `--world N --net-rank k --peers …` for tcp); every combination
+//! produces the same reduced gradients bit for bit.
 
 pub mod collective;
 pub mod lowrank;
+pub mod net;
 pub mod transport;
 
 pub use collective::{
@@ -57,21 +66,65 @@ impl CommMode {
     }
 }
 
-/// Build the configured collective over a fresh persistent ring of
-/// `workers` endpoints. `rank`/`seed` only matter for [`CommMode::LowRank`].
-pub fn build_collective(
+/// Which [`Transport`] backend carries the collective
+/// (`--transport inproc|tcp`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportMode {
+    /// All worker endpoints simulated in this process (the default).
+    Inproc,
+    /// This process is one rank of a multi-process TCP ring
+    /// (`--world N --net-rank k --peers host:port,…`).
+    Tcp,
+}
+
+impl TransportMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransportMode::Inproc => "inproc",
+            TransportMode::Tcp => "tcp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TransportMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "inproc" | "in-proc" | "local" => Some(TransportMode::Inproc),
+            "tcp" => Some(TransportMode::Tcp),
+            _ => None,
+        }
+    }
+}
+
+/// Wrap an already-established transport in the configured collective.
+/// `rank`/`seed` only matter for [`CommMode::LowRank`].
+pub fn build_collective_with(
+    transport: Box<dyn Transport>,
     mode: CommMode,
-    workers: usize,
     rank: usize,
     seed: u64,
 ) -> Box<dyn Collective> {
-    let transport = Box::new(RingTransport::new(workers.max(1)));
     match mode {
         CommMode::Dense => Box::new(DenseAllReduce::new(transport)),
         CommMode::LowRank => {
             Box::new(LowRankAllReduce::new(transport, rank.max(1), seed))
         }
     }
+}
+
+/// Build the configured collective over a fresh persistent in-process
+/// ring of `workers` endpoints. `rank`/`seed` only matter for
+/// [`CommMode::LowRank`].
+pub fn build_collective(
+    mode: CommMode,
+    workers: usize,
+    rank: usize,
+    seed: u64,
+) -> Box<dyn Collective> {
+    build_collective_with(
+        Box::new(RingTransport::new(workers.max(1))),
+        mode,
+        rank,
+        seed,
+    )
 }
 
 #[cfg(test)]
@@ -88,10 +141,20 @@ mod tests {
     }
 
     #[test]
+    fn transport_mode_parse_roundtrip() {
+        for m in [TransportMode::Inproc, TransportMode::Tcp] {
+            assert_eq!(TransportMode::parse(m.label()), Some(m));
+        }
+        assert_eq!(TransportMode::parse("carrier-pigeon"), None);
+    }
+
+    #[test]
     fn builder_selects_implementation() {
         let d = build_collective(CommMode::Dense, 2, 8, 0);
         assert_eq!(d.label(), "dense");
+        assert_eq!(d.transport().world_size(), 2);
         let l = build_collective(CommMode::LowRank, 2, 8, 0);
         assert_eq!(l.label(), "lowrank");
+        assert_eq!(l.transport().local_endpoints(), 2);
     }
 }

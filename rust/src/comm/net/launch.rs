@@ -1,0 +1,221 @@
+//! `--spawn-local N`: fork a full loopback TCP world of N ranks as
+//! subprocesses of the current binary — one command stands up a real
+//! multi-process ring for tests, CI, and local experiments.
+//!
+//! The parent picks N distinct free loopback ports, re-execs itself
+//! once per rank with the caller's own training flags plus the
+//! generated topology (`--transport tcp --world N --net-rank k --peers
+//! ...`), and supervises: the first rank to exit non-zero gets the
+//! remaining ranks killed (a half-dead ring would otherwise sit in its
+//! io-timeout), and the launcher's own exit reflects the failure.
+
+use std::net::TcpListener;
+use std::process::{Child, Command};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// N distinct free loopback ports. The listeners are held open
+/// simultaneously (so the OS cannot hand the same port out twice), then
+/// dropped just before the ranks spawn and re-bind them. The tiny
+/// close-to-rebind window is the standard local-rendezvous tradeoff.
+pub fn free_ports(n: usize) -> Result<Vec<u16>> {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| {
+            TcpListener::bind("127.0.0.1:0")
+                .context("bind loopback rendezvous port")
+        })
+        .collect::<Result<_>>()?;
+    listeners
+        .iter()
+        .map(|l| Ok(l.local_addr().context("listener addr")?.port()))
+        .collect()
+}
+
+/// `free_ports` formatted as a `--peers`-style address list — the one
+/// loopback-rendezvous helper shared by the launcher, the equivalence
+/// tests, and the benches (so the close-to-rebind caveat above lives in
+/// exactly one place).
+pub fn free_loopback_peers(n: usize) -> Result<Vec<String>> {
+    Ok(free_ports(n)?
+        .iter()
+        .map(|p| format!("127.0.0.1:{p}"))
+        .collect())
+}
+
+/// The flags the launcher owns; caller-provided values for these are
+/// dropped from the passthrough set so each rank gets exactly one
+/// authoritative topology.
+const LAUNCH_KEYS: &[&str] =
+    &["spawn-local", "transport", "world", "net-rank", "peers"];
+
+/// Strip launcher-owned flags (`--key value` and `--key=value` forms)
+/// from a raw argv tail, keeping everything else verbatim.
+pub fn strip_launch_args(args: &[String]) -> Vec<String> {
+    let mut out = Vec::with_capacity(args.len());
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(body) = args[i].strip_prefix("--") {
+            let key = body.split('=').next().unwrap_or(body);
+            if LAUNCH_KEYS.contains(&key) {
+                // `--key value` consumes the value token too.
+                if !body.contains('=')
+                    && i + 1 < args.len()
+                    && !args[i + 1].starts_with("--")
+                {
+                    i += 1;
+                }
+                i += 1;
+                continue;
+            }
+        }
+        out.push(args[i].clone());
+        i += 1;
+    }
+    out
+}
+
+/// Spawn `world` ranks of `grasswalk train` as local subprocesses and
+/// wait for all of them. `raw_args` is the caller's argv tail after the
+/// `train` subcommand, forwarded verbatim minus the launcher-owned
+/// flags.
+pub fn spawn_local(world: usize, raw_args: &[String]) -> Result<()> {
+    if world == 0 {
+        bail!("--spawn-local needs a world size >= 1");
+    }
+    let peers = free_loopback_peers(world)?.join(",");
+    let exe = std::env::current_exe().context("locate current binary")?;
+    let base = strip_launch_args(raw_args);
+    eprintln!("[spawn-local] world {world} on {peers}");
+
+    let mut children: Vec<(usize, Option<Child>)> = Vec::with_capacity(world);
+    for rank in 0..world {
+        let spawned = Command::new(&exe)
+            .arg("train")
+            .args(&base)
+            .args([
+                "--transport",
+                "tcp",
+                "--world",
+                &world.to_string(),
+                "--net-rank",
+                &rank.to_string(),
+                "--peers",
+                &peers,
+            ])
+            .spawn()
+            .with_context(|| format!("spawn rank {rank}"));
+        match spawned {
+            Ok(child) => children.push((rank, Some(child))),
+            Err(e) => {
+                // A missing rank would leave the others waiting out
+                // their connect timeout; kill them now.
+                for (_, slot) in children.iter_mut() {
+                    if let Some(c) = slot.as_mut() {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                }
+                return Err(e);
+            }
+        }
+    }
+
+    // Supervise: first non-zero exit kills the remaining ranks.
+    let mut failure: Option<(usize, i32)> = None;
+    loop {
+        let mut running = 0usize;
+        for (rank, slot) in children.iter_mut() {
+            let Some(child) = slot.as_mut() else { continue };
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    let code = status.code().unwrap_or(-1);
+                    if code != 0 && failure.is_none() {
+                        failure = Some((*rank, code));
+                    }
+                    *slot = None;
+                }
+                Ok(None) => running += 1,
+                Err(e) => {
+                    *slot = None;
+                    if failure.is_none() {
+                        eprintln!("[spawn-local] wait rank {rank}: {e}");
+                        failure = Some((*rank, -1));
+                    }
+                }
+            }
+        }
+        if failure.is_some() {
+            for (_, slot) in children.iter_mut() {
+                if let Some(c) = slot.as_mut() {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                *slot = None;
+            }
+            break;
+        }
+        if running == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    if let Some((rank, code)) = failure {
+        return Err(anyhow!(
+            "spawn-local: rank {rank} exited with status {code} \
+             (remaining ranks killed)"
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn free_ports_are_distinct() {
+        let ports = free_ports(4).unwrap();
+        for i in 0..ports.len() {
+            for j in 0..i {
+                assert_ne!(ports[i], ports[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn strip_removes_launcher_flags_both_forms() {
+        let args = strs(&[
+            "--steps",
+            "8",
+            "--spawn-local",
+            "4",
+            "--comm",
+            "lowrank",
+            "--transport=tcp",
+            "--world",
+            "4",
+            "--peers=127.0.0.1:1,127.0.0.1:2",
+            "--net-rank",
+            "1",
+            "--seed",
+            "3",
+        ]);
+        let out = strip_launch_args(&args);
+        assert_eq!(
+            out,
+            strs(&["--steps", "8", "--comm", "lowrank", "--seed", "3"])
+        );
+    }
+
+    #[test]
+    fn strip_keeps_flag_followed_by_flag() {
+        // `--spawn-local --steps 8`: spawn-local has no value token.
+        let out = strip_launch_args(&strs(&["--spawn-local", "--steps", "8"]));
+        assert_eq!(out, strs(&["--steps", "8"]));
+    }
+}

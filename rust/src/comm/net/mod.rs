@@ -1,0 +1,56 @@
+//! `comm::net` — the multi-host TCP backend of the comm subsystem: N
+//! independent `grasswalk` processes (same or different hosts) form a
+//! deterministic ring and run the dense and low-rank collectives
+//! bitwise-identically to the in-process `RingTransport`.
+//!
+//! Four layers, bottom-up:
+//!
+//! * [`wire`] — the length-prefixed, CRC-checked frame codec with
+//!   version/rank/round headers and the typed [`NetError`] enum (no
+//!   panics on malformed peers):
+//!
+//!   ```text
+//!   | magic u32 | ver u16 | kind u8 | 0 u8 | rank u32 | round u64 |
+//!   | len u32 | payload… | crc32 u32 |
+//!   ```
+//!
+//! * [`world`] — rendezvous and handshake: every rank binds
+//!   `peers[rank]`, dials its downstream neighbor, and both endpoints
+//!   of every link validate world size, rank uniqueness, shared basis
+//!   seed, and grad-layout fingerprint BEFORE the first gradient round.
+//!   Connections are persistent — established once, reused every round
+//!   (no per-round connects, same zero-respawn discipline as the
+//!   worker pool and the in-process ring).
+//!
+//! * [`transport`] — [`TcpRingTransport`]: the [`crate::comm::Transport`]
+//!   impl whose `local_endpoints() == 1`. Chunk boundaries, hop order,
+//!   and accumulation order are byte-for-byte the in-process ring's, and
+//!   f32 chunks travel as exact little-endian bytes — so a TCP world's
+//!   reduced gradients (and therefore its training losses) are bitwise
+//!   identical to `--transport inproc`. A per-rank persistent reader
+//!   thread drains the upstream link so the ring can never write-write
+//!   deadlock; a round-0 probe all-reduces 1.0 to verify the assembled
+//!   ring end-to-end.
+//!
+//! * [`launch`] — `train --spawn-local N`: forks N ranks of this binary
+//!   as local subprocesses on auto-assigned loopback ports (tests/CI),
+//!   supervising them so one dead rank fails the whole launch.
+//!
+//! ## Determinism contract
+//!
+//! Two invariants make `--transport tcp` a drop-in for `inproc`:
+//! (1) the handshake pins everything the shared-seed low-rank collective
+//! derives locally (basis seed, layout fingerprint, world size), so no
+//! basis bytes ever cross the wire; (2) the ring schedule and float
+//! encoding are exact, so the reduced mean gradient — and every
+//! downstream optimizer step — matches the in-process transport bit for
+//! bit (pinned in rust/tests/net_props.rs and the e2e suite).
+
+pub mod launch;
+pub mod transport;
+pub mod wire;
+pub mod world;
+
+pub use transport::TcpRingTransport;
+pub use wire::NetError;
+pub use world::{NetConfig, WorldConfig};

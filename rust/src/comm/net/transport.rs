@@ -1,0 +1,512 @@
+//! [`TcpRingTransport`] — the socket backend of [`Transport`]: this
+//! process is ONE rank of an N-rank ring whose other members are peer
+//! processes (same or different hosts) reached over the persistent
+//! links [`TcpWorld`] established.
+//!
+//! ## Determinism contract
+//!
+//! The collective schedule is byte-for-byte the in-process
+//! `ring_worker`'s: identical chunk boundaries (`c·len/N`), identical
+//! hop order, and identical accumulation order (`own += received`, in
+//! ring-arrival order). f32 payloads travel as little-endian bytes —
+//! an exact roundtrip — so a TCP world's reduced gradient is bitwise
+//! identical to the in-process transport's (pinned in
+//! rust/tests/net_props.rs), and training under `--transport tcp`
+//! reproduces `--transport inproc` losses exactly.
+//!
+//! ## Concurrency shape
+//!
+//! One persistent reader thread per rank owns the upstream (recv)
+//! stream and decodes frames into a bounded channel; the coordinator
+//! thread writes to the downstream (send) stream and consumes decoded
+//! frames. This keeps the classic ring deadlock away — every rank's
+//! inbound bytes are ALWAYS being drained, so a blocking send can never
+//! wedge the whole ring — without per-round thread spawns (the reader
+//! is created once, like the pool and ring workers). Payload buffers
+//! ping-pong between the reader and the coordinator through a recycle
+//! channel, so steady-state rounds reuse the same few allocations.
+//!
+//! Failures never panic the process: a dead peer surfaces as
+//! `peer-disconnected`/`truncated-frame`, a hung one as `peer-timeout`,
+//! cross-talk as `unexpected-rank`/`round-mismatch` — all typed
+//! [`NetError`]s carried through `anyhow` with rank/round context.
+
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::comm::transport::{Transport, TransportStats};
+
+use super::wire::{encode_frame, read_frame, FrameHeader, FrameKind, NetError};
+use super::world::{TcpWorld, WorldConfig};
+
+/// The socket [`Transport`]: `world_size()` ranks across processes,
+/// exactly one of which (`local_endpoints() == 1`) lives here.
+pub struct TcpRingTransport {
+    world: usize,
+    rank: usize,
+    state: Mutex<TcpState>,
+}
+
+struct TcpState {
+    /// Downstream link (to rank+1); `None` for a world of 1.
+    send: Option<TcpStream>,
+    /// Upstream link, owned by the reader thread.
+    reader: Option<ReaderLink>,
+    /// Encoded-frame scratch (header + payload + crc), reused per hop.
+    frame: Vec<u8>,
+    /// Outgoing payload byte scratch, reused per hop.
+    payload: Vec<u8>,
+    /// Collective round counter; every frame carries it and every
+    /// received frame must match it (lockstep check).
+    round: u64,
+    io_timeout: Duration,
+}
+
+struct ReaderLink {
+    frames: Receiver<Result<(FrameHeader, Vec<u8>), NetError>>,
+    recycle: SyncSender<Vec<u8>>,
+    /// Clone of the recv stream: `Drop` shuts it down to unblock the
+    /// reader's blocking read.
+    shutdown: TcpStream,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The reader thread: decode frames off the upstream stream forever,
+/// reusing payload buffers returned through the recycle channel. Exits
+/// on any decode error (forwarded to the coordinator) or when the
+/// coordinator goes away.
+fn reader_loop(
+    mut stream: TcpStream,
+    tx: SyncSender<Result<(FrameHeader, Vec<u8>), NetError>>,
+    recycle: Receiver<Vec<u8>>,
+) {
+    loop {
+        let mut payload = recycle.try_recv().unwrap_or_default();
+        match read_frame(&mut stream, &mut payload) {
+            Ok(hdr) => {
+                if tx.send(Ok((hdr, payload))).is_err() {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(Err(e));
+                return;
+            }
+        }
+    }
+}
+
+/// Stage f32s as little-endian payload bytes (exact roundtrip).
+fn stage_f32(out: &mut Vec<u8>, vals: &[f32]) {
+    out.clear();
+    out.reserve(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn stage_f64(out: &mut Vec<u8>, vals: &[f64]) {
+    out.clear();
+    out.reserve(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+impl TcpState {
+    /// Frame and send the staged payload. Returns real wire bytes
+    /// (header + payload + crc) — what the comm metrics record.
+    fn send_staged(
+        &mut self,
+        rank: u32,
+        kind: FrameKind,
+        round: u64,
+    ) -> Result<usize, NetError> {
+        use std::io::Write;
+        let total =
+            encode_frame(&mut self.frame, kind, rank, round, &self.payload)?;
+        let stream = self.send.as_mut().ok_or(NetError::PeerDisconnected)?;
+        stream.write_all(&self.frame)?;
+        Ok(total)
+    }
+
+    /// Receive one frame and validate its provenance: kind, upstream
+    /// rank, lockstep round, and exact payload size.
+    fn recv_expect(
+        &mut self,
+        kind: FrameKind,
+        from: u32,
+        round: u64,
+        needed: usize,
+    ) -> Result<Vec<u8>, NetError> {
+        let link = self.reader.as_ref().ok_or(NetError::PeerDisconnected)?;
+        let res = match link.frames.recv_timeout(self.io_timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => return Err(NetError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(NetError::PeerDisconnected)
+            }
+        };
+        let (hdr, payload) = res?;
+        if hdr.kind != kind {
+            return Err(NetError::UnexpectedKind { expected: kind, got: hdr.kind });
+        }
+        if hdr.rank != from {
+            return Err(NetError::UnexpectedRank { expected: from, got: hdr.rank });
+        }
+        if hdr.round != round {
+            return Err(NetError::RoundMismatch { expected: round, got: hdr.round });
+        }
+        if payload.len() != needed {
+            return Err(NetError::Truncated { needed, got: payload.len() });
+        }
+        Ok(payload)
+    }
+
+    /// Hand a consumed payload buffer back to the reader for reuse.
+    fn recycle(&mut self, payload: Vec<u8>) {
+        if let Some(link) = &self.reader {
+            let _ = link.recycle.try_send(payload);
+        }
+    }
+}
+
+impl TcpRingTransport {
+    /// Bind/dial/handshake the world, spawn the persistent reader, and
+    /// run the round-0 liveness probe through the data path. Returns
+    /// only when this rank is ready for gradient rounds.
+    pub fn establish(cfg: &WorldConfig) -> Result<TcpRingTransport> {
+        let (rank, world) = (cfg.net.rank, cfg.net.world);
+        let tw = TcpWorld::establish(cfg).map_err(|e| {
+            anyhow!("establish tcp world (rank {rank} of {world}): {e}")
+        })?;
+        let t = TcpRingTransport::from_world(tw, cfg.io_timeout)?;
+        t.probe()?;
+        Ok(t)
+    }
+
+    fn from_world(
+        w: TcpWorld,
+        io_timeout: Duration,
+    ) -> Result<TcpRingTransport> {
+        if let Some(s) = &w.send {
+            s.set_write_timeout(Some(io_timeout))?;
+        }
+        let reader = match w.recv {
+            None => None,
+            Some(stream) => {
+                // The reader blocks in read() between rounds (no frame
+                // is due); liveness while one IS due is enforced by the
+                // coordinator's recv_timeout instead.
+                stream.set_read_timeout(None)?;
+                let shutdown = stream.try_clone()?;
+                let (tx, frames) = sync_channel(2);
+                let (recycle, recycle_rx) = sync_channel::<Vec<u8>>(2);
+                let handle = std::thread::Builder::new()
+                    .name(format!("net-recv-{}", w.rank))
+                    .spawn(move || reader_loop(stream, tx, recycle_rx))
+                    .expect("spawn net reader");
+                Some(ReaderLink {
+                    frames,
+                    recycle,
+                    shutdown,
+                    handle: Some(handle),
+                })
+            }
+        };
+        Ok(TcpRingTransport {
+            world: w.world,
+            rank: w.rank,
+            state: Mutex::new(TcpState {
+                send: w.send,
+                reader,
+                frame: Vec::new(),
+                payload: Vec::new(),
+                round: 0,
+                io_timeout,
+            }),
+        })
+    }
+
+    /// This process's world rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Round 0: all-reduce a single 1.0 through the ring. Every rank
+    /// must see exactly `world` — a cheap end-to-end check that the
+    /// whole ring is connected and counting the same world before the
+    /// first gradient round.
+    fn probe(&self) -> Result<()> {
+        if self.world == 1 {
+            return Ok(());
+        }
+        let mut bufs = vec![vec![1.0f32]];
+        self.all_reduce_sum(&mut bufs)?;
+        let sum = bufs[0][0];
+        if (sum - self.world as f32).abs() > 0.25 {
+            return Err(anyhow!(
+                "ring probe: {}",
+                NetError::WorldSizeMismatch {
+                    ours: self.world as u32,
+                    theirs: sum.round() as u32,
+                }
+            ));
+        }
+        Ok(())
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, TcpState> {
+        // A poisoning panic already failed the run; the transport state
+        // (streams + scratch) is still structurally sound for cleanup.
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl Transport for TcpRingTransport {
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn local_endpoints(&self) -> usize {
+        1
+    }
+
+    fn all_reduce_sum(&self, buffers: &mut [Vec<f32>]) -> Result<TransportStats> {
+        assert_eq!(buffers.len(), 1, "a tcp rank owns exactly one buffer");
+        let mut st = self.lock();
+        let round = st.round;
+        st.round += 1;
+        let n = self.world;
+        if n == 1 {
+            return Ok(TransportStats { bytes_sent_per_worker: 0, hops: 0 });
+        }
+        let rank = self.rank;
+        let prev = ((rank + n - 1) % n) as u32;
+        let buf = &mut buffers[0];
+        let len = buf.len();
+        // Chunk boundaries: identical to the in-process ring_worker.
+        let start = |c: usize| c * len / n;
+        let mut sent = 0usize;
+        // Phase 1: reduce-scatter (add order identical to ring_worker —
+        // own chunk += received chunk, in ring-arrival order).
+        for step in 0..n - 1 {
+            let send_chunk = (rank + n - step) % n;
+            let (s0, s1) = (start(send_chunk), start(send_chunk + 1));
+            stage_f32(&mut st.payload, &buf[s0..s1]);
+            sent += st
+                .send_staged(rank as u32, FrameKind::Data, round)
+                .map_err(|e| {
+                    anyhow!("tcp ring rank {rank} round {round} send: {e}")
+                })?;
+            let recv_chunk = (rank + n - step - 1 + n) % n;
+            let (r0, r1) = (start(recv_chunk), start(recv_chunk + 1));
+            let data = st
+                .recv_expect(FrameKind::Data, prev, round, (r1 - r0) * 4)
+                .map_err(|e| {
+                    anyhow!("tcp ring rank {rank} round {round} recv: {e}")
+                })?;
+            for (dst, src) in buf[r0..r1].iter_mut().zip(data.chunks_exact(4))
+            {
+                *dst += f32::from_le_bytes(src.try_into().unwrap());
+            }
+            st.recycle(data);
+        }
+        // Phase 2: all-gather.
+        for step in 0..n - 1 {
+            let send_chunk = (rank + 1 + n - step) % n;
+            let (s0, s1) = (start(send_chunk), start(send_chunk + 1));
+            stage_f32(&mut st.payload, &buf[s0..s1]);
+            sent += st
+                .send_staged(rank as u32, FrameKind::Data, round)
+                .map_err(|e| {
+                    anyhow!("tcp ring rank {rank} round {round} send: {e}")
+                })?;
+            let recv_chunk = (rank + n - step) % n;
+            let (r0, r1) = (start(recv_chunk), start(recv_chunk + 1));
+            let data = st
+                .recv_expect(FrameKind::Data, prev, round, (r1 - r0) * 4)
+                .map_err(|e| {
+                    anyhow!("tcp ring rank {rank} round {round} recv: {e}")
+                })?;
+            for (dst, src) in buf[r0..r1].iter_mut().zip(data.chunks_exact(4))
+            {
+                *dst = f32::from_le_bytes(src.try_into().unwrap());
+            }
+            st.recycle(data);
+        }
+        Ok(TransportStats { bytes_sent_per_worker: sent, hops: 2 * (n - 1) })
+    }
+
+    /// Ring all-gather of the loss sidecar: on return `out` holds every
+    /// rank's `local` values in rank order — the exact fold order the
+    /// in-process trainer uses, so loss series match bitwise. Returns
+    /// the real wire bytes this rank sent for the sidecar.
+    fn all_gather_f64(
+        &self,
+        local: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<usize> {
+        let n = self.world;
+        let l = local.len();
+        out.clear();
+        out.resize(n * l, 0.0);
+        out[self.rank * l..(self.rank + 1) * l].copy_from_slice(local);
+        if n == 1 {
+            return Ok(0);
+        }
+        let mut st = self.lock();
+        let round = st.round;
+        st.round += 1;
+        let rank = self.rank;
+        let prev = ((rank + n - 1) % n) as u32;
+        let mut sent = 0usize;
+        for step in 0..n - 1 {
+            // Relay: first hop sends our own slot, hop s forwards the
+            // slot received at hop s-1.
+            let send_idx = (rank + n - step) % n;
+            stage_f64(&mut st.payload, &out[send_idx * l..(send_idx + 1) * l]);
+            sent += st
+                .send_staged(rank as u32, FrameKind::Gather, round)
+                .map_err(|e| {
+                    anyhow!("tcp gather rank {rank} round {round} send: {e}")
+                })?;
+            let recv_idx = (rank + n - step - 1) % n;
+            let data = st
+                .recv_expect(FrameKind::Gather, prev, round, l * 8)
+                .map_err(|e| {
+                    anyhow!("tcp gather rank {rank} round {round} recv: {e}")
+                })?;
+            for (dst, src) in out[recv_idx * l..(recv_idx + 1) * l]
+                .iter_mut()
+                .zip(data.chunks_exact(8))
+            {
+                *dst = f64::from_le_bytes(src.try_into().unwrap());
+            }
+            st.recycle(data);
+        }
+        Ok(sent)
+    }
+}
+
+impl Drop for TcpRingTransport {
+    fn drop(&mut self) {
+        let mut st = self.lock();
+        if let Some(s) = st.send.take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(link) = st.reader.take() {
+            let ReaderLink { frames, recycle, shutdown, handle } = link;
+            // Unblock the reader whether it is parked in read() (stream
+            // shutdown -> EOF) or in channel send (receiver dropped).
+            let _ = shutdown.shutdown(Shutdown::Both);
+            drop(frames);
+            drop(recycle);
+            if let Some(h) = handle {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::net::world::NetConfig;
+    use crate::comm::RingTransport;
+
+    fn free_peers(n: usize) -> Vec<String> {
+        crate::comm::net::launch::free_loopback_peers(n).unwrap()
+    }
+
+    fn world_cfg(world: usize, rank: usize, peers: Vec<String>) -> WorldConfig {
+        let mut cfg = WorldConfig::new(
+            NetConfig { world, rank, peers },
+            0xBA5E,
+            0x1A40,
+        );
+        cfg.connect_timeout = Duration::from_secs(5);
+        cfg.io_timeout = Duration::from_secs(5);
+        cfg
+    }
+
+    /// Stand up a full loopback world, run `rounds` all-reduces per
+    /// rank, and return every rank's final buffer.
+    fn run_world(
+        world: usize,
+        seeds: &[Vec<f32>],
+        rounds: usize,
+    ) -> Vec<Vec<f32>> {
+        let peers = free_peers(world);
+        let mut handles = Vec::new();
+        for rank in 0..world {
+            let cfg = world_cfg(world, rank, peers.clone());
+            let mut buf = seeds[rank].clone();
+            handles.push(std::thread::spawn(move || {
+                let t = TcpRingTransport::establish(&cfg).unwrap();
+                for _ in 0..rounds {
+                    let mut bufs = vec![std::mem::take(&mut buf)];
+                    t.all_reduce_sum(&mut bufs).unwrap();
+                    buf = bufs.pop().unwrap();
+                }
+                buf
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn loopback_world_sums_bitwise_like_inproc() {
+        let n = 3;
+        let seeds: Vec<Vec<f32>> = (0..n)
+            .map(|r| (0..37).map(|i| (r * 100 + i) as f32 * 0.25).collect())
+            .collect();
+        let mut inproc = seeds.clone();
+        RingTransport::new(n).all_reduce_sum(&mut inproc).unwrap();
+        let tcp = run_world(n, &seeds, 1);
+        for r in 0..n {
+            assert_eq!(tcp[r], inproc[r], "rank {r} diverged");
+        }
+    }
+
+    #[test]
+    fn world_one_is_local_noop() {
+        let cfg = world_cfg(1, 0, vec!["127.0.0.1:1".into()]);
+        let t = TcpRingTransport::establish(&cfg).unwrap();
+        assert_eq!(t.world_size(), 1);
+        assert_eq!(t.local_endpoints(), 1);
+        let mut bufs = vec![vec![2.0f32, 3.0]];
+        let stats = t.all_reduce_sum(&mut bufs).unwrap();
+        assert_eq!(stats.hops, 0);
+        assert_eq!(bufs[0], vec![2.0, 3.0]);
+        let mut out = Vec::new();
+        t.all_gather_f64(&[1.25, 2.5], &mut out).unwrap();
+        assert_eq!(out, vec![1.25, 2.5]);
+    }
+
+    #[test]
+    fn gather_orders_by_rank() {
+        let n = 3;
+        let peers = free_peers(n);
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let cfg = world_cfg(n, rank, peers.clone());
+            handles.push(std::thread::spawn(move || {
+                let t = TcpRingTransport::establish(&cfg).unwrap();
+                let local = [rank as f64 * 10.0, rank as f64 * 10.0 + 1.0];
+                let mut out = Vec::new();
+                t.all_gather_f64(&local, &mut out).unwrap();
+                out
+            }));
+        }
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(got, vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        }
+    }
+}

@@ -1,0 +1,444 @@
+//! Length-prefixed, CRC-checked frame codec for the TCP ring transport.
+//!
+//! ## Wire format (all integers little-endian)
+//!
+//! ```text
+//!  offset  size  field
+//!  ------  ----  --------------------------------------------------
+//!       0     4  magic        0x47574E31 ("GWN1", sync marker)
+//!       4     2  version      protocol version (VERSION)
+//!       6     1  kind         FrameKind discriminant
+//!       7     1  reserved     must be 0
+//!       8     4  rank         sender's world rank
+//!      12     8  round        sender's collective round counter
+//!      20     4  payload_len  payload byte count (<= MAX_PAYLOAD)
+//!      24     n  payload      kind-specific bytes
+//!    24+n     4  crc32        IEEE CRC32 over bytes [4, 24+n)
+//! ```
+//!
+//! The CRC covers everything after the magic (header fields AND
+//! payload), so a flipped bit anywhere in a frame surfaces as
+//! [`NetError::CrcMismatch`] instead of a silently-wrong gradient. A
+//! malformed peer can NEVER panic this process: every decode failure is
+//! a typed [`NetError`] with a stable [`NetError::name`] the tests and
+//! operators match on.
+//!
+//! EOF discipline: a connection that closes cleanly *between* frames
+//! decodes as [`NetError::PeerDisconnected`]; one that dies *inside* a
+//! frame decodes as [`NetError::Truncated`].
+
+use std::fmt;
+use std::io::{self, Read};
+
+use crate::util::crc::Crc32;
+
+/// Frame sync marker: "GWN1".
+pub const MAGIC: u32 = 0x4757_4E31;
+/// Protocol version; bumped on any wire-format change.
+pub const VERSION: u16 = 1;
+/// Fixed header size (magic through payload_len).
+pub const HEADER_LEN: usize = 24;
+/// Trailer size (crc32).
+pub const TRAILER_LEN: usize = 4;
+/// Hard payload cap — a corrupt length prefix must not OOM the process.
+pub const MAX_PAYLOAD: usize = 1 << 30;
+
+/// What a frame carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Dialer → acceptor: world size, basis seed, layout fingerprint.
+    Hello = 1,
+    /// Acceptor → dialer: handshake accepted (same payload, echoed back
+    /// so the dialer validates the acceptor symmetrically).
+    Welcome = 2,
+    /// Acceptor → dialer: handshake refused; payload = UTF-8 reason.
+    Reject = 3,
+    /// One ring hop of f32 chunk data (reduce-scatter / all-gather).
+    Data = 4,
+    /// One ring hop of f64 sidecar data (loss all-gather).
+    Gather = 5,
+}
+
+impl FrameKind {
+    pub fn from_u8(v: u8) -> Option<FrameKind> {
+        match v {
+            1 => Some(FrameKind::Hello),
+            2 => Some(FrameKind::Welcome),
+            3 => Some(FrameKind::Reject),
+            4 => Some(FrameKind::Data),
+            5 => Some(FrameKind::Gather),
+            _ => None,
+        }
+    }
+}
+
+/// Decoded frame header (payload travels separately, in a reused buffer).
+#[derive(Clone, Copy, Debug)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    pub rank: u32,
+    pub round: u64,
+    pub len: usize,
+}
+
+/// Every way the net subsystem can fail, as a typed, named error — no
+/// panics on malformed peers. `name()` is the stable identifier the
+/// failure-mode tests match on.
+#[derive(Debug)]
+pub enum NetError {
+    Io(io::Error),
+    /// A read or connect exceeded its deadline.
+    Timeout,
+    BadMagic(u32),
+    VersionMismatch { ours: u16, theirs: u16 },
+    UnknownKind(u8),
+    /// The stream died mid-frame (or a payload had the wrong size).
+    Truncated { needed: usize, got: usize },
+    CrcMismatch { expected: u32, got: u32 },
+    FrameTooLarge(usize),
+    /// Clean close between frames — the peer process went away.
+    PeerDisconnected,
+    WorldSizeMismatch { ours: u32, theirs: u32 },
+    /// Two processes claim the same rank slot (bind conflict or a Hello
+    /// carrying our own rank). `addr` names the contested listener
+    /// address when the conflict surfaced as a bind failure — without
+    /// it an unrelated daemon squatting the port reads as a phantom
+    /// duplicate launch.
+    DuplicateRank { rank: u32, addr: Option<String> },
+    RankOutOfRange { rank: u32, world: u32 },
+    /// A frame arrived from the wrong ring neighbor.
+    UnexpectedRank { expected: u32, got: u32 },
+    BasisSeedMismatch { ours: u64, theirs: u64 },
+    LayoutMismatch { ours: u64, theirs: u64 },
+    /// Lockstep violation: a frame for a different collective round.
+    RoundMismatch { expected: u64, got: u64 },
+    UnexpectedKind { expected: FrameKind, got: FrameKind },
+    /// The remote acceptor refused our handshake; reason echoed back.
+    HandshakeRejected(String),
+    ConnectFailed { addr: String },
+    Config(String),
+}
+
+impl NetError {
+    /// Stable kebab-case identifier for each failure class.
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetError::Io(_) => "io-error",
+            NetError::Timeout => "peer-timeout",
+            NetError::BadMagic(_) => "bad-magic",
+            NetError::VersionMismatch { .. } => "version-mismatch",
+            NetError::UnknownKind(_) => "unknown-frame-kind",
+            NetError::Truncated { .. } => "truncated-frame",
+            NetError::CrcMismatch { .. } => "corrupt-frame",
+            NetError::FrameTooLarge(_) => "frame-too-large",
+            NetError::PeerDisconnected => "peer-disconnected",
+            NetError::WorldSizeMismatch { .. } => "world-size-mismatch",
+            NetError::DuplicateRank { .. } => "duplicate-rank",
+            NetError::RankOutOfRange { .. } => "rank-out-of-range",
+            NetError::UnexpectedRank { .. } => "unexpected-rank",
+            NetError::BasisSeedMismatch { .. } => "basis-seed-mismatch",
+            NetError::LayoutMismatch { .. } => "layout-mismatch",
+            NetError::RoundMismatch { .. } => "round-mismatch",
+            NetError::UnexpectedKind { .. } => "unexpected-frame-kind",
+            NetError::HandshakeRejected(_) => "handshake-rejected",
+            NetError::ConnectFailed { .. } => "connect-failed",
+            NetError::Config(_) => "net-config",
+        }
+    }
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: ", self.name())?;
+        match self {
+            NetError::Io(e) => write!(f, "{e}"),
+            NetError::Timeout => write!(f, "peer did not respond in time"),
+            NetError::BadMagic(m) => {
+                write!(f, "expected {MAGIC:#010x}, got {m:#010x}")
+            }
+            NetError::VersionMismatch { ours, theirs } => {
+                write!(f, "we speak v{ours}, peer sent v{theirs}")
+            }
+            NetError::UnknownKind(k) => write!(f, "kind byte {k}"),
+            NetError::Truncated { needed, got } => {
+                write!(f, "needed {needed} bytes, got {got}")
+            }
+            NetError::CrcMismatch { expected, got } => {
+                write!(f, "crc {expected:#010x} expected, frame carried {got:#010x}")
+            }
+            NetError::FrameTooLarge(n) => {
+                write!(f, "payload of {n} bytes exceeds {MAX_PAYLOAD}")
+            }
+            NetError::PeerDisconnected => {
+                write!(f, "connection closed by peer")
+            }
+            NetError::WorldSizeMismatch { ours, theirs } => {
+                write!(f, "our world is {ours}, peer's is {theirs}")
+            }
+            NetError::DuplicateRank { rank, addr } => {
+                write!(f, "another process already claims rank {rank}")?;
+                if let Some(a) = addr {
+                    write!(f, " (listener bind {a}: address in use)")?;
+                }
+                Ok(())
+            }
+            NetError::RankOutOfRange { rank, world } => {
+                write!(f, "rank {rank} outside world of {world}")
+            }
+            NetError::UnexpectedRank { expected, got } => {
+                write!(f, "expected ring neighbor {expected}, got rank {got}")
+            }
+            NetError::BasisSeedMismatch { ours, theirs } => {
+                write!(f, "our shared basis seed {ours:#x}, peer's {theirs:#x}")
+            }
+            NetError::LayoutMismatch { ours, theirs } => {
+                write!(
+                    f,
+                    "our grad layout fingerprint {ours:#x}, peer's {theirs:#x}"
+                )
+            }
+            NetError::RoundMismatch { expected, got } => {
+                write!(f, "expected round {expected}, frame is for {got}")
+            }
+            NetError::UnexpectedKind { expected, got } => {
+                write!(f, "expected {expected:?}, got {got:?}")
+            }
+            NetError::HandshakeRejected(reason) => {
+                write!(f, "peer refused: {reason}")
+            }
+            NetError::ConnectFailed { addr } => {
+                write!(f, "no peer listening at {addr} within the deadline")
+            }
+            NetError::Config(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NetError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for NetError {
+    fn from(e: io::Error) -> NetError {
+        match e.kind() {
+            io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+                NetError::Timeout
+            }
+            _ => NetError::Io(e),
+        }
+    }
+}
+
+/// Encode one frame into `out` (cleared and reused — steady-state rounds
+/// reuse the buffer's capacity). Returns the total frame size in bytes,
+/// which is exactly what goes on the wire. A payload beyond
+/// [`MAX_PAYLOAD`] is rejected HERE, sender-side — the u32 length
+/// prefix must never wrap and desync the stream (a 7B-parameter model's
+/// 14 GB chunk would otherwise misparse at the receiver as cascading
+/// bad-magic errors).
+pub fn encode_frame(
+    out: &mut Vec<u8>,
+    kind: FrameKind,
+    rank: u32,
+    round: u64,
+    payload: &[u8],
+) -> Result<usize, NetError> {
+    if payload.len() > MAX_PAYLOAD {
+        return Err(NetError::FrameTooLarge(payload.len()));
+    }
+    out.clear();
+    out.reserve(HEADER_LEN + payload.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind as u8);
+    out.push(0);
+    out.extend_from_slice(&rank.to_le_bytes());
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let mut crc = Crc32::new();
+    crc.update(&out[4..]);
+    out.extend_from_slice(&crc.finish().to_le_bytes());
+    Ok(out.len())
+}
+
+/// Fill `buf` from the reader. `frame_start` selects the EOF semantics:
+/// a clean close before the first byte is `PeerDisconnected`; any later
+/// EOF is `Truncated`.
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    frame_start: bool,
+) -> Result<(), NetError> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if frame_start && got == 0 {
+                    NetError::PeerDisconnected
+                } else {
+                    NetError::Truncated { needed: buf.len(), got }
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(NetError::from(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read and validate one frame. The payload lands in `payload` (cleared
+/// and reused across calls — zero steady-state allocations once its
+/// capacity covers the largest chunk).
+pub fn read_frame(
+    r: &mut impl Read,
+    payload: &mut Vec<u8>,
+) -> Result<FrameHeader, NetError> {
+    let mut head = [0u8; HEADER_LEN];
+    read_full(r, &mut head, true)?;
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(NetError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(head[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(NetError::VersionMismatch { ours: VERSION, theirs: version });
+    }
+    let kind =
+        FrameKind::from_u8(head[6]).ok_or(NetError::UnknownKind(head[6]))?;
+    let rank = u32::from_le_bytes(head[8..12].try_into().unwrap());
+    let round = u64::from_le_bytes(head[12..20].try_into().unwrap());
+    let len = u32::from_le_bytes(head[20..24].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(NetError::FrameTooLarge(len));
+    }
+    payload.resize(len, 0);
+    read_full(r, payload, false)?;
+    let mut crc_bytes = [0u8; TRAILER_LEN];
+    read_full(r, &mut crc_bytes, false)?;
+    let got = u32::from_le_bytes(crc_bytes);
+    let mut crc = Crc32::new();
+    crc.update(&head[4..]);
+    crc.update(payload);
+    let expected = crc.finish();
+    if got != expected {
+        return Err(NetError::CrcMismatch { expected, got });
+    }
+    Ok(FrameHeader { kind, rank, round, len })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(kind: FrameKind, rank: u32, round: u64, payload: &[u8]) {
+        let mut frame = Vec::new();
+        let total = encode_frame(&mut frame, kind, rank, round, payload).unwrap();
+        assert_eq!(total, HEADER_LEN + payload.len() + TRAILER_LEN);
+        let mut cursor = &frame[..];
+        let mut out = Vec::new();
+        let hdr = read_frame(&mut cursor, &mut out).unwrap();
+        assert_eq!(hdr.kind, kind);
+        assert_eq!(hdr.rank, rank);
+        assert_eq!(hdr.round, round);
+        assert_eq!(hdr.len, payload.len());
+        assert_eq!(out, payload);
+        assert!(cursor.is_empty(), "frame must consume exactly its bytes");
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        roundtrip(FrameKind::Hello, 0, 0, &[]);
+        roundtrip(FrameKind::Data, 3, 17, &[1, 2, 3, 4, 5]);
+        roundtrip(FrameKind::Gather, 7, u64::MAX, &[0u8; 128]);
+    }
+
+    #[test]
+    fn payload_buffer_is_reused() {
+        let mut frame = Vec::new();
+        encode_frame(&mut frame, FrameKind::Data, 0, 1, &[9u8; 64]).unwrap();
+        let mut out = Vec::with_capacity(64);
+        let ptr_before = out.as_ptr();
+        let mut cursor = &frame[..];
+        read_frame(&mut cursor, &mut out).unwrap();
+        assert_eq!(out.as_ptr(), ptr_before, "no realloc within capacity");
+    }
+
+    #[test]
+    fn corrupt_payload_is_crc_mismatch() {
+        let mut frame = Vec::new();
+        encode_frame(&mut frame, FrameKind::Data, 1, 2, &[7u8; 32]).unwrap();
+        let mid = HEADER_LEN + 5;
+        frame[mid] ^= 0xFF;
+        let mut out = Vec::new();
+        let err = read_frame(&mut &frame[..], &mut out).unwrap_err();
+        assert_eq!(err.name(), "corrupt-frame");
+    }
+
+    #[test]
+    fn corrupt_header_field_is_caught_by_crc() {
+        let mut frame = Vec::new();
+        encode_frame(&mut frame, FrameKind::Data, 1, 2, &[7u8; 8]).unwrap();
+        frame[12] ^= 0x01; // flip a round bit
+        let mut out = Vec::new();
+        let err = read_frame(&mut &frame[..], &mut out).unwrap_err();
+        assert_eq!(err.name(), "corrupt-frame");
+    }
+
+    #[test]
+    fn truncated_frame_names_itself() {
+        let mut frame = Vec::new();
+        encode_frame(&mut frame, FrameKind::Data, 1, 2, &[7u8; 32]).unwrap();
+        let mut out = Vec::new();
+        // Cut inside the payload.
+        let err =
+            read_frame(&mut &frame[..HEADER_LEN + 10], &mut out).unwrap_err();
+        assert_eq!(err.name(), "truncated-frame");
+        // Cut inside the header.
+        let err = read_frame(&mut &frame[..7], &mut out).unwrap_err();
+        assert_eq!(err.name(), "truncated-frame");
+    }
+
+    #[test]
+    fn clean_eof_is_peer_disconnected() {
+        let empty: &[u8] = &[];
+        let mut out = Vec::new();
+        let err = read_frame(&mut &empty[..], &mut out).unwrap_err();
+        assert_eq!(err.name(), "peer-disconnected");
+    }
+
+    #[test]
+    fn bad_magic_and_version_named() {
+        let mut frame = Vec::new();
+        encode_frame(&mut frame, FrameKind::Hello, 0, 0, &[]).unwrap();
+        let mut garbled = frame.clone();
+        garbled[0] = 0x00;
+        let mut out = Vec::new();
+        let err = read_frame(&mut &garbled[..], &mut out).unwrap_err();
+        assert_eq!(err.name(), "bad-magic");
+        // Version check fires before the CRC (a future-version peer is a
+        // version problem, not corruption).
+        let mut newer = frame;
+        newer[4] = 0xFE;
+        let err = read_frame(&mut &newer[..], &mut out).unwrap_err();
+        assert_eq!(err.name(), "version-mismatch");
+    }
+
+    #[test]
+    fn oversize_length_prefix_rejected_without_allocating() {
+        let mut frame = Vec::new();
+        encode_frame(&mut frame, FrameKind::Data, 0, 0, &[1u8; 4]).unwrap();
+        frame[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut out = Vec::new();
+        let err = read_frame(&mut &frame[..], &mut out).unwrap_err();
+        assert_eq!(err.name(), "frame-too-large");
+        assert!(out.capacity() < 1024, "must not size to the bogus prefix");
+    }
+}

@@ -1,0 +1,365 @@
+//! Ring rendezvous: listener binding, neighbor dialing, and the
+//! handshake that validates a world before its first gradient round.
+//!
+//! Every rank binds a listener at its own `peers[rank]` address, dials
+//! its downstream neighbor `peers[(rank+1) % world]`, and accepts one
+//! connection from its upstream neighbor. Both directions of every link
+//! carry a Hello/Welcome exchange of `(world, basis_seed,
+//! layout_fingerprint)`, and BOTH endpoints validate — so any
+//! misconfigured process is rejected by name at some link of the ring
+//! before a single gradient byte moves:
+//!
+//! * `world-size-mismatch` — the peer was launched with a different
+//!   `--world`;
+//! * `duplicate-rank` — two processes claim one rank slot (surfaces as a
+//!   bind conflict on the shared peer list, or as a Hello carrying our
+//!   own rank);
+//! * `rank-out-of-range` / `unexpected-rank` — the peer list and rank
+//!   assignment disagree;
+//! * `basis-seed-mismatch` — the shared-seed low-rank bases would
+//!   diverge (different `--seed`);
+//! * `layout-mismatch` — the gradient layouts differ (different model).
+//!
+//! Connections are persistent: the two streams established here are
+//! reused for every collective round of the run (no per-round connects,
+//! mirroring the zero-respawn discipline of the in-process pool and
+//! ring workers).
+
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::wire::{
+    encode_frame, read_frame, FrameKind, NetError, HEADER_LEN,
+};
+
+/// CLI-level world topology: which rank this process is, out of how
+/// many, and where every rank listens (`host:port`, index = rank).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetConfig {
+    pub world: usize,
+    pub rank: usize,
+    pub peers: Vec<String>,
+}
+
+/// Everything `establish` needs: topology plus the determinism contract
+/// (basis seed + layout fingerprint) the handshake enforces.
+#[derive(Clone, Debug)]
+pub struct WorldConfig {
+    pub net: NetConfig,
+    pub basis_seed: u64,
+    pub layout_fingerprint: u64,
+    /// How long to keep retrying the neighbor dial (peers may start in
+    /// any order) and to wait for the upstream accept.
+    pub connect_timeout: Duration,
+    /// Per-frame deadline once the ring is up; also the handshake read
+    /// timeout.
+    pub io_timeout: Duration,
+}
+
+impl WorldConfig {
+    pub fn new(net: NetConfig, basis_seed: u64, layout_fingerprint: u64) -> Self {
+        WorldConfig {
+            net,
+            basis_seed,
+            layout_fingerprint,
+            connect_timeout: Duration::from_secs(20),
+            io_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Hello/Welcome payload: world u32 | basis_seed u64 | layout_fp u64.
+pub(crate) fn hello_payload(cfg: &WorldConfig) -> [u8; 20] {
+    let mut p = [0u8; 20];
+    p[0..4].copy_from_slice(&(cfg.net.world as u32).to_le_bytes());
+    p[4..12].copy_from_slice(&cfg.basis_seed.to_le_bytes());
+    p[12..20].copy_from_slice(&cfg.layout_fingerprint.to_le_bytes());
+    p
+}
+
+pub(crate) fn parse_hello(p: &[u8]) -> Result<(u32, u64, u64), NetError> {
+    if p.len() != 20 {
+        return Err(NetError::Truncated { needed: 20, got: p.len() });
+    }
+    Ok((
+        u32::from_le_bytes(p[0..4].try_into().unwrap()),
+        u64::from_le_bytes(p[4..12].try_into().unwrap()),
+        u64::from_le_bytes(p[12..20].try_into().unwrap()),
+    ))
+}
+
+/// Validate a peer's Hello/Welcome against our config. `peer_rank` is
+/// the rank the frame header carried; `expected` is the ring neighbor
+/// that should be on this link.
+fn validate_peer(
+    cfg: &WorldConfig,
+    peer_rank: u32,
+    expected: u32,
+    payload: &[u8],
+) -> Result<(), NetError> {
+    let ours_world = cfg.net.world as u32;
+    let (world, seed, fp) = parse_hello(payload)?;
+    if world != ours_world {
+        return Err(NetError::WorldSizeMismatch { ours: ours_world, theirs: world });
+    }
+    if peer_rank == cfg.net.rank as u32 {
+        return Err(NetError::DuplicateRank { rank: peer_rank, addr: None });
+    }
+    if peer_rank >= ours_world {
+        return Err(NetError::RankOutOfRange { rank: peer_rank, world: ours_world });
+    }
+    if peer_rank != expected {
+        return Err(NetError::UnexpectedRank { expected, got: peer_rank });
+    }
+    if seed != cfg.basis_seed {
+        return Err(NetError::BasisSeedMismatch { ours: cfg.basis_seed, theirs: seed });
+    }
+    if fp != cfg.layout_fingerprint {
+        return Err(NetError::LayoutMismatch {
+            ours: cfg.layout_fingerprint,
+            theirs: fp,
+        });
+    }
+    Ok(())
+}
+
+fn send_frame_blocking(
+    stream: &mut TcpStream,
+    kind: FrameKind,
+    rank: u32,
+    payload: &[u8],
+) -> Result<(), NetError> {
+    use std::io::Write;
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
+    encode_frame(&mut buf, kind, rank, 0, payload)?;
+    stream.write_all(&buf)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Accept the upstream neighbor's connection and run the acceptor side
+/// of the handshake. On a validation failure the typed error is BOTH
+/// returned here and echoed to the dialer as a Reject frame, so each
+/// side of a misconfigured link reports the problem by name.
+pub fn accept_handshake(
+    listener: &TcpListener,
+    cfg: &WorldConfig,
+) -> Result<TcpStream, NetError> {
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let (mut stream, _addr) = loop {
+        match listener.accept() {
+            Ok(pair) => break pair,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(NetError::Timeout);
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(NetError::Io(e)),
+        }
+    };
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(cfg.io_timeout))?;
+    let mut payload = Vec::new();
+    let hdr = read_frame(&mut stream, &mut payload)?;
+    if hdr.kind != FrameKind::Hello {
+        return Err(NetError::UnexpectedKind {
+            expected: FrameKind::Hello,
+            got: hdr.kind,
+        });
+    }
+    let expected_prev =
+        ((cfg.net.rank + cfg.net.world - 1) % cfg.net.world) as u32;
+    if let Err(err) = validate_peer(cfg, hdr.rank, expected_prev, &payload) {
+        // Best-effort: tell the dialer why before hanging up.
+        let reason = err.to_string();
+        let _ = send_frame_blocking(
+            &mut stream,
+            FrameKind::Reject,
+            cfg.net.rank as u32,
+            reason.as_bytes(),
+        );
+        return Err(err);
+    }
+    send_frame_blocking(
+        &mut stream,
+        FrameKind::Welcome,
+        cfg.net.rank as u32,
+        &hello_payload(cfg),
+    )?;
+    Ok(stream)
+}
+
+/// Dial the downstream neighbor (retrying until it is up) and run the
+/// dialer side of the handshake, validating the acceptor symmetrically.
+pub fn dial_handshake(cfg: &WorldConfig) -> Result<TcpStream, NetError> {
+    let next = (cfg.net.rank + 1) % cfg.net.world;
+    let addr = cfg.net.peers[next].clone();
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let mut stream = loop {
+        match TcpStream::connect(&addr) {
+            Ok(s) => break s,
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(_) => return Err(NetError::ConnectFailed { addr }),
+        }
+    };
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(cfg.io_timeout))?;
+    send_frame_blocking(
+        &mut stream,
+        FrameKind::Hello,
+        cfg.net.rank as u32,
+        &hello_payload(cfg),
+    )?;
+    let mut payload = Vec::new();
+    let hdr = read_frame(&mut stream, &mut payload)?;
+    match hdr.kind {
+        FrameKind::Welcome => {
+            validate_peer(cfg, hdr.rank, next as u32, &payload)?;
+            Ok(stream)
+        }
+        FrameKind::Reject => Err(NetError::HandshakeRejected(
+            String::from_utf8_lossy(&payload).into_owned(),
+        )),
+        other => Err(NetError::UnexpectedKind {
+            expected: FrameKind::Welcome,
+            got: other,
+        }),
+    }
+}
+
+/// A fully-handshaken ring membership: the persistent send link to the
+/// downstream neighbor and receive link from the upstream neighbor.
+/// World size 1 holds no sockets (every round is local).
+pub struct TcpWorld {
+    pub world: usize,
+    pub rank: usize,
+    pub send: Option<TcpStream>,
+    pub recv: Option<TcpStream>,
+}
+
+impl TcpWorld {
+    /// Bind, dial, accept, and handshake. Returns only once both
+    /// neighbor links are up and validated (or a named error).
+    pub fn establish(cfg: &WorldConfig) -> Result<TcpWorld, NetError> {
+        let NetConfig { world, rank, ref peers } = cfg.net;
+        if world == 0 {
+            return Err(NetError::Config("world size must be >= 1".into()));
+        }
+        if rank >= world {
+            return Err(NetError::RankOutOfRange {
+                rank: rank as u32,
+                world: world as u32,
+            });
+        }
+        if world == 1 {
+            return Ok(TcpWorld { world, rank, send: None, recv: None });
+        }
+        if peers.len() != world {
+            return Err(NetError::Config(format!(
+                "--peers lists {} addresses for a world of {world}",
+                peers.len()
+            )));
+        }
+        let listener = TcpListener::bind(&peers[rank]).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::AddrInUse {
+                // Another process is already listening on our rank's
+                // slot: two launches claimed the same rank (or an
+                // unrelated daemon holds the port — the address in the
+                // message disambiguates).
+                NetError::DuplicateRank {
+                    rank: rank as u32,
+                    addr: Some(peers[rank].clone()),
+                }
+            } else {
+                NetError::Io(e)
+            }
+        })?;
+        // Accept (upstream) and dial (downstream) concurrently — with a
+        // 2-rank world the same peer process is on both ends, so doing
+        // them sequentially would deadlock.
+        let accept_cfg = cfg.clone();
+        let acceptor = std::thread::Builder::new()
+            .name(format!("net-accept-{rank}"))
+            .spawn(move || accept_handshake(&listener, &accept_cfg))
+            .expect("spawn net acceptor");
+        let dialed = dial_handshake(cfg);
+        let accepted = acceptor.join().expect("net acceptor panicked");
+        // A typed validation error from either side beats a generic
+        // timeout from the other (the timeout is usually the symptom of
+        // the peer having already rejected us).
+        match (accepted, dialed) {
+            (Ok(recv), Ok(send)) => {
+                Ok(TcpWorld { world, rank, send: Some(send), recv: Some(recv) })
+            }
+            (Err(a), Err(d)) => {
+                let a_generic =
+                    matches!(a, NetError::Timeout | NetError::Io(_));
+                Err(if a_generic { d } else { a })
+            }
+            (Err(a), Ok(_)) => Err(a),
+            (Ok(_), Err(d)) => Err(d),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(world: usize, rank: usize, seed: u64, fp: u64) -> WorldConfig {
+        WorldConfig {
+            net: NetConfig {
+                world,
+                rank,
+                peers: (0..world).map(|_| "127.0.0.1:0".into()).collect(),
+            },
+            basis_seed: seed,
+            layout_fingerprint: fp,
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(2),
+        }
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        let c = cfg(4, 1, 0xABCD, 0x1234);
+        let p = hello_payload(&c);
+        assert_eq!(parse_hello(&p).unwrap(), (4, 0xABCD, 0x1234));
+        assert_eq!(parse_hello(&p[..10]).unwrap_err().name(), "truncated-frame");
+    }
+
+    #[test]
+    fn validate_catches_each_field() {
+        let ours = cfg(4, 1, 7, 9);
+        let ok = hello_payload(&cfg(4, 0, 7, 9));
+        assert!(validate_peer(&ours, 0, 0, &ok).is_ok());
+        let werr = validate_peer(&ours, 0, 0, &hello_payload(&cfg(5, 0, 7, 9)))
+            .unwrap_err();
+        assert_eq!(werr.name(), "world-size-mismatch");
+        let derr = validate_peer(&ours, 1, 0, &ok).unwrap_err();
+        assert_eq!(derr.name(), "duplicate-rank");
+        let rerr = validate_peer(&ours, 9, 0, &ok).unwrap_err();
+        assert_eq!(rerr.name(), "rank-out-of-range");
+        let uerr = validate_peer(&ours, 2, 0, &ok).unwrap_err();
+        assert_eq!(uerr.name(), "unexpected-rank");
+        let serr = validate_peer(&ours, 0, 0, &hello_payload(&cfg(4, 0, 8, 9)))
+            .unwrap_err();
+        assert_eq!(serr.name(), "basis-seed-mismatch");
+        let ferr = validate_peer(&ours, 0, 0, &hello_payload(&cfg(4, 0, 7, 1)))
+            .unwrap_err();
+        assert_eq!(ferr.name(), "layout-mismatch");
+    }
+
+    #[test]
+    fn world_one_needs_no_sockets() {
+        let mut c = cfg(1, 0, 0, 0);
+        c.net.peers = vec!["127.0.0.1:1".into()]; // never dialed
+        let w = TcpWorld::establish(&c).unwrap();
+        assert!(w.send.is_none() && w.recv.is_none());
+    }
+}

@@ -3,10 +3,18 @@
 //!
 //! [`Transport`] abstracts one synchronous collective round over N worker
 //! endpoints so that backends can be swapped without touching the
-//! [`super::Collective`] layer above: the in-process [`RingTransport`]
-//! here stands in for NCCL; a socket backend for real multi-host rings
-//! only has to implement the same two methods (the schedule below is
-//! already expressed purely in terms of point-to-point send/recv pairs).
+//! [`super::Collective`] layer above. Two backends exist:
+//!
+//! * the in-process [`RingTransport`] here (stands in for NCCL) — every
+//!   rank's buffer lives in this process (`local_endpoints() == N`);
+//! * the multi-host [`super::net::TcpRingTransport`] — this process IS
+//!   one rank of the world and owns exactly one buffer
+//!   (`local_endpoints() == 1`); the other ranks are peer processes
+//!   reached over persistent TCP links.
+//!
+//! Both run the *same* ring schedule with the same chunk boundaries and
+//! accumulation order, so reduced results are bitwise identical across
+//! backends (pinned in rust/tests/net_props.rs).
 //!
 //! ## Persistent ring workers
 //!
@@ -16,7 +24,11 @@
 //! threads and the N neighbor links once, at construction, and reuses
 //! them for every round: a round is one bounded-channel handoff of each
 //! worker's buffer in and out. Steady-state collective rounds therefore
-//! perform zero thread spawns.
+//! perform zero thread spawns — and, since the per-link chunk buffers
+//! ping-pong around the ring (each hop reuses the vec received from the
+//! upstream neighbor as its next send buffer), zero heap allocations
+//! (hard-asserted in benches/coordinator.rs; the old code paid 2·(N−1)
+//! `to_vec` allocations per worker per round).
 //!
 //! The wire schedule is the classic bandwidth-optimal two-phase ring —
 //! reduce-scatter (N−1 hops) then all-gather (N−1 hops), ~2·(N−1)/N of
@@ -27,10 +39,14 @@
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 
+use anyhow::Result;
+
 /// Per-round transport accounting.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TransportStats {
-    /// Bytes sent by the busiest worker this round (f32 payload × 4).
+    /// Bytes sent by the busiest worker this round. For the in-process
+    /// ring this is the f32 payload × 4; for socket backends it is the
+    /// real wire byte count including frame headers.
     pub bytes_sent_per_worker: usize,
     /// Point-to-point hops per worker (2·(N−1) for the ring schedule).
     pub hops: usize,
@@ -41,12 +57,45 @@ pub struct TransportStats {
 /// `Send` (not `Sync`): a transport is owned by one coordinator — the
 /// trainer — and driven from its thread; worker-side parallelism lives
 /// behind the implementation.
+///
+/// Rounds are fallible: a socket backend surfaces peer failures
+/// (disconnects, corrupt frames, timeouts) as typed errors instead of
+/// panicking; the in-process backend only fails on programmer error.
 pub trait Transport: Send {
+    /// Global world size N: the number of rank buffers one collective
+    /// round reduces over, across every participating process.
     fn world_size(&self) -> usize;
 
-    /// All-reduce (sum) the per-worker vectors in place. Every vector
-    /// must have the same length; on return every vector holds the sum.
-    fn all_reduce_sum(&self, buffers: &mut [Vec<f32>]) -> TransportStats;
+    /// How many of the world's rank buffers live in THIS process — the
+    /// length `all_reduce_sum` expects of its `buffers` slice. The
+    /// in-process ring holds all of them; one TCP rank holds exactly 1.
+    fn local_endpoints(&self) -> usize {
+        self.world_size()
+    }
+
+    /// All-reduce (sum) the per-endpoint vectors in place. Every vector
+    /// must have the same length; on return every vector holds the
+    /// world-wide sum.
+    fn all_reduce_sum(&self, buffers: &mut [Vec<f32>]) -> Result<TransportStats>;
+
+    /// All-gather scalar sidecar data (per-microbatch losses): `local`
+    /// holds this process's endpoints' values in endpoint order; on
+    /// return `out` holds every rank's values in rank order. For the
+    /// in-process backend the local endpoints ARE the world, so this is
+    /// the identity; socket backends circulate the values around the
+    /// ring. The rank-major ordering is what keeps the trainer's loss
+    /// fold bitwise identical across backends. Returns the wire bytes
+    /// this rank sent (0 in-process), so the trainer's `comm/bytes`
+    /// series can account for the sidecar alongside the gradient round.
+    fn all_gather_f64(
+        &self,
+        local: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<usize> {
+        out.clear();
+        out.extend_from_slice(local);
+        Ok(0)
+    }
 }
 
 /// Persistent in-process ring: N worker threads + N neighbor links
@@ -107,11 +156,11 @@ impl Transport for RingTransport {
         self.n
     }
 
-    fn all_reduce_sum(&self, buffers: &mut [Vec<f32>]) -> TransportStats {
+    fn all_reduce_sum(&self, buffers: &mut [Vec<f32>]) -> Result<TransportStats> {
         let n = self.n;
         assert_eq!(buffers.len(), n, "one buffer per ring worker");
         if n == 1 {
-            return TransportStats { bytes_sent_per_worker: 0, hops: 0 };
+            return Ok(TransportStats { bytes_sent_per_worker: 0, hops: 0 });
         }
         let len = buffers[0].len();
         assert!(buffers.iter().all(|b| b.len() == len));
@@ -131,7 +180,7 @@ impl Transport for RingTransport {
             *buf = out;
             bytes = bytes.max(sent);
         }
-        TransportStats { bytes_sent_per_worker: bytes, hops: 2 * (n - 1) }
+        Ok(TransportStats { bytes_sent_per_worker: bytes, hops: 2 * (n - 1) })
     }
 }
 
@@ -149,6 +198,12 @@ impl Drop for RingTransport {
 /// two-phase schedule through its neighbor links, hands the buffer back.
 /// Chunk math and accumulation order mirror the legacy
 /// `coordinator::allreduce::Ring` loop for bitwise equality.
+///
+/// Chunk buffers ping-pong: the worker holds ONE spare vec, fills it
+/// with the outgoing chunk, sends it, and adopts the vec received from
+/// its upstream neighbor as the next spare — so after the first round
+/// the N circulating vecs are reused forever and the steady-state round
+/// performs zero heap allocations.
 fn ring_worker(
     rank: usize,
     n: usize,
@@ -157,38 +212,45 @@ fn ring_worker(
     link_tx: SyncSender<Vec<f32>>,
     link_rx: Receiver<Vec<f32>>,
 ) {
+    let mut spare: Vec<f32> = Vec::new();
     while let Ok(mut buf) = job_rx.recv() {
         let len = buf.len();
-        // Chunk boundaries (chunk c: [starts[c], starts[c+1])).
-        let starts: Vec<usize> = (0..=n).map(|c| c * len / n).collect();
+        // Chunk boundaries (chunk c: [start(c), start(c+1))).
+        let start = |c: usize| c * len / n;
         let mut sent = 0usize;
         // Phase 1: reduce-scatter.
         for step in 0..n - 1 {
             let send_chunk = (rank + n - step) % n;
-            let (s0, s1) = (starts[send_chunk], starts[send_chunk + 1]);
-            if link_tx.send(buf[s0..s1].to_vec()).is_err() {
+            let (s0, s1) = (start(send_chunk), start(send_chunk + 1));
+            spare.clear();
+            spare.extend_from_slice(&buf[s0..s1]);
+            if link_tx.send(std::mem::take(&mut spare)).is_err() {
                 return;
             }
             sent += (s1 - s0) * 4;
             let recv_chunk = (rank + n - step - 1 + n) % n;
             let Ok(data) = link_rx.recv() else { return };
-            let (r0, r1) = (starts[recv_chunk], starts[recv_chunk + 1]);
+            let (r0, r1) = (start(recv_chunk), start(recv_chunk + 1));
             for (dst, src) in buf[r0..r1].iter_mut().zip(&data) {
                 *dst += *src;
             }
+            spare = data; // ping-pong: reuse the neighbor's vec next hop
         }
         // Phase 2: all-gather.
         for step in 0..n - 1 {
             let send_chunk = (rank + 1 + n - step) % n;
-            let (s0, s1) = (starts[send_chunk], starts[send_chunk + 1]);
-            if link_tx.send(buf[s0..s1].to_vec()).is_err() {
+            let (s0, s1) = (start(send_chunk), start(send_chunk + 1));
+            spare.clear();
+            spare.extend_from_slice(&buf[s0..s1]);
+            if link_tx.send(std::mem::take(&mut spare)).is_err() {
                 return;
             }
             sent += (s1 - s0) * 4;
             let recv_chunk = (rank + n - step) % n;
             let Ok(data) = link_rx.recv() else { return };
-            let (r0, r1) = (starts[recv_chunk], starts[recv_chunk + 1]);
+            let (r0, r1) = (start(recv_chunk), start(recv_chunk + 1));
             buf[r0..r1].copy_from_slice(&data);
+            spare = data;
         }
         if done_tx.send((buf, sent)).is_err() {
             return;
@@ -225,7 +287,7 @@ mod tests {
             let t = RingTransport::new(n);
             for len in [1usize, 7, 64, 1000] {
                 let (mut bufs, expect) = make_buffers(n, len, len as u64);
-                t.all_reduce_sum(&mut bufs);
+                t.all_reduce_sum(&mut bufs).unwrap();
                 for (w, b) in bufs.iter().enumerate() {
                     for (i, (&got, &want)) in b.iter().zip(&expect).enumerate()
                     {
@@ -247,7 +309,7 @@ mod tests {
         for round in 0..50u64 {
             let len = 1 + (round as usize * 37) % 300;
             let (mut bufs, expect) = make_buffers(4, len, round);
-            let stats = t.all_reduce_sum(&mut bufs);
+            let stats = t.all_reduce_sum(&mut bufs).unwrap();
             assert_eq!(stats.hops, 6);
             for b in &bufs {
                 for (&got, &want) in b.iter().zip(&expect) {
@@ -261,7 +323,7 @@ mod tests {
     fn single_worker_noop() {
         let t = RingTransport::new(1);
         let mut bufs = vec![vec![1.0f32, 2.0]];
-        let stats = t.all_reduce_sum(&mut bufs);
+        let stats = t.all_reduce_sum(&mut bufs).unwrap();
         assert_eq!(stats.hops, 0);
         assert_eq!(stats.bytes_sent_per_worker, 0);
         assert_eq!(bufs[0], vec![1.0, 2.0]);
@@ -272,7 +334,7 @@ mod tests {
         let (n, len) = (4usize, 1000usize);
         let t = RingTransport::new(n);
         let (mut bufs, _) = make_buffers(n, len, 9);
-        let stats = t.all_reduce_sum(&mut bufs);
+        let stats = t.all_reduce_sum(&mut bufs).unwrap();
         let ideal = 2.0 * (n - 1) as f64 / n as f64 * (len * 4) as f64;
         let actual = stats.bytes_sent_per_worker as f64;
         assert!(
@@ -285,7 +347,25 @@ mod tests {
     fn drop_joins_workers() {
         let t = RingTransport::new(3);
         let (mut bufs, _) = make_buffers(3, 16, 1);
-        t.all_reduce_sum(&mut bufs);
+        t.all_reduce_sum(&mut bufs).unwrap();
         drop(t); // must not hang
+    }
+
+    #[test]
+    fn local_endpoints_cover_the_world() {
+        // The in-process ring owns every rank buffer.
+        let t = RingTransport::new(4);
+        assert_eq!(t.world_size(), 4);
+        assert_eq!(t.local_endpoints(), 4);
+    }
+
+    #[test]
+    fn all_gather_f64_is_identity_in_process() {
+        let t = RingTransport::new(3);
+        let local = [1.5f64, -2.0, 3.25];
+        let mut out = vec![9.0f64; 7]; // stale garbage must be cleared
+        let bytes = t.all_gather_f64(&local, &mut out).unwrap();
+        assert_eq!(out, local.to_vec());
+        assert_eq!(bytes, 0, "nothing crosses a wire in-process");
     }
 }

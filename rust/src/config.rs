@@ -5,9 +5,10 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::comm::CommMode;
+use crate::comm::{net::NetConfig, CommMode, TransportMode};
 use crate::coordinator::{OptEngine, TrainConfig};
 use crate::optim::{Method, Schedule};
+use crate::util::cli::split_csv;
 use crate::util::toml::{parse as parse_toml, TomlTable};
 
 #[derive(Clone, Debug)]
@@ -75,6 +76,10 @@ const TRAIN_KEYS: &[&str] = &[
     "workers",
     "comm",
     "comm_rank",
+    "transport",
+    "world",
+    "net_rank",
+    "peers",
     "seed",
     "eval_every",
     "eval_batches",
@@ -134,6 +139,33 @@ impl ExperimentConfig {
                 .ok_or_else(|| anyhow!("unknown comm mode `{c}`"))?;
         }
         tr.comm_rank = get_usize(&t, "train.comm_rank", tr.comm_rank)?;
+        if t.get("train.transport").is_some() {
+            let s = get_str(&t, "train.transport", "")?;
+            tr.transport = TransportMode::parse(s).ok_or_else(|| {
+                anyhow!(
+                    "unknown transport `{s}` (expected `inproc` or `tcp`)"
+                )
+            })?;
+        }
+        if tr.transport == TransportMode::Tcp {
+            tr.net = Some(NetConfig {
+                world: get_usize(&t, "train.world", 1)?,
+                rank: get_usize(&t, "train.net_rank", 0)?,
+                peers: split_csv(get_str(&t, "train.peers", "")?),
+            });
+        } else {
+            // Topology keys under a non-tcp transport would be silently
+            // dropped — the exact config-footgun class this parser
+            // rejects everywhere else.
+            for key in ["train.world", "train.net_rank", "train.peers"] {
+                if t.get(key).is_some() {
+                    return Err(anyhow!(
+                        "config: `{key}` only applies with \
+                         `transport = \"tcp\"`"
+                    ));
+                }
+            }
+        }
         tr.seed = get_usize(&t, "train.seed", tr.seed as usize)? as u64;
         tr.eval_every = get_usize(&t, "train.eval_every", tr.eval_every)?;
         tr.eval_batches =
@@ -249,6 +281,50 @@ opt_engine = "pjrt"
             "[train]\ncomm = \"carrier-pigeon\"",
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn parses_tcp_transport_block() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[train]\ntransport = \"tcp\"\nworld = 4\nnet_rank = 2\n\
+             peers = \"127.0.0.1:7001, 127.0.0.1:7002,127.0.0.1:7003,\
+             127.0.0.1:7004\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.transport, TransportMode::Tcp);
+        let net = cfg.train.net.unwrap();
+        assert_eq!(net.world, 4);
+        assert_eq!(net.rank, 2);
+        assert_eq!(net.peers.len(), 4);
+        assert_eq!(net.peers[1], "127.0.0.1:7002");
+    }
+
+    #[test]
+    fn default_transport_is_inproc_without_net() {
+        let cfg = ExperimentConfig::from_toml_str("name = \"x\"").unwrap();
+        assert_eq!(cfg.train.transport, TransportMode::Inproc);
+        assert!(cfg.train.net.is_none());
+    }
+
+    #[test]
+    fn rejects_topology_keys_without_tcp_transport() {
+        // `world`/`net_rank`/`peers` under the default (inproc)
+        // transport would be silently dropped — error instead.
+        assert!(
+            ExperimentConfig::from_toml_str("[train]\nworld = 4").is_err()
+        );
+        assert!(ExperimentConfig::from_toml_str(
+            "[train]\ntransport = \"inproc\"\npeers = \"127.0.0.1:1\""
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_transport() {
+        assert!(ExperimentConfig::from_toml_str(
+            "[train]\ntransport = \"rdma\""
+        )
+        .is_err());
     }
 
     #[test]

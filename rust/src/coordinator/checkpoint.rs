@@ -33,37 +33,10 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::util::crc::crc32;
+
 const MAGIC_V1: &[u8; 8] = b"GWCKPT01";
 const MAGIC_V2: &[u8; 8] = b"GWCKPT02";
-
-/// CRC32 (IEEE) lookup table, computed once at compile time (the per-call
-/// rebuild used to dominate small-checkpoint load cost).
-const fn build_crc32_table() -> [u32; 256] {
-    let mut table = [0u32; 256];
-    let mut i = 0usize;
-    while i < 256 {
-        let mut c = i as u32;
-        let mut k = 0;
-        while k < 8 {
-            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
-            k += 1;
-        }
-        table[i] = c;
-        i += 1;
-    }
-    table
-}
-
-static CRC32_TABLE: [u32; 256] = build_crc32_table();
-
-/// Simple CRC32 (IEEE) for integrity.
-fn crc32(data: &[u8]) -> u32 {
-    let mut crc = 0xFFFFFFFFu32;
-    for &b in data {
-        crc = CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
-    }
-    crc ^ 0xFFFFFFFF
-}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {

@@ -41,14 +41,25 @@
 //! full exchange over the *persistent* ring transport, `--comm lowrank`
 //! for the shared-seed subspace-compressed exchange with error feedback
 //! — and the per-round `CommStats` land in the metrics stream
-//! (`comm/bytes`, `comm/compression`, `comm/residual`).
+//! (`comm/bytes`, `comm/compression`, `comm/residual`). The transport
+//! axis composes orthogonally: under `--transport tcp` this process is
+//! ONE rank of an N-process ring (`--world N --net-rank k --peers …`),
+//! owns global data shard k, and runs the identical ring schedule over
+//! persistent sockets — reduced gradients, losses (gathered as an f64
+//! sidecar in rank order), and therefore whole training trajectories
+//! are bitwise identical to the in-process transport, while the
+//! `comm/bytes` series records REAL wire bytes — frame headers AND the
+//! loss-sidecar gather frames included.
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::analysis;
-use crate::comm::{self, Collective, CommMode, CommStats, GradLayout};
+use crate::comm::{
+    self, Collective, CommMode, CommStats, GradLayout, Transport,
+    TransportMode,
+};
 use crate::data::{CorpusConfig, SyncLoader, TokenBatch};
 use crate::metrics::Recorder;
 use crate::model::shapes::PROJ_TYPES;
@@ -88,6 +99,12 @@ pub struct TrainConfig {
     pub comm: CommMode,
     /// Rank of the shared-seed factor exchange for `CommMode::LowRank`.
     pub comm_rank: usize,
+    /// Transport backend (`--transport inproc|tcp`). Orthogonal to
+    /// `comm`: every combination reduces to the same bits.
+    pub transport: TransportMode,
+    /// TCP world topology (`--world N --net-rank k --peers …`);
+    /// required iff `transport` is tcp with a world > 1.
+    pub net: Option<comm::net::NetConfig>,
     pub seed: u64,
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -111,6 +128,8 @@ impl Default for TrainConfig {
             workers: 1,
             comm: CommMode::Dense,
             comm_rank: 16,
+            transport: TransportMode::Inproc,
+            net: None,
             seed: 0,
             eval_every: 50,
             eval_batches: 2,
@@ -118,6 +137,37 @@ impl Default for TrainConfig {
             opt_engine: OptEngine::Rust,
             log_every: 25,
             analysis_every: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Global data-parallel world size: the simulated worker count for
+    /// the in-process transport, the TCP world for `--transport tcp`.
+    pub fn dp_world(&self) -> usize {
+        match self.transport {
+            TransportMode::Inproc => self.workers.max(1),
+            TransportMode::Tcp => {
+                self.net.as_ref().map_or(1, |n| n.world.max(1))
+            }
+        }
+    }
+
+    /// How many of the world's data shards live in THIS process: all of
+    /// them in-process, exactly one per TCP rank.
+    pub fn local_shards(&self) -> usize {
+        match self.transport {
+            TransportMode::Inproc => self.workers.max(1),
+            TransportMode::Tcp => 1,
+        }
+    }
+
+    /// This process's first global shard index (its TCP rank; 0
+    /// in-process).
+    pub fn shard_base(&self) -> usize {
+        match self.transport {
+            TransportMode::Inproc => 0,
+            TransportMode::Tcp => self.net.as_ref().map_or(0, |n| n.rank),
         }
     }
 }
@@ -219,12 +269,42 @@ pub struct Trainer {
     grad_layout: GradLayout,
     /// Stats from the most recent collective round.
     last_comm: Option<CommStats>,
+    /// Reusable loss-sidecar scratch (local fold + world gather), so
+    /// the per-step loss path stays allocation-free like the rest of
+    /// the comm round.
+    loss_scratch: Vec<f64>,
+    world_loss_scratch: Vec<f64>,
     rng: Rng,
     step: usize,
 }
 
 impl Trainer {
     pub fn new(engine: Arc<Engine>, cfg: TrainConfig) -> Result<Trainer> {
+        if cfg.transport == TransportMode::Tcp {
+            // The data-parallel world comes from --world under tcp; a
+            // per-process shard fan-out on top would double-shard.
+            if cfg.workers > 1 {
+                return Err(anyhow!(
+                    "--transport tcp: per-process worker shards are not \
+                     supported (got --workers {}); the data-parallel \
+                     world comes from --world",
+                    cfg.workers
+                ));
+            }
+            let net = cfg.net.as_ref().ok_or_else(|| {
+                anyhow!(
+                    "--transport tcp needs --world N --net-rank k \
+                     --peers host:port,…"
+                )
+            })?;
+            if net.rank >= net.world.max(1) {
+                return Err(anyhow!(
+                    "--net-rank {} outside world of {}",
+                    net.rank,
+                    net.world
+                ));
+            }
+        }
         let model = engine.manifest.model.clone();
         let fwd_bwd = engine.load(&engine.manifest.fwd_bwd_key()?)?;
         let eval_exe = engine.load(&engine.manifest.eval_loss_key()?)?;
@@ -294,22 +374,42 @@ impl Trainer {
         let (loaders, eval_loader) = Self::build_loaders(&cfg, &model);
 
         // Comm subsystem: flat-gradient layout + the configured
-        // collective over a persistent ring of `workers` endpoints
-        // (threads + links created once here, reused every step).
+        // collective over a persistent transport (threads/links/sockets
+        // created once here, reused every step). The basis seed and the
+        // layout fingerprint double as the TCP handshake's determinism
+        // contract: a peer that would derive different shared bases or
+        // ship a different gradient geometry is rejected by name.
         let shapes: Vec<Vec<usize>> =
             model.params.iter().map(|p| p.shape.clone()).collect();
         let grad_layout = GradLayout::from_shapes(&shapes);
-        let collective = comm::build_collective(
+        let basis_seed = cfg.seed ^ 0xC033;
+        let transport: Box<dyn Transport> = match cfg.transport {
+            TransportMode::Inproc => {
+                Box::new(comm::RingTransport::new(cfg.workers.max(1)))
+            }
+            TransportMode::Tcp => {
+                let net = cfg.net.clone().expect("validated above");
+                let wc = comm::net::WorldConfig::new(
+                    net,
+                    basis_seed,
+                    grad_layout.fingerprint(),
+                );
+                Box::new(comm::net::TcpRingTransport::establish(&wc)?)
+            }
+        };
+        let collective = comm::build_collective_with(
+            transport,
             cfg.comm,
-            cfg.workers.max(1),
             cfg.comm_rank,
-            cfg.seed ^ 0xC033,
+            basis_seed,
         );
 
         Ok(Trainer {
             collective,
             grad_layout,
             last_comm: None,
+            loss_scratch: Vec::new(),
+            world_loss_scratch: Vec::new(),
             engine,
             cfg,
             fwd_bwd,
@@ -328,11 +428,13 @@ impl Trainer {
         &self.engine.manifest.model
     }
 
-    /// Fresh deterministic data streams: one shard per worker + the
-    /// held-out eval shard. Used at construction and again on checkpoint
-    /// restore (streams are rebuilt, then fast-forwarded, so restore
-    /// works whether the target position is ahead of or behind the
-    /// trainer's current one).
+    /// Fresh deterministic data streams: one shard per LOCAL worker (a
+    /// TCP rank owns global shard `net.rank` of `world`; in-process all
+    /// `workers` shards live here) + the held-out eval shard. Used at
+    /// construction and again on checkpoint restore (streams are
+    /// rebuilt, then fast-forwarded, so restore works whether the
+    /// target position is ahead of or behind the trainer's current
+    /// one).
     fn build_loaders(
         cfg: &TrainConfig,
         model: &crate::runtime::ModelSpec,
@@ -342,12 +444,13 @@ impl Trainer {
             seed: cfg.seed ^ 0xDA7A,
             ..Default::default()
         };
-        let loaders = (0..cfg.workers.max(1))
+        let shards = cfg.dp_world();
+        let loaders = (0..cfg.local_shards())
             .map(|w| {
                 SyncLoader::new(
                     corpus.clone(),
-                    w,
-                    cfg.workers.max(1),
+                    cfg.shard_base() + w,
+                    shards,
                     model.batch,
                     model.seq_len + 1,
                 )
@@ -393,7 +496,8 @@ impl Trainer {
     pub fn train_step(&mut self) -> Result<f64> {
         self.step += 1;
         let accum = self.cfg.grad_accum.max(1);
-        let workers = self.cfg.workers.max(1);
+        let local = self.cfg.local_shards();
+        let dp_world = self.cfg.dp_world();
         let n_params = self.params.len();
 
         // --- per-worker gradient accumulation (pool fan-out) -----------
@@ -402,7 +506,9 @@ impl Trainer {
         // read-only. Microbatch losses are re-folded in (worker,
         // microbatch) order below, so the fan-out is bitwise identical
         // to the old sequential loop.
-        let (loss_sum, mut worker_grads) = {
+        let mut local_losses = std::mem::take(&mut self.loss_scratch);
+        local_losses.clear();
+        let mut worker_grads = {
             let fwd_bwd: &Executable = &self.fwd_bwd;
             let params: &[Value] = &self.params;
             let mut jobs: Vec<AccumJob> = self
@@ -453,25 +559,43 @@ impl Trainer {
                     }
                 }
             });
-            let mut loss_sum = 0.0f64;
-            let mut grads = Vec::with_capacity(workers);
+            let mut grads = Vec::with_capacity(local);
             for job in jobs {
                 if let Some(e) = job.failed {
                     return Err(e);
                 }
-                for l in job.losses {
-                    loss_sum += l;
-                }
+                local_losses.extend(job.losses);
                 grads.push(job.grad);
             }
-            (loss_sum, grads)
+            grads
         };
-        let mean_loss = loss_sum / (workers * accum) as f64;
+        // Fold the WORLD's per-microbatch losses in (rank, microbatch)
+        // order. The in-process gather is the identity (every shard is
+        // local); a TCP rank all-gathers the sidecar around the ring —
+        // same values, same fold order, so the loss series is bitwise
+        // identical across transports. Both vectors are reused scratch:
+        // steady-state steps allocate nothing on this path.
+        let mut world_losses = std::mem::take(&mut self.world_loss_scratch);
+        let gather_bytes = self
+            .collective
+            .transport()
+            .all_gather_f64(&local_losses, &mut world_losses)?;
+        let mut loss_sum = 0.0f64;
+        for l in &world_losses {
+            loss_sum += *l;
+        }
+        let mean_loss = loss_sum / (dp_world * accum) as f64;
+        self.loss_scratch = local_losses;
+        self.world_loss_scratch = world_losses;
 
         // --- collective: configured comm regime over the worker shards --
-        let stats = self
+        // `bytes_per_worker` folds in the loss-sidecar gather, so the
+        // recorded `comm/bytes` series is the FULL per-step wire
+        // traffic of this rank (0 extra in-process).
+        let mut stats = self
             .collective
             .all_reduce_mean(&mut worker_grads, &self.grad_layout)?;
+        stats.bytes_per_worker += gather_bytes;
         self.last_comm = Some(stats);
         let flat = worker_grads.into_iter().next().unwrap();
 
@@ -651,6 +775,11 @@ impl Trainer {
         rec.note("grad_accum", self.cfg.grad_accum);
         rec.note("comm", self.collective.label());
         rec.note("comm_rank", self.cfg.comm_rank);
+        rec.note("transport", self.cfg.transport.label());
+        rec.note("dp_world", self.cfg.dp_world());
+        if let Some(net) = &self.cfg.net {
+            rec.note("net_rank", net.rank);
+        }
         let mut last_train = f64::NAN;
         let mut last_eval = f64::NAN;
         for s in 1..=self.cfg.steps {

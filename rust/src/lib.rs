@@ -11,7 +11,9 @@
 //! * [`data`] — synthetic-C4 corpus, tokenizer, sharded prefetch loader
 //! * [`model`] — LLaMA shape calculus, init, pure-Rust reference forward
 //! * [`comm`] — collective-communication subsystem: persistent ring
-//!   transport, dense + subspace-compressed (error-feedback) all-reduce
+//!   transport (in-process AND multi-host TCP rings with a local
+//!   multi-process launcher), dense + subspace-compressed
+//!   (error-feedback) all-reduce
 //! * [`coordinator`] — trainer loop, grad accumulation, data-parallel
 //!   workers with ring all-reduce, memory accountant, checkpoints
 //! * [`metrics`] — time series recording + CSV/JSON emission

@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use grasswalk::comm::CommMode;
+use grasswalk::comm::{net::NetConfig, CommMode, TransportMode};
 use grasswalk::config::ExperimentConfig;
 use grasswalk::coordinator::{
     MemoryModel, OptEngine, TrainConfig, Trainer,
@@ -30,12 +30,14 @@ use grasswalk::util::cli::Args;
 const BOOL_FLAGS: &[&str] = &["help", "quiet", "pjrt"];
 
 fn main() {
-    let mut argv = std::env::args().skip(1).peekable();
-    let cmd = argv
-        .next()
-        .unwrap_or_else(|| "help".to_string());
-    let args = Args::parse_with_flags(argv, BOOL_FLAGS);
-    let code = match run(&cmd, &args) {
+    // Keep the raw argv tail: `train --spawn-local N` re-execs this
+    // binary once per rank with these args forwarded verbatim.
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = raw.first().cloned().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> =
+        raw.get(1..).map(<[String]>::to_vec).unwrap_or_default();
+    let args = Args::parse_with_flags(rest.iter().cloned(), BOOL_FLAGS);
+    let code = match run(&cmd, &args, &rest) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e:#}");
@@ -43,6 +45,20 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Strict counterpart of `Args::usize_or` for topology-critical flags:
+/// a present-but-unparseable value is an ERROR, not a silent default (a
+/// typo'd `--world 4x` must not quietly train a world of 1).
+fn require_usize(args: &Args, key: &str, default: usize) -> Result<usize> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(v) => v.replace('_', "").parse().map_err(|_| {
+            anyhow::anyhow!(
+                "--{key} expects a non-negative integer, got `{v}`"
+            )
+        }),
+    }
 }
 
 fn train_config_from_args(args: &Args) -> Result<TrainConfig> {
@@ -67,6 +83,45 @@ fn train_config_from_args(args: &Args) -> Result<TrainConfig> {
             .ok_or_else(|| anyhow::anyhow!("unknown comm mode `{c}`"))?;
     }
     cfg.comm_rank = args.usize_or("comm-rank", cfg.comm_rank);
+    if let Some(t) = args.get("transport") {
+        cfg.transport = TransportMode::parse(t).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown transport `{t}` (expected `inproc` or `tcp`)"
+            )
+        })?;
+    }
+    if cfg.transport != TransportMode::Tcp {
+        // Topology flags without the tcp transport would otherwise be
+        // silently dropped — and the run would train a solo inproc
+        // world while looking distributed.
+        for key in ["world", "net-rank", "peers"] {
+            if args.has(key) {
+                return Err(anyhow::anyhow!(
+                    "--{key} only applies with --transport tcp \
+                     (current transport: {})",
+                    cfg.transport.label()
+                ));
+            }
+        }
+    } else {
+        // Topology flags override any [train] preset values.
+        let preset = cfg.net.take();
+        let world = require_usize(
+            args,
+            "world",
+            preset.as_ref().map_or(1, |n| n.world),
+        )?;
+        let rank = require_usize(
+            args,
+            "net-rank",
+            preset.as_ref().map_or(0, |n| n.rank),
+        )?;
+        let mut peers = args.list("peers");
+        if peers.is_empty() {
+            peers = preset.map(|n| n.peers).unwrap_or_default();
+        }
+        cfg.net = Some(NetConfig { world, rank, peers });
+    }
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
     cfg.log_every = args.usize_or("log-every", cfg.log_every);
@@ -90,9 +145,9 @@ fn artifacts_dir(args: &Args) -> String {
     args.get_or("artifacts", "artifacts")
 }
 
-fn run(cmd: &str, args: &Args) -> Result<()> {
+fn run(cmd: &str, args: &Args, raw: &[String]) -> Result<()> {
     match cmd {
-        "train" => cmd_train(args),
+        "train" => cmd_train(args, raw),
         "table1" => cmd_table1(args),
         "table2" => cmd_table2(args),
         "ablate" => cmd_ablate(args),
@@ -114,6 +169,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  common options: --artifacts DIR --out DIR --method NAME\n\
                  \x20 --steps N --rank R --interval T --workers W --seed S\n\
                  \x20 --comm dense|lowrank --comm-rank R (collective regime)\n\
+                 \x20 --transport inproc|tcp --world N --net-rank K\n\
+                 \x20 --peers host:port,… (multi-process TCP ring)\n\
+                 \x20 --spawn-local N (fork an N-rank loopback world)\n\
                  \x20 --pjrt (fused-kernel hot path) --config FILE.toml"
             );
             Ok(())
@@ -121,10 +179,34 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     }
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+fn cmd_train(args: &Args, raw: &[String]) -> Result<()> {
+    // `--spawn-local N`: re-exec this binary as an N-rank loopback TCP
+    // world (the launcher forwards every other flag verbatim). A
+    // valueless `--spawn-local` parses as a bare flag — error rather
+    // than silently training a single inproc rank.
+    if args.has("spawn-local") {
+        let world: usize = args
+            .get("spawn-local")
+            .and_then(|n| n.parse().ok())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--spawn-local expects a rank count (e.g. \
+                     --spawn-local 2)"
+                )
+            })?;
+        return grasswalk::comm::net::launch::spawn_local(world, raw);
+    }
     let cfg = train_config_from_args(args)?;
+    // Under tcp every rank trains the identical trajectory; per-rank
+    // run names keep their metric files from clobbering each other.
+    let run_name = match (&cfg.transport, &cfg.net) {
+        (TransportMode::Tcp, Some(net)) => {
+            format!("train-{}-rank{}", cfg.method.label(), net.rank)
+        }
+        _ => format!("train-{}", cfg.method.label()),
+    };
     let engine = Arc::new(Engine::new(artifacts_dir(args))?);
-    let mut rec = Recorder::new(&format!("train-{}", cfg.method.label()));
+    let mut rec = Recorder::new(&run_name);
     let mut trainer = Trainer::new(engine, cfg)?;
     let report = trainer.run(&mut rec)?;
     let out = args.get_or("out", "results");
@@ -145,9 +227,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         rec.get("comm/compression").and_then(|s| s.last()),
     ) {
         println!(
-            "comm={} bytes/step={bytes:.0} compression={ratio:.2}x \
-             residual={:.4}",
+            "comm={} transport={} world={} bytes/step={bytes:.0} \
+             compression={ratio:.2}x residual={:.4}",
             trainer.cfg.comm.label(),
+            trainer.cfg.transport.label(),
+            trainer.cfg.dp_world(),
             rec.get("comm/residual").and_then(|s| s.last()).unwrap_or(0.0)
         );
     }

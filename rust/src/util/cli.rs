@@ -5,6 +5,16 @@
 
 use std::collections::BTreeMap;
 
+/// Split a comma-separated value list, trimming entries and dropping
+/// blanks — the one home for list semantics shared by `Args::list`
+/// (`--peers a:1,b:2`) and the TOML config (`train.peers`).
+pub fn split_csv(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|p| p.trim().to_string())
+        .filter(|p| !p.is_empty())
+        .collect()
+}
+
 #[derive(Debug, Default)]
 pub struct Args {
     opts: BTreeMap<String, String>,
@@ -88,6 +98,12 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Comma-separated list option (`--peers a:1,b:2`); empty when the
+    /// key is absent. Entries are trimmed and blanks dropped.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.get(key).map(split_csv).unwrap_or_default()
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.pos
     }
@@ -140,5 +156,15 @@ mod tests {
     fn trailing_flag() {
         let a = args(&["--dry-run"]);
         assert!(a.has("dry-run"));
+    }
+
+    #[test]
+    fn list_option_splits_and_trims() {
+        let a = args(&["--peers", "127.0.0.1:1, 127.0.0.1:2 ,,127.0.0.1:3"]);
+        assert_eq!(
+            a.list("peers"),
+            vec!["127.0.0.1:1", "127.0.0.1:2", "127.0.0.1:3"]
+        );
+        assert!(args(&[]).list("peers").is_empty());
     }
 }

@@ -55,7 +55,7 @@ fn prop_transport_bitwise_matches_legacy_ring() {
             let mut legacy = rand_bufs(n, len, seed);
             let mut newer = legacy.clone();
             let ls = Ring::new(n).all_reduce_sum(&mut legacy);
-            let ts = transport.all_reduce_sum(&mut newer);
+            let ts = transport.all_reduce_sum(&mut newer).unwrap();
             assert_eq!(
                 legacy, newer,
                 "n={n} len={len}: persistent ring must be bitwise-equal"

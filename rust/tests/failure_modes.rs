@@ -1,6 +1,10 @@
 //! Failure-injection tests: the runtime must fail loudly and precisely —
-//! wrong shapes, corrupt artifacts, missing files, and ABI drift are the
-//! real-world failure modes of an AOT pipeline.
+//! wrong shapes, corrupt artifacts, missing files, ABI drift, and (for
+//! the comm::net subsystem) malformed TCP worlds are the real-world
+//! failure modes of an AOT pipeline. The net handshake cases each pin a
+//! NAMED error: wrong world size, duplicate rank, mismatched basis seed
+//! or layout fingerprint, truncated/corrupt frames, and a peer
+//! disconnecting mid-round.
 
 use grasswalk::runtime::{Engine, Value};
 
@@ -174,5 +178,211 @@ fn optimizer_survives_huge_gradient() {
             opt.step(&mut w, &g, &mut rng);
         }
         assert!(w.all_finite(), "{} NaN on huge grads", method.label());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// comm::net — every malformed world is rejected BY NAME before (or the
+// instant) it can corrupt a gradient round.
+// ---------------------------------------------------------------------------
+
+mod net_failures {
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    use grasswalk::comm::net::wire::{encode_frame, read_frame, FrameKind};
+    use grasswalk::comm::net::world::{
+        accept_handshake, dial_handshake, TcpWorld,
+    };
+    use grasswalk::comm::net::{NetConfig, TcpRingTransport, WorldConfig};
+    use grasswalk::comm::Transport;
+
+    fn cfg(
+        world: usize,
+        rank: usize,
+        peers: Vec<String>,
+        seed: u64,
+        fp: u64,
+    ) -> WorldConfig {
+        WorldConfig {
+            net: NetConfig { world, rank, peers },
+            basis_seed: seed,
+            layout_fingerprint: fp,
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(5),
+        }
+    }
+
+    /// Listener on a fresh loopback port + its address string.
+    fn fresh_listener() -> (TcpListener, String) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("127.0.0.1:{}", l.local_addr().unwrap().port());
+        (l, addr)
+    }
+
+    /// Run one acceptor (rank 1 of world 2, seed 7, fp 9) against a
+    /// dialer with the given config; return both outcomes' error names.
+    fn handshake_clash(dial_cfg: WorldConfig) -> (String, String) {
+        let (listener, _addr) = fresh_listener();
+        // The dialer's peer list must point at OUR listener; the caller
+        // pre-filled a placeholder at the dial target slot.
+        let next = (dial_cfg.net.rank + 1) % dial_cfg.net.world;
+        let mut dial_cfg = dial_cfg;
+        dial_cfg.net.peers[next] =
+            format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+        let acc_cfg = cfg(2, 1, vec!["p0".into(), "p1".into()], 7, 9);
+        let h = std::thread::spawn(move || {
+            accept_handshake(&listener, &acc_cfg)
+        });
+        let dial_err = dial_handshake(&dial_cfg)
+            .err()
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "UNEXPECTED-OK".into());
+        let acc_err = h
+            .join()
+            .unwrap()
+            .err()
+            .map(|e| e.name().to_string())
+            .unwrap_or_else(|| "UNEXPECTED-OK".into());
+        (acc_err, dial_err)
+    }
+
+    #[test]
+    fn handshake_rejects_wrong_world_size_by_name() {
+        // Dialer launched with --world 3 against a world-2 acceptor.
+        let dial = cfg(3, 0, vec!["a".into(), "b".into(), "c".into()], 7, 9);
+        let (acc, dialer) = handshake_clash(dial);
+        assert_eq!(acc, "world-size-mismatch");
+        // The dialer learns WHY it was refused, by name.
+        assert!(dialer.contains("handshake-rejected"), "{dialer}");
+        assert!(dialer.contains("world-size-mismatch"), "{dialer}");
+    }
+
+    #[test]
+    fn handshake_rejects_duplicate_rank_by_name() {
+        // A second process launched with the acceptor's own --net-rank 1
+        // (its downstream in world 2 is rank 0's slot = our listener).
+        let dial = cfg(2, 1, vec!["a".into(), "b".into()], 7, 9);
+        let (acc, dialer) = handshake_clash(dial);
+        assert_eq!(acc, "duplicate-rank");
+        assert!(dialer.contains("duplicate-rank"), "{dialer}");
+    }
+
+    #[test]
+    fn bind_conflict_is_duplicate_rank_by_name() {
+        // Two launches claiming one rank slot: the second cannot bind
+        // the shared peer address.
+        let (holder, addr) = fresh_listener();
+        let c = cfg(2, 0, vec![addr, "127.0.0.1:1".into()], 7, 9);
+        let err = TcpWorld::establish(&c).unwrap_err();
+        assert_eq!(err.name(), "duplicate-rank");
+        drop(holder);
+    }
+
+    #[test]
+    fn handshake_rejects_basis_seed_mismatch_by_name() {
+        // Same world, same layout, different --seed: the shared-seed
+        // low-rank bases would silently diverge — refused up front.
+        let dial = cfg(2, 0, vec!["a".into(), "b".into()], 8, 9);
+        let (acc, dialer) = handshake_clash(dial);
+        assert_eq!(acc, "basis-seed-mismatch");
+        assert!(dialer.contains("basis-seed-mismatch"), "{dialer}");
+    }
+
+    #[test]
+    fn handshake_rejects_layout_fingerprint_mismatch_by_name() {
+        // Different model geometry (grad layout fingerprint).
+        let dial = cfg(2, 0, vec!["a".into(), "b".into()], 7, 1);
+        let (acc, dialer) = handshake_clash(dial);
+        assert_eq!(acc, "layout-mismatch");
+        assert!(dialer.contains("layout-mismatch"), "{dialer}");
+    }
+
+    #[test]
+    fn truncated_handshake_frame_named() {
+        let (listener, addr) = fresh_listener();
+        let acc_cfg = cfg(2, 1, vec!["p0".into(), "p1".into()], 7, 9);
+        let h = std::thread::spawn(move || {
+            accept_handshake(&listener, &acc_cfg)
+        });
+        // A peer that dies 10 bytes into its Hello.
+        let mut frame = Vec::new();
+        encode_frame(&mut frame, FrameKind::Hello, 0, 0, &[0u8; 20]).unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&frame[..10]).unwrap();
+        drop(s);
+        let err = h.join().unwrap().unwrap_err();
+        assert_eq!(err.name(), "truncated-frame");
+    }
+
+    #[test]
+    fn corrupt_handshake_frame_named() {
+        let (listener, addr) = fresh_listener();
+        let acc_cfg = cfg(2, 1, vec!["p0".into(), "p1".into()], 7, 9);
+        let h = std::thread::spawn(move || {
+            accept_handshake(&listener, &acc_cfg)
+        });
+        // A bit flip inside the payload: CRC catches it.
+        let mut frame = Vec::new();
+        encode_frame(&mut frame, FrameKind::Hello, 0, 0, &[0u8; 20]).unwrap();
+        let mid = frame.len() - 8;
+        frame[mid] ^= 0x40;
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&frame).unwrap();
+        let err = h.join().unwrap().unwrap_err();
+        assert_eq!(err.name(), "corrupt-frame");
+        drop(s);
+    }
+
+    #[test]
+    fn clean_peer_close_mid_round_is_peer_disconnected() {
+        // Frame-layer determinism: a connection that closes between
+        // frames (the peer process exited) decodes as peer-disconnected,
+        // NOT as a truncated frame.
+        let (listener, addr) = fresh_listener();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut payload = Vec::new();
+            read_frame(&mut s, &mut payload).unwrap_err()
+        });
+        let s = TcpStream::connect(addr).unwrap();
+        drop(s); // close without sending anything
+        assert_eq!(h.join().unwrap().name(), "peer-disconnected");
+    }
+
+    #[test]
+    fn ring_peer_dropping_mid_run_surfaces_named_error() {
+        // A live 2-rank loopback world; rank 1 exits after the probe.
+        // Rank 0's next collective round must fail with a NAMED net
+        // error (never hang, never panic). Which name wins the race
+        // depends on whether the send or the recv notices first.
+        let peers =
+            grasswalk::comm::net::launch::free_loopback_peers(2).unwrap();
+        let mk = |rank: usize| {
+            let mut c = cfg(2, rank, peers.clone(), 7, 9);
+            c.io_timeout = Duration::from_secs(10);
+            c
+        };
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let c1 = mk(1);
+        let peer = std::thread::spawn(move || {
+            let t = TcpRingTransport::establish(&c1).unwrap();
+            // Signal readiness, then drop the transport (clean close).
+            tx.send(()).unwrap();
+            drop(t);
+        });
+        let t0 = TcpRingTransport::establish(&mk(0)).unwrap();
+        rx.recv().unwrap();
+        peer.join().unwrap();
+        // Give the close a moment to land, then try a round.
+        std::thread::sleep(Duration::from_millis(100));
+        let mut bufs = vec![vec![1.0f32; 64]];
+        let err = t0.all_reduce_sum(&mut bufs).unwrap_err().to_string();
+        let named = ["peer-disconnected", "truncated-frame", "io-error",
+                     "peer-timeout"]
+            .iter()
+            .any(|n| err.contains(n));
+        assert!(named, "unnamed net error: {err}");
     }
 }

@@ -1,0 +1,338 @@
+//! Transport-equivalence properties for `comm::net` (seeded-case
+//! harness, like comm_props.rs).
+//!
+//! Pinned invariants:
+//! * a loopback-TCP world of 2 and 4 ranks produces BITWISE-identical
+//!   reduced gradients to the in-process `RingTransport`, for both the
+//!   dense and the low-rank collectives, across multiple rounds;
+//! * `CommStats` agree across transports on every layout-derived field
+//!   (payload/dense floats, compression, hops); the TCP byte count is
+//!   exactly the f32 payload plus the fixed per-frame overhead — real
+//!   wire bytes, not a model;
+//! * the low-rank error-feedback residual a TCP rank reports equals the
+//!   same worker's residual in the in-process reference;
+//! * (artifact-gated) a `--spawn-local 2` world TRAINS the tiny config
+//!   to bitwise-identical train/eval losses as `--transport inproc`,
+//!   for both comm regimes — the end-to-end determinism contract.
+
+use std::time::Duration;
+
+use grasswalk::comm::net::launch::free_loopback_peers;
+use grasswalk::comm::net::wire::{HEADER_LEN, TRAILER_LEN};
+use grasswalk::comm::net::{NetConfig, TcpRingTransport, WorldConfig};
+use grasswalk::comm::{
+    build_collective, build_collective_with, CommMode, CommStats,
+    GradLayout, LowRankAllReduce, RingTransport,
+};
+use grasswalk::util::rng::Rng;
+
+fn free_peers(n: usize) -> Vec<String> {
+    free_loopback_peers(n).unwrap()
+}
+
+fn world_cfg(
+    world: usize,
+    rank: usize,
+    peers: Vec<String>,
+    seed: u64,
+    fp: u64,
+) -> WorldConfig {
+    let mut cfg =
+        WorldConfig::new(NetConfig { world, rank, peers }, seed, fp);
+    cfg.connect_timeout = Duration::from_secs(10);
+    cfg.io_timeout = Duration::from_secs(10);
+    cfg
+}
+
+fn rand_bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+/// Stand up a loopback world where every rank runs the configured
+/// collective over its own input per round; returns `[rank][round] ->
+/// (reduced buffer, stats)`.
+fn run_tcp_collectives(
+    world: usize,
+    mode: CommMode,
+    comm_rank: usize,
+    shapes: Vec<Vec<usize>>,
+    rounds: Vec<Vec<Vec<f32>>>, // rounds[r][rank] = that rank's input
+) -> Vec<Vec<(Vec<f32>, CommStats)>> {
+    let seed = 0xC033u64;
+    let peers = free_peers(world);
+    let mut handles = Vec::new();
+    for rank in 0..world {
+        let peers = peers.clone();
+        let shapes = shapes.clone();
+        let my_inputs: Vec<Vec<f32>> =
+            rounds.iter().map(|r| r[rank].clone()).collect();
+        handles.push(std::thread::spawn(move || {
+            let layout = GradLayout::from_shapes(&shapes);
+            let cfg = world_cfg(
+                world,
+                rank,
+                peers,
+                seed,
+                layout.fingerprint(),
+            );
+            let transport =
+                Box::new(TcpRingTransport::establish(&cfg).unwrap());
+            let mut coll =
+                build_collective_with(transport, mode, comm_rank, seed);
+            let mut out = Vec::new();
+            for input in my_inputs {
+                let mut bufs = vec![input];
+                let stats =
+                    coll.all_reduce_mean(&mut bufs, &layout).unwrap();
+                out.push((bufs.pop().unwrap(), stats));
+            }
+            out
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn shapes() -> Vec<Vec<usize>> {
+    // Tall matrix, wide matrix, 1-D tail — every region class.
+    vec![vec![12, 8], vec![5, 9], vec![7]]
+}
+
+// ---------------------------------------------------------------------------
+// (a) dense: tcp ≡ inproc bitwise, stats agree, wire bytes exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tcp_dense_bitwise_matches_inproc() {
+    let shapes = shapes();
+    let layout = GradLayout::from_shapes(&shapes);
+    for world in [2usize, 4] {
+        let rounds: Vec<Vec<Vec<f32>>> = (0..3)
+            .map(|r| rand_bufs(world, layout.total_floats, 100 + r))
+            .collect();
+        let tcp = run_tcp_collectives(
+            world,
+            CommMode::Dense,
+            16,
+            shapes.clone(),
+            rounds.clone(),
+        );
+        let mut reference =
+            build_collective(CommMode::Dense, world, 16, 0xC033);
+        for (r, inputs) in rounds.iter().enumerate() {
+            let mut bufs = inputs.clone();
+            let ref_stats =
+                reference.all_reduce_mean(&mut bufs, &layout).unwrap();
+            for rank in 0..world {
+                let (got, stats) = &tcp[rank][r];
+                assert_eq!(
+                    got, &bufs[rank],
+                    "world={world} round={r} rank={rank}: dense tcp \
+                     must be bitwise-identical to inproc"
+                );
+                assert_eq!(stats.payload_floats, ref_stats.payload_floats);
+                assert_eq!(stats.dense_floats, ref_stats.dense_floats);
+                assert_eq!(stats.hops, ref_stats.hops);
+                assert!(
+                    (stats.compression - ref_stats.compression).abs()
+                        < 1e-12
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tcp_wire_bytes_are_payload_plus_frame_overhead() {
+    // With len divisible by the world, every chunk (and every rank's
+    // byte count) is equal, so the per-frame overhead is exact:
+    //   tcp_bytes = inproc_payload_bytes + 28 · 2·(N−1).
+    let world = 4usize;
+    let len = 64usize; // 64 % 4 == 0
+    let shapes = vec![vec![8usize, 8]];
+    let layout = GradLayout::from_shapes(&shapes);
+    assert_eq!(layout.total_floats, len);
+    let rounds = vec![rand_bufs(world, len, 9)];
+    let tcp = run_tcp_collectives(
+        world,
+        CommMode::Dense,
+        16,
+        shapes,
+        rounds.clone(),
+    );
+    let mut reference = build_collective(CommMode::Dense, world, 16, 0xC033);
+    let mut bufs = rounds[0].clone();
+    let ref_stats = reference.all_reduce_mean(&mut bufs, &layout).unwrap();
+    let overhead = (HEADER_LEN + TRAILER_LEN) * 2 * (world - 1);
+    for rank in 0..world {
+        let (_, stats) = &tcp[rank][0];
+        assert_eq!(
+            stats.bytes_per_worker,
+            ref_stats.bytes_per_worker + overhead,
+            "rank {rank}: wire bytes must be payload + frame overhead"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) lowrank: tcp ≡ inproc bitwise, residual accounting matches
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tcp_lowrank_bitwise_matches_inproc() {
+    let shapes = shapes();
+    let layout = GradLayout::from_shapes(&shapes);
+    let comm_rank = 3usize;
+    for world in [2usize, 4] {
+        // Multiple rounds so the shared-basis schedule advances AND the
+        // error-feedback residuals carry real state across rounds.
+        let rounds: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|r| rand_bufs(world, layout.total_floats, 500 + r))
+            .collect();
+        let tcp = run_tcp_collectives(
+            world,
+            CommMode::LowRank,
+            comm_rank,
+            shapes.clone(),
+            rounds.clone(),
+        );
+        // Reference built directly so per-worker residuals are visible.
+        let mut reference = LowRankAllReduce::new(
+            Box::new(RingTransport::new(world)),
+            comm_rank,
+            0xC033,
+        );
+        for (r, inputs) in rounds.iter().enumerate() {
+            let mut bufs = inputs.clone();
+            let ref_stats =
+                reference.all_reduce_mean(&mut bufs, &layout).unwrap();
+            for rank in 0..world {
+                let (got, stats) = &tcp[rank][r];
+                assert_eq!(
+                    got, &bufs[rank],
+                    "world={world} round={r} rank={rank}: lowrank tcp \
+                     must be bitwise-identical to inproc"
+                );
+                assert_eq!(stats.payload_floats, ref_stats.payload_floats);
+                assert_eq!(stats.dense_floats, ref_stats.dense_floats);
+                assert_eq!(stats.hops, ref_stats.hops);
+                assert!(
+                    (stats.compression - ref_stats.compression).abs()
+                        < 1e-12
+                );
+                // A tcp rank reports ITS residual accumulator; the
+                // reference holds the same worker's under index `rank`.
+                let want: f64 = (0..layout.regions.len())
+                    .map(|k| {
+                        reference
+                            .residual(rank, k)
+                            .map(|e| e.fro_norm_sq())
+                            .unwrap_or(0.0)
+                    })
+                    .sum::<f64>()
+                    .sqrt();
+                assert!(
+                    (stats.residual_norm - want).abs()
+                        <= 1e-12 * want.max(1.0),
+                    "world={world} round={r} rank={rank}: residual \
+                     {} vs reference {want}",
+                    stats.residual_norm
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (c) end-to-end: --spawn-local ≡ --workers, bitwise (artifact-gated)
+// ---------------------------------------------------------------------------
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Extract one named CSV column's non-empty cells AS STRINGS — the f64
+/// Display form is a shortest-roundtrip encoding, so string equality is
+/// bitwise f64 equality.
+fn read_col(path: &std::path::Path, name: &str) -> Vec<String> {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+    let mut lines = text.lines();
+    let header: Vec<&str> =
+        lines.next().expect("csv header").split(',').collect();
+    let idx = header
+        .iter()
+        .position(|h| *h == name)
+        .unwrap_or_else(|| panic!("no column {name} in {header:?}"));
+    lines
+        .filter_map(|l| {
+            let cell = l.split(',').nth(idx).unwrap_or("");
+            (!cell.is_empty()).then(|| cell.to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn e2e_spawn_local_trains_bitwise_like_inproc() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        return; // artifact-gated, like the trainer e2e suite
+    }
+    let bin = env!("CARGO_BIN_EXE_grasswalk");
+    let tmp = std::env::temp_dir().join("gw_net_e2e");
+    let _ = std::fs::remove_dir_all(&tmp);
+    let artifacts = artifacts_dir();
+    for comm in ["dense", "lowrank"] {
+        let inproc_out = tmp.join(format!("inproc-{comm}"));
+        let tcp_out = tmp.join(format!("tcp-{comm}"));
+        let base = [
+            "--steps",
+            "4",
+            "--eval-every",
+            "2",
+            "--log-every",
+            "0",
+            "--interval",
+            "2",
+            "--seed",
+            "5",
+            "--comm",
+            comm,
+        ];
+        let run = |extra: &[&str], out: &std::path::Path| {
+            let status = std::process::Command::new(bin)
+                .arg("train")
+                .args(base)
+                .args(["--artifacts", artifacts.to_str().unwrap()])
+                .args(["--out", out.to_str().unwrap()])
+                .args(extra)
+                .status()
+                .expect("launch grasswalk");
+            assert!(status.success(), "{comm} {extra:?} run failed");
+        };
+        run(&["--workers", "2"], &inproc_out);
+        run(&["--spawn-local", "2"], &tcp_out);
+        for series in ["train_loss", "eval_loss"] {
+            let want =
+                read_col(&inproc_out.join("train-grasswalk.csv"), series);
+            assert!(!want.is_empty(), "{comm}: empty {series} reference");
+            for rank in 0..2 {
+                let got = read_col(
+                    &tcp_out.join(format!("train-grasswalk-rank{rank}.csv")),
+                    series,
+                );
+                assert_eq!(
+                    got, want,
+                    "{comm} rank {rank}: {series} must be bitwise \
+                     identical across transports"
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}
