@@ -170,7 +170,8 @@ fn main() {
             );
         }
 
-        // Refresh cost per rule (the every-T step).
+        // Refresh cost per rule (the every-T step), all routed through
+        // the shared subspace engine.
         for rule in [SubspaceRule::Svd, SubspaceRule::RandWalk,
                      SubspaceRule::RandJump, SubspaceRule::Track] {
             let mut opt = grasswalk::optim::ProjectedOptimizer::new(
@@ -190,6 +191,22 @@ fn main() {
                     opt.step(&mut w, &g, &mut step_rng);
                 },
             );
+        }
+
+        // Shared-seed regeneration — the comm collective's free basis
+        // (QR of a seeded gaussian; the per-round cost every lowrank
+        // worker pays locally instead of shipping basis bytes). Same
+        // provider GrassJump's refresh uses, so comparing this row to
+        // `refresh-every-step jump` isolates the SVD-vs-regen split.
+        {
+            let mut round = 0u64;
+            b.run(&format!("refresh shared-seed regen {m}x{n}"), || {
+                let basis = grasswalk::subspace::shared_seed_basis(
+                    42, round, 0, m, r,
+                );
+                std::hint::black_box(&basis);
+                round = round.wrapping_add(1);
+            });
         }
     }
 

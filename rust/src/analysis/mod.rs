@@ -10,7 +10,7 @@
 //!   seven projection-type clusters the paper plots.
 
 use crate::model::shapes::PROJ_TYPES;
-use crate::optim::grassmann;
+use crate::subspace::geometry as grassmann;
 use crate::tensor::{left_singular_basis, matmul_tn, svd_thin, Mat};
 
 /// eq 3: R_t = ||S^T G||_F / ||G||_F, in [0, 1].

@@ -6,8 +6,9 @@
 //! optimizer state. [`LowRankAllReduce`] exploits the part that makes it
 //! free for communication: the random basis needs **zero traffic**,
 //! because every worker regenerates the identical basis locally from a
-//! shared seed ([`crate::optim::shared_seed_basis`], the same sampler
-//! GrassJump's subspace refresh uses).
+//! shared seed — the subspace subsystem's
+//! [`crate::subspace::SharedSeedBasis`] provider, the same sampler
+//! GrassJump's subspace refresh uses.
 //!
 //! Per gradient matrix G (oriented long × short) and per round t:
 //!
@@ -28,7 +29,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::optim::shared_seed_basis;
+use crate::subspace::SharedSeedBasis;
 use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Mat};
 
 use super::collective::{Collective, CommStats, GradLayout};
@@ -37,7 +38,9 @@ use super::transport::Transport;
 pub struct LowRankAllReduce {
     transport: Box<dyn Transport>,
     rank: usize,
-    seed: u64,
+    /// The shared-seed basis provider every worker regenerates from
+    /// locally (the subspace engine's recipe; zero basis traffic).
+    basis: SharedSeedBasis,
     /// Round counter — part of the shared basis derivation, so the basis
     /// walks every round without any coordination traffic. Re-aligned to
     /// the trainer step on checkpoint restore ([`Collective::set_round`]).
@@ -68,7 +71,7 @@ impl LowRankAllReduce {
         LowRankAllReduce {
             transport,
             rank,
-            seed,
+            basis: SharedSeedBasis { seed },
             round: 0,
             residuals: Vec::new(),
             packed: Vec::new(),
@@ -94,16 +97,11 @@ impl LowRankAllReduce {
     }
 
     /// The shared basis for `region` at round `round` of this collective
-    /// (what every worker regenerates locally). Exposed so tests and the
-    /// analysis tooling can reproduce the exact wire view.
+    /// (what every worker regenerates locally) — delegated to the
+    /// subspace subsystem's shared-seed provider. Exposed so tests and
+    /// the analysis tooling can reproduce the exact wire view.
     pub fn basis_for(&self, round: u64, region: usize, long: usize) -> Mat {
-        shared_seed_basis(
-            self.seed,
-            round,
-            region as u64,
-            long,
-            self.rank.min(long),
-        )
+        self.basis.at(round, region as u64, long, self.rank)
     }
 }
 

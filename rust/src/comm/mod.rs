@@ -19,7 +19,9 @@
 //! * [`lowrank`] — the paper-derived compressed variant:
 //!   [`LowRankAllReduce`] exchanges rank-r factors against a shared-seed
 //!   random basis regenerated locally on every worker (zero basis
-//!   traffic) with per-worker error-feedback residual accumulators, so
+//!   traffic — the [`crate::subspace::SharedSeedBasis`] provider, the
+//!   same engine the optimizers draw from) with per-worker
+//!   error-feedback residual accumulators, so
 //!   the bulk gradient energy outside the core subspace is reinjected
 //!   over subsequent rounds rather than lost.
 //!

@@ -8,6 +8,7 @@ use anyhow::{anyhow, Result};
 use crate::comm::{net::NetConfig, CommMode, TransportMode};
 use crate::coordinator::{OptEngine, TrainConfig};
 use crate::optim::{Method, Schedule};
+use crate::subspace::SubspaceRule;
 use crate::util::cli::split_csv;
 use crate::util::toml::{parse as parse_toml, TomlTable};
 
@@ -62,6 +63,13 @@ fn get_str<'a>(
     })
 }
 
+fn get_bool(t: &TomlTable, key: &str, default: bool) -> Result<bool> {
+    let Some(v) = t.get(key) else { return Ok(default) };
+    v.as_bool().ok_or_else(|| {
+        anyhow!("config: `{key}` expects a boolean, got {}", v.type_name())
+    })
+}
+
 /// Every key accepted under `[train]`; anything else is rejected so a
 /// typo (`comm_rnak = 8`) fails loudly instead of silently running with
 /// the default.
@@ -89,6 +97,8 @@ const TRAIN_KEYS: &[&str] = &[
     "schedule",
     "min_lr_ratio",
     "analysis_every",
+    "rule",
+    "subspace_diag",
 ];
 
 impl ExperimentConfig {
@@ -203,6 +213,18 @@ impl ExperimentConfig {
             tr.analysis_every =
                 Some(get_usize(&t, "train.analysis_every", 0)?);
         }
+        if t.get("train.rule").is_some() {
+            let r = get_str(&t, "train.rule", "")?;
+            tr.rule =
+                Some(SubspaceRule::parse(r, tr.steps).ok_or_else(|| {
+                    anyhow!(
+                        "config: unknown subspace rule `{r}` (expected \
+                         svd, walk, jump, track, frozen, or golore)"
+                    )
+                })?);
+        }
+        tr.subspace_diag =
+            get_bool(&t, "train.subspace_diag", tr.subspace_diag)?;
         Ok(cfg)
     }
 
@@ -382,6 +404,46 @@ opt_engine = "pjrt"
             "[paths]\nextra = \"ok\""
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_subspace_rule_and_diag() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[train]\nsteps = 200\nrule = \"jump\"\nsubspace_diag = true",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.rule, Some(SubspaceRule::RandJump));
+        assert!(cfg.train.subspace_diag);
+        // GoLore's switch step derives from the configured run length.
+        let cfg = ExperimentConfig::from_toml_str(
+            "[train]\nsteps = 80\nrule = \"golore\"",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.train.rule,
+            Some(SubspaceRule::GoLore { switch_step: 40 })
+        );
+        // Defaults: no override, diagnostics off.
+        let cfg = ExperimentConfig::from_toml_str("name = \"x\"").unwrap();
+        assert_eq!(cfg.train.rule, None);
+        assert!(!cfg.train.subspace_diag);
+    }
+
+    #[test]
+    fn rejects_bad_subspace_rule_and_diag_types() {
+        assert!(ExperimentConfig::from_toml_str(
+            "[train]\nrule = \"spiral\""
+        )
+        .is_err());
+        let err = ExperimentConfig::from_toml_str(
+            "[train]\nsubspace_diag = 1",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("subspace_diag") && err.contains("boolean"),
+            "{err}"
+        );
     }
 
     #[test]

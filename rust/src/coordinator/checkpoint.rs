@@ -1,54 +1,83 @@
 //! S13: checkpointing — binary save/restore of the trainer's parameters
 //! and position.
 //!
-//! Current format `GWCKPT02` (little-endian):
-//!   magic "GWCKPT02" | step u64 | seed u64 | rng state u64×4
+//! Current format `GWCKPT03` (little-endian):
+//!   magic "GWCKPT03" | step u64 | seed u64 | rng state u64×4
 //!   | n_loaders u64 | loader cursors u64×n | eval cursor u64
-//!   | n_floats u64 | f32 data... | crc32 over everything after the magic
+//!   | n_floats u64 | f32 data...
+//!   | opt flag u64 (0 = no optimizer section)
+//!   | [n_proj u64 | per-matrix snapshot... | n_dense u64 | dense state...]
+//!   | crc32 over everything after the magic
 //!
-//! The v2 additions close the resume-determinism gap: v1 restored params
-//! + step but not the trainer RNG or the loader positions, so a resumed
-//! run replayed data from the start of its stream. v2 carries the raw
-//! xoshiro state and one deterministic cursor per loader (worker shards
-//! plus the eval stream); restore fast-forwards each stream to its saved
-//! position. `GWCKPT01` files are still readable (their extras default to
-//! "unknown": RNG untouched, cursors not fast-forwarded).
+//! The v2 additions closed the resume-determinism gap for the *data*
+//! path (trainer RNG + loader cursors). v3 closes it for the *optimizer*
+//! path: the unified subspace schedule state — per-matrix round
+//! counters, the basis S_t itself, subspace moments, and the dense Adam
+//! moments — is carried in an optional section, so a restore realigns
+//! basis-refresh timing exactly like `Collective::set_round` already
+//! realigns the comm collective, and a resumed run continues
+//! bitwise-identically to the uninterrupted one (pinned by the trainer
+//! e2e resume test). Per-matrix snapshots are *tagged* by optimizer
+//! kind: restoring a checkpoint into a different method skips the
+//! mismatched snapshots and falls back to the legacy
+//! re-init-from-gradient behavior, keeping checkpoints method-portable.
+//! `GWCKPT01`/`GWCKPT02` files are still readable (their optimizer
+//! section defaults to "absent").
 //!
 //! Writes are atomic: the file is streamed to `<path>.tmp` and renamed
 //! into place, so a crash mid-write never leaves a corrupt file at the
 //! canonical location.
 //!
-//! Subspace/optimizer state is intentionally NOT serialized: every method
-//! re-initializes its basis from the first post-restore gradient (the
-//! paper's own init rule), which keeps checkpoints method-portable. The
-//! restore-then-continue loss curve is validated in the trainer e2e test.
-//! The low-rank collective's error-feedback residuals follow the same
-//! policy (transient deferred energy, restarted empty — at most one
-//! round's untransmitted bulk is dropped); its shared-basis round
-//! schedule IS realigned on restore via the step counter, so a resumed
-//! run regenerates the same basis sequence a continuous run would.
+//! The low-rank collective's error-feedback residuals remain
+//! intentionally NOT serialized (transient deferred energy, restarted
+//! empty — at most one round's untransmitted bulk is dropped); its
+//! shared-basis round schedule is realigned on restore via the step
+//! counter.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::subspace::OptSnapshot;
+use crate::tensor::Mat;
 use crate::util::crc::crc32;
 
 const MAGIC_V1: &[u8; 8] = b"GWCKPT01";
 const MAGIC_V2: &[u8; 8] = b"GWCKPT02";
+const MAGIC_V3: &[u8; 8] = b"GWCKPT03";
+
+/// One dense (1-D parameter) Adam state: step counter + moments.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseOptState {
+    pub t: u64,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// The v3 optimizer-state section: one tagged snapshot per projected
+/// matrix (None where the optimizer had nothing to checkpoint) plus the
+/// dense Adam states in parameter order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OptStateSection {
+    pub proj: Vec<Option<OptSnapshot>>,
+    pub dense: Vec<DenseOptState>,
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub step: u64,
     pub seed: u64,
     pub params: Vec<f32>,
-    /// Trainer RNG state (v2; `None` when loaded from a v1 file).
+    /// Trainer RNG state (v2+; `None` when loaded from a v1 file).
     pub rng_state: Option<[u64; 4]>,
-    /// Per-worker loader cursors in shard order (v2; empty for v1).
+    /// Per-worker loader cursors in shard order (v2+; empty for v1).
     pub loader_cursors: Vec<u64>,
-    /// Eval-stream cursor (v2; 0 for v1).
+    /// Eval-stream cursor (v2+; 0 for v1).
     pub eval_cursor: u64,
+    /// Unified optimizer/subspace state (v3; `None` for older files or
+    /// bare checkpoints).
+    pub opt_state: Option<OptStateSection>,
 }
 
 /// `<path>.tmp` sibling used for atomic writes.
@@ -67,9 +96,77 @@ fn read_u64(cur: &mut &[u8]) -> Result<u64> {
     Ok(u64::from_le_bytes(head.try_into().unwrap()))
 }
 
+fn read_f32_vec(cur: &mut &[u8], n: usize) -> Result<Vec<f32>> {
+    if n > cur.len() / 4 {
+        bail!("truncated checkpoint (f32 block)");
+    }
+    let (head, tail) = cur.split_at(n * 4);
+    *cur = tail;
+    Ok(head
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn push_u64(payload: &mut Vec<u8>, x: u64) {
+    payload.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_f32s(payload: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        payload.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_snapshot(payload: &mut Vec<u8>, snap: &OptSnapshot) {
+    push_u64(payload, snap.kind as u64);
+    push_u64(payload, snap.round);
+    push_u64(payload, snap.transposed as u64);
+    push_u64(payload, snap.scalars.len() as u64);
+    push_f32s(payload, &snap.scalars);
+    push_u64(payload, snap.indices.len() as u64);
+    for &i in &snap.indices {
+        push_u64(payload, i);
+    }
+    push_u64(payload, snap.mats.len() as u64);
+    for m in &snap.mats {
+        push_u64(payload, m.rows as u64);
+        push_u64(payload, m.cols as u64);
+        push_f32s(payload, &m.data);
+    }
+}
+
+fn read_snapshot(cur: &mut &[u8]) -> Result<OptSnapshot> {
+    let kind = read_u64(cur)? as u32;
+    let round = read_u64(cur)?;
+    let transposed = read_u64(cur)? as u8;
+    let n_scalars = read_u64(cur)? as usize;
+    let scalars = read_f32_vec(cur, n_scalars)?;
+    let n_indices = read_u64(cur)? as usize;
+    if n_indices > cur.len() / 8 {
+        bail!("truncated checkpoint (snapshot indices)");
+    }
+    let mut indices = Vec::with_capacity(n_indices);
+    for _ in 0..n_indices {
+        indices.push(read_u64(cur)?);
+    }
+    let n_mats = read_u64(cur)? as usize;
+    let mut mats = Vec::with_capacity(n_mats.min(16));
+    for _ in 0..n_mats {
+        let rows = read_u64(cur)? as usize;
+        let cols = read_u64(cur)? as usize;
+        let len = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow!("corrupt checkpoint (mat shape)"))?;
+        let data = read_f32_vec(cur, len)?;
+        mats.push(Mat::from_vec(rows, cols, data));
+    }
+    Ok(OptSnapshot { kind, round, transposed, scalars, indices, mats })
+}
+
 impl Checkpoint {
     /// Convenience constructor for params-only checkpoints (tests,
-    /// tooling); trainer saves carry the full v2 position.
+    /// tooling); trainer saves carry the full v3 position + state.
     pub fn bare(step: u64, seed: u64, params: Vec<f32>) -> Checkpoint {
         Checkpoint {
             step,
@@ -78,6 +175,7 @@ impl Checkpoint {
             rng_state: None,
             loader_cursors: Vec::new(),
             eval_cursor: 0,
+            opt_state: None,
         }
     }
 
@@ -89,23 +187,45 @@ impl Checkpoint {
         // Serialize the payload (everything between magic and crc) so the
         // checksum covers header fields as well as the data section.
         let mut payload = Vec::with_capacity(
-            8 * (7 + self.loader_cursors.len()) + 4 * self.params.len(),
+            8 * (8 + self.loader_cursors.len()) + 4 * self.params.len(),
         );
-        payload.extend_from_slice(&self.step.to_le_bytes());
-        payload.extend_from_slice(&self.seed.to_le_bytes());
+        push_u64(&mut payload, self.step);
+        push_u64(&mut payload, self.seed);
         for s in self.rng_state.unwrap_or([0; 4]) {
-            payload.extend_from_slice(&s.to_le_bytes());
+            push_u64(&mut payload, s);
         }
-        payload.extend_from_slice(
-            &(self.loader_cursors.len() as u64).to_le_bytes(),
-        );
-        for c in &self.loader_cursors {
-            payload.extend_from_slice(&c.to_le_bytes());
+        push_u64(&mut payload, self.loader_cursors.len() as u64);
+        for &c in &self.loader_cursors {
+            push_u64(&mut payload, c);
         }
-        payload.extend_from_slice(&self.eval_cursor.to_le_bytes());
-        payload.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
-        for x in &self.params {
-            payload.extend_from_slice(&x.to_le_bytes());
+        push_u64(&mut payload, self.eval_cursor);
+        push_u64(&mut payload, self.params.len() as u64);
+        push_f32s(&mut payload, &self.params);
+        match &self.opt_state {
+            None => push_u64(&mut payload, 0),
+            Some(section) => {
+                push_u64(&mut payload, 1);
+                push_u64(&mut payload, section.proj.len() as u64);
+                for snap in &section.proj {
+                    match snap {
+                        None => push_u64(&mut payload, 0),
+                        Some(s) => {
+                            push_u64(&mut payload, 1);
+                            push_snapshot(&mut payload, s);
+                        }
+                    }
+                }
+                push_u64(&mut payload, section.dense.len() as u64);
+                for d in &section.dense {
+                    push_u64(&mut payload, d.t);
+                    if d.m.len() != d.v.len() {
+                        bail!("dense opt state moment length mismatch");
+                    }
+                    push_u64(&mut payload, d.m.len() as u64);
+                    push_f32s(&mut payload, &d.m);
+                    push_f32s(&mut payload, &d.v);
+                }
+            }
         }
 
         // Atomic write: stream to `<path>.tmp`, then rename into place.
@@ -113,7 +233,7 @@ impl Checkpoint {
         {
             let mut f = std::fs::File::create(&tmp)
                 .with_context(|| format!("create {tmp:?}"))?;
-            f.write_all(MAGIC_V2)?;
+            f.write_all(MAGIC_V3)?;
             f.write_all(&payload)?;
             f.write_all(&crc32(&payload).to_le_bytes())?;
             f.sync_all().ok(); // best-effort durability before the rename
@@ -130,13 +250,16 @@ impl Checkpoint {
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         match &magic {
-            m if m == MAGIC_V2 => Self::load_v2(&mut f),
+            m if m == MAGIC_V3 => Self::load_v2_or_v3(&mut f, true),
+            m if m == MAGIC_V2 => Self::load_v2_or_v3(&mut f, false),
             m if m == MAGIC_V1 => Self::load_v1(&mut f),
             _ => bail!("bad checkpoint magic"),
         }
     }
 
-    fn load_v2(f: &mut std::fs::File) -> Result<Checkpoint> {
+    /// v2 and v3 share the position layout; v3 appends the optimizer
+    /// section before the CRC.
+    fn load_v2_or_v3(f: &mut std::fs::File, v3: bool) -> Result<Checkpoint> {
         let mut rest = Vec::new();
         f.read_to_end(&mut rest)?;
         if rest.len() < 4 {
@@ -167,13 +290,39 @@ impl Checkpoint {
         }
         let eval_cursor = read_u64(&mut cur)?;
         let n = read_u64(&mut cur)? as usize;
-        if cur.len() != n * 4 {
+        let params = read_f32_vec(&mut cur, n)?;
+        let opt_state = if v3 {
+            match read_u64(&mut cur)? {
+                0 => None,
+                1 => {
+                    let n_proj = read_u64(&mut cur)? as usize;
+                    let mut proj = Vec::with_capacity(n_proj.min(4096));
+                    for _ in 0..n_proj {
+                        proj.push(match read_u64(&mut cur)? {
+                            0 => None,
+                            1 => Some(read_snapshot(&mut cur)?),
+                            x => bail!("corrupt snapshot flag {x}"),
+                        });
+                    }
+                    let n_dense = read_u64(&mut cur)? as usize;
+                    let mut dense = Vec::with_capacity(n_dense.min(4096));
+                    for _ in 0..n_dense {
+                        let t = read_u64(&mut cur)?;
+                        let len = read_u64(&mut cur)? as usize;
+                        let m = read_f32_vec(&mut cur, len)?;
+                        let v = read_f32_vec(&mut cur, len)?;
+                        dense.push(DenseOptState { t, m, v });
+                    }
+                    Some(OptStateSection { proj, dense })
+                }
+                x => bail!("corrupt optimizer-section flag {x}"),
+            }
+        } else {
+            None
+        };
+        if !cur.is_empty() {
             bail!("checkpoint length mismatch");
         }
-        let params = cur
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
         Ok(Checkpoint {
             step,
             seed,
@@ -181,6 +330,7 @@ impl Checkpoint {
             rng_state,
             loader_cursors,
             eval_cursor,
+            opt_state,
         })
     }
 
@@ -208,7 +358,8 @@ impl Checkpoint {
     }
 }
 
-/// Save the trainer's current state (params + full stream position).
+/// Save the trainer's current state (params + full stream position +
+/// the unified optimizer/subspace state).
 pub fn save_trainer(
     trainer: &super::trainer::Trainer,
     path: impl AsRef<Path>,
@@ -220,13 +371,18 @@ pub fn save_trainer(
         rng_state: Some(trainer.rng_state()),
         loader_cursors: trainer.loader_cursors(),
         eval_cursor: trainer.eval_cursor(),
+        opt_state: Some(trainer.opt_state_section()),
     }
     .save(path)
 }
 
 /// Restore parameters + position into an existing trainer (must be built
-/// with the same model config). v2 checkpoints additionally restore the
-/// trainer RNG and fast-forward every data stream to its saved cursor.
+/// with the same model config). v2+ checkpoints additionally restore the
+/// trainer RNG and fast-forward every data stream to its saved cursor;
+/// v3 checkpoints also restore the optimizer/subspace state (per-matrix
+/// snapshots whose kind doesn't match the trainer's method are skipped —
+/// those optimizers re-init from the first post-restore gradient, the
+/// legacy behavior).
 pub fn restore_trainer(
     trainer: &mut super::trainer::Trainer,
     path: impl AsRef<Path>,
@@ -240,6 +396,9 @@ pub fn restore_trainer(
     if !ck.loader_cursors.is_empty() {
         trainer.fast_forward_loaders(&ck.loader_cursors, ck.eval_cursor)?;
     }
+    if let Some(section) = &ck.opt_state {
+        trainer.apply_opt_state(section)?;
+    }
     Ok(ck.step)
 }
 
@@ -248,7 +407,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn roundtrip_v2_with_position() {
+    fn roundtrip_with_position() {
         let ck = Checkpoint {
             step: 42,
             seed: 7,
@@ -256,8 +415,40 @@ mod tests {
             rng_state: Some([1, 2, 3, 0xDEADBEEF]),
             loader_cursors: vec![84, 84, 83],
             eval_cursor: 12,
+            opt_state: None,
         };
         let path = std::env::temp_dir().join("gw_ckpt_test.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn roundtrip_v3_with_opt_state() {
+        let snap = OptSnapshot {
+            kind: OptSnapshot::PROJECTED,
+            round: 17,
+            transposed: 2,
+            scalars: vec![1.0, 0.25],
+            indices: vec![3, 9],
+            mats: vec![
+                Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                Mat::from_vec(1, 2, vec![7.0, 8.0]),
+            ],
+        };
+        let ck = Checkpoint {
+            opt_state: Some(OptStateSection {
+                proj: vec![Some(snap), None],
+                dense: vec![DenseOptState {
+                    t: 5,
+                    m: vec![0.1, 0.2],
+                    v: vec![0.3, 0.4],
+                }],
+            }),
+            ..Checkpoint::bare(9, 4, vec![1.0; 32])
+        };
+        let path = std::env::temp_dir().join("gw_ckpt_v3_opt.bin");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ck, back);
@@ -299,6 +490,42 @@ mod tests {
         assert_eq!(ck.rng_state, None);
         assert!(ck.loader_cursors.is_empty());
         assert_eq!(ck.eval_cursor, 0);
+        assert!(ck.opt_state.is_none());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn reads_legacy_v2_files() {
+        // Hand-write the GWCKPT02 layout (no optimizer section): the
+        // position fields must load, opt_state defaults to None.
+        let params: Vec<f32> = vec![1.5, -2.5, 3.5];
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&11u64.to_le_bytes()); // step
+        payload.extend_from_slice(&6u64.to_le_bytes()); // seed
+        for s in [1u64, 2, 3, 4] {
+            payload.extend_from_slice(&s.to_le_bytes());
+        }
+        payload.extend_from_slice(&2u64.to_le_bytes()); // n_loaders
+        payload.extend_from_slice(&100u64.to_le_bytes());
+        payload.extend_from_slice(&101u64.to_le_bytes());
+        payload.extend_from_slice(&7u64.to_le_bytes()); // eval cursor
+        payload.extend_from_slice(&(params.len() as u64).to_le_bytes());
+        for x in &params {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"GWCKPT02");
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&super::crc32(&payload).to_le_bytes());
+        let path = std::env::temp_dir().join("gw_ckpt_v2.bin");
+        std::fs::write(&path, bytes).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.step, 11);
+        assert_eq!(ck.rng_state, Some([1, 2, 3, 4]));
+        assert_eq!(ck.loader_cursors, vec![100, 101]);
+        assert_eq!(ck.eval_cursor, 7);
+        assert_eq!(ck.params, params);
+        assert!(ck.opt_state.is_none());
         let _ = std::fs::remove_file(path);
     }
 
@@ -318,7 +545,7 @@ mod tests {
 
     #[test]
     fn corrupt_header_rejected() {
-        // v2's CRC covers the header too: flipping a cursor byte fails.
+        // The CRC covers the header too: flipping a cursor byte fails.
         let ck = Checkpoint {
             loader_cursors: vec![1000, 1000],
             ..Checkpoint::bare(3, 4, vec![2.0; 8])

@@ -1,6 +1,9 @@
 //! PJRT-backed projected optimizer: runs the fused L1 Pallas `opt_step`
 //! artifact on the hot path instead of the Rust math, while the subspace
-//! refresh policy (walk/jump, every T steps) stays in Rust.
+//! refresh policy (walk/jump, every T steps) lives in the shared
+//! [`crate::subspace::SubspaceEngine`] — the same engine the pure-Rust
+//! `ProjectedOptimizer` draws from, so both paths refresh on the same
+//! schedule with the same providers.
 //!
 //! This is the `--opt-engine pjrt` path of the trainer and the living
 //! proof that the compiled kernel composes into the production loop; its
@@ -9,11 +12,12 @@
 
 use std::sync::Arc;
 
-use crate::optim::{
-    grassmann, with_orientation, MatrixOptimizer, OrientBufs, SubspaceRule,
-};
+use crate::optim::{with_orientation, MatrixOptimizer, OrientBufs};
 use crate::runtime::{Engine, Executable, Value};
-use crate::tensor::{left_singular_basis, matmul_tn, Mat};
+use crate::subspace::{
+    EngineConfig, OptSnapshot, SubspaceDiag, SubspaceEngine, SubspaceRule,
+};
+use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
 /// NOTE: this type deliberately implements only the base
@@ -24,15 +28,11 @@ use crate::util::rng::Rng;
 pub struct PjrtProjected {
     engine: Arc<Engine>,
     exe: Option<Arc<Executable>>,
-    rule: SubspaceRule,
-    rank: usize,
-    interval: usize,
-    eta: f32,
-    s: Option<Mat>,
+    /// Shared basis lifecycle (schedule + rule dispatch + diagnostics).
+    subspace: SubspaceEngine,
     m: Option<Mat>,
     v: Option<Mat>,
     lam_prev: f32,
-    t: usize,
     transposed: Option<bool>,
     name: String,
     orient: OrientBufs,
@@ -49,15 +49,16 @@ impl PjrtProjected {
         PjrtProjected {
             engine,
             exe: None,
-            rule,
-            rank,
-            interval,
-            eta,
-            s: None,
+            subspace: SubspaceEngine::new(EngineConfig {
+                rank,
+                interval,
+                rule,
+                eta,
+                rsvd: Some((4, 0)),
+            }),
             m: None,
             v: None,
             lam_prev: 0.0,
-            t: 0,
             transposed: None,
             name: format!("pjrt-projected({})", rule.label()),
             orient: OrientBufs::default(),
@@ -65,34 +66,13 @@ impl PjrtProjected {
     }
 
     fn step_oriented(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
-        self.t += 1;
-        let r = self.rank.min(g.rows);
-        let refresh = if self.s.is_none() {
-            true
-        } else {
-            self.rule != SubspaceRule::Frozen
-                && self.t > 1
-                && (self.t - 1) % self.interval.max(1) == 0
-        };
+        let t = self.subspace.begin_round();
+        let r = self.subspace.rank_for(g.rows);
+        let outcome = self.subspace.refresh_if_due(g, rng);
         let mut rot = Mat::eye(r);
-        if refresh {
-            let s_new = match (&self.s, self.rule) {
-                (None, _) => left_singular_basis(g, r),
-                (Some(_), SubspaceRule::RandJump) => {
-                    grassmann::random_point(g.rows, r, rng)
-                }
-                (Some(s), SubspaceRule::RandWalk) => {
-                    let x = Mat::randn(s.rows, s.cols, 1.0, rng);
-                    grassmann::exp_map(s, &x, self.eta, Some((4, 0)), rng)
-                }
-                (Some(_), _) => left_singular_basis(g, r),
-            };
-            if let Some(s_old) = &self.s {
-                rot = matmul_tn(&s_new, s_old);
-            }
-            self.s = Some(s_new);
+        if let Some(prev) = &outcome.previous {
+            rot = self.subspace.rotation(prev);
         }
-        let s = self.s.as_ref().unwrap();
         if self.m.is_none() {
             self.m = Some(Mat::zeros(r, g.cols));
             self.v = Some(Mat::zeros(r, g.cols));
@@ -107,7 +87,8 @@ impl PjrtProjected {
             );
         }
         let exe = self.exe.as_ref().unwrap();
-        let ao_refresh = refresh && self.t > 1;
+        let ao_refresh = outcome.refreshed && t > 1;
+        let s = self.subspace.basis();
         let outs = exe
             .run(&[
                 Value::from_mat(w),
@@ -116,7 +97,7 @@ impl PjrtProjected {
                 Value::from_mat(self.m.as_ref().unwrap()),
                 Value::from_mat(self.v.as_ref().unwrap()),
                 Value::from_mat(&rot),
-                Value::scalar(self.t as f32),
+                Value::scalar(t as f32),
                 Value::scalar(self.lam_prev),
                 Value::scalar(if ao_refresh { 1.0 } else { 0.0 }),
             ])
@@ -140,7 +121,7 @@ impl MatrixOptimizer for PjrtProjected {
     }
 
     fn state_floats(&self) -> usize {
-        self.s.as_ref().map(|x| x.len()).unwrap_or(0)
+        self.subspace.basis_opt().map(|x| x.len()).unwrap_or(0)
             + self.m.as_ref().map(|x| x.len()).unwrap_or(0)
             + self.v.as_ref().map(|x| x.len()).unwrap_or(0)
             + 1
@@ -148,5 +129,75 @@ impl MatrixOptimizer for PjrtProjected {
 
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn set_subspace_diag(&mut self, on: bool) {
+        self.subspace.set_diag(on);
+    }
+
+    fn subspace_diag(&self) -> Option<SubspaceDiag> {
+        // The fused kernel keeps the projected gradient on-device, so
+        // only the refresh-time alignment is observable here; the
+        // energy ratio is reported as NaN (filtered by the recorder
+        // plumbing) rather than a misleading 0.
+        Some(SubspaceDiag {
+            energy_ratio: f32::NAN,
+            alignment: if self.subspace.last_refresh() {
+                self.subspace.alignment()
+            } else {
+                None
+            },
+            refreshed: self.subspace.last_refresh(),
+            round: self.subspace.round(),
+        })
+    }
+
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        let mut snap = OptSnapshot {
+            kind: OptSnapshot::PJRT,
+            round: self.subspace.round() as u64,
+            transposed: OptSnapshot::encode_transposed(self.transposed),
+            scalars: vec![self.lam_prev],
+            indices: Vec::new(),
+            mats: Vec::new(),
+        };
+        if let (Some(s), Some(m), Some(v)) =
+            (self.subspace.basis_opt(), &self.m, &self.v)
+        {
+            snap.mats = vec![s.clone(), m.clone(), v.clone()];
+        }
+        Some(snap)
+    }
+
+    fn restore_snapshot(&mut self, snap: &OptSnapshot) -> bool {
+        if snap.kind != OptSnapshot::PJRT
+            || snap.scalars.len() != 1
+            || !(snap.mats.is_empty() || snap.mats.len() == 3)
+        {
+            return false;
+        }
+        if let [s, m, v] = &snap.mats[..] {
+            // A checkpoint from a different --rank re-inits instead of
+            // silently training at the old rank.
+            if s.cols != self.subspace.rank_for(s.rows)
+                || m.rows != s.cols
+                || v.shape() != m.shape()
+            {
+                return false;
+            }
+        }
+        self.transposed = snap.decode_transposed();
+        self.lam_prev = snap.scalars[0];
+        if snap.mats.len() == 3 {
+            self.subspace
+                .restore(snap.round as usize, Some(snap.mats[0].clone()));
+            self.m = Some(snap.mats[1].clone());
+            self.v = Some(snap.mats[2].clone());
+        } else {
+            self.subspace.restore(snap.round as usize, None);
+            self.m = None;
+            self.v = None;
+        }
+        true
     }
 }

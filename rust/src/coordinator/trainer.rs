@@ -65,11 +65,14 @@ use crate::metrics::Recorder;
 use crate::model::shapes::PROJ_TYPES;
 use crate::optim::{
     AdamConfig, AdamVec, CpuMatrixOptimizer, MatrixOptimizer, Method,
-    Schedule,
+    ProjectedConfig, ProjectedOptimizer, Schedule,
 };
 use crate::runtime::{Engine, Executable, Value};
+use crate::subspace::{OptSnapshot, SubspaceDiag, SubspaceRule};
 use crate::tensor::Mat;
 use crate::util::{pool, rng::Rng};
+
+use super::checkpoint::{DenseOptState, OptStateSection};
 
 /// Which engine applies the projected-optimizer update on the hot path.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -113,6 +116,15 @@ pub struct TrainConfig {
     pub log_every: usize,
     /// If set, record Figure-1/2 measurements every N steps.
     pub analysis_every: Option<usize>,
+    /// Override the projected family's subspace rule (`--rule walk`):
+    /// the paper's default composition (AO + RS) with the given rule,
+    /// regardless of `method`. Rust opt engine only.
+    pub rule: Option<SubspaceRule>,
+    /// Record per-matrix `subspace/energy_ratio/<name>` +
+    /// `subspace/alignment/<name>` series and the end-of-run depth
+    /// summary (`--subspace-diag`). Off by default: the hot path stays
+    /// allocation-free.
+    pub subspace_diag: bool,
 }
 
 impl Default for TrainConfig {
@@ -137,6 +149,8 @@ impl Default for TrainConfig {
             opt_engine: OptEngine::Rust,
             log_every: 25,
             analysis_every: None,
+            rule: None,
+            subspace_diag: false,
         }
     }
 }
@@ -203,6 +217,60 @@ impl ProjOpts {
             ProjOpts::Cpu(v) => v.iter().map(|o| o.state_floats()).sum(),
             ProjOpts::Engine(v) => v.iter().map(|o| o.state_floats()).sum(),
         }
+    }
+
+    fn set_subspace_diag(&mut self, on: bool) {
+        match self {
+            ProjOpts::Cpu(v) => {
+                v.iter_mut().for_each(|o| o.set_subspace_diag(on))
+            }
+            ProjOpts::Engine(v) => {
+                v.iter_mut().for_each(|o| o.set_subspace_diag(on))
+            }
+        }
+    }
+
+    fn diag(&self, i: usize) -> Option<SubspaceDiag> {
+        match self {
+            ProjOpts::Cpu(v) => v[i].subspace_diag(),
+            ProjOpts::Engine(v) => v[i].subspace_diag(),
+        }
+    }
+
+    fn snapshots(&self) -> Vec<Option<OptSnapshot>> {
+        match self {
+            ProjOpts::Cpu(v) => v.iter().map(|o| o.snapshot()).collect(),
+            ProjOpts::Engine(v) => v.iter().map(|o| o.snapshot()).collect(),
+        }
+    }
+
+    /// Best-effort restore: snapshots whose kind doesn't match this
+    /// optimizer suite are skipped (that optimizer re-inits from the
+    /// first post-restore gradient — the legacy, method-portable
+    /// behavior). Returns how many were applied.
+    fn restore_snapshots(&mut self, snaps: &[Option<OptSnapshot>]) -> usize {
+        let mut applied = 0;
+        match self {
+            ProjOpts::Cpu(v) => {
+                for (o, s) in v.iter_mut().zip(snaps) {
+                    if let Some(s) = s {
+                        if o.restore_snapshot(s) {
+                            applied += 1;
+                        }
+                    }
+                }
+            }
+            ProjOpts::Engine(v) => {
+                for (o, s) in v.iter_mut().zip(snaps) {
+                    if let Some(s) = s {
+                        if o.restore_snapshot(s) {
+                            applied += 1;
+                        }
+                    }
+                }
+            }
+        }
+        applied
     }
 }
 
@@ -274,6 +342,12 @@ pub struct Trainer {
     /// the comm round.
     loss_scratch: Vec<f64>,
     world_loss_scratch: Vec<f64>,
+    /// Pre-built per-matrix series names for `--subspace-diag`
+    /// (`subspace/energy_ratio/<param>`, `subspace/alignment/<param>`);
+    /// empty when diagnostics are off, so the default run() loop never
+    /// formats a name.
+    diag_energy_names: Vec<String>,
+    diag_align_names: Vec<String>,
     rng: Rng,
     step: usize,
 }
@@ -327,17 +401,25 @@ impl Trainer {
         // Optimizers. The PJRT opt engine routes the fused Pallas artifact
         // onto the hot path for the Grass family (engine-bound, stepped
         // sequentially); every other configuration uses the Rust suite,
-        // which is Send and fans across the pool in train_step.
+        // which is Send and fans across the pool in train_step. An
+        // explicit `--rule` override runs the projected family with the
+        // paper's default composition (AO + RS) under that rule.
+        if cfg.rule.is_some() && cfg.opt_engine == OptEngine::Pjrt {
+            return Err(anyhow!(
+                "--rule overrides the Rust projected family; it does not \
+                 compose with --pjrt (whose artifact bakes the rule in)"
+            ));
+        }
         let pjrt_rule = match (cfg.opt_engine, cfg.method) {
             (OptEngine::Pjrt, Method::GrassWalk) => {
-                Some(crate::optim::SubspaceRule::RandWalk)
+                Some(SubspaceRule::RandWalk)
             }
             (OptEngine::Pjrt, Method::GrassJump) => {
-                Some(crate::optim::SubspaceRule::RandJump)
+                Some(SubspaceRule::RandJump)
             }
             _ => None,
         };
-        let proj_opts = match pjrt_rule {
+        let mut proj_opts = match pjrt_rule {
             Some(rule) => ProjOpts::Engine(
                 (0..model.n_projected)
                     .map(|_| {
@@ -353,13 +435,44 @@ impl Trainer {
             ),
             None => ProjOpts::Cpu(
                 (0..model.n_projected)
-                    .map(|_| {
-                        cfg.method.build_cpu(cfg.rank, cfg.interval, cfg.lr,
-                                             cfg.steps)
+                    .map(|_| match cfg.rule {
+                        Some(rule) => {
+                            Box::new(ProjectedOptimizer::new(
+                                ProjectedConfig {
+                                    rank: cfg.rank,
+                                    interval: cfg.interval,
+                                    alpha: cfg.lr,
+                                    rule,
+                                    ..Default::default()
+                                },
+                            ))
+                                as Box<dyn CpuMatrixOptimizer>
+                        }
+                        None => cfg.method.build_cpu(
+                            cfg.rank, cfg.interval, cfg.lr, cfg.steps,
+                        ),
                     })
                     .collect(),
             ),
         };
+        let (mut diag_energy_names, mut diag_align_names) =
+            (Vec::new(), Vec::new());
+        if cfg.subspace_diag {
+            proj_opts.set_subspace_diag(true);
+            for (i, p) in
+                model.params[..model.n_projected].iter().enumerate()
+            {
+                let label = if p.name.is_empty() {
+                    format!("p{i}")
+                } else {
+                    p.name.clone()
+                };
+                diag_energy_names
+                    .push(format!("subspace/energy_ratio/{label}"));
+                diag_align_names
+                    .push(format!("subspace/alignment/{label}"));
+            }
+        }
         let dense_opts = model.params[model.n_projected..]
             .iter()
             .map(|p| {
@@ -410,6 +523,8 @@ impl Trainer {
             last_comm: None,
             loss_scratch: Vec::new(),
             world_loss_scratch: Vec::new(),
+            diag_energy_names,
+            diag_align_names,
             engine,
             cfg,
             fwd_bwd,
@@ -766,9 +881,107 @@ impl Trainer {
         Ok(())
     }
 
+    /// Per-layer subspace diagnostics for the step just taken (gated by
+    /// `--subspace-diag`): the eq-3 energy ratio every step, and the
+    /// consecutive-basis alignment on refresh steps. Series names are
+    /// pre-built at construction, so this never formats on the hot path.
+    fn record_subspace_diag(&self, rec: &mut Recorder, step: usize) {
+        for i in 0..self.diag_energy_names.len() {
+            let Some(d) = self.proj_opts.diag(i) else { continue };
+            if d.energy_ratio.is_finite() {
+                rec.push(
+                    &self.diag_energy_names[i],
+                    step,
+                    d.energy_ratio as f64,
+                );
+            }
+            if d.refreshed {
+                if let Some(a) = d.alignment {
+                    rec.push(&self.diag_align_names[i], step, a as f64);
+                }
+            }
+        }
+    }
+
+    /// Mean recorded energy ratio grouped by decoder depth:
+    /// `(layer, mean energy ratio, matrices contributing)` rows for the
+    /// train CLI's summary block (the paper's "core influence diminishes
+    /// in deeper layers" view). Empty unless `--subspace-diag` recorded
+    /// series this run.
+    pub fn subspace_depth_summary(
+        &self,
+        rec: &Recorder,
+    ) -> Vec<(usize, f64, usize)> {
+        use std::collections::BTreeMap;
+        let per_layer_types = PROJ_TYPES.len();
+        let mut acc: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
+        for (i, name) in self.diag_energy_names.iter().enumerate() {
+            let Some(mean) = rec.get(name).and_then(|s| s.mean()) else {
+                continue;
+            };
+            let layer = i / per_layer_types;
+            let e = acc.entry(layer).or_insert((0.0, 0));
+            e.0 += mean;
+            e.1 += 1;
+        }
+        acc.into_iter()
+            .map(|(layer, (sum, n))| (layer, sum / n as f64, n))
+            .collect()
+    }
+
+    /// The unified optimizer/subspace state for `GWCKPT03`: one tagged
+    /// snapshot per projected matrix + the dense Adam states.
+    pub(crate) fn opt_state_section(&self) -> OptStateSection {
+        OptStateSection {
+            proj: self.proj_opts.snapshots(),
+            dense: self
+                .dense_opts
+                .iter()
+                .map(|o| {
+                    let (t, m, v) = o.state();
+                    DenseOptState {
+                        t: t as u64,
+                        m: m.to_vec(),
+                        v: v.to_vec(),
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore the optimizer/subspace state from a checkpoint section.
+    /// Per-matrix snapshots are applied best-effort (kind mismatches
+    /// fall back to legacy re-init); count mismatches mean the file was
+    /// written for a different model geometry and are an error.
+    pub(crate) fn apply_opt_state(
+        &mut self,
+        section: &OptStateSection,
+    ) -> Result<()> {
+        if section.proj.len() != self.proj_opts.len()
+            || section.dense.len() != self.dense_opts.len()
+        {
+            return Err(anyhow!(
+                "checkpoint optimizer section has {}+{} states, trainer \
+                 has {}+{} optimizers",
+                section.proj.len(),
+                section.dense.len(),
+                self.proj_opts.len(),
+                self.dense_opts.len()
+            ));
+        }
+        self.proj_opts.restore_snapshots(&section.proj);
+        for (o, d) in self.dense_opts.iter_mut().zip(&section.dense) {
+            o.restore(d.t as usize, &d.m, &d.v);
+        }
+        Ok(())
+    }
+
     /// Full training run with metric recording.
     pub fn run(&mut self, rec: &mut Recorder) -> Result<TrainReport> {
         rec.note("method", self.cfg.method.label());
+        if let Some(rule) = self.cfg.rule {
+            rec.note("rule", rule.label());
+        }
         rec.note("rank", self.cfg.rank);
         rec.note("interval", self.cfg.interval);
         rec.note("workers", self.cfg.workers);
@@ -791,6 +1004,9 @@ impl Trainer {
                 rec.push("comm/bytes", s, c.bytes_per_worker as f64);
                 rec.push("comm/compression", s, c.compression);
                 rec.push("comm/residual", s, c.residual_norm);
+            }
+            if self.cfg.subspace_diag {
+                self.record_subspace_diag(rec, s);
             }
             if self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
                 eprintln!(

@@ -5,6 +5,11 @@
 //! Pallas stack (Python only at build time; see DESIGN.md):
 //!
 //! * [`tensor`] — dense linalg substrate (GEMM, QR, SVD, randomized SVD)
+//! * [`subspace`] — the basis lifecycle: providers (SVD / Haar / geodesic
+//!   walk & track / shared-seed / coordinate), the unified refresh
+//!   [`subspace::Schedule`], the per-matrix [`subspace::SubspaceEngine`],
+//!   and Grassmannian geometry — shared by the optimizers and the comm
+//!   collective
 //! * [`optim`] — the paper's optimizer suite + baselines (GaLore, APOLLO,
 //!   FRUGAL, LDAdam, SubTrack++, Fira, Adam, SGD) and the AO/RS components
 //! * [`runtime`] — PJRT engine loading AOT HLO-text artifacts
@@ -31,5 +36,6 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod subspace;
 pub mod tensor;
 pub mod util;

@@ -27,7 +27,7 @@ use grasswalk::optim::{Method, Schedule};
 use grasswalk::runtime::Engine;
 use grasswalk::util::cli::Args;
 
-const BOOL_FLAGS: &[&str] = &["help", "quiet", "pjrt"];
+const BOOL_FLAGS: &[&str] = &["help", "quiet", "pjrt", "subspace-diag"];
 
 fn main() {
     // Keep the raw argv tail: `train --spawn-local N` re-execs this
@@ -128,6 +128,29 @@ fn train_config_from_args(args: &Args) -> Result<TrainConfig> {
     if args.has("pjrt") {
         cfg.opt_engine = OptEngine::Pjrt;
     }
+    if let Some(r) = args.get("rule") {
+        cfg.rule = Some(
+            grasswalk::subspace::SubspaceRule::parse(r, cfg.steps)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown subspace rule `{r}` (expected svd, walk, \
+                         jump, track, frozen, or golore)"
+                    )
+                })?,
+        );
+    }
+    if args.has("subspace-diag") {
+        cfg.subspace_diag = true;
+    }
+    // GoLore switches at the midpoint of the FINAL step count: re-derive
+    // it after every `--steps` override, or a config-file rule would keep
+    // the TOML-time midpoint and silently never (or too early) switch.
+    if let Some(grasswalk::subspace::SubspaceRule::GoLore { .. }) = cfg.rule
+    {
+        cfg.rule = Some(grasswalk::subspace::SubspaceRule::GoLore {
+            switch_step: cfg.steps / 2,
+        });
+    }
     if let Some(w) = args.get("warmup") {
         cfg.schedule = Schedule::WarmupCosine {
             warmup: w.parse().unwrap_or(0),
@@ -168,6 +191,8 @@ fn run(cmd: &str, args: &Args, raw: &[String]) -> Result<()> {
                  \x20 info         manifest + PJRT platform report\n\n\
                  common options: --artifacts DIR --out DIR --method NAME\n\
                  \x20 --steps N --rank R --interval T --workers W --seed S\n\
+                 \x20 --rule svd|walk|jump|track|frozen|golore (subspace\n\
+                 \x20 rule override) --subspace-diag (per-layer series)\n\
                  \x20 --comm dense|lowrank --comm-rank R (collective regime)\n\
                  \x20 --transport inproc|tcp --world N --net-rank K\n\
                  \x20 --peers host:port,… (multi-process TCP ring)\n\
@@ -199,11 +224,18 @@ fn cmd_train(args: &Args, raw: &[String]) -> Result<()> {
     let cfg = train_config_from_args(args)?;
     // Under tcp every rank trains the identical trajectory; per-rank
     // run names keep their metric files from clobbering each other.
+    // A `--rule` override replaces the method's optimizer wholesale, so
+    // the run name says so instead of attributing the run to a method
+    // that never stepped.
+    let base = match cfg.rule {
+        Some(rule) => format!("rule-{}", rule.label()),
+        None => cfg.method.label().to_string(),
+    };
     let run_name = match (&cfg.transport, &cfg.net) {
         (TransportMode::Tcp, Some(net)) => {
-            format!("train-{}-rank{}", cfg.method.label(), net.rank)
+            format!("train-{base}-rank{}", net.rank)
         }
-        _ => format!("train-{}", cfg.method.label()),
+        _ => format!("train-{base}"),
     };
     let engine = Arc::new(Engine::new(artifacts_dir(args))?);
     let mut rec = Recorder::new(&run_name);
@@ -234,6 +266,32 @@ fn cmd_train(args: &Args, raw: &[String]) -> Result<()> {
             trainer.cfg.dp_world(),
             rec.get("comm/residual").and_then(|s| s.last()).unwrap_or(0.0)
         );
+    }
+    if trainer.cfg.subspace_diag {
+        // Depth rows and refresh alignment are independent: the PJRT
+        // path records alignment but no energy series, so neither block
+        // may gate the other.
+        let rows = trainer.subspace_depth_summary(&rec);
+        if !rows.is_empty() {
+            println!("-- subspace diagnostics (mean energy ratio by depth) --");
+            for (layer, mean, n) in rows {
+                println!("layer {layer:>2}: {mean:.3}  ({n} matrices)");
+            }
+        }
+        let aligns: Vec<f64> = rec
+            .series
+            .iter()
+            .filter(|(k, _)| k.starts_with("subspace/alignment/"))
+            .filter_map(|(_, s)| s.mean())
+            .collect();
+        if !aligns.is_empty() {
+            println!(
+                "refresh alignment (mean principal-angle cosine): {:.3} \
+                 over {} matrices",
+                aligns.iter().sum::<f64>() / aligns.len() as f64,
+                aligns.len()
+            );
+        }
     }
     if let Some(path) = args.get("save-checkpoint") {
         grasswalk::coordinator::save_trainer(&trainer, path)?;

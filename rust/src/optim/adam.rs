@@ -6,6 +6,7 @@
 //! once), which the allocation-count bench asserts. The iterator-zip
 //! form lets LLVM drop the bounds checks the indexed loop carried.
 
+use crate::subspace::OptSnapshot;
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
@@ -87,6 +88,40 @@ impl MatrixOptimizer for Adam {
     fn name(&self) -> &str {
         "adam"
     }
+
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        let mut snap = OptSnapshot {
+            kind: OptSnapshot::ADAM,
+            round: self.t as u64,
+            ..Default::default()
+        };
+        if let (Some(m), Some(v)) = (&self.m, &self.v) {
+            snap.mats = vec![m.clone(), v.clone()];
+        }
+        Some(snap)
+    }
+
+    fn restore_snapshot(&mut self, snap: &OptSnapshot) -> bool {
+        if snap.kind != OptSnapshot::ADAM
+            || !(snap.mats.is_empty() || snap.mats.len() == 2)
+        {
+            return false;
+        }
+        if let [m, v] = &snap.mats[..] {
+            if v.shape() != m.shape() {
+                return false;
+            }
+        }
+        self.t = snap.round as usize;
+        if snap.mats.len() == 2 {
+            self.m = Some(snap.mats[0].clone());
+            self.v = Some(snap.mats[1].clone());
+        } else {
+            self.m = None;
+            self.v = None;
+        }
+        true
+    }
 }
 
 /// Adam over a flat vector (used by the trainer for 1-D params: norms,
@@ -124,6 +159,23 @@ impl AdamVec {
 
     pub fn state_floats(&self) -> usize {
         self.m.len() + self.v.len()
+    }
+
+    /// Checkpoint view: (step counter, first moment, second moment).
+    pub fn state(&self) -> (usize, &[f32], &[f32]) {
+        (self.t, &self.m, &self.v)
+    }
+
+    /// Restore a checkpointed state; rejects length mismatches (e.g. a
+    /// checkpoint from a different model geometry).
+    pub fn restore(&mut self, t: usize, m: &[f32], v: &[f32]) -> bool {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            return false;
+        }
+        self.t = t;
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+        true
     }
 }
 

@@ -12,10 +12,10 @@
 //!
 //! `rank = 1` gives APOLLO-Mini.
 
+use crate::subspace::{OptSnapshot, Schedule, RS_NORM_FLOOR};
 use crate::tensor::{matmul_into, Mat};
 use crate::util::rng::Rng;
 
-use super::projected::RS_NORM_FLOOR;
 use super::workspace::{with_orientation, OrientBufs, StepWorkspace};
 use super::MatrixOptimizer;
 
@@ -54,7 +54,13 @@ pub struct Apollo {
     proj_seed: u64,
     m: Option<Mat>,
     v: Option<Mat>,
-    t: usize,
+    /// The unified refresh schedule (subspace subsystem): owns the step
+    /// counter and decides when `proj_seed` is re-drawn. The projector
+    /// itself is regenerated in place every step (a gaussian sketch,
+    /// not an orthonormal basis), so it stays out of the dense-basis
+    /// providers — the paper's no-persistent-projector trick depends on
+    /// the in-place refill staying allocation-free.
+    schedule: Schedule,
     transposed: Option<bool>,
     /// Scratch: the regenerated projector P lives in `ws.geff`-adjacent
     /// buffers; like all workspace memory it is excluded from
@@ -69,12 +75,13 @@ pub struct Apollo {
 
 impl Apollo {
     pub fn new(cfg: ApolloConfig) -> Self {
+        let schedule = Schedule::new(cfg.interval);
         Apollo {
             cfg,
             proj_seed: 0x9E3779B9,
             m: None,
             v: None,
-            t: 0,
+            schedule,
             transposed: None,
             ws: StepWorkspace::new(),
             proj: Mat::default(),
@@ -83,11 +90,12 @@ impl Apollo {
     }
 
     fn step_oriented(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
-        self.t += 1;
+        let t = self.schedule.begin_round();
         let c = &self.cfg;
-        if self.t > 1 && c.interval < usize::MAX
-            && (self.t - 1) % c.interval == 0
-        {
+        // `interval = usize::MAX` pins the projector for the whole run
+        // (the modulo can mathematically never fire there; the guard
+        // keeps that contract explicit and skips the division).
+        if c.interval < usize::MAX && self.schedule.refresh_due(true) {
             // Fresh random projection; states are kept (APOLLO relies on
             // scaling robustness rather than state rotation).
             self.proj_seed = rng.next_u64();
@@ -109,8 +117,8 @@ impl Apollo {
         for (vv, &gg) in v.data.iter_mut().zip(&ws.gt.data) {
             *vv = c.beta2 * *vv + (1.0 - c.beta2) * gg * gg;
         }
-        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        let bc1 = 1.0 - c.beta1.powi(t as i32);
+        let bc2 = 1.0 - c.beta2.powi(t as i32);
         ws.dir.assign_zip(m, v, |mi, vi| {
             (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + c.eps)
         });
@@ -148,6 +156,48 @@ impl MatrixOptimizer for Apollo {
 
     fn name(&self) -> &str {
         "apollo"
+    }
+
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        let mut snap = OptSnapshot {
+            kind: OptSnapshot::APOLLO,
+            round: self.schedule.round() as u64,
+            transposed: OptSnapshot::encode_transposed(self.transposed),
+            scalars: Vec::new(),
+            indices: vec![self.proj_seed],
+            mats: Vec::new(),
+        };
+        if let (Some(m), Some(v)) = (&self.m, &self.v) {
+            snap.mats = vec![m.clone(), v.clone()];
+        }
+        Some(snap)
+    }
+
+    fn restore_snapshot(&mut self, snap: &OptSnapshot) -> bool {
+        if snap.kind != OptSnapshot::APOLLO
+            || snap.indices.len() != 1
+            || !(snap.mats.is_empty() || snap.mats.len() == 2)
+        {
+            return false;
+        }
+        if let [m, v] = &snap.mats[..] {
+            // The sketch rank r = rank.min(rows) can never exceed this
+            // configuration's rank; a bigger-rank checkpoint re-inits.
+            if m.rows > self.cfg.rank || v.shape() != m.shape() {
+                return false;
+            }
+        }
+        self.transposed = snap.decode_transposed();
+        self.proj_seed = snap.indices[0];
+        self.schedule.set_round(snap.round as usize);
+        if snap.mats.len() == 2 {
+            self.m = Some(snap.mats[0].clone());
+            self.v = Some(snap.mats[1].clone());
+        } else {
+            self.m = None;
+            self.v = None;
+        }
+        true
     }
 }
 

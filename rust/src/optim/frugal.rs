@@ -6,7 +6,15 @@
 //! random subset of `rank` columns (of the m-row side) is drawn. Adam
 //! moments live only on those columns; on refresh the old states are
 //! either projected (kept where the subsets overlap) or reset.
+//!
+//! The refresh timing and the row sampling route through the subspace
+//! subsystem ([`Schedule`] + the [`CoordinateBasis`] provider) — the
+//! coordinate subset is FRUGAL's "basis", and consolidating it there
+//! keeps all basis lifecycles in one place (RNG order unchanged, so
+//! trajectories are bitwise-identical to the pre-refactor code).
 
+use crate::subspace::provider::{BasisCtx, BasisProvider, CoordinateBasis};
+use crate::subspace::{OptSnapshot, Schedule};
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
@@ -52,12 +60,13 @@ impl Default for FrugalConfig {
 
 pub struct Frugal {
     pub cfg: FrugalConfig,
-    /// Selected row indices (the "subspace").
+    /// Selected row indices (the coordinate "subspace").
     pub sel: Vec<usize>,
     /// Adam moments for the selected rows: rank×n.
     m: Option<Mat>,
     v: Option<Mat>,
-    t: usize,
+    /// The unified refresh schedule (subspace subsystem).
+    schedule: Schedule,
     transposed: Option<bool>,
     /// Scratch (row mask) — steady-state steps allocate nothing.
     ws: StepWorkspace,
@@ -66,39 +75,38 @@ pub struct Frugal {
 
 impl Frugal {
     pub fn new(cfg: FrugalConfig) -> Self {
+        let schedule = Schedule::new(cfg.interval);
         Frugal {
             cfg,
             sel: Vec::new(),
             m: None,
             v: None,
-            t: 0,
+            schedule,
             transposed: None,
             ws: StepWorkspace::new(),
             orient: OrientBufs::default(),
         }
     }
 
-    fn sample_rows(&self, m_rows: usize, rng: &mut Rng) -> Vec<usize> {
-        // Sample `rank` distinct rows via partial Fisher–Yates.
-        let r = self.cfg.rank.min(m_rows);
-        let mut idx: Vec<usize> = (0..m_rows).collect();
-        for i in 0..r {
-            let j = i + rng.below(m_rows - i);
-            idx.swap(i, j);
-        }
-        let mut out = idx[..r].to_vec();
-        out.sort_unstable();
-        out
-    }
-
     fn step_oriented(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
         let c = self.cfg.clone();
-        self.t += 1;
+        let t = self.schedule.begin_round();
         let n = g.cols;
-        let refresh = self.sel.is_empty()
-            || (self.t > 1 && (self.t - 1) % c.interval.max(1) == 0);
+        let refresh = self.schedule.refresh_due(!self.sel.is_empty());
         if refresh {
-            let new_sel = self.sample_rows(g.rows, rng);
+            let new_sel = CoordinateBasis
+                .next(
+                    &BasisCtx {
+                        prev: None,
+                        grad: Some(g),
+                        rows: g.rows,
+                        rank: c.rank.min(g.rows),
+                        round: t as u64,
+                        region: 0,
+                    },
+                    rng,
+                )
+                .into_rows();
             match (self.m.as_mut(), self.v.as_mut()) {
                 (Some(m), Some(v)) => match c.state_handling {
                     StateHandling::Reset => {
@@ -132,8 +140,8 @@ impl Frugal {
 
         let m = self.m.as_mut().unwrap();
         let v = self.v.as_mut().unwrap();
-        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        let bc1 = 1.0 - c.beta1.powi(t as i32);
+        let bc2 = 1.0 - c.beta2.powi(t as i32);
 
         // Stateful Adam on selected rows; signSGD elsewhere. The row
         // mask lives in the reusable workspace (no per-step Vec).
@@ -190,6 +198,54 @@ impl MatrixOptimizer for Frugal {
 
     fn name(&self) -> &str {
         "frugal"
+    }
+
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        let mut snap = OptSnapshot {
+            kind: OptSnapshot::FRUGAL,
+            round: self.schedule.round() as u64,
+            transposed: OptSnapshot::encode_transposed(self.transposed),
+            scalars: Vec::new(),
+            indices: self.sel.iter().map(|&i| i as u64).collect(),
+            mats: Vec::new(),
+        };
+        if let (Some(m), Some(v)) = (&self.m, &self.v) {
+            snap.mats = vec![m.clone(), v.clone()];
+        }
+        Some(snap)
+    }
+
+    fn restore_snapshot(&mut self, snap: &OptSnapshot) -> bool {
+        if snap.kind != OptSnapshot::FRUGAL
+            || !(snap.mats.is_empty() || snap.mats.len() == 2)
+        {
+            return false;
+        }
+        if let [m, v] = &snap.mats[..] {
+            // Moments cover exactly the selected rows, and the selection
+            // must fit this configuration's rank (a different --rank
+            // re-inits instead of restoring a wrong-sized subset).
+            if snap.indices.len() > self.cfg.rank
+                || m.rows != snap.indices.len()
+                || v.shape() != m.shape()
+            {
+                return false;
+            }
+        } else if !snap.indices.is_empty() {
+            // A selection without moments cannot come from a valid save.
+            return false;
+        }
+        self.transposed = snap.decode_transposed();
+        self.sel = snap.indices.iter().map(|&i| i as usize).collect();
+        self.schedule.set_round(snap.round as usize);
+        if snap.mats.len() == 2 {
+            self.m = Some(snap.mats[0].clone());
+            self.v = Some(snap.mats[1].clone());
+        } else {
+            self.m = None;
+            self.v = None;
+        }
+        true
     }
 }
 

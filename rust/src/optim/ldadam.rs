@@ -18,8 +18,10 @@
 //! are still workspace-backed, removing the five largest per-step
 //! allocations (all m×n / r×n).
 
+use crate::subspace::{provider, OptSnapshot, Schedule};
 use crate::tensor::{
-    matmul, matmul_into, matmul_tn, matmul_tn_into, orthonormalize, Mat,
+    left_singular_basis, matmul, matmul_into, matmul_tn, matmul_tn_into,
+    Mat,
 };
 use crate::util::rng::Rng;
 
@@ -58,7 +60,10 @@ pub struct LdAdam {
     v: Option<Mat>,
     /// Generalized error-feedback buffer (m×n).
     err: Option<Mat>,
-    t: usize,
+    /// Every-step schedule (subspace subsystem): LDAdam refreshes its
+    /// tracked basis on every round — that IS the method — so the
+    /// schedule only owns the unified step counter here.
+    schedule: Schedule,
     transposed: Option<bool>,
     /// Reusable step scratch (projection / direction / back-projection).
     ws: StepWorkspace,
@@ -73,7 +78,7 @@ impl LdAdam {
             m: None,
             v: None,
             err: None,
-            t: 0,
+            schedule: Schedule::every_step(),
             transposed: None,
             ws: StepWorkspace::new(),
             orient: OrientBufs::default(),
@@ -82,8 +87,7 @@ impl LdAdam {
 
     fn step_oriented(&mut self, w: &mut Mat, g_raw: &Mat, _rng: &mut Rng) {
         let c = self.cfg.clone();
-        self.t += 1;
-        let t = self.t;
+        let t = self.schedule.begin_round();
         let r = c.rank.min(g_raw.rows);
         let n = g_raw.cols;
         let mut ws = std::mem::take(&mut self.ws);
@@ -96,21 +100,14 @@ impl LdAdam {
         let g = &ws.geff;
 
         // Basis update: one block power step on G_eff, interpolated with
-        // the previous basis, then re-orthonormalized. `take` instead of
-        // `clone`: self.s is reassigned below, so the old basis moves.
+        // the previous basis, then re-orthonormalized — the subspace
+        // subsystem's power-blend provider (`subspace::provider`).
+        // `take` instead of `clone`: self.s is reassigned below, so the
+        // old basis moves.
         let s_prev = self.s.take();
         let s_new = match &s_prev {
-            None => crate::tensor::left_singular_basis(g, r),
-            Some(s_old) => {
-                // Power step: orth(G (Gᵀ S_old)) tracks the dominant left
-                // subspace of the running gradients.
-                let gts = matmul_tn(g, s_old); // n×r
-                let power = matmul(g, &gts); // m×r
-                let norm = power.fro_norm().max(1e-12);
-                let mut blend = s_old.scale(1.0 - c.rho);
-                blend.axpy(c.rho / norm * (s_old.fro_norm().max(1.0)), &power);
-                orthonormalize(&blend)
-            }
+            None => left_singular_basis(g, r),
+            Some(s_old) => provider::power_blend(s_old, g, c.rho),
         };
 
         // Rotation-aware moment update (the estimator form of eqs 7–8).
@@ -192,6 +189,57 @@ impl MatrixOptimizer for LdAdam {
 
     fn name(&self) -> &str {
         "ldadam"
+    }
+
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        let mut snap = OptSnapshot {
+            kind: OptSnapshot::LDADAM,
+            round: self.schedule.round() as u64,
+            transposed: OptSnapshot::encode_transposed(self.transposed),
+            scalars: Vec::new(),
+            indices: Vec::new(),
+            mats: Vec::new(),
+        };
+        if let (Some(s), Some(m), Some(v), Some(e)) =
+            (&self.s, &self.m, &self.v, &self.err)
+        {
+            snap.mats = vec![s.clone(), m.clone(), v.clone(), e.clone()];
+        }
+        Some(snap)
+    }
+
+    fn restore_snapshot(&mut self, snap: &OptSnapshot) -> bool {
+        if snap.kind != OptSnapshot::LDADAM
+            || !(snap.mats.is_empty() || snap.mats.len() == 4)
+        {
+            return false;
+        }
+        if let [s, m, v, e] = &snap.mats[..] {
+            // Geometry must match this configuration's rank and hang
+            // together internally (moments in the subspace, full-size
+            // error buffer).
+            if s.cols != self.cfg.rank.min(s.rows)
+                || m.rows != s.cols
+                || v.shape() != m.shape()
+                || e.shape() != (s.rows, m.cols)
+            {
+                return false;
+            }
+        }
+        self.transposed = snap.decode_transposed();
+        self.schedule.set_round(snap.round as usize);
+        if snap.mats.len() == 4 {
+            self.s = Some(snap.mats[0].clone());
+            self.m = Some(snap.mats[1].clone());
+            self.v = Some(snap.mats[2].clone());
+            self.err = Some(snap.mats[3].clone());
+        } else {
+            self.s = None;
+            self.m = None;
+            self.v = None;
+            self.err = None;
+        }
+        true
     }
 }
 

@@ -4,6 +4,20 @@
 //! implements; [`Method`] is the user-facing registry that Table 1/2 and
 //! the Figure 3 ablation grid iterate over.
 //!
+//! ## The subspace engine
+//!
+//! Basis *lifecycle* logic — refresh schedules, rule dispatch, the
+//! Grassmannian geometry, shared-seed regeneration, coordinate
+//! selection — lives in [`crate::subspace`], not here: every optimizer
+//! in the suite draws bases from that one engine (`ProjectedOptimizer`
+//! and the PJRT path own a `subspace::SubspaceEngine`; APOLLO and
+//! FRUGAL own a `subspace::Schedule`; LDAdam uses the SVD/power-blend
+//! providers), and the comm collective shares the same shared-seed
+//! provider. This module keeps only the optimizer math (moments,
+//! recovery scaling, bias correction). `optim::grassmann`,
+//! [`SubspaceRule`], [`RS_NORM_FLOOR`] and [`shared_seed_basis`] remain
+//! importable from here as re-exports of their new home.
+//!
 //! ## The workspace hot path
 //!
 //! Every CPU optimizer owns a [`workspace::StepWorkspace`] (plus
@@ -42,24 +56,27 @@
 pub mod adam;
 pub mod apollo;
 pub mod frugal;
-pub mod grassmann;
 pub mod ldadam;
 pub mod projected;
 pub mod schedule;
 pub mod sgd;
 pub mod workspace;
 
+// The geometry moved to the subspace subsystem; keep the historical
+// `optim::grassmann` path alive as an alias.
+pub use crate::subspace::geometry as grassmann;
+pub use crate::subspace::{shared_seed_basis, SubspaceRule, RS_NORM_FLOOR};
+
 pub use adam::{Adam, AdamConfig, AdamVec};
 pub use apollo::{Apollo, ApolloConfig};
 pub use frugal::{Frugal, FrugalConfig, StateHandling};
 pub use ldadam::{LdAdam, LdAdamConfig};
-pub use projected::{
-    ProjectedConfig, ProjectedOptimizer, SubspaceRule, RS_NORM_FLOOR,
-};
+pub use projected::{ProjectedConfig, ProjectedOptimizer};
 pub use schedule::Schedule;
 pub use sgd::{Sgd, SgdConfig, SignSgd};
 pub use workspace::{with_orientation, OrientBufs, StepWorkspace};
 
+use crate::subspace::{OptSnapshot, SubspaceDiag};
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
@@ -80,6 +97,33 @@ pub trait MatrixOptimizer {
     fn name(&self) -> &str;
     /// Current learning-rate scale hook used by the trainer's scheduler.
     fn set_lr_multiplier(&mut self, _mult: f32) {}
+
+    /// Enable the subspace diagnostics (`--subspace-diag`): per-refresh
+    /// principal-angle alignment on top of the always-tracked energy
+    /// ratio. Off by default so the hot path stays allocation-free.
+    fn set_subspace_diag(&mut self, _on: bool) {}
+
+    /// Diagnostics from the most recent step, for optimizers backed by
+    /// the subspace engine (`None` for the dense baselines).
+    fn subspace_diag(&self) -> Option<SubspaceDiag> {
+        None
+    }
+
+    /// Serializable snapshot of this optimizer's subspace + moment
+    /// state, including the unified schedule round counter (`GWCKPT03`
+    /// checkpoint support). `None` when the optimizer has nothing
+    /// checkpointable beyond what a fresh instance re-derives.
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        None
+    }
+
+    /// Restore a snapshot produced by the same optimizer type. Returns
+    /// false (leaving the optimizer fresh — the legacy
+    /// re-init-from-gradient behavior) when the snapshot's kind or
+    /// geometry does not match.
+    fn restore_snapshot(&mut self, _snap: &OptSnapshot) -> bool {
+        false
+    }
 }
 
 /// The `Send`-safe CPU refinement of [`MatrixOptimizer`]: anything the
@@ -111,6 +155,22 @@ impl MatrixOptimizer for CpuAsBase {
 
     fn set_lr_multiplier(&mut self, mult: f32) {
         self.0.set_lr_multiplier(mult)
+    }
+
+    fn set_subspace_diag(&mut self, on: bool) {
+        self.0.set_subspace_diag(on)
+    }
+
+    fn subspace_diag(&self) -> Option<SubspaceDiag> {
+        self.0.subspace_diag()
+    }
+
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        self.0.snapshot()
+    }
+
+    fn restore_snapshot(&mut self, snap: &OptSnapshot) -> bool {
+        self.0.restore_snapshot(snap)
     }
 }
 
@@ -262,26 +322,6 @@ impl Method {
     }
 }
 
-/// Deterministic shared-seed basis regeneration — the piece that makes
-/// the low-rank collective's basis *free*: every data-parallel worker
-/// derives the identical Haar-orthonormal `m×r` basis locally from the
-/// run seed, the collective round counter, and the region index, so no
-/// basis bytes ever cross the transport. Reuses the projection sampler
-/// GrassJump's subspace refresh uses ([`grassmann::random_point`]).
-pub fn shared_seed_basis(
-    seed: u64,
-    round: u64,
-    region: u64,
-    m: usize,
-    r: usize,
-) -> Mat {
-    let mut rng = Rng::new(
-        seed ^ round.wrapping_mul(0x9E3779B97F4A7C15)
-            ^ region.wrapping_mul(0xD1B54A32D192ED03),
-    );
-    grassmann::random_point(m, r, &mut rng)
-}
-
 /// Per-step learning-rate rescaling support: since every optimizer stores
 /// its own `alpha`, the trainer scales grads instead — mathematically
 /// equivalent for first-order updates at fixed alpha ratios. (For exact
@@ -359,27 +399,6 @@ mod tests {
             let b = m.build_cpu(4, 10, 0.05, 100);
             assert_eq!(a.name(), b.name(), "{}", m.label());
             assert_send(b.as_ref());
-        }
-    }
-
-    #[test]
-    fn shared_seed_basis_is_deterministic_and_orthonormal() {
-        let a = shared_seed_basis(7, 3, 2, 20, 4);
-        let b = shared_seed_basis(7, 3, 2, 20, 4);
-        assert_eq!(a.data, b.data, "same derivation must be bitwise equal");
-        assert_ne!(a.data, shared_seed_basis(7, 4, 2, 20, 4).data);
-        assert_ne!(a.data, shared_seed_basis(7, 3, 1, 20, 4).data);
-        assert_ne!(a.data, shared_seed_basis(8, 3, 2, 20, 4).data);
-        let gram = crate::tensor::matmul_tn(&a, &a);
-        for i in 0..4 {
-            for j in 0..4 {
-                let want = if i == j { 1.0 } else { 0.0 };
-                assert!(
-                    (gram.at(i, j) - want).abs() < 1e-4,
-                    "gram[{i}][{j}] = {}",
-                    gram.at(i, j)
-                );
-            }
         }
     }
 

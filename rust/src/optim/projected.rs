@@ -14,55 +14,30 @@
 //!   GoLore     = Svd early, RandJump after the switch step
 //!   Frozen     = initial SVD basis kept for the whole run (+ optional RS)
 //!
+//! The basis lifecycle (refresh schedule, rule dispatch, init-from-SVD,
+//! AO rotation geometry, diagnostics) lives in
+//! [`crate::subspace::SubspaceEngine`] — this file owns only the paper's
+//! *optimizer* math: the in-subspace Adam moments (eqs 5–8) and the
+//! recovery-scaled residual (eqs 9–10). The split is bitwise-neutral:
+//! every per-rule step is pinned ≡ `reference_step` and the pre-refactor
+//! trajectories by rust/tests/{workspace_props,subspace_props}.rs.
+//!
 //! State lives in the optimizer orientation `m <= n` (wide matrices are
 //! handled transposed) exactly like the L1 Pallas kernel; the Rust and the
 //! compiled-artifact implementations are cross-checked in
 //! rust/tests/runtime_numerics.rs.
 
+use crate::subspace::{
+    projected_energy_ratio, EngineConfig, OptSnapshot, SubspaceDiag,
+    SubspaceEngine, SubspaceRule, RS_NORM_FLOOR,
+};
 use crate::tensor::{
-    left_singular_basis, matmul, matmul_into, matmul_tn, matmul_tn_into,
-    Mat,
+    matmul, matmul_into, matmul_tn, matmul_tn_into, Mat,
 };
 use crate::util::rng::Rng;
 
-use super::grassmann;
 use super::workspace::{with_orientation, OrientBufs, StepWorkspace};
 use super::MatrixOptimizer;
-
-/// Floor for the column-norm division in eq 9 — matches NORM_FLOOR in
-/// python/compile/kernels/ref.py.
-pub const RS_NORM_FLOOR: f32 = 1e-12;
-
-/// How the subspace S_t is updated every `interval` steps.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum SubspaceRule {
-    /// GaLore/Fira: top-r left singular vectors of the current gradient.
-    Svd,
-    /// GrassWalk: random walk — geodesic step along a random tangent.
-    RandWalk,
-    /// GrassJump: fresh Haar-random orthonormal basis.
-    RandJump,
-    /// SubTrack++: geodesic step along the (negated) estimation-error
-    /// derivative −∂E/∂S.
-    Track,
-    /// Never update after the initial SVD of G_0.
-    Frozen,
-    /// GoLore: Svd before `switch_step`, RandJump after.
-    GoLore { switch_step: usize },
-}
-
-impl SubspaceRule {
-    pub fn label(&self) -> &'static str {
-        match self {
-            SubspaceRule::Svd => "svd",
-            SubspaceRule::RandWalk => "walk",
-            SubspaceRule::RandJump => "jump",
-            SubspaceRule::Track => "track",
-            SubspaceRule::Frozen => "frozen",
-            SubspaceRule::GoLore { .. } => "golore",
-        }
-    }
-}
 
 #[derive(Clone, Debug)]
 pub struct ProjectedConfig {
@@ -106,6 +81,19 @@ impl Default for ProjectedConfig {
             rsvd_oversample: 4,
             rsvd_power: 0,
             weight_decay: 0.0,
+        }
+    }
+}
+
+impl ProjectedConfig {
+    /// The subspace-engine view of this configuration.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            rank: self.rank,
+            interval: self.interval,
+            rule: self.rule,
+            eta: self.eta,
+            rsvd: Some((self.rsvd_oversample, self.rsvd_power)),
         }
     }
 }
@@ -185,15 +173,13 @@ pub fn reference_step(
 pub struct ProjectedOptimizer {
     pub cfg: ProjectedConfig,
     name: String,
-    /// Basis S_t (m×r) in optimizer orientation.
-    pub s: Option<Mat>,
+    /// The basis lifecycle: schedule, rule dispatch, S_t, diagnostics.
+    engine: SubspaceEngine,
     /// First/second moments in the subspace (r×n).
     m: Option<Mat>,
     v: Option<Mat>,
     /// ‖Λ_{t−1}‖ for the growth limiter; None = limiter inactive.
     lam_prev: Option<f32>,
-    /// 1-based step counter.
-    t: usize,
     /// Whether this matrix runs transposed (original rows > cols).
     transposed: Option<bool>,
     /// Diagnostics from the last step.
@@ -213,14 +199,14 @@ impl ProjectedOptimizer {
             if cfg.use_ao { "+ao" } else { "" },
             if cfg.use_rs { "+rs" } else { "" }
         );
+        let engine = SubspaceEngine::new(cfg.engine_config());
         ProjectedOptimizer {
             cfg,
             name,
-            s: None,
+            engine,
             m: None,
             v: None,
             lam_prev: None,
-            t: 0,
             transposed: None,
             last_energy_ratio: 0.0,
             last_refresh: false,
@@ -229,69 +215,14 @@ impl ProjectedOptimizer {
         }
     }
 
-    /// Effective rank given the matrix orientation.
-    fn rank_for(&self, rows: usize) -> usize {
-        self.cfg.rank.min(rows)
+    /// The current basis S_t in optimizer orientation, if initialized.
+    pub fn basis(&self) -> Option<&Mat> {
+        self.engine.basis_opt()
     }
 
-    fn refresh_due(&self) -> bool {
-        if self.s.is_none() {
-            return true;
-        }
-        if self.cfg.rule == SubspaceRule::Frozen {
-            return false;
-        }
-        // t is incremented before this check; refresh every `interval`.
-        (self.t - 1) % self.cfg.interval.max(1) == 0 && self.t > 1
-    }
-
-    /// Compute the next basis according to the configured rule.
-    fn next_basis(&self, g: &Mat, rng: &mut Rng) -> Mat {
-        let r = self.rank_for(g.rows);
-        let rule = match self.cfg.rule {
-            SubspaceRule::GoLore { switch_step } => {
-                if self.t <= switch_step {
-                    SubspaceRule::Svd
-                } else {
-                    SubspaceRule::RandJump
-                }
-            }
-            other => other,
-        };
-        match rule {
-            SubspaceRule::Svd | SubspaceRule::Frozen => {
-                left_singular_basis(g, r)
-            }
-            SubspaceRule::RandJump => grassmann::random_point(g.rows, r, rng),
-            SubspaceRule::RandWalk => {
-                let s = self.s.as_ref().expect("walk needs a current basis");
-                let x = Mat::randn(s.rows, s.cols, 1.0, rng);
-                grassmann::exp_map(
-                    s,
-                    &x,
-                    self.cfg.eta,
-                    Some((self.cfg.rsvd_oversample, self.cfg.rsvd_power)),
-                    rng,
-                )
-            }
-            SubspaceRule::Track => {
-                let s = self.s.as_ref().expect("track needs a current basis");
-                // Descent direction on the manifold: −∂E/∂S, normalized.
-                let d = grassmann::error_derivative(s, g).scale(-1.0);
-                let norm = d.fro_norm();
-                if norm < 1e-12 {
-                    return s.clone();
-                }
-                grassmann::exp_map(
-                    s,
-                    &d.scale(1.0 / norm),
-                    self.cfg.eta,
-                    Some((self.cfg.rsvd_oversample, self.cfg.rsvd_power)),
-                    rng,
-                )
-            }
-            SubspaceRule::GoLore { .. } => unreachable!(),
-        }
+    /// Rounds stepped so far (the unified schedule counter).
+    pub fn round(&self) -> usize {
+        self.engine.round()
     }
 
     /// One optimizer step in the canonical (m <= n) orientation.
@@ -302,32 +233,21 @@ impl ProjectedOptimizer {
     /// rotation) allocates. Numerically identical to the historical
     /// allocating implementation (pinned in tests/workspace_props.rs).
     fn step_oriented(&mut self, w: &mut Mat, g: &Mat, rng: &mut Rng) {
-        self.t += 1;
-        let t = self.t;
+        let t = self.engine.begin_round();
 
         // ---- subspace refresh (off the hot path; may allocate) ----------
-        let refresh = self.refresh_due();
-        self.last_refresh = refresh;
-        let mut rotation: Option<Mat> = None; // R = S_tᵀ S_{t−1}
-        if refresh {
-            let s_new = if self.s.is_none() {
-                // Initialization: every rule starts from the SVD of G_0
-                // (paper Algorithm 1), except pure random jumps which may
-                // as well start random — we follow the paper and use SVD.
-                let r = self.rank_for(g.rows);
-                left_singular_basis(g, r)
-            } else {
-                self.next_basis(g, rng)
-            };
-            if let (Some(s_old), true) = (&self.s, self.cfg.use_ao) {
-                rotation = Some(matmul_tn(&s_new, s_old)); // r×r
-            }
-            self.s = Some(s_new);
+        let outcome = self.engine.refresh_if_due(g, rng);
+        self.last_refresh = outcome.refreshed;
+        // R = S_tᵀ S_{t−1}: Some exactly when AO is on and a refresh
+        // replaced an existing basis.
+        let mut rotation: Option<Mat> = None;
+        if let (Some(prev), true) = (&outcome.previous, self.cfg.use_ao) {
+            rotation = Some(self.engine.rotation(prev));
         }
 
         let mut ws = std::mem::take(&mut self.ws);
         let cfg = &self.cfg;
-        let s = self.s.as_ref().unwrap();
+        let s = self.engine.basis();
         let r = s.cols;
         let n = g.cols;
 
@@ -340,12 +260,11 @@ impl ProjectedOptimizer {
 
         // ---- project (eq 1) ---------------------------------------------
         matmul_tn_into(s, g, &mut ws.gt); // r×n
-        self.last_energy_ratio =
-            (ws.gt.fro_norm() / g.fro_norm().max(RS_NORM_FLOOR)).min(1.0);
+        self.last_energy_ratio = projected_energy_ratio(&ws.gt, g);
 
         // ---- moments ------------------------------------------------------
-        match (&rotation, cfg.use_ao && refresh) {
-            (Some(rot), true) => {
+        match &rotation {
+            Some(rot) => {
                 // eqs 7–8 (AO): rotate states onto the new basis.
                 // Refresh-only path: plain allocating ops for clarity.
                 let rm = matmul(rot, m);
@@ -363,7 +282,7 @@ impl ProjectedOptimizer {
                 *m = m_new;
                 *v = v_new;
             }
-            _ => {
+            None => {
                 // eqs 5–6 (regular Adam in the subspace), fully in place.
                 // NOTE: when the subspace changed without AO
                 // (GaLore-style), the stale moments are knowingly
@@ -435,7 +354,7 @@ impl MatrixOptimizer for ProjectedOptimizer {
     }
 
     fn state_floats(&self) -> usize {
-        let s = self.s.as_ref().map(|s| s.len()).unwrap_or(0);
+        let s = self.engine.basis_opt().map(|s| s.len()).unwrap_or(0);
         let m = self.m.as_ref().map(|m| m.len()).unwrap_or(0);
         let v = self.v.as_ref().map(|v| v.len()).unwrap_or(0);
         s + m + v + 1 // + lam_prev
@@ -443,6 +362,82 @@ impl MatrixOptimizer for ProjectedOptimizer {
 
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn set_subspace_diag(&mut self, on: bool) {
+        self.engine.set_diag(on);
+    }
+
+    fn subspace_diag(&self) -> Option<SubspaceDiag> {
+        Some(SubspaceDiag {
+            energy_ratio: self.last_energy_ratio,
+            alignment: if self.last_refresh {
+                self.engine.alignment()
+            } else {
+                None
+            },
+            refreshed: self.last_refresh,
+            round: self.engine.round(),
+        })
+    }
+
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        let mut snap = OptSnapshot {
+            kind: OptSnapshot::PROJECTED,
+            round: self.engine.round() as u64,
+            transposed: OptSnapshot::encode_transposed(self.transposed),
+            scalars: match self.lam_prev {
+                None => vec![0.0, 0.0],
+                Some(v) => vec![1.0, v],
+            },
+            indices: Vec::new(),
+            mats: Vec::new(),
+        };
+        if let (Some(s), Some(m), Some(v)) =
+            (self.engine.basis_opt(), &self.m, &self.v)
+        {
+            snap.mats = vec![s.clone(), m.clone(), v.clone()];
+        }
+        Some(snap)
+    }
+
+    fn restore_snapshot(&mut self, snap: &OptSnapshot) -> bool {
+        if snap.kind != OptSnapshot::PROJECTED
+            || snap.scalars.len() != 2
+            || !(snap.mats.is_empty() || snap.mats.len() == 3)
+        {
+            return false;
+        }
+        if let [s, m, v] = &snap.mats[..] {
+            // Geometry must match this configuration (e.g. a checkpoint
+            // from a different --rank re-inits instead of silently
+            // training at the old rank).
+            if s.cols != self.cfg.rank.min(s.rows)
+                || m.rows != s.cols
+                || v.shape() != m.shape()
+            {
+                return false;
+            }
+        }
+        self.transposed = snap.decode_transposed();
+        self.lam_prev = if snap.scalars[0] != 0.0 {
+            Some(snap.scalars[1])
+        } else {
+            None
+        };
+        if snap.mats.len() == 3 {
+            self.engine
+                .restore(snap.round as usize, Some(snap.mats[0].clone()));
+            self.m = Some(snap.mats[1].clone());
+            self.v = Some(snap.mats[2].clone());
+        } else {
+            self.engine.restore(snap.round as usize, None);
+            self.m = None;
+            self.v = None;
+        }
+        self.last_refresh = false;
+        self.last_energy_ratio = 0.0;
+        true
     }
 }
 
@@ -494,7 +489,7 @@ mod tests {
         opt.step(&mut w, &g, &mut rng);
         let delta = w.sub(&w0);
         // Residual directions: project delta onto the orthocomplement.
-        let s = opt.s.as_ref().unwrap();
+        let s = opt.basis().unwrap();
         let within = matmul(s, &matmul_tn(s, &delta));
         let outside = delta.sub(&within).fro_norm();
         assert!(outside > 1e-6, "RS should move outside the subspace");
@@ -505,7 +500,7 @@ mod tests {
             ProjectedOptimizer::new(cfg(SubspaceRule::Frozen, false, false));
         opt2.step(&mut w2, &g, &mut rng);
         let delta2 = w2.sub(&w0);
-        let s2 = opt2.s.as_ref().unwrap();
+        let s2 = opt2.basis().unwrap();
         let within2 = matmul(s2, &matmul_tn(s2, &delta2));
         assert!(delta2.sub(&within2).fro_norm() < 1e-5);
     }
@@ -555,12 +550,12 @@ mod tests {
         let mut opt =
             ProjectedOptimizer::new(cfg(SubspaceRule::Frozen, false, true));
         opt.step(&mut w, &g, &mut rng);
-        let s0 = opt.s.clone().unwrap();
+        let s0 = opt.basis().unwrap().clone();
         for _ in 0..7 {
             opt.step(&mut w, &g, &mut rng);
             assert!(!opt.last_refresh);
         }
-        assert_eq!(opt.s.as_ref().unwrap().data, s0.data);
+        assert_eq!(opt.basis().unwrap().data, s0.data);
     }
 
     #[test]
@@ -618,5 +613,80 @@ mod tests {
         }
         // Same RNG stream => same bases; AO handling must still differ.
         assert!(wa.max_abs_diff(&wb) > 1e-7);
+    }
+
+    #[test]
+    fn subspace_diag_reports_alignment_on_refresh_only() {
+        let mut rng = Rng::new(11);
+        let (mut w, g) = rand_problem(10, 14, &mut rng);
+        let mut opt = ProjectedOptimizer::new(ProjectedConfig {
+            interval: 3,
+            ..cfg(SubspaceRule::RandJump, true, true)
+        });
+        opt.set_subspace_diag(true);
+        opt.step(&mut w, &g, &mut rng); // init refresh: no previous basis
+        let d = opt.subspace_diag().unwrap();
+        assert!(d.refreshed);
+        assert!(d.alignment.is_none(), "init has no consecutive pair");
+        assert!(d.energy_ratio > 0.0 && d.energy_ratio <= 1.0);
+        for step in 2..=4 {
+            opt.step(&mut w, &g, &mut rng);
+            let d = opt.subspace_diag().unwrap();
+            assert_eq!(d.round, step);
+            if step == 4 {
+                assert!(d.refreshed);
+                let a = d.alignment.expect("refresh computes alignment");
+                assert!((0.0..=1.0).contains(&a), "{a}");
+            } else {
+                assert!(!d.refreshed);
+                assert!(d.alignment.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_continues_bitwise() {
+        // Mid-interval snapshot/restore must continue the trajectory
+        // bitwise-identically to the uninterrupted run — the checkpoint
+        // contract GWCKPT03 builds on.
+        for rule in [
+            SubspaceRule::RandWalk,
+            SubspaceRule::RandJump,
+            SubspaceRule::Svd,
+            SubspaceRule::Track,
+        ] {
+            let g0 = rand_problem(9, 13, &mut Rng::new(20)).1;
+            let mut w_cont = Mat::randn(9, 13, 1.0, &mut Rng::new(21));
+            let mut cont = ProjectedOptimizer::new(ProjectedConfig {
+                interval: 5,
+                ..cfg(rule, true, true)
+            });
+            let mut rng_cont = Rng::new(22);
+            for _ in 0..7 {
+                cont.step(&mut w_cont, &g0, &mut rng_cont);
+            }
+            let snap = cont.snapshot().unwrap();
+            assert_eq!(snap.round, 7);
+            let w_at_snap = w_cont.clone();
+            let rng_at_snap = rng_cont.state();
+            for _ in 0..6 {
+                cont.step(&mut w_cont, &g0, &mut rng_cont);
+            }
+
+            let mut resumed = ProjectedOptimizer::new(ProjectedConfig {
+                interval: 5,
+                ..cfg(rule, true, true)
+            });
+            assert!(resumed.restore_snapshot(&snap));
+            let mut w_res = w_at_snap;
+            let mut rng_res = Rng::from_state(rng_at_snap);
+            for _ in 0..6 {
+                resumed.step(&mut w_res, &g0, &mut rng_res);
+            }
+            assert_eq!(
+                w_cont.data, w_res.data,
+                "{rule:?}: resumed trajectory must be bitwise identical"
+            );
+        }
     }
 }

@@ -5,6 +5,7 @@
 //! lazily sized once); the fused iterator sweep keeps the hot loop
 //! bounds-check free.
 
+use crate::subspace::OptSnapshot;
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
@@ -69,6 +70,25 @@ impl MatrixOptimizer for Sgd {
 
     fn name(&self) -> &str {
         "sgd"
+    }
+
+    fn snapshot(&self) -> Option<OptSnapshot> {
+        let mut snap = OptSnapshot {
+            kind: OptSnapshot::SGD,
+            ..Default::default()
+        };
+        if let Some(buf) = &self.buf {
+            snap.mats = vec![buf.clone()];
+        }
+        Some(snap)
+    }
+
+    fn restore_snapshot(&mut self, snap: &OptSnapshot) -> bool {
+        if snap.kind != OptSnapshot::SGD || snap.mats.len() > 1 {
+            return false;
+        }
+        self.buf = snap.mats.first().cloned();
+        true
     }
 }
 

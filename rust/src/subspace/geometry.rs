@@ -1,12 +1,13 @@
 //! Grassmannian geometry Gr(r, m): the space of r-dimensional subspaces of
 //! R^m, represented by orthonormal bases S in R^{m×r} (Bendokat et al.,
 //! 2024). This module implements everything the paper's subspace update
-//! rules need:
+//! rules need (moved verbatim from the old `optim::grassmann` home — the
+//! geometry belongs to the subspace subsystem, not to any one optimizer):
 //!
 //! * horizontal (tangent) projection at S:    X_h = (I − S Sᵀ) X
 //! * the exponential map / geodesic step (paper eq 4)
 //! * random tangent sampling (GrassWalk) and random points (GrassJump)
-//! * principal angles & geodesic distance (analysis + tests)
+//! * principal angles & geodesic distance (analysis + diagnostics)
 
 use crate::tensor::{matmul, matmul_tn, orthonormalize, rsvd, svd_thin, Mat};
 use crate::util::rng::Rng;
@@ -88,6 +89,17 @@ pub fn principal_angle_cosines(a: &Mat, b: &Mat) -> Vec<f32> {
     let g = matmul_tn(a, b);
     let svd = svd_thin(&g);
     svd.s.iter().map(|&x| x.clamp(0.0, 1.0)).collect()
+}
+
+/// Mean principal-angle cosine between span(A) and span(B): 1.0 = the
+/// spans coincide, → 0 as they become orthogonal. The `subspace/alignment`
+/// diagnostic between consecutive bases.
+pub fn mean_alignment(a: &Mat, b: &Mat) -> f32 {
+    let cos = principal_angle_cosines(a, b);
+    if cos.is_empty() {
+        return 1.0;
+    }
+    cos.iter().sum::<f32>() / cos.len() as f32
 }
 
 /// Geodesic (arc-length) distance on Gr(r, m): sqrt(sum of squared
@@ -208,6 +220,19 @@ mod tests {
             assert!((c - 1.0).abs() < 1e-4);
         }
         assert!(geodesic_distance(&a, &a) < 1e-3);
+        assert!((mean_alignment(&a, &a) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn alignment_decreases_with_distance() {
+        let s = basis(20, 4, 8);
+        let mut rng = Rng::new(8);
+        let x = random_tangent(&s, &mut rng);
+        let near = exp_map(&s, &x, 0.1, None, &mut rng);
+        let far = exp_map(&s, &x, 1.0, None, &mut rng);
+        assert!(mean_alignment(&s, &near) > mean_alignment(&s, &far));
+        assert!(mean_alignment(&s, &near) <= 1.0);
+        assert!(mean_alignment(&s, &far) >= 0.0);
     }
 
     #[test]

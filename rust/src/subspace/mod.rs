@@ -1,0 +1,266 @@
+//! S15: the subspace subsystem — the single home for the basis lifecycle.
+//!
+//! The paper's central objects are a rank-r *core* subspace S_t, the
+//! schedule on which it refreshes, and the residual *bulk* left behind.
+//! Before this module those objects were smeared across five homes
+//! (private methods on `ProjectedOptimizer`, `optim::grassmann`,
+//! `optim::shared_seed_basis`, `comm::lowrank::basis_for`, and FRUGAL's
+//! bespoke row sampling); now every consumer — the optimizer suite, the
+//! PJRT-backed optimizer, and the low-rank collective — draws bases from
+//! here. SubTrack++ and the randomized-subspace literature frame exactly
+//! this split: one interchangeable "subspace engine" behind the
+//! optimizer.
+//!
+//! Map from types to the paper:
+//!
+//! | type                          | paper object                         |
+//! |-------------------------------|--------------------------------------|
+//! | [`SubspaceRule`]              | the update-rule axis of Figure 3     |
+//! | [`provider::SvdBasis`]        | GaLore/Fira top-r SVD (eq 2)         |
+//! | [`provider::HaarBasis`]       | GrassJump: fresh Haar draw           |
+//! | [`provider::WalkBasis`]       | GrassWalk: geodesic step (eq 4)      |
+//! | [`provider::TrackBasis`]      | SubTrack++: −∂E/∂S geodesic step     |
+//! | [`provider::SharedSeedBasis`] | the comm collective's free basis     |
+//! | [`provider::CoordinateBasis`] | FRUGAL's random row subset           |
+//! | [`provider::power_blend`]     | LDAdam's interpolated power step     |
+//! | [`Schedule`]                  | the every-T refresh counter          |
+//! | [`SubspaceEngine`]            | S_t lifecycle incl. AO rotation hook |
+//! |                               | (rotation feeds eqs 7–8)             |
+//! | [`RS_NORM_FLOOR`]             | the eq 9 column-norm division floor  |
+//! | [`projected_energy_ratio`]    | eq 3 energy ratio R_t                |
+//! | [`geometry`]                  | Gr(r, m) maps behind walk/track      |
+//!
+//! The engine is deliberately *not* an optimizer: eqs 5–8 (the adaptive
+//! moments) and eqs 9–10 (recovery scaling) stay in `optim::projected`,
+//! which asks the engine only "did the basis move, and from where?" —
+//! that split is what lets the comm collective share the same providers
+//! without dragging optimizer state along. Per-rule optimizer steps are
+//! pinned bitwise-identical to the pre-refactor code by
+//! rust/tests/subspace_props.rs and rust/tests/workspace_props.rs.
+//!
+//! Diagnostics ([`SubspaceDiag`], gated behind `--subspace-diag`) expose
+//! the paper's Figure-1 analysis from real training runs: per-layer
+//! energy ratio (how much gradient energy the core captures) and the
+//! alignment between consecutive bases (mean principal-angle cosine) —
+//! the "core influence diminishes over time and in deeper layers"
+//! measurement, reproducible from our own runs.
+
+pub mod geometry;
+pub mod provider;
+pub mod schedule;
+
+pub use provider::{Basis, BasisCtx, BasisProvider, SharedSeedBasis};
+pub use schedule::{EngineConfig, Refresh, Schedule, SubspaceEngine};
+
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// Floor for the column-norm division in eq 9 — matches NORM_FLOOR in
+/// python/compile/kernels/ref.py.
+pub const RS_NORM_FLOOR: f32 = 1e-12;
+
+/// How the subspace S_t is updated every `interval` steps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SubspaceRule {
+    /// GaLore/Fira: top-r left singular vectors of the current gradient.
+    Svd,
+    /// GrassWalk: random walk — geodesic step along a random tangent.
+    RandWalk,
+    /// GrassJump: fresh Haar-random orthonormal basis.
+    RandJump,
+    /// SubTrack++: geodesic step along the (negated) estimation-error
+    /// derivative −∂E/∂S.
+    Track,
+    /// Never update after the initial SVD of G_0.
+    Frozen,
+    /// GoLore: Svd before `switch_step`, RandJump after.
+    GoLore { switch_step: usize },
+}
+
+impl SubspaceRule {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SubspaceRule::Svd => "svd",
+            SubspaceRule::RandWalk => "walk",
+            SubspaceRule::RandJump => "jump",
+            SubspaceRule::Track => "track",
+            SubspaceRule::Frozen => "frozen",
+            SubspaceRule::GoLore { .. } => "golore",
+        }
+    }
+
+    /// Parse a rule label (the `--rule` CLI axis). GoLore switches at the
+    /// paper's midpoint, so it needs the run length.
+    pub fn parse(s: &str, total_steps: usize) -> Option<SubspaceRule> {
+        match s.to_ascii_lowercase().as_str() {
+            "svd" => Some(SubspaceRule::Svd),
+            "walk" | "randwalk" => Some(SubspaceRule::RandWalk),
+            "jump" | "randjump" => Some(SubspaceRule::RandJump),
+            "track" => Some(SubspaceRule::Track),
+            "frozen" => Some(SubspaceRule::Frozen),
+            "golore" => Some(SubspaceRule::GoLore {
+                switch_step: total_steps / 2,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// eq 3 from an already-projected gradient: R_t = ‖G̃‖_F / ‖G‖_F,
+/// clamped to [0, 1]. Allocation-free, so the optimizer hot path can
+/// record it every step.
+pub fn projected_energy_ratio(gt: &Mat, g: &Mat) -> f32 {
+    (gt.fro_norm() / g.fro_norm().max(RS_NORM_FLOOR)).min(1.0)
+}
+
+/// Deterministic shared-seed basis regeneration — the piece that makes
+/// the low-rank collective's basis *free*: every data-parallel worker
+/// derives the identical Haar-orthonormal `m×r` basis locally from the
+/// run seed, the collective round counter, and the region index, so no
+/// basis bytes ever cross the transport. Reuses the sampler GrassJump's
+/// subspace refresh uses ([`geometry::random_point`]).
+pub fn shared_seed_basis(
+    seed: u64,
+    round: u64,
+    region: u64,
+    m: usize,
+    r: usize,
+) -> Mat {
+    let mut rng = Rng::new(
+        seed ^ round.wrapping_mul(0x9E3779B97F4A7C15)
+            ^ region.wrapping_mul(0xD1B54A32D192ED03),
+    );
+    geometry::random_point(m, r, &mut rng)
+}
+
+/// Per-step diagnostics the engine-backed optimizers expose when
+/// `--subspace-diag` is on (see `MatrixOptimizer::subspace_diag`).
+#[derive(Clone, Copy, Debug)]
+pub struct SubspaceDiag {
+    /// eq 3 energy ratio of the most recent step, in [0, 1].
+    pub energy_ratio: f32,
+    /// Mean principal-angle cosine between the two most recent bases
+    /// (1.0 = span unchanged). Only present right after a refresh that
+    /// replaced an existing basis, and only when diagnostics are on —
+    /// the computation runs an r×r SVD, so it stays off the default
+    /// hot path.
+    pub alignment: Option<f32>,
+    /// Whether the most recent step refreshed the basis.
+    pub refreshed: bool,
+    /// Rounds seen so far (the unified schedule counter).
+    pub round: usize,
+}
+
+/// Serializable snapshot of one per-matrix optimizer's subspace +
+/// moment state — the unified schedule state `GWCKPT03` carries so a
+/// restore realigns basis-refresh timing (and, with the full state,
+/// continues bitwise-identically). The layout is deliberately generic
+/// (tagged kind + counters + scalar/index/matrix pools) so every
+/// optimizer in the suite can round-trip through one wire format.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OptSnapshot {
+    /// Which optimizer produced this snapshot (`OptSnapshot::PROJECTED`
+    /// etc.). Restoring into a different optimizer type is rejected:
+    /// the optimizer falls back to the legacy re-init-from-gradient
+    /// path, keeping checkpoints method-portable.
+    pub kind: u32,
+    /// The unified schedule round counter (steps seen).
+    pub round: u64,
+    /// Orientation memo: 0 = undecided, 1 = not transposed,
+    /// 2 = transposed.
+    pub transposed: u8,
+    pub scalars: Vec<f32>,
+    pub indices: Vec<u64>,
+    pub mats: Vec<Mat>,
+}
+
+impl OptSnapshot {
+    pub const PROJECTED: u32 = 1;
+    pub const FRUGAL: u32 = 2;
+    pub const APOLLO: u32 = 3;
+    pub const LDADAM: u32 = 4;
+    pub const ADAM: u32 = 5;
+    pub const SGD: u32 = 6;
+    pub const PJRT: u32 = 7;
+
+    pub fn encode_transposed(t: Option<bool>) -> u8 {
+        match t {
+            None => 0,
+            Some(false) => 1,
+            Some(true) => 2,
+        }
+    }
+
+    pub fn decode_transposed(&self) -> Option<bool> {
+        match self.transposed {
+            1 => Some(false),
+            2 => Some(true),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_seed_basis_is_deterministic_and_orthonormal() {
+        let a = shared_seed_basis(7, 3, 2, 20, 4);
+        let b = shared_seed_basis(7, 3, 2, 20, 4);
+        assert_eq!(a.data, b.data, "same derivation must be bitwise equal");
+        assert_ne!(a.data, shared_seed_basis(7, 4, 2, 20, 4).data);
+        assert_ne!(a.data, shared_seed_basis(7, 3, 1, 20, 4).data);
+        assert_ne!(a.data, shared_seed_basis(8, 3, 2, 20, 4).data);
+        let gram = crate::tensor::matmul_tn(&a, &a);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (gram.at(i, j) - want).abs() < 1e-4,
+                    "gram[{i}][{j}] = {}",
+                    gram.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rule_parse_roundtrip() {
+        for (s, rule) in [
+            ("svd", SubspaceRule::Svd),
+            ("walk", SubspaceRule::RandWalk),
+            ("jump", SubspaceRule::RandJump),
+            ("track", SubspaceRule::Track),
+            ("frozen", SubspaceRule::Frozen),
+        ] {
+            assert_eq!(SubspaceRule::parse(s, 100), Some(rule));
+            assert_eq!(SubspaceRule::parse(rule.label(), 100), Some(rule));
+        }
+        assert_eq!(
+            SubspaceRule::parse("golore", 100),
+            Some(SubspaceRule::GoLore { switch_step: 50 })
+        );
+        assert_eq!(SubspaceRule::parse("bogus", 100), None);
+    }
+
+    #[test]
+    fn energy_ratio_is_clamped() {
+        let mut rng = Rng::new(1);
+        let g = Mat::randn(6, 9, 1.0, &mut rng);
+        assert!((projected_energy_ratio(&g, &g) - 1.0).abs() < 1e-6);
+        let zero = Mat::zeros(6, 9);
+        assert_eq!(projected_energy_ratio(&zero, &g), 0.0);
+    }
+
+    #[test]
+    fn snapshot_transposed_roundtrip() {
+        for t in [None, Some(false), Some(true)] {
+            let snap = OptSnapshot {
+                transposed: OptSnapshot::encode_transposed(t),
+                ..Default::default()
+            };
+            assert_eq!(snap.decode_transposed(), t);
+        }
+    }
+}

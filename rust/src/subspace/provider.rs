@@ -1,0 +1,311 @@
+//! Basis providers — *how* the next subspace basis is produced.
+//!
+//! Every basis-construction recipe in the repo lives here behind one
+//! [`BasisProvider`] trait: the SVD top-r of the projected family, the
+//! Haar draw GrassJump and the low-rank collective share, the geodesic
+//! walk/track steps, LDAdam's interpolated power iteration, FRUGAL's
+//! random row subset, and the shared-seed deterministic regeneration the
+//! comm subsystem relies on to keep basis traffic at zero.
+//!
+//! Providers are *pure recipes*: they own their hyperparameters (step
+//! size, rsvd config, seed) but no per-matrix state — the round counter,
+//! the current basis and the refresh decision belong to
+//! [`super::Schedule`] / [`super::SubspaceEngine`]. The math and the RNG
+//! consumption order of every provider are verbatim moves of the
+//! pre-refactor per-optimizer code, so the engine-routed optimizers stay
+//! bitwise-identical (pinned by rust/tests/subspace_props.rs).
+
+use crate::tensor::{left_singular_basis, matmul, matmul_tn, orthonormalize, Mat};
+use crate::util::rng::Rng;
+
+use super::geometry;
+
+/// A produced basis: dense orthonormal columns for the projected family,
+/// a sorted row subset for FRUGAL-style coordinate selection.
+#[derive(Clone, Debug)]
+pub enum Basis {
+    /// Orthonormal m×r basis (or any m×r matrix for non-orthonormal
+    /// sketches).
+    Dense(Mat),
+    /// Sorted distinct row indices (coordinate subspace).
+    Rows(Vec<usize>),
+}
+
+impl Basis {
+    pub fn into_dense(self) -> Mat {
+        match self {
+            Basis::Dense(m) => m,
+            Basis::Rows(_) => panic!("expected a dense basis"),
+        }
+    }
+
+    pub fn into_rows(self) -> Vec<usize> {
+        match self {
+            Basis::Rows(r) => r,
+            Basis::Dense(_) => panic!("expected a coordinate basis"),
+        }
+    }
+}
+
+/// Everything a provider may look at when producing a basis. Callers
+/// pre-orient: `rows` is the long dimension of the (oriented) matrix and
+/// `rank` is already clamped to it.
+pub struct BasisCtx<'a> {
+    /// The outgoing basis (None on initialization).
+    pub prev: Option<&'a Mat>,
+    /// The current (oriented) gradient, for gradient-driven rules.
+    pub grad: Option<&'a Mat>,
+    /// Long dimension of the target matrix.
+    pub rows: usize,
+    /// Target rank (pre-clamped to `rows`).
+    pub rank: usize,
+    /// Schedule round the basis is being produced for.
+    pub round: u64,
+    /// Region/matrix index (shared-seed derivation domain).
+    pub region: u64,
+}
+
+/// One interchangeable basis-construction recipe.
+pub trait BasisProvider {
+    fn label(&self) -> &'static str;
+    fn next(&self, ctx: &BasisCtx<'_>, rng: &mut Rng) -> Basis;
+}
+
+/// GaLore/Fira/GoLore-early: top-r left singular vectors of the current
+/// gradient (paper eq 2). Also every rule's initialization (Algorithm 1).
+pub struct SvdBasis;
+
+impl BasisProvider for SvdBasis {
+    fn label(&self) -> &'static str {
+        "svd"
+    }
+
+    fn next(&self, ctx: &BasisCtx<'_>, _rng: &mut Rng) -> Basis {
+        let g = ctx.grad.expect("svd basis needs a gradient");
+        Basis::Dense(left_singular_basis(g, ctx.rank))
+    }
+}
+
+/// GrassJump: a fresh Haar-random point on Gr(r, m).
+pub struct HaarBasis;
+
+impl BasisProvider for HaarBasis {
+    fn label(&self) -> &'static str {
+        "jump"
+    }
+
+    fn next(&self, ctx: &BasisCtx<'_>, rng: &mut Rng) -> Basis {
+        Basis::Dense(geometry::random_point(ctx.rows, ctx.rank, rng))
+    }
+}
+
+/// GrassWalk: geodesic step along a random tangent (paper eq 4), with
+/// the decomposition approximated by randomized SVD when `rsvd` is set.
+pub struct WalkBasis {
+    pub eta: f32,
+    pub rsvd: Option<(usize, usize)>,
+}
+
+impl BasisProvider for WalkBasis {
+    fn label(&self) -> &'static str {
+        "walk"
+    }
+
+    fn next(&self, ctx: &BasisCtx<'_>, rng: &mut Rng) -> Basis {
+        let s = ctx.prev.expect("walk needs a current basis");
+        let x = Mat::randn(s.rows, s.cols, 1.0, rng);
+        Basis::Dense(geometry::exp_map(s, &x, self.eta, self.rsvd, rng))
+    }
+}
+
+/// SubTrack++: geodesic step along the (negated, normalized)
+/// estimation-error derivative −∂E/∂S.
+pub struct TrackBasis {
+    pub eta: f32,
+    pub rsvd: Option<(usize, usize)>,
+}
+
+impl BasisProvider for TrackBasis {
+    fn label(&self) -> &'static str {
+        "track"
+    }
+
+    fn next(&self, ctx: &BasisCtx<'_>, rng: &mut Rng) -> Basis {
+        let s = ctx.prev.expect("track needs a current basis");
+        let g = ctx.grad.expect("track needs a gradient");
+        // Descent direction on the manifold: −∂E/∂S, normalized.
+        let d = geometry::error_derivative(s, g).scale(-1.0);
+        let norm = d.fro_norm();
+        if norm < 1e-12 {
+            return Basis::Dense(s.clone());
+        }
+        Basis::Dense(geometry::exp_map(
+            s,
+            &d.scale(1.0 / norm),
+            self.eta,
+            self.rsvd,
+            rng,
+        ))
+    }
+}
+
+/// The comm collective's free basis: deterministic Haar regeneration
+/// from (seed, round, region) — identical on every worker, so it never
+/// crosses a transport ([`super::shared_seed_basis`]).
+pub struct SharedSeedBasis {
+    pub seed: u64,
+}
+
+impl SharedSeedBasis {
+    /// Convenience form used by the low-rank collective: the basis for
+    /// `region` at `round`, `m×min(r, m)`.
+    pub fn at(&self, round: u64, region: u64, m: usize, r: usize) -> Mat {
+        super::shared_seed_basis(self.seed, round, region, m, r.min(m))
+    }
+}
+
+impl BasisProvider for SharedSeedBasis {
+    fn label(&self) -> &'static str {
+        "shared-seed"
+    }
+
+    fn next(&self, ctx: &BasisCtx<'_>, _rng: &mut Rng) -> Basis {
+        Basis::Dense(self.at(ctx.round, ctx.region, ctx.rows, ctx.rank))
+    }
+}
+
+/// FRUGAL-style coordinate selection: `rank` distinct rows drawn by
+/// partial Fisher–Yates, returned sorted.
+pub struct CoordinateBasis;
+
+impl BasisProvider for CoordinateBasis {
+    fn label(&self) -> &'static str {
+        "rows"
+    }
+
+    fn next(&self, ctx: &BasisCtx<'_>, rng: &mut Rng) -> Basis {
+        Basis::Rows(coordinate_selection(ctx.rows, ctx.rank, rng))
+    }
+}
+
+/// Sample `rank` distinct rows of `rows` via partial Fisher–Yates
+/// (FRUGAL's column-subset variant, RNG order preserved verbatim).
+pub fn coordinate_selection(
+    rows: usize,
+    rank: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let r = rank.min(rows);
+    let mut idx: Vec<usize> = (0..rows).collect();
+    for i in 0..r {
+        let j = i + rng.below(rows - i);
+        idx.swap(i, j);
+    }
+    let mut out = idx[..r].to_vec();
+    out.sort_unstable();
+    out
+}
+
+/// LDAdam's tracking update (moved verbatim): orth((1−ρ) S +
+/// ρ·normalized(G (Gᵀ S))) tracks the dominant left subspace of the
+/// running gradients. A free function rather than a `BasisProvider`:
+/// LDAdam refreshes unconditionally every step, so it has no use for
+/// the provider context, and a wrapper struct would be dead surface.
+pub fn power_blend(s_old: &Mat, g: &Mat, rho: f32) -> Mat {
+    let gts = matmul_tn(g, s_old); // n×r
+    let power = matmul(g, &gts); // m×r
+    let norm = power.fro_norm().max(1e-12);
+    let mut blend = s_old.scale(1.0 - rho);
+    blend.axpy(rho / norm * (s_old.fro_norm().max(1.0)), &power);
+    orthonormalize(&blend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ortho_defect;
+
+    fn ctx<'a>(
+        prev: Option<&'a Mat>,
+        grad: Option<&'a Mat>,
+        rows: usize,
+        rank: usize,
+    ) -> BasisCtx<'a> {
+        BasisCtx { prev, grad, rows, rank, round: 0, region: 0 }
+    }
+
+    #[test]
+    fn dense_providers_return_orthonormal_bases() {
+        let mut rng = Rng::new(1);
+        let g = Mat::randn(20, 30, 1.0, &mut rng);
+        let prev = geometry::random_point(20, 4, &mut rng);
+        let providers: Vec<Box<dyn BasisProvider>> = vec![
+            Box::new(SvdBasis),
+            Box::new(HaarBasis),
+            Box::new(WalkBasis { eta: 0.3, rsvd: Some((4, 0)) }),
+            Box::new(TrackBasis { eta: 0.3, rsvd: Some((4, 0)) }),
+            Box::new(SharedSeedBasis { seed: 7 }),
+        ];
+        for p in providers {
+            let b = p
+                .next(&ctx(Some(&prev), Some(&g), 20, 4), &mut rng)
+                .into_dense();
+            assert_eq!(b.shape(), (20, 4), "{}", p.label());
+            assert!(ortho_defect(&b) < 1e-4, "{}", p.label());
+        }
+        // LDAdam's free-function recipe keeps the same contract.
+        let blended = power_blend(&prev, &g, 0.5);
+        assert_eq!(blended.shape(), (20, 4));
+        assert!(ortho_defect(&blended) < 1e-4);
+    }
+
+    #[test]
+    fn shared_seed_provider_matches_free_function() {
+        let p = SharedSeedBasis { seed: 42 };
+        let mut rng = Rng::new(0);
+        let via_trait = p
+            .next(
+                &BasisCtx {
+                    prev: None,
+                    grad: None,
+                    rows: 24,
+                    rank: 6,
+                    round: 3,
+                    region: 2,
+                },
+                &mut rng,
+            )
+            .into_dense();
+        let direct = super::super::shared_seed_basis(42, 3, 2, 24, 6);
+        assert_eq!(via_trait.data, direct.data);
+        assert_eq!(p.at(3, 2, 24, 6).data, direct.data);
+    }
+
+    #[test]
+    fn coordinate_selection_is_sorted_distinct_and_deterministic() {
+        let a = coordinate_selection(10, 4, &mut Rng::new(5));
+        let b = coordinate_selection(10, 4, &mut Rng::new(5));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        for w in a.windows(2) {
+            assert!(w[0] < w[1], "sorted + distinct: {a:?}");
+        }
+        assert!(a.iter().all(|&i| i < 10));
+        // Rank clamps to the row count.
+        let full = coordinate_selection(3, 8, &mut Rng::new(5));
+        assert_eq!(full, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn track_provider_keeps_basis_on_zero_derivative() {
+        // Exactly-zero gradient => exactly-zero derivative => the
+        // degenerate-norm guard returns the basis bitwise unchanged.
+        let mut rng = Rng::new(9);
+        let s = geometry::random_point(16, 3, &mut rng);
+        let g = Mat::zeros(16, 10);
+        let out = TrackBasis { eta: 0.3, rsvd: None }
+            .next(&ctx(Some(&s), Some(&g), 16, 3), &mut rng)
+            .into_dense();
+        assert_eq!(out.data, s.data);
+    }
+}

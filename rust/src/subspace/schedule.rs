@@ -1,0 +1,497 @@
+//! *When* the subspace refreshes, and the per-matrix engine that owns
+//! the basis lifecycle.
+//!
+//! [`Schedule`] is the unified round counter + refresh predicate every
+//! consumer shares (projected family, APOLLO's projector reseed,
+//! FRUGAL's row re-draw, LDAdam's every-step tracking). Owning the
+//! counter in one type is what lets checkpoints serialize and realign
+//! refresh timing uniformly (`GWCKPT03`), the same way
+//! `comm::Collective::set_round` already realigns the collective's
+//! shared-basis schedule.
+//!
+//! [`SubspaceEngine`] composes a `Schedule` with a [`SubspaceRule`] and
+//! the [`provider`] recipes into the full basis lifecycle for the
+//! dense-basis family: initialization from the SVD of G_0 (paper
+//! Algorithm 1), rule dispatch (including the GoLore switch), the AO
+//! rotation hook R = S_tᵀ S_{t−1} feeding eqs 7–8, and the
+//! principal-angle alignment diagnostic between consecutive bases.
+//!
+//! The refresh predicates and RNG consumption are verbatim moves of the
+//! pre-refactor per-optimizer code; bitwise equivalence is pinned by
+//! rust/tests/subspace_props.rs.
+
+use crate::tensor::{left_singular_basis, matmul_tn, Mat};
+use crate::util::rng::Rng;
+
+use super::geometry;
+use super::provider::{
+    BasisCtx, BasisProvider, HaarBasis, SvdBasis, TrackBasis, WalkBasis,
+};
+use super::SubspaceRule;
+
+/// The every-T refresh schedule: a 1-based round counter plus the shared
+/// refresh predicate. `interval` is clamped to ≥ 1 (an interval of 0
+/// refreshes every round instead of dividing by zero).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Schedule {
+    interval: usize,
+    frozen: bool,
+    t: usize,
+}
+
+impl Schedule {
+    pub fn new(interval: usize) -> Schedule {
+        Schedule { interval, frozen: false, t: 0 }
+    }
+
+    /// A schedule that never refreshes after initialization (the Frozen
+    /// rule).
+    pub fn frozen(interval: usize) -> Schedule {
+        Schedule { interval, frozen: true, t: 0 }
+    }
+
+    /// A schedule that refreshes on every round (LDAdam's per-step
+    /// tracking).
+    pub fn every_step() -> Schedule {
+        Schedule::new(1)
+    }
+
+    /// Advance to the next round; returns the new 1-based round index.
+    pub fn begin_round(&mut self) -> usize {
+        self.t += 1;
+        self.t
+    }
+
+    /// Rounds seen so far.
+    pub fn round(&self) -> usize {
+        self.t
+    }
+
+    /// Re-align the counter (checkpoint restore).
+    pub fn set_round(&mut self, t: usize) {
+        self.t = t;
+    }
+
+    pub fn interval(&self) -> usize {
+        self.interval
+    }
+
+    /// The shared refresh predicate, evaluated after [`begin_round`]:
+    /// always refresh while uninitialized, never after init when frozen,
+    /// otherwise every `interval` rounds (at t = interval+1, 2·interval+1,
+    /// …) exactly like the pre-refactor per-optimizer checks.
+    ///
+    /// [`begin_round`]: Schedule::begin_round
+    pub fn refresh_due(&self, initialized: bool) -> bool {
+        if !initialized {
+            return true;
+        }
+        if self.frozen {
+            return false;
+        }
+        self.t > 1 && (self.t - 1) % self.interval.max(1) == 0
+    }
+}
+
+/// Static configuration of a [`SubspaceEngine`].
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub rank: usize,
+    /// Subspace update interval T (paper: 100 for the main runs).
+    pub interval: usize,
+    pub rule: SubspaceRule,
+    /// Geodesic step size η for RandWalk / Track.
+    pub eta: f32,
+    /// Randomized-SVD parameters for the geodesic step
+    /// (`Some((oversample, power_iters))`), `None` for the exact SVD.
+    pub rsvd: Option<(usize, usize)>,
+}
+
+/// Outcome of [`SubspaceEngine::refresh_if_due`]: whether a refresh
+/// happened this round, and the outgoing basis when one was replaced
+/// (moved out, so the AO rotation can be formed without a clone).
+pub struct Refresh {
+    pub refreshed: bool,
+    pub previous: Option<Mat>,
+}
+
+/// Per-matrix basis lifecycle: round counter, refresh dispatch,
+/// orientation-agnostic basis storage, and the diagnostics the trainer
+/// surfaces under `--subspace-diag`.
+pub struct SubspaceEngine {
+    cfg: EngineConfig,
+    schedule: Schedule,
+    basis: Option<Mat>,
+    last_refresh: bool,
+    /// Mean principal-angle cosine between the two most recent bases;
+    /// NaN until a diagnostic-enabled refresh computed it.
+    last_alignment: f32,
+    diag: bool,
+}
+
+impl SubspaceEngine {
+    pub fn new(cfg: EngineConfig) -> SubspaceEngine {
+        let schedule = if cfg.rule == SubspaceRule::Frozen {
+            Schedule::frozen(cfg.interval)
+        } else {
+            Schedule::new(cfg.interval)
+        };
+        SubspaceEngine {
+            cfg,
+            schedule,
+            basis: None,
+            last_refresh: false,
+            last_alignment: f32::NAN,
+            diag: false,
+        }
+    }
+
+    pub fn cfg(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Enable the principal-angle alignment diagnostic (an r×r SVD per
+    /// refresh — allocation stays off the default hot path).
+    pub fn set_diag(&mut self, on: bool) {
+        self.diag = on;
+    }
+
+    /// Effective rank given the (oriented) matrix height.
+    pub fn rank_for(&self, rows: usize) -> usize {
+        self.cfg.rank.min(rows)
+    }
+
+    /// Advance to the next round; returns the new 1-based round index
+    /// (the optimizer's bias-correction step counter).
+    pub fn begin_round(&mut self) -> usize {
+        self.schedule.begin_round()
+    }
+
+    pub fn round(&self) -> usize {
+        self.schedule.round()
+    }
+
+    pub fn last_refresh(&self) -> bool {
+        self.last_refresh
+    }
+
+    /// The alignment diagnostic, when one has been computed.
+    pub fn alignment(&self) -> Option<f32> {
+        if self.last_alignment.is_nan() {
+            None
+        } else {
+            Some(self.last_alignment)
+        }
+    }
+
+    /// The current basis; panics before the first refresh.
+    pub fn basis(&self) -> &Mat {
+        self.basis.as_ref().expect("subspace engine not initialized")
+    }
+
+    pub fn basis_opt(&self) -> Option<&Mat> {
+        self.basis.as_ref()
+    }
+
+    /// AO rotation R = S_tᵀ S_{t−1} (r×r) onto the current basis —
+    /// the input of eqs 7–8.
+    pub fn rotation(&self, previous: &Mat) -> Mat {
+        matmul_tn(self.basis(), previous)
+    }
+
+    /// Refresh the basis if the schedule says so. Must be called exactly
+    /// once per round, right after [`begin_round`]. Initialization uses
+    /// the SVD of the first gradient for every rule (paper Algorithm 1);
+    /// afterwards the configured rule's provider runs. Returns the
+    /// outgoing basis so the caller can form the AO rotation.
+    ///
+    /// [`begin_round`]: SubspaceEngine::begin_round
+    pub fn refresh_if_due(&mut self, g: &Mat, rng: &mut Rng) -> Refresh {
+        let due = self.schedule.refresh_due(self.basis.is_some());
+        self.last_refresh = due;
+        if !due {
+            return Refresh { refreshed: false, previous: None };
+        }
+        let r = self.rank_for(g.rows);
+        let s_new = match &self.basis {
+            None => left_singular_basis(g, r),
+            Some(prev) => self.next_basis(prev, g, r, rng),
+        };
+        if self.diag {
+            if let Some(prev) = &self.basis {
+                self.last_alignment = geometry::mean_alignment(prev, &s_new);
+            }
+        }
+        let previous = self.basis.replace(s_new);
+        Refresh { refreshed: true, previous }
+    }
+
+    /// Rule dispatch for a post-init refresh (GoLore resolves by round).
+    fn next_basis(
+        &self,
+        prev: &Mat,
+        g: &Mat,
+        r: usize,
+        rng: &mut Rng,
+    ) -> Mat {
+        let round = self.schedule.round();
+        let rule = match self.cfg.rule {
+            SubspaceRule::GoLore { switch_step } => {
+                if round <= switch_step {
+                    SubspaceRule::Svd
+                } else {
+                    SubspaceRule::RandJump
+                }
+            }
+            other => other,
+        };
+        let ctx = BasisCtx {
+            prev: Some(prev),
+            grad: Some(g),
+            rows: g.rows,
+            rank: r,
+            round: round as u64,
+            region: 0,
+        };
+        let basis = match rule {
+            SubspaceRule::Svd | SubspaceRule::Frozen => {
+                SvdBasis.next(&ctx, rng)
+            }
+            SubspaceRule::RandJump => HaarBasis.next(&ctx, rng),
+            SubspaceRule::RandWalk => {
+                WalkBasis { eta: self.cfg.eta, rsvd: self.cfg.rsvd }
+                    .next(&ctx, rng)
+            }
+            SubspaceRule::Track => {
+                TrackBasis { eta: self.cfg.eta, rsvd: self.cfg.rsvd }
+                    .next(&ctx, rng)
+            }
+            SubspaceRule::GoLore { .. } => unreachable!(),
+        };
+        basis.into_dense()
+    }
+
+    /// Restore engine state from a checkpoint: re-align the round
+    /// counter and (when carried) the basis itself. Diagnostics reset.
+    pub fn restore(&mut self, round: usize, basis: Option<Mat>) {
+        self.schedule.set_round(round);
+        self.basis = basis;
+        self.last_refresh = false;
+        self.last_alignment = f32::NAN;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_matches_legacy_predicates() {
+        // interval 3: init at t=1, then refresh at t=4, 7, 10 — exactly
+        // the sequence the old ProjectedOptimizer::refresh_due produced.
+        let mut s = Schedule::new(3);
+        let mut fires = Vec::new();
+        let mut initialized = false;
+        for _ in 0..10 {
+            s.begin_round();
+            let due = s.refresh_due(initialized);
+            if due {
+                initialized = true;
+            }
+            fires.push(due);
+        }
+        assert_eq!(
+            fires,
+            vec![true, false, false, true, false, false, true, false,
+                 false, true]
+        );
+    }
+
+    #[test]
+    fn frozen_schedule_only_initializes() {
+        let mut s = Schedule::frozen(2);
+        let mut initialized = false;
+        let mut count = 0;
+        for _ in 0..8 {
+            s.begin_round();
+            if s.refresh_due(initialized) {
+                initialized = true;
+                count += 1;
+            }
+        }
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn zero_interval_refreshes_every_round_instead_of_panicking() {
+        let mut s = Schedule::new(0);
+        s.begin_round();
+        assert!(s.refresh_due(false));
+        s.begin_round();
+        assert!(s.refresh_due(true));
+    }
+
+    #[test]
+    fn every_step_schedule() {
+        let mut s = Schedule::every_step();
+        for t in 1..=5 {
+            assert_eq!(s.begin_round(), t);
+            assert!(s.refresh_due(t == 1));
+        }
+    }
+
+    #[test]
+    fn set_round_realigns_refresh_timing() {
+        // A schedule fast-forwarded to round 7 (interval 5) must next
+        // refresh at round 11, like a continuously-run one.
+        let mut cont = Schedule::new(5);
+        for _ in 0..7 {
+            cont.begin_round();
+        }
+        let mut restored = Schedule::new(5);
+        restored.set_round(7);
+        assert_eq!(restored.round(), cont.round());
+        for _ in 0..6 {
+            cont.begin_round();
+            restored.begin_round();
+            assert_eq!(
+                restored.refresh_due(true),
+                cont.refresh_due(true),
+                "round {}",
+                cont.round()
+            );
+        }
+    }
+
+    #[test]
+    fn engine_initializes_with_svd_then_follows_rule() {
+        let mut rng = Rng::new(3);
+        let g = Mat::randn(12, 20, 1.0, &mut rng);
+        let mut e = SubspaceEngine::new(EngineConfig {
+            rank: 4,
+            interval: 2,
+            rule: SubspaceRule::RandJump,
+            eta: 0.5,
+            rsvd: Some((4, 0)),
+        });
+        e.begin_round();
+        let first = e.refresh_if_due(&g, &mut rng);
+        assert!(first.refreshed);
+        assert!(first.previous.is_none());
+        let svd = left_singular_basis(&g, 4);
+        assert_eq!(e.basis().data, svd.data, "init is the SVD of G_0");
+        e.begin_round();
+        assert!(!e.refresh_if_due(&g, &mut rng).refreshed);
+        e.begin_round();
+        let third = e.refresh_if_due(&g, &mut rng);
+        assert!(third.refreshed);
+        let prev = third.previous.expect("post-init refresh returns prev");
+        assert_eq!(prev.data, svd.data);
+        assert_ne!(e.basis().data, svd.data, "jump drew a fresh basis");
+        // The AO rotation hook has the right geometry.
+        assert_eq!(e.rotation(&prev).shape(), (4, 4));
+    }
+
+    #[test]
+    fn golore_switches_from_svd_to_jump() {
+        let mut rng = Rng::new(4);
+        let g = Mat::randn(10, 16, 1.0, &mut rng);
+        let mut e = SubspaceEngine::new(EngineConfig {
+            rank: 3,
+            interval: 1,
+            rule: SubspaceRule::GoLore { switch_step: 3 },
+            eta: 0.5,
+            rsvd: Some((4, 0)),
+        });
+        let svd = left_singular_basis(&g, 3);
+        for round in 1..=6 {
+            e.begin_round();
+            e.refresh_if_due(&g, &mut rng);
+            if round <= 3 {
+                assert_eq!(
+                    e.basis().data,
+                    svd.data,
+                    "round {round} should still be SVD"
+                );
+            } else {
+                assert_ne!(
+                    e.basis().data,
+                    svd.data,
+                    "round {round} should have jumped"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn alignment_diag_only_when_enabled() {
+        let mut rng = Rng::new(5);
+        let g = Mat::randn(10, 14, 1.0, &mut rng);
+        let cfg = EngineConfig {
+            rank: 3,
+            interval: 1,
+            rule: SubspaceRule::RandJump,
+            eta: 0.5,
+            rsvd: Some((4, 0)),
+        };
+        let mut off = SubspaceEngine::new(cfg);
+        let mut on = SubspaceEngine::new(cfg);
+        on.set_diag(true);
+        for _ in 0..3 {
+            off.begin_round();
+            off.refresh_if_due(&g, &mut rng);
+        }
+        let mut rng2 = Rng::new(5);
+        let g2 = Mat::randn(10, 14, 1.0, &mut rng2);
+        for _ in 0..3 {
+            on.begin_round();
+            on.refresh_if_due(&g2, &mut rng2);
+        }
+        assert!(off.alignment().is_none());
+        let a = on.alignment().expect("diag refresh computes alignment");
+        assert!((0.0..=1.0).contains(&a), "{a}");
+        // Diagnostics must not perturb the basis stream: same RNG seed,
+        // same bases.
+        assert_eq!(off.basis().data, on.basis().data);
+    }
+
+    #[test]
+    fn restore_realigns_round_and_basis() {
+        let mut rng = Rng::new(6);
+        let g = Mat::randn(8, 12, 1.0, &mut rng);
+        let mut e = SubspaceEngine::new(EngineConfig {
+            rank: 2,
+            interval: 5,
+            rule: SubspaceRule::RandWalk,
+            eta: 0.5,
+            rsvd: Some((4, 0)),
+        });
+        for _ in 0..3 {
+            e.begin_round();
+            e.refresh_if_due(&g, &mut rng);
+        }
+        let basis = e.basis().clone();
+        let round = e.round();
+        let mut r = SubspaceEngine::new(EngineConfig {
+            rank: 2,
+            interval: 5,
+            rule: SubspaceRule::RandWalk,
+            eta: 0.5,
+            rsvd: Some((4, 0)),
+        });
+        r.restore(round, Some(basis.clone()));
+        assert_eq!(r.round(), 3);
+        assert_eq!(r.basis().data, basis.data);
+        // Next refresh lands where the continuous schedule would (t=6).
+        let mut rng_a = Rng::new(99);
+        let mut rng_b = Rng::new(99);
+        for _ in 0..3 {
+            e.begin_round();
+            let a = e.refresh_if_due(&g, &mut rng_a);
+            r.begin_round();
+            let b = r.refresh_if_due(&g, &mut rng_b);
+            assert_eq!(a.refreshed, b.refreshed);
+        }
+        assert_eq!(e.basis().data, r.basis().data);
+    }
+}

@@ -1,0 +1,354 @@
+//! Property tests for the `subspace` subsystem — the refactor's
+//! zero-behavioral-drift contract (in-repo seeded-case harness; the
+//! idiom follows rust/tests/properties.rs).
+//!
+//! Pinned invariants:
+//! * the engine-routed `ProjectedOptimizer` produces the EXACT basis
+//!   sequence the pre-refactor inline dispatch produced (direct
+//!   geometry calls on a twin RNG stream), per rule, in both
+//!   orientations;
+//! * the full per-rule optimizer step is bitwise ≡ `reference_step`
+//!   (the preserved legacy oracle) across refresh boundaries with AO;
+//! * the shared-seed provider is bitwise ≡ the legacy
+//!   `optim::shared_seed_basis` / `comm::lowrank::basis_for` derivation;
+//! * FRUGAL's coordinate selection is bitwise ≡ the legacy partial
+//!   Fisher–Yates;
+//! * every method's snapshot/restore continues bitwise-identically
+//!   across a mid-interval checkpoint boundary (the GWCKPT03 contract).
+
+use grasswalk::comm::{LowRankAllReduce, RingTransport};
+use grasswalk::optim::projected::reference_step;
+use grasswalk::optim::{
+    CpuMatrixOptimizer, MatrixOptimizer, Method, ProjectedConfig,
+    ProjectedOptimizer,
+};
+use grasswalk::subspace::{geometry, provider, shared_seed_basis, SubspaceRule};
+use grasswalk::tensor::{left_singular_basis, matmul_tn, Mat};
+use grasswalk::util::rng::Rng;
+
+const CASES: u64 = 10;
+
+/// The pre-refactor basis dispatch, restated verbatim from the old
+/// `ProjectedOptimizer::next_basis` — the oracle the engine must match
+/// bitwise (same formulas, same RNG consumption order).
+#[allow(clippy::too_many_arguments)]
+fn legacy_next_basis(
+    rule: SubspaceRule,
+    prev: &Mat,
+    g: &Mat,
+    r: usize,
+    t: usize,
+    eta: f32,
+    rsvd: (usize, usize),
+    rng: &mut Rng,
+) -> Mat {
+    let rule = match rule {
+        SubspaceRule::GoLore { switch_step } => {
+            if t <= switch_step {
+                SubspaceRule::Svd
+            } else {
+                SubspaceRule::RandJump
+            }
+        }
+        other => other,
+    };
+    match rule {
+        SubspaceRule::Svd | SubspaceRule::Frozen => {
+            left_singular_basis(g, r)
+        }
+        SubspaceRule::RandJump => geometry::random_point(g.rows, r, rng),
+        SubspaceRule::RandWalk => {
+            let x = Mat::randn(prev.rows, prev.cols, 1.0, rng);
+            geometry::exp_map(prev, &x, eta, Some(rsvd), rng)
+        }
+        SubspaceRule::Track => {
+            let d = geometry::error_derivative(prev, g).scale(-1.0);
+            let norm = d.fro_norm();
+            if norm < 1e-12 {
+                return prev.clone();
+            }
+            geometry::exp_map(prev, &d.scale(1.0 / norm), eta, Some(rsvd), rng)
+        }
+        SubspaceRule::GoLore { .. } => unreachable!(),
+    }
+}
+
+fn all_rules() -> [SubspaceRule; 6] {
+    [
+        SubspaceRule::Svd,
+        SubspaceRule::RandWalk,
+        SubspaceRule::RandJump,
+        SubspaceRule::Track,
+        SubspaceRule::Frozen,
+        SubspaceRule::GoLore { switch_step: 4 },
+    ]
+}
+
+#[test]
+fn prop_engine_basis_sequence_matches_legacy_dispatch() {
+    // Both orientations: wide (no transpose) and tall (optimizer runs
+    // on the transposed view).
+    for &(m, n) in &[(10usize, 16usize), (18, 7)] {
+        for rule in all_rules() {
+            for seed in 0..CASES {
+                let interval = 3;
+                let mut opt = ProjectedOptimizer::new(ProjectedConfig {
+                    rank: 4,
+                    interval,
+                    rule,
+                    ..Default::default()
+                });
+                let mut data_rng = Rng::new(9000 + seed);
+                let mut w = Mat::randn(m, n, 1.0, &mut data_rng);
+                let mut opt_rng = Rng::new(100 + seed);
+                let mut twin_rng = Rng::new(100 + seed);
+                let mut s_expect: Option<Mat> = None;
+                for t in 1..=8usize {
+                    let g = Mat::randn(m, n, 1.0, &mut data_rng);
+                    let g_or = if m > n { g.t() } else { g.clone() };
+                    // The legacy refresh predicate, restated.
+                    let refresh = s_expect.is_none()
+                        || (rule != SubspaceRule::Frozen
+                            && t > 1
+                            && (t - 1) % interval == 0);
+                    if refresh {
+                        let r = 4.min(g_or.rows);
+                        s_expect = Some(match &s_expect {
+                            None => left_singular_basis(&g_or, r),
+                            Some(prev) => legacy_next_basis(
+                                rule,
+                                prev,
+                                &g_or,
+                                r,
+                                t,
+                                0.5,
+                                (4, 0),
+                                &mut twin_rng,
+                            ),
+                        });
+                    }
+                    opt.step(&mut w, &g, &mut opt_rng);
+                    assert_eq!(opt.last_refresh, refresh,
+                               "{rule:?} {m}x{n} seed {seed} t {t}");
+                    assert_eq!(
+                        opt.basis().unwrap().data,
+                        s_expect.as_ref().unwrap().data,
+                        "{rule:?} {m}x{n} seed {seed} t {t}: engine basis \
+                         diverged from the legacy dispatch"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Drive `reference_step` (the legacy allocating oracle, AO branch
+/// included) along every rule's trajectory — refresh boundaries and all
+/// — and demand bitwise agreement with the engine-routed optimizer.
+#[test]
+fn prop_per_rule_step_bitwise_equals_reference_across_refreshes() {
+    let (m, n, r) = (9usize, 14usize, 3usize);
+    for rule in all_rules() {
+        for seed in 0..CASES {
+            let interval = 3;
+            let cfg = ProjectedConfig {
+                rank: r,
+                interval,
+                rule,
+                use_ao: true,
+                use_rs: true,
+                ..Default::default()
+            };
+            let (alpha, b1, b2, eps, zeta) =
+                (cfg.alpha, cfg.beta1, cfg.beta2, cfg.eps, cfg.zeta);
+            let mut opt = ProjectedOptimizer::new(cfg);
+            let mut data_rng = Rng::new(7000 + seed);
+            let w0 = Mat::randn(m, n, 1.0, &mut data_rng);
+            let mut w_opt = w0.clone();
+            let mut w_ref = w0;
+            let mut opt_rng = Rng::new(300 + seed);
+            let mut twin_rng = Rng::new(300 + seed);
+            let mut s_ref: Option<Mat> = None;
+            let mut m_ref = Mat::zeros(r, n);
+            let mut v_ref = Mat::zeros(r, n);
+            let mut lam_ref = 0.0f32;
+            for t in 1..=8usize {
+                let g = Mat::randn(m, n, 1.0, &mut data_rng);
+                let refresh = s_ref.is_none()
+                    || (rule != SubspaceRule::Frozen
+                        && t > 1
+                        && (t - 1) % interval == 0);
+                // rot = S_tᵀ S_{t−1} when an existing basis was replaced
+                // (the AO path); identity + refresh=false otherwise.
+                let mut rot = Mat::eye(r);
+                let mut ao_refresh = false;
+                if refresh {
+                    let s_new = match &s_ref {
+                        None => left_singular_basis(&g, r),
+                        Some(prev) => legacy_next_basis(
+                            rule, prev, &g, r, t, 0.5, (4, 0),
+                            &mut twin_rng,
+                        ),
+                    };
+                    if let Some(prev) = &s_ref {
+                        rot = matmul_tn(&s_new, prev);
+                        ao_refresh = true;
+                    }
+                    s_ref = Some(s_new);
+                }
+                let s = s_ref.as_ref().unwrap();
+                let (w2, m2, v2, l2) = reference_step(
+                    &w_ref, &g, s, &m_ref, &v_ref, &rot, t, lam_ref,
+                    ao_refresh, alpha, b1, b2, eps, zeta,
+                );
+                w_ref = w2;
+                m_ref = m2;
+                v_ref = v2;
+                lam_ref = l2;
+
+                opt.step(&mut w_opt, &g, &mut opt_rng);
+                assert_eq!(
+                    w_opt.data, w_ref.data,
+                    "{rule:?} seed {seed} t {t}: engine-routed step \
+                     diverged from reference_step"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_shared_seed_provider_matches_legacy_derivation() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let run_seed = rng.next_u64();
+        let round = rng.below(100) as u64;
+        let region = rng.below(8) as u64;
+        let m = 4 + rng.below(40);
+        let r = 1 + rng.below(8);
+        // The legacy derivation, restated verbatim from the old
+        // `optim::shared_seed_basis`.
+        let mut legacy_rng = Rng::new(
+            run_seed ^ round.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ region.wrapping_mul(0xD1B54A32D192ED03),
+        );
+        let legacy = geometry::random_point(m, r.min(m), &mut legacy_rng);
+        let now = shared_seed_basis(run_seed, round, region, m, r);
+        assert_eq!(legacy.data, now.data, "seed {seed}");
+        // And the collective's wire view routes through the same
+        // provider.
+        let coll = LowRankAllReduce::new(
+            Box::new(RingTransport::new(1)),
+            r,
+            run_seed,
+        );
+        assert_eq!(
+            coll.basis_for(round, region as usize, m).data,
+            now.data,
+            "seed {seed}: lowrank basis_for must match the provider"
+        );
+    }
+}
+
+#[test]
+fn prop_coordinate_selection_matches_legacy_fisher_yates() {
+    for seed in 0..CASES * 4 {
+        let mut rng = Rng::new(5000 + seed);
+        let rows = 2 + rng.below(60);
+        let rank = 1 + rng.below(20);
+        let mut legacy_rng = Rng::new(6000 + seed);
+        // The legacy sampler, restated verbatim from the old
+        // `Frugal::sample_rows`.
+        let legacy = {
+            let r = rank.min(rows);
+            let mut idx: Vec<usize> = (0..rows).collect();
+            for i in 0..r {
+                let j = i + legacy_rng.below(rows - i);
+                idx.swap(i, j);
+            }
+            let mut out = idx[..r].to_vec();
+            out.sort_unstable();
+            out
+        };
+        let mut now_rng = Rng::new(6000 + seed);
+        let now = provider::coordinate_selection(rows, rank, &mut now_rng);
+        assert_eq!(legacy, now, "seed {seed}");
+        assert_eq!(
+            legacy_rng.state(),
+            now_rng.state(),
+            "seed {seed}: RNG consumption must match"
+        );
+    }
+}
+
+/// Every method continues bitwise-identically across a mid-interval
+/// snapshot/restore boundary — the optimizer half of the GWCKPT03
+/// resume-determinism contract (the trainer e2e test pins the whole
+/// stack; this pins each optimizer in isolation, both orientations).
+#[test]
+fn prop_snapshot_restore_is_bitwise_for_every_method() {
+    for &(m, n) in &[(9usize, 13usize), (16, 6)] {
+        for method in Method::all() {
+            // interval 5, split after 7 steps: mid-interval on purpose.
+            let build = || -> Box<dyn CpuMatrixOptimizer> {
+                method.build_cpu(4, 5, 0.01, 40)
+            };
+            let mut data_rng = Rng::new(8000);
+            let w0 = Mat::randn(m, n, 1.0, &mut data_rng);
+            let gs: Vec<Mat> = (0..13)
+                .map(|_| Mat::randn(m, n, 1.0, &mut data_rng))
+                .collect();
+
+            let mut cont = build();
+            let mut w_cont = w0.clone();
+            let mut rng_cont = Rng::new(8100);
+            for g in &gs[..7] {
+                cont.step(&mut w_cont, g, &mut rng_cont);
+            }
+            let snap = cont
+                .snapshot()
+                .unwrap_or_else(|| panic!("{}: no snapshot", method.label()));
+            let w_at_snap = w_cont.clone();
+            let rng_at_snap = rng_cont.state();
+            for g in &gs[7..] {
+                cont.step(&mut w_cont, g, &mut rng_cont);
+            }
+
+            let mut resumed = build();
+            assert!(
+                resumed.restore_snapshot(&snap),
+                "{}: restore rejected its own snapshot",
+                method.label()
+            );
+            let mut w_res = w_at_snap;
+            let mut rng_res = Rng::from_state(rng_at_snap);
+            for g in &gs[7..] {
+                resumed.step(&mut w_res, g, &mut rng_res);
+            }
+            assert_eq!(
+                w_cont.data, w_res.data,
+                "{} {m}x{n}: resumed trajectory must be bitwise identical",
+                method.label()
+            );
+        }
+    }
+}
+
+/// Cross-method restore must be rejected (kind tag), leaving the
+/// optimizer on the legacy re-init path instead of corrupting state.
+#[test]
+fn snapshot_kind_mismatch_is_rejected() {
+    let mut rng = Rng::new(1);
+    let mut w = Mat::randn(8, 12, 1.0, &mut rng);
+    let g = Mat::randn(8, 12, 1.0, &mut rng);
+    let mut walk = Method::GrassWalk.build_cpu(4, 5, 0.01, 40);
+    walk.step(&mut w, &g, &mut rng);
+    let snap = walk.snapshot().unwrap();
+    let mut frugal = Method::Frugal.build_cpu(4, 5, 0.01, 40);
+    assert!(!frugal.restore_snapshot(&snap));
+    let mut apollo = Method::Apollo.build_cpu(4, 5, 0.01, 40);
+    assert!(!apollo.restore_snapshot(&snap));
+    // The rejected optimizer still works (fresh init on next step).
+    let mut w2 = w.clone();
+    frugal.step(&mut w2, &g, &mut rng);
+}

@@ -257,6 +257,114 @@ fn resume_restores_rng_and_data_streams() {
 }
 
 #[test]
+fn resume_mid_interval_continues_bitwise() {
+    // GWCKPT03: a checkpoint taken MID refresh interval (step 8 of an
+    // interval-10 schedule) carries the unified subspace state — round
+    // counters, basis, moments, dense Adam states — so the restored run
+    // must produce bitwise-identical losses AND parameters to the
+    // uninterrupted one. This was impossible pre-v3: the optimizer
+    // re-initialized its basis from the first post-restore gradient.
+    let Some(engine) = engine() else { return };
+    let path = std::env::temp_dir().join("gw_e2e_bitwise_resume.bin");
+
+    let mut rec = Recorder::new("cont");
+    let mut cont = Trainer::new(engine.clone(), base_cfg(8)).unwrap();
+    cont.run(&mut rec).unwrap();
+    save_trainer(&cont, &path).unwrap();
+    let mut cont_losses = Vec::new();
+    for _ in 0..5 {
+        cont_losses.push(cont.train_step().unwrap());
+    }
+
+    let mut resumed = Trainer::new(engine.clone(), base_cfg(8)).unwrap();
+    let step = restore_trainer(&mut resumed, &path).unwrap();
+    assert_eq!(step, 8);
+    let mut res_losses = Vec::new();
+    for _ in 0..5 {
+        res_losses.push(resumed.train_step().unwrap());
+    }
+    assert_eq!(
+        cont_losses, res_losses,
+        "restored run must continue the loss trajectory bitwise"
+    );
+    assert_eq!(
+        cont.params_flat(),
+        resumed.params_flat(),
+        "restored run must continue the parameters bitwise"
+    );
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn subspace_diag_series_recorded_per_layer() {
+    // --subspace-diag: per-matrix energy-ratio series are present,
+    // bounded, and recorded every step; alignment series appear on
+    // refresh steps (interval 4 within 8 steps => one post-init
+    // refresh); the depth summary covers every projected matrix.
+    let Some(engine) = engine() else { return };
+    let cfg = TrainConfig {
+        subspace_diag: true,
+        interval: 4,
+        ..base_cfg(8)
+    };
+    let mut rec = Recorder::new("sdiag");
+    let mut t = Trainer::new(engine, cfg).unwrap();
+    t.run(&mut rec).unwrap();
+    let energy: Vec<_> = rec
+        .series
+        .iter()
+        .filter(|(k, _)| k.starts_with("subspace/energy_ratio/"))
+        .collect();
+    assert_eq!(energy.len(), t.n_projected(), "one series per matrix");
+    for (k, s) in &energy {
+        assert_eq!(s.points.len(), 8, "{k}: energy recorded every step");
+        for &(_, v) in &s.points {
+            assert!(v.is_finite() && (0.0..=1.0).contains(&v), "{k}: {v}");
+        }
+    }
+    let aligns: Vec<_> = rec
+        .series
+        .iter()
+        .filter(|(k, _)| k.starts_with("subspace/alignment/"))
+        .collect();
+    assert_eq!(aligns.len(), t.n_projected());
+    for (k, s) in &aligns {
+        // init refresh has no consecutive pair; t=5 is the only one.
+        assert_eq!(s.points.len(), 1, "{k}");
+        let v = s.points[0].1;
+        assert!(v.is_finite() && (0.0..=1.0).contains(&v), "{k}: {v}");
+    }
+    let summary = t.subspace_depth_summary(&rec);
+    assert!(!summary.is_empty());
+    assert_eq!(
+        summary.iter().map(|&(_, _, n)| n).sum::<usize>(),
+        t.n_projected()
+    );
+    for &(_, mean, _) in &summary {
+        assert!((0.0..=1.0).contains(&mean));
+    }
+}
+
+#[test]
+fn rule_override_trains_and_is_recorded() {
+    let Some(engine) = engine() else { return };
+    for rule in ["walk", "jump"] {
+        let cfg = TrainConfig {
+            rule: grasswalk::subspace::SubspaceRule::parse(rule, 6),
+            ..base_cfg(6)
+        };
+        let mut rec = Recorder::new("rule");
+        let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+        let rep = t.run(&mut rec).unwrap();
+        assert!(rep.final_train_loss.is_finite(), "{rule} diverged");
+        assert!(
+            rec.meta.iter().any(|(k, v)| k == "rule" && v == rule),
+            "{rule} not recorded in run metadata"
+        );
+    }
+}
+
+#[test]
 fn every_table1_method_trains_on_stack() {
     let Some(engine) = engine() else { return };
     for method in Method::TABLE1 {
