@@ -68,10 +68,12 @@ use grasswalk::model::shapes::TINY;
 use grasswalk::optim::Method;
 use grasswalk::runtime::Engine;
 use grasswalk::util::bench::{header, throughput, Bench};
+use grasswalk::util::benchgate::Gate;
 use grasswalk::util::pool;
 
 fn main() -> anyhow::Result<()> {
     let b = Bench::default();
+    let mut gate = Gate::new("coordinator");
     println!("== coordinator substrates ==");
     println!("{}", header());
 
@@ -87,6 +89,7 @@ fn main() -> anyhow::Result<()> {
                     std::hint::black_box(ring.all_reduce_sum(&mut bufs));
                 },
             );
+            gate.time(&stats);
             let bytes = 2.0 * (workers - 1) as f64 / workers as f64
                 * (len * 4) as f64;
             println!(
@@ -112,6 +115,7 @@ fn main() -> anyhow::Result<()> {
                     );
                 },
             );
+            gate.time(&stats);
             let bytes = 2.0 * (workers - 1) as f64 / workers as f64
                 * (len * 4) as f64;
             println!(
@@ -146,6 +150,7 @@ fn main() -> anyhow::Result<()> {
             delta, 0,
             "steady-state dense comm round must perform zero allocations"
         );
+        gate.counter("dense comm round allocs (x20 rounds, w=4)", delta);
         println!(
             "zero-alloc comm round: 0 allocations across {rounds} rounds \
              (dense, w=4; lowrank's basis QR is the documented exception)"
@@ -204,6 +209,8 @@ fn main() -> anyhow::Result<()> {
         }
         let tcp_ms = t0.elapsed().as_secs_f64() * 1e3 / rounds as f64;
         companion.join().unwrap();
+        gate.time_ns(&format!("ring inproc w=2 len={len}"), inproc_ms * 1e6);
+        gate.time_ns(&format!("ring tcp-loopback w=2 len={len}"), tcp_ms * 1e6);
         println!(
             "ring round w=2 len={len}: inproc {inproc_ms:.3} ms vs \
              tcp-loopback {tcp_ms:.3} ms ({wire} wire B/rank/round)"
@@ -238,16 +245,18 @@ fn main() -> anyhow::Result<()> {
                     });
                 },
             );
+            gate.time(&stats);
             println!(
                 "    -> {:.2} GB/s touched",
                 (len * 4) as f64 / stats.median.as_secs_f64() / 1e9
             );
         }
+        let spawned = pool::spawn_count() - spawns_before;
         assert_eq!(
-            pool::spawn_count() - spawns_before,
-            0,
+            spawned, 0,
             "steady-state pool dispatch must not spawn threads"
         );
+        gate.counter("pool dispatch spawns (all rows)", spawned);
         println!("    -> spawns across all rows: 0 (persistent pool)");
     }
 
@@ -271,6 +280,7 @@ fn main() -> anyhow::Result<()> {
                 std::hint::black_box(bufs);
             },
         );
+        gate.time(&s);
         println!(
             "    -> {payload} wire bytes/worker/step, {:.1} rounds/s",
             throughput(1, s.median)
@@ -283,6 +293,7 @@ fn main() -> anyhow::Result<()> {
     let s = b.run("loader sync 8x65", || {
         std::hint::black_box(sync.next());
     });
+    gate.time(&s);
     println!(
         "    -> {:.0} batches/s",
         throughput(1, s.median)
@@ -295,43 +306,54 @@ fn main() -> anyhow::Result<()> {
     let s = b.run("loader prefetch 8x65", || {
         std::hint::black_box(pre.next());
     });
+    gate.time(&s);
     println!(
         "    -> {:.0} batches/s (hides generation latency)",
         throughput(1, s.median)
     );
 
-    // Full train-step breakdown on the compiled model.
+    // Full train-step breakdown on the compiled model. Artifact-gated,
+    // but the bench gate must run either way, so no early return here.
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("(skipping train-step rows: run `make artifacts`)");
-        return Ok(());
-    }
-    let engine = Arc::new(Engine::new(dir)?);
-    for workers in [1usize, 2] {
-        let cfg = TrainConfig {
-            method: Method::GrassWalk,
-            steps: 1,
-            rank: 16,
-            interval: 10,
-            workers,
-            log_every: 0,
-            eval_every: 0,
-            ..Default::default()
-        };
-        let mut trainer = Trainer::new(engine.clone(), cfg)?;
-        trainer.train_step()?; // warmup/compile
-        let n = 10;
-        let t0 = Instant::now();
-        for _ in 0..n {
-            trainer.train_step()?;
+    if dir.join("manifest.json").exists() {
+        let engine = Arc::new(Engine::new(dir)?);
+        for workers in [1usize, 2] {
+            let cfg = TrainConfig {
+                method: Method::GrassWalk,
+                steps: 1,
+                rank: 16,
+                interval: 10,
+                workers,
+                log_every: 0,
+                eval_every: 0,
+                ..Default::default()
+            };
+            let mut trainer = Trainer::new(engine.clone(), cfg)?;
+            trainer.train_step()?; // warmup/compile
+            let n = 10;
+            let t0 = Instant::now();
+            for _ in 0..n {
+                trainer.train_step()?;
+            }
+            let per = t0.elapsed().as_secs_f64() / n as f64;
+            gate.time_ns(
+                &format!("train_step e2e workers={workers}"),
+                per * 1e9,
+            );
+            println!(
+                "train_step e2e (workers={workers})                    \
+                 {:>8.1}ms/step",
+                per * 1e3
+            );
         }
-        let per = t0.elapsed().as_secs_f64() / n as f64;
-        println!(
-            "train_step e2e (workers={workers})                    \
-             {:>8.1}ms/step",
-            per * 1e3
-        );
+    } else {
+        eprintln!("(skipping train-step rows: run `make artifacts`)");
+    }
+
+    if let Err(e) = gate.finish() {
+        eprintln!("{e}");
+        std::process::exit(1);
     }
     Ok(())
 }

@@ -3,17 +3,30 @@
 //! hot path is 3 thin GEMMs per matrix, and subspace refreshes are
 //! QR/SVD/rSVD-bound.
 //!
-//!   cargo bench --bench linalg
+//! Every row feeds the benchmark-regression gate (util::benchgate): the
+//! run is compared against the committed BENCH_linalg.json and the
+//! binary exits nonzero on a regression past the noise tolerance.
+//!
+//!   cargo bench --bench linalg                        # gate against baseline
+//!   GRASSWALK_BENCH_WRITE=1 cargo bench --bench linalg # rewrite baseline
+//!
+//! The thin-projection sweep (r ∈ {16, 32, 128}) mirrors the shapes the
+//! optimizer actually runs — `SᵀG` (r×m · m×n) and `S·G̃` (m×r · r×n) at
+//! real layer dims — so kernel-tier changes are judged on those, not
+//! just square GEMMs. GFLOP/s columns use flops = 2·r·m·n per call.
 
 use grasswalk::tensor::{
-    matmul, matmul_tn, qr_thin, rsvd, svd_thin, Mat,
+    matmul, matmul_into, matmul_tn, matmul_tn_into, qr_thin, rsvd, svd_thin,
+    Mat,
 };
 use grasswalk::util::bench::{header, Bench};
+use grasswalk::util::benchgate::Gate;
 use grasswalk::util::rng::Rng;
 
 fn main() {
     let mut rng = Rng::new(0);
     let b = Bench::default();
+    let mut gate = Gate::new("linalg");
     println!("== linalg substrate ==");
     println!("{}", header());
 
@@ -25,28 +38,69 @@ fn main() {
             &Mat::randn(m, r, 1.0, &mut rng));
         let gt = matmul_tn(&s, &g);
 
-        b.run(&format!("project S^T G            {m}x{n} r{r}"), || {
+        let st = b.run(&format!("project S^T G            {m}x{n} r{r}"), || {
             std::hint::black_box(matmul_tn(&s, &g));
         });
-        b.run(&format!("backproject S Gt         {m}x{n} r{r}"), || {
+        gate.time_with_flops(&st, 2 * r * m * n);
+        let st = b.run(&format!("backproject S Gt         {m}x{n} r{r}"), || {
             std::hint::black_box(matmul(&s, &gt));
         });
-        b.run(&format!("qr_thin                  {m}x{r}"), || {
+        gate.time_with_flops(&st, 2 * m * r * n);
+        let st = b.run(&format!("qr_thin                  {m}x{r}"), || {
             std::hint::black_box(qr_thin(
                 &Mat::randn(m, r, 1.0, &mut Rng::new(1))));
         });
-        b.run(&format!("rsvd (r, +4, p0)         {m}x{r}"), || {
+        gate.time(&st);
+        let st = b.run(&format!("rsvd (r, +4, p0)         {m}x{r}"), || {
             let x = Mat::randn(m, r, 1.0, &mut Rng::new(2));
             std::hint::black_box(rsvd(&x, r, 4, 0, &mut Rng::new(3)));
         });
+        gate.time(&st);
+    }
+
+    // Thin projection sweep at fixed layer slabs: the gate's primary
+    // kernel-tier rows. Warm `_into` buffers so the loop measures the
+    // kernel, not allocation.
+    println!("-- thin projection sweep (kernel tier) --");
+    for &(m, n) in &[(256usize, 688usize), (512, 1365)] {
+        for &r in &[16usize, 32, 128] {
+            let g = Mat::randn(m, n, 1.0, &mut rng);
+            let s = grasswalk::tensor::orthonormalize(
+                &Mat::randn(m, r, 1.0, &mut rng));
+            let gt = matmul_tn(&s, &g);
+            let mut proj = Mat::default();
+            let mut back = Mat::default();
+            let flops = 2 * r * m * n;
+
+            let st = b.run(&format!("thin S^T G               r{r} {m}x{n}"), || {
+                matmul_tn_into(&s, &g, &mut proj);
+                std::hint::black_box(&proj);
+            });
+            gate.time_with_flops(&st, flops);
+            println!(
+                "    -> {:.2} GFLOP/s",
+                flops as f64 / st.median.as_secs_f64() / 1e9
+            );
+
+            let st = b.run(&format!("thin S Gt                r{r} {m}x{n}"), || {
+                matmul_into(&s, &gt, &mut back);
+                std::hint::black_box(&back);
+            });
+            gate.time_with_flops(&st, flops);
+            println!(
+                "    -> {:.2} GFLOP/s",
+                flops as f64 / st.median.as_secs_f64() / 1e9
+            );
+        }
     }
 
     // Full SVD — the GaLore refresh cost (paper: "computationally heavy").
     for &(m, n) in &[(64usize, 172usize), (128, 344), (256, 688)] {
         let g = Mat::randn(m, n, 1.0, &mut rng);
-        b.run(&format!("svd_thin (GaLore refresh) {m}x{n}"), || {
+        let st = b.run(&format!("svd_thin (GaLore refresh) {m}x{n}"), || {
             std::hint::black_box(svd_thin(&g));
         });
+        gate.time(&st);
     }
 
     // GEMM scaling for the roofline estimate.
@@ -56,10 +110,16 @@ fn main() {
         let stats = b.run(&format!("gemm square              {d}x{d}"), || {
             std::hint::black_box(matmul(&a, &c));
         });
-        let flops = 2.0 * (d as f64).powi(3);
+        let flops = 2 * d * d * d;
+        gate.time_with_flops(&stats, flops);
         println!(
             "    -> {:.2} GFLOP/s",
-            flops / stats.median.as_secs_f64() / 1e9
+            flops as f64 / stats.median.as_secs_f64() / 1e9
         );
+    }
+
+    if let Err(e) = gate.finish() {
+        eprintln!("{e}");
+        std::process::exit(1);
     }
 }

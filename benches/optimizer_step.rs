@@ -36,6 +36,7 @@ use grasswalk::optim::{
 use grasswalk::runtime::Engine;
 use grasswalk::tensor::{matmul, matmul_tn, Mat};
 use grasswalk::util::bench::{header, Bench};
+use grasswalk::util::benchgate::Gate;
 use grasswalk::util::pool;
 use grasswalk::util::rng::Rng;
 
@@ -79,6 +80,7 @@ fn alloc_count(f: impl FnOnce()) -> u64 {
 fn main() {
     let b = Bench::default();
     let mut rng = Rng::new(0);
+    let mut gate = Gate::new("optimizer_step");
     println!("== optimizer step (per matrix) ==");
     println!("{}", header());
 
@@ -94,6 +96,7 @@ fn main() {
             let _ = std::hint::black_box(matmul(&s, &gt));
             let _ = std::hint::black_box(matmul(&s, &gt));
         });
+        gate.time(&stats);
         let roofline = stats.median;
 
         // Legacy path: the historical allocating implementation of the
@@ -118,6 +121,7 @@ fn main() {
                 t += 1;
             })
         };
+        gate.time(&legacy);
 
         let mut grass_median = None;
         for method in Method::all() {
@@ -147,6 +151,10 @@ fn main() {
                     "{}: steady-state step must not allocate",
                     method.label()
                 );
+                gate.counter(
+                    &format!("steady allocs {} {m}x{n}", method.label()),
+                    allocs,
+                );
             }
 
             let st = b.run(
@@ -155,6 +163,7 @@ fn main() {
                     opt.step(&mut w, &g, &mut step_rng);
                 },
             );
+            gate.time(&st);
             if *method == Method::GrassWalk {
                 grass_median = Some(st.median);
                 println!(
@@ -185,12 +194,13 @@ fn main() {
             let mut w = Mat::randn(m, n, 1.0, &mut rng);
             let mut step_rng = Rng::new(8);
             opt.step(&mut w, &g, &mut step_rng);
-            b.run(
+            let st = b.run(
                 &format!("refresh-every-step {:<8} {m}x{n}", rule.label()),
                 || {
                     opt.step(&mut w, &g, &mut step_rng);
                 },
             );
+            gate.time(&st);
         }
 
         // Shared-seed regeneration — the comm collective's free basis
@@ -200,13 +210,14 @@ fn main() {
         // `refresh-every-step jump` isolates the SVD-vs-regen split.
         {
             let mut round = 0u64;
-            b.run(&format!("refresh shared-seed regen {m}x{n}"), || {
+            let st = b.run(&format!("refresh shared-seed regen {m}x{n}"), || {
                 let basis = grasswalk::subspace::shared_seed_basis(
                     42, round, 0, m, r,
                 );
                 std::hint::black_box(&basis);
                 round = round.wrapping_add(1);
             });
+            gate.time(&st);
         }
     }
 
@@ -245,11 +256,13 @@ fn main() {
                 s.opt.step(&mut s.w, &s.g, &mut s.rng);
             }
         });
+        gate.time(&seq);
         let par = b.run(&format!("pool fan-out {n_mats} matrices"), || {
             pool::parallel_items(&mut slots, |_, s| {
                 s.opt.step(&mut s.w, &s.g, &mut s.rng);
             });
         });
+        gate.time(&par);
         println!(
             "    -> parallel speedup {n_mats} matrices: {:.2}x",
             seq.median.as_secs_f64() / par.median.as_secs_f64()
@@ -304,11 +317,14 @@ fn main() {
             allocs, 0,
             "steady-state parallel dispatch must not allocate"
         );
+        gate.counter("pool steady-state allocs (x16 rounds)", allocs);
+        gate.counter("pool steady-state spawns (x16 rounds)", spawned);
         // Fork-join latency of a no-op region: the fixed cost every
         // GEMM tile / fan-out now pays instead of threads() spawns.
-        b.run("pool dispatch (no-op region)", || {
+        let st = b.run("pool dispatch (no-op region)", || {
             pool::parallel_for(n, 256, |_| {});
         });
+        gate.time(&st);
         std::hint::black_box(&buf);
         std::hint::black_box(sink.load(Ordering::Relaxed));
     }
@@ -325,10 +341,16 @@ fn main() {
         let mut w = Mat::randn(m, n, 1.0, &mut rng);
         let mut step_rng = Rng::new(9);
         opt.step(&mut w, &g, &mut step_rng);
-        b.run(&format!("pjrt fused opt_step      {m}x{n}"), || {
+        let st = b.run(&format!("pjrt fused opt_step      {m}x{n}"), || {
             opt.step(&mut w, &g, &mut step_rng);
         });
+        gate.time(&st);
     } else {
         eprintln!("(skipping PJRT engine rows: run `make artifacts`)");
+    }
+
+    if let Err(e) = gate.finish() {
+        eprintln!("{e}");
+        std::process::exit(1);
     }
 }

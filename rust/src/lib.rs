@@ -1,3 +1,8 @@
+// `--features simd` opts into the explicit f32x8 GEMM microkernel tier
+// (tensor::{pack, microkernel}); portable_simd is nightly-only, so the
+// gate keeps the default build on stable.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # grasswalk — Randomized Gradient Subspaces for Efficient LLM Training
 //!
 //! Production-grade reproduction of the paper's GrassWalk / GrassJump

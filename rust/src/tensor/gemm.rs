@@ -9,6 +9,41 @@
 //!   matmul_tn C = A' B     (k→i,j)  both stream (A column walk = row walk of A')
 //!   matmul_nt C = A  B'    (i,j,k)  dot-product of rows
 //!
+//! ## Kernel tiers
+//!
+//! Two tiers share these entry points:
+//!
+//! * **Scalar tier (default build).** The historical loop nests around
+//!   [`axpy_row`]/[`dot`], unchanged: LLVM auto-vectorizes the 8-wide
+//!   unroll, per-element accumulation runs over k ascending, and results
+//!   are bitwise-identical to the pre-microkernel tree (pinned by
+//!   `prop_default_gemm_bitwise_equals_prerefactor_nest` in
+//!   rust/tests/workspace_props.rs).
+//! * **Packed tier (`--features simd`, nightly).** Products past
+//!   `pack::PACKED_MIN_FLOPS` route through `tensor::pack`: A/B panels
+//!   are packed into aligned per-thread scratch and an explicit
+//!   `core::simd` f32x8 microkernel (`tensor::microkernel`) does the
+//!   arithmetic with FMA. Smaller products keep the scalar nests.
+//!
+//! ## The ULP contract
+//!
+//! The scalar tier's parallel ≡ serial bitwise contract is unchanged
+//! (row partitioning never reorders a per-element sum). The packed tier
+//! re-blocks the k loop, so its results are NOT bitwise-equal to the
+//! scalar tier; instead both tiers obey the documented accuracy bound
+//!
+//! > per element: |C[i,j] − Σ_l A[i,l]·B[l,j] (f64)| ≤ (k + 8) · ε_f32 ·
+//! > Σ_l |A[i,l]·B[l,j]|
+//!
+//! i.e. at most k + 8 ulps measured at the element's absolute-mass
+//! scale (the standard γ_k forward-error bound — a bound at |C| itself
+//! is impossible under cancellation). FMA in the SIMD microkernel only
+//! removes roundings, so the same bound covers it. The packed tier
+//! keeps its own parallel ≡ serial bitwise guarantee: per-element
+//! accumulation order depends only on the KC banding, never on thread
+//! partitioning. Both claims are property-tested in
+//! rust/tests/workspace_props.rs.
+//!
 //! ## The `_into` workspace API
 //!
 //! Every kernel exists in two forms: the allocating convenience
@@ -17,9 +52,11 @@
 //! resizing it only when the geometry changes. The optimizer suite's
 //! `StepWorkspace` (see `optim::workspace`) routes every steady-state
 //! product through the `_into` forms, which is what makes a steady-state
-//! optimizer step allocation-free. Both forms run the identical loop
-//! nest, so their results are bitwise equal (pinned by
-//! rust/tests/workspace_props.rs).
+//! optimizer step allocation-free; [`matvec_into`]/[`vecmat_into`] are
+//! the vector analogues. Both forms run the identical code path, so
+//! their results are bitwise equal (pinned by
+//! rust/tests/workspace_props.rs). The packed tier's panel scratch is
+//! thread-local and sized once, so the 0-alloc steady state survives it.
 //!
 //! Row-parallelism via `util::pool::parallel_chunks` over C's rows keeps
 //! writes disjoint. The pool is persistent (`util::pool::WorkerPool`):
@@ -29,16 +66,114 @@
 //! When the caller is itself inside a pool job (the trainer fans whole
 //! optimizer steps across matrices), `pool::in_worker()` makes these
 //! kernels run serially instead of dispatching a nested fork-join layer
-//! — same numbers, no oversubscription. The micro-kernel unrolls and
-//! relies on LLVM auto-vectorization (see EXPERIMENTS.md §Perf).
+//! — same numbers, no oversubscription.
+//!
+//! ## Tuning without a rebuild
+//!
+//! `GRASSWALK_GEMM_BLOCK` overrides the rows-per-parallel-task block
+//! (default 16) and `GRASSWALK_GEMM_PAR_THRESHOLD` the minimum
+//! m·k·n before a GEMM parallelizes (default 65536; `0` = always).
+//! Both parse through pure, unit-tested `resolve_*` seams that warn
+//! once on stderr for invalid values (same pattern as
+//! `pool::resolve_threads`); neither affects results, only scheduling.
 
 use super::matrix::Mat;
+#[cfg(feature = "simd")]
+use super::pack;
 use crate::util::pool;
+use std::sync::OnceLock;
 
-/// Rows per parallel task; tuned in the perf pass.
-const PAR_ROW_BLOCK: usize = 16;
-/// Only parallelize when the output has at least this many f32 ops.
-const PAR_THRESHOLD: usize = 1 << 16;
+/// Default rows per parallel task (see `GRASSWALK_GEMM_BLOCK`).
+pub const DEFAULT_PAR_ROW_BLOCK: usize = 16;
+/// Default minimum m·k·n before parallelizing
+/// (see `GRASSWALK_GEMM_PAR_THRESHOLD`).
+pub const DEFAULT_PAR_THRESHOLD: usize = 1 << 16;
+
+static PAR_ROW_BLOCK: OnceLock<usize> = OnceLock::new();
+static PAR_THRESHOLD: OnceLock<usize> = OnceLock::new();
+
+/// Rows per parallel task; overridable via `GRASSWALK_GEMM_BLOCK`
+/// (read once per process; invalid values warn once and fall back).
+pub fn par_row_block() -> usize {
+    *PAR_ROW_BLOCK.get_or_init(|| {
+        let raw = std::env::var("GRASSWALK_GEMM_BLOCK").ok();
+        let (v, warning) =
+            resolve_gemm_block(raw.as_deref(), DEFAULT_PAR_ROW_BLOCK);
+        if let Some(msg) = warning {
+            eprintln!("warning: {msg}");
+        }
+        v
+    })
+}
+
+/// Minimum m·k·n (f32 multiply-adds) before a GEMM fans out across the
+/// pool; overridable via `GRASSWALK_GEMM_PAR_THRESHOLD` (`0` = always
+/// parallelize).
+pub fn par_threshold() -> usize {
+    *PAR_THRESHOLD.get_or_init(|| {
+        let raw = std::env::var("GRASSWALK_GEMM_PAR_THRESHOLD").ok();
+        let (v, warning) =
+            resolve_gemm_par_threshold(raw.as_deref(), DEFAULT_PAR_THRESHOLD);
+        if let Some(msg) = warning {
+            eprintln!("warning: {msg}");
+        }
+        v
+    })
+}
+
+/// Pure parsing seam for `GRASSWALK_GEMM_BLOCK` (unit-testable without
+/// touching the process environment): unset → `default`; a positive
+/// integer → that block size; `0` or non-numeric → `default` **with** a
+/// warning (a zero-row task would spin forever, so it is rejected).
+pub fn resolve_gemm_block(
+    raw: Option<&str>,
+    default: usize,
+) -> (usize, Option<String>) {
+    let Some(raw) = raw else {
+        return (default, None);
+    };
+    let trimmed = raw.trim();
+    match trimmed.parse::<usize>() {
+        Ok(0) => (
+            default,
+            Some(format!(
+                "GRASSWALK_GEMM_BLOCK=0 is not a valid row-block size; \
+                 using the default of {default}"
+            )),
+        ),
+        Ok(n) => (n, None),
+        Err(_) => (
+            default,
+            Some(format!(
+                "GRASSWALK_GEMM_BLOCK={trimmed:?} is not a positive \
+                 integer; using the default of {default}"
+            )),
+        ),
+    }
+}
+
+/// Pure parsing seam for `GRASSWALK_GEMM_PAR_THRESHOLD`: unset →
+/// `default`; any integer ≥ 0 → that threshold (`0` = every GEMM
+/// parallelizes); non-numeric → `default` **with** a warning.
+pub fn resolve_gemm_par_threshold(
+    raw: Option<&str>,
+    default: usize,
+) -> (usize, Option<String>) {
+    let Some(raw) = raw else {
+        return (default, None);
+    };
+    let trimmed = raw.trim();
+    match trimmed.parse::<usize>() {
+        Ok(n) => (n, None),
+        Err(_) => (
+            default,
+            Some(format!(
+                "GRASSWALK_GEMM_PAR_THRESHOLD={trimmed:?} is not a \
+                 non-negative integer; using the default of {default}"
+            )),
+        ),
+    }
+}
 
 /// C = A @ B.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -50,14 +185,26 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 /// C = A @ B into a reusable buffer (allocation-free once `c` is warm).
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows, "matmul inner dim");
+    #[cfg(feature = "simd")]
+    {
+        if pack::worth_packing(a.rows, a.cols, b.cols) {
+            pack::gemm_packed(
+                pack::PackView::normal(a),
+                pack::PackView::normal(b),
+                c,
+            );
+            return;
+        }
+    }
     let (m, k, n) = (a.rows, a.cols, b.cols);
     c.resize_to(m, n);
     c.data.fill(0.0);
     let work = m * k * n;
+    let rb = par_row_block();
     let body = |i0: usize, crows: &mut [f32]| {
         let rows = crows.len() / n;
         for di in 0..rows {
-            let i = i0 * PAR_ROW_BLOCK + di;
+            let i = i0 * rb + di;
             let arow = a.row(i);
             let crow = &mut crows[di * n..(di + 1) * n];
             for (kk, &aik) in arow.iter().enumerate().take(k) {
@@ -69,12 +216,12 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
             }
         }
     };
-    if work >= PAR_THRESHOLD && !pool::in_worker() {
-        pool::parallel_chunks(&mut c.data, PAR_ROW_BLOCK * n, |i0, crows| {
+    if work >= par_threshold() && !pool::in_worker() {
+        pool::parallel_chunks(&mut c.data, rb * n, |i0, crows| {
             body(i0, crows)
         });
     } else {
-        for (i0, crows) in c.data.chunks_mut(PAR_ROW_BLOCK * n).enumerate() {
+        for (i0, crows) in c.data.chunks_mut(rb * n).enumerate() {
             body(i0, crows);
         }
     }
@@ -90,14 +237,26 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
 /// C = A^T @ B into a reusable buffer (allocation-free once `c` is warm).
 pub fn matmul_tn_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.rows, b.rows, "matmul_tn inner dim");
+    #[cfg(feature = "simd")]
+    {
+        if pack::worth_packing(a.cols, a.rows, b.cols) {
+            pack::gemm_packed(
+                pack::PackView::transposed(a),
+                pack::PackView::normal(b),
+                c,
+            );
+            return;
+        }
+    }
     let (k, m, n) = (a.rows, a.cols, b.cols);
     c.resize_to(m, n);
     c.data.fill(0.0);
     let work = m * k * n;
+    let rb = par_row_block();
     let body = |i0: usize, crows: &mut [f32]| {
         let rows = crows.len() / n;
         for di in 0..rows {
-            let i = i0 * PAR_ROW_BLOCK + di;
+            let i = i0 * rb + di;
             let crow = &mut crows[di * n..(di + 1) * n];
             for kk in 0..k {
                 let aik = a.at(kk, i);
@@ -108,12 +267,12 @@ pub fn matmul_tn_into(a: &Mat, b: &Mat, c: &mut Mat) {
             }
         }
     };
-    if work >= PAR_THRESHOLD && !pool::in_worker() {
-        pool::parallel_chunks(&mut c.data, PAR_ROW_BLOCK * n, |i0, crows| {
+    if work >= par_threshold() && !pool::in_worker() {
+        pool::parallel_chunks(&mut c.data, rb * n, |i0, crows| {
             body(i0, crows)
         });
     } else {
-        for (i0, crows) in c.data.chunks_mut(PAR_ROW_BLOCK * n).enumerate() {
+        for (i0, crows) in c.data.chunks_mut(rb * n).enumerate() {
             body(i0, crows);
         }
     }
@@ -129,13 +288,25 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 /// C = A @ B^T into a reusable buffer (allocation-free once `c` is warm).
 pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.cols, "matmul_nt inner dim");
+    #[cfg(feature = "simd")]
+    {
+        if pack::worth_packing(a.rows, a.cols, b.rows) {
+            pack::gemm_packed(
+                pack::PackView::normal(a),
+                pack::PackView::transposed(b),
+                c,
+            );
+            return;
+        }
+    }
     let (m, k, n) = (a.rows, a.cols, b.rows);
     c.resize_to(m, n);
     let work = m * k * n;
+    let rb = par_row_block();
     let body = |i0: usize, crows: &mut [f32]| {
         let rows = crows.len() / n;
         for di in 0..rows {
-            let i = i0 * PAR_ROW_BLOCK + di;
+            let i = i0 * rb + di;
             let arow = a.row(i);
             let crow = &mut crows[di * n..(di + 1) * n];
             for (j, cj) in crow.iter_mut().enumerate().take(n) {
@@ -143,13 +314,12 @@ pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
             }
         }
     };
-    let _ = k;
-    if work >= PAR_THRESHOLD && !pool::in_worker() {
-        pool::parallel_chunks(&mut c.data, PAR_ROW_BLOCK * n, |i0, crows| {
+    if work >= par_threshold() && !pool::in_worker() {
+        pool::parallel_chunks(&mut c.data, rb * n, |i0, crows| {
             body(i0, crows)
         });
     } else {
-        for (i0, crows) in c.data.chunks_mut(PAR_ROW_BLOCK * n).enumerate() {
+        for (i0, crows) in c.data.chunks_mut(rb * n).enumerate() {
             body(i0, crows);
         }
     }
@@ -197,21 +367,38 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
 
 /// matvec: y = A @ x.
 pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
-    assert_eq!(a.cols, x.len());
-    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+    let mut y = Vec::new();
+    matvec_into(a, x, &mut y);
+    y
+}
+
+/// matvec into a reusable buffer (allocation-free once `y` is warm).
+/// Bitwise ≡ [`matvec`] — both route through this code path.
+pub fn matvec_into(a: &Mat, x: &[f32], y: &mut Vec<f32>) {
+    assert_eq!(a.cols, x.len(), "matvec inner dim");
+    y.clear();
+    y.extend((0..a.rows).map(|i| dot(a.row(i), x)));
 }
 
 /// vecmat: y = x @ A = (A^T x).
 pub fn vecmat(x: &[f32], a: &Mat) -> Vec<f32> {
-    assert_eq!(a.rows, x.len());
-    let mut y = vec![0.0f32; a.cols];
+    let mut y = Vec::new();
+    vecmat_into(x, a, &mut y);
+    y
+}
+
+/// vecmat into a reusable buffer (allocation-free once `y` is warm).
+/// Bitwise ≡ [`vecmat`] — both route through this code path.
+pub fn vecmat_into(x: &[f32], a: &Mat, y: &mut Vec<f32>) {
+    assert_eq!(a.rows, x.len(), "vecmat inner dim");
+    y.clear();
+    y.resize(a.cols, 0.0);
     for (k, &xk) in x.iter().enumerate() {
         if xk == 0.0 {
             continue;
         }
-        axpy_row(&mut y, xk, a.row(k));
+        axpy_row(y, xk, a.row(k));
     }
-    y
 }
 
 #[cfg(test)]
@@ -318,6 +505,48 @@ mod tests {
         for j in 0..13 {
             assert!((z[j] - zm.at(j, 0)).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn matvec_vecmat_into_bitwise_match_allocating() {
+        let mut rng = Rng::new(13);
+        let a = Mat::randn(11, 17, 1.0, &mut rng);
+        let x: Vec<f32> = (0..17).map(|i| (i as f32 - 8.0) * 0.3).collect();
+        let mut y = vec![f32::NAN; 3]; // dirty, wrong length
+        matvec_into(&a, &x, &mut y);
+        assert_eq!(y, matvec(&a, &x));
+
+        let x2: Vec<f32> = (0..11).map(|i| i as f32 * 0.2 - 1.0).collect();
+        let mut z = vec![f32::NAN; 40]; // dirty, too long
+        vecmat_into(&x2, &a, &mut z);
+        assert_eq!(z, vecmat(&x2, &a));
+    }
+
+    #[test]
+    fn resolve_gemm_block_seam() {
+        assert_eq!(resolve_gemm_block(None, 16), (16, None));
+        assert_eq!(resolve_gemm_block(Some("8"), 16), (8, None));
+        assert_eq!(resolve_gemm_block(Some(" 32 "), 16), (32, None));
+        let (v, warn) = resolve_gemm_block(Some("0"), 16);
+        assert_eq!(v, 16);
+        assert!(warn.unwrap().contains("GRASSWALK_GEMM_BLOCK=0"));
+        let (v, warn) = resolve_gemm_block(Some("wide"), 16);
+        assert_eq!(v, 16);
+        assert!(warn.unwrap().contains("\"wide\""));
+    }
+
+    #[test]
+    fn resolve_gemm_par_threshold_seam() {
+        assert_eq!(resolve_gemm_par_threshold(None, 65536), (65536, None));
+        assert_eq!(
+            resolve_gemm_par_threshold(Some("1024"), 65536),
+            (1024, None)
+        );
+        // 0 is legal: force-parallel for scheduling experiments.
+        assert_eq!(resolve_gemm_par_threshold(Some("0"), 65536), (0, None));
+        let (v, warn) = resolve_gemm_par_threshold(Some("-3"), 65536);
+        assert_eq!(v, 65536);
+        assert!(warn.unwrap().contains("\"-3\""));
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! The register-tile GEMM microkernel over packed panels.
+//!
+//! [`run`] computes one MR×NR tile of `C += A_panel · B_strip` where both
+//! operands were packed by [`super::pack`] into contiguous, aligned,
+//! zero-padded panels:
+//!
+//! * `apack` is k-major: `apack[kk·MR + i] = A[i, kk]` for the tile's MR
+//!   rows (rows past `mr` are zero padding);
+//! * `bstrip` is k-major: `bstrip[kk·NR + j] = B[kk, j]` for the strip's
+//!   NR columns (columns past `nr` are zero padding).
+//!
+//! Two implementations share this contract:
+//!
+//! * [`run_scalar`] — always compiled, pure scalar. Each C element is a
+//!   single f32 accumulator summed over `kk` ascending, so per-element
+//!   rounding follows the standard `γ_k` forward-error bound (see the
+//!   ULP contract in [`super::gemm`]). This is also the reference the
+//!   property suite tests the SIMD variant against.
+//! * [`run_simd`] — `--features simd` only (nightly `portable_simd`):
+//!   one `f32x8` accumulator per tile row, `mul_add` (FMA) over `kk`
+//!   ascending. Lane j of row i accumulates exactly the scalar kernel's
+//!   term sequence for element (i, j); the only difference is FMA's
+//!   skipped intermediate rounding, so the SIMD result is at least as
+//!   accurate under the same documented bound (never bitwise-pinned —
+//!   the scalar default build carries the bitwise contract).
+//!
+//! The padding design keeps the kernel branch-free: remainder tiles
+//! multiply zeros into accumulator lanes that are simply never stored
+//! back (`mr`/`nr` bound the writeback, not the arithmetic).
+
+/// Tile rows held in accumulator registers.
+pub const MR: usize = 8;
+/// Tile columns — one `f32x8` vector wide.
+pub const NR: usize = 8;
+
+// The SIMD kernel hard-codes one f32x8 per row.
+const _: () = assert!(NR == 8);
+
+/// C[0..mr)×[col0..col0+nr) += A_panel(MR×kc) · B_strip(kc×NR).
+///
+/// `c` is the row-major region whose row `i` lives at `c[i*ldc..]`; the
+/// caller guarantees `c.len() >= (mr-1)*ldc + col0 + nr`.
+#[inline]
+pub fn run(
+    apack: &[f32],
+    bstrip: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    ldc: usize,
+    col0: usize,
+    mr: usize,
+    nr: usize,
+) {
+    #[cfg(feature = "simd")]
+    {
+        run_simd(apack, bstrip, kc, c, ldc, col0, mr, nr);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        run_scalar(apack, bstrip, kc, c, ldc, col0, mr, nr);
+    }
+}
+
+/// Scalar tile kernel: `acc[i][j] += apack[kk·MR+i] · bstrip[kk·NR+j]`
+/// over `kk` ascending, then `C += acc` for the live `mr`×`nr` window.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scalar(
+    apack: &[f32],
+    bstrip: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    ldc: usize,
+    col0: usize,
+    mr: usize,
+    nr: usize,
+) {
+    debug_assert!(apack.len() >= kc * MR);
+    debug_assert!(bstrip.len() >= kc * NR);
+    debug_assert!(mr <= MR && nr <= NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..kc {
+        let av = &apack[kk * MR..kk * MR + MR];
+        let bv = &bstrip[kk * NR..kk * NR + NR];
+        for i in 0..MR {
+            let aik = av[i];
+            for j in 0..NR {
+                acc[i][j] += aik * bv[j];
+            }
+        }
+    }
+    for (i, arow) in acc.iter().enumerate().take(mr) {
+        let base = i * ldc + col0;
+        let crow = &mut c[base..base + nr];
+        for j in 0..nr {
+            crow[j] += arow[j];
+        }
+    }
+}
+
+/// Explicit-SIMD tile kernel: 8 `f32x8` accumulators (one per tile row)
+/// updated with `mul_add` over `kk` ascending. Same term order per
+/// element as [`run_scalar`], with FMA in place of mul-then-add.
+#[cfg(feature = "simd")]
+#[allow(clippy::too_many_arguments)]
+pub fn run_simd(
+    apack: &[f32],
+    bstrip: &[f32],
+    kc: usize,
+    c: &mut [f32],
+    ldc: usize,
+    col0: usize,
+    mr: usize,
+    nr: usize,
+) {
+    use std::simd::{f32x8, StdFloat};
+    debug_assert!(apack.len() >= kc * MR);
+    debug_assert!(bstrip.len() >= kc * NR);
+    debug_assert!(mr <= MR && nr <= NR);
+    let mut acc = [f32x8::splat(0.0); MR];
+    for kk in 0..kc {
+        let bv = f32x8::from_slice(&bstrip[kk * NR..kk * NR + NR]);
+        let av = &apack[kk * MR..kk * MR + MR];
+        for (i, accv) in acc.iter_mut().enumerate() {
+            *accv = bv.mul_add(f32x8::splat(av[i]), *accv);
+        }
+    }
+    for (i, accv) in acc.iter().enumerate().take(mr) {
+        let row = accv.to_array();
+        let base = i * ldc + col0;
+        let crow = &mut c[base..base + nr];
+        for j in 0..nr {
+            crow[j] += row[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive f64 tile oracle over the same packed panels.
+    fn oracle(
+        apack: &[f32],
+        bstrip: &[f32],
+        kc: usize,
+        ldc: usize,
+        col0: usize,
+        mr: usize,
+        nr: usize,
+        c: &mut [f64],
+    ) {
+        for i in 0..mr {
+            for j in 0..nr {
+                let mut s = 0.0f64;
+                for kk in 0..kc {
+                    s += apack[kk * MR + i] as f64
+                        * bstrip[kk * NR + j] as f64;
+                }
+                c[i * ldc + col0 + j] += s;
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_tile_matches_f64_oracle() {
+        // kc spans full, 1, and remainder-ish sizes; mr/nr hit padding.
+        for &(kc, mr, nr) in
+            &[(1usize, 8usize, 8usize), (5, 3, 8), (16, 8, 1), (7, 1, 5)]
+        {
+            let apack: Vec<f32> = (0..kc * MR)
+                .map(|x| ((x * 37 % 23) as f32 - 11.0) * 0.125)
+                .collect();
+            let bstrip: Vec<f32> = (0..kc * NR)
+                .map(|x| ((x * 17 % 19) as f32 - 9.0) * 0.25)
+                .collect();
+            let ldc = NR + 3;
+            let mut c = vec![1.0f32; MR * ldc];
+            let mut want = vec![1.0f64; MR * ldc];
+            run_scalar(&apack, &bstrip, kc, &mut c, ldc, 2, mr, nr);
+            oracle(&apack, &bstrip, kc, ldc, 2, mr, nr, &mut want);
+            for (idx, (&got, &w)) in c.iter().zip(&want).enumerate() {
+                let tol = (kc as f64 + 2.0) * f32::EPSILON as f64
+                    * w.abs().max(1.0);
+                assert!(
+                    (got as f64 - w).abs() <= tol,
+                    "kc={kc} mr={mr} nr={nr} idx={idx}: {got} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_tile_padding_never_stored() {
+        let kc = 4;
+        let apack = vec![1.0f32; kc * MR];
+        let bstrip = vec![1.0f32; kc * NR];
+        let ldc = NR;
+        let mut c = vec![0.0f32; MR * ldc];
+        run_scalar(&apack, &bstrip, kc, &mut c, ldc, 0, 2, 3);
+        for i in 0..MR {
+            for j in 0..NR {
+                let expect = if i < 2 && j < 3 { kc as f32 } else { 0.0 };
+                assert_eq!(c[i * ldc + j], expect, "({i},{j})");
+            }
+        }
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_tile_matches_scalar_within_ulp() {
+        let kc = 33;
+        let apack: Vec<f32> = (0..kc * MR)
+            .map(|x| ((x * 29 % 31) as f32 - 15.0) * 0.0625)
+            .collect();
+        let bstrip: Vec<f32> = (0..kc * NR)
+            .map(|x| ((x * 13 % 27) as f32 - 13.0) * 0.125)
+            .collect();
+        let mut cs = vec![0.0f32; MR * NR];
+        let mut cv = vec![0.0f32; MR * NR];
+        run_scalar(&apack, &bstrip, kc, &mut cs, NR, 0, MR, NR);
+        run_simd(&apack, &bstrip, kc, &mut cv, NR, 0, MR, NR);
+        for (idx, (&a, &b)) in cs.iter().zip(&cv).enumerate() {
+            let tol =
+                (kc as f64 + 8.0) * f32::EPSILON as f64 * a.abs().max(1.0) as f64;
+            assert!(
+                (a as f64 - b as f64).abs() <= tol,
+                "idx={idx}: scalar {a} vs simd {b}"
+            );
+        }
+    }
+}

@@ -6,13 +6,15 @@
 
 pub mod gemm;
 pub mod matrix;
+pub mod microkernel;
+pub mod pack;
 pub mod qr;
 pub mod rsvd;
 pub mod svd;
 
 pub use gemm::{
     dot, matmul, matmul_into, matmul_nt, matmul_nt_into, matmul_tn,
-    matmul_tn_into, matvec, vecmat,
+    matmul_tn_into, matvec, matvec_into, vecmat, vecmat_into,
 };
 pub use matrix::Mat;
 pub use qr::{ortho_defect, orthonormalize, qr_thin};

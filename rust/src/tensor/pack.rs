@@ -1,0 +1,374 @@
+//! Panel packing + the cache-blocked packed GEMM driver.
+//!
+//! The classic three-level blocking (BLIS-style): the k dimension is cut
+//! into [`KC`] bands, the n dimension into [`NC`] slabs, and within each
+//! (slab, band) pair the B panel is packed once into contiguous NR-wide
+//! strips while row tasks pack MR-row A panels on demand and drive the
+//! [`super::microkernel`] register tile over them. Packing turns the
+//! strided, transpose-dependent loads of the plain loop nests into
+//! unit-stride streams the microkernel can consume at full width, and
+//! handles all three transpose variants through one [`PackView`] (so
+//! `A·B`, `Aᵀ·B` and `A·Bᵀ` share this driver).
+//!
+//! ## Scratch ownership (the 0-alloc contract)
+//!
+//! Pack panels live in per-thread [`AlignedBuf`] scratch (64-byte
+//! aligned, sized once to the fixed block maxima and reused forever):
+//! the dispatching caller owns the B panel, every executor — pool
+//! workers included — owns its A panel. After the first GEMM on a given
+//! thread the packed path performs zero heap allocations, which keeps
+//! the steady-state assertions in `benches/optimizer_step.rs` and
+//! `benches/coordinator.rs` binding.
+//!
+//! ## Determinism
+//!
+//! Each C element is accumulated per KC band in `kk`-ascending order by
+//! a single per-element accumulator, then added into C — an order that
+//! does not depend on how rows are partitioned across threads. The
+//! parallel and serial packed paths are therefore bitwise identical
+//! (pinned by `rust/tests/workspace_props.rs`); accuracy versus an f64
+//! reference is bounded by the ULP contract documented in
+//! [`super::gemm`].
+
+use super::matrix::Mat;
+use super::microkernel::{self, MR, NR};
+use crate::util::pool;
+use std::cell::RefCell;
+
+/// k-extent of one packed panel band (A strip: MR×KC ≈ 8 KB, stays L1-hot).
+pub const KC: usize = 256;
+/// Column width of one packed B slab (bounds B scratch at KC·NC = 1 MiB).
+pub const NC: usize = 1024;
+/// Rows of C per parallel task — a multiple of MR so strip boundaries
+/// are identical however tasks are partitioned.
+pub const MC: usize = 32;
+
+const _: () = assert!(MC % MR == 0);
+
+/// Minimum FLOP count (2·m·k·n) before packing pays for itself; below
+/// this the plain loop nests in [`super::gemm`] win.
+pub const PACKED_MIN_FLOPS: usize = 1 << 14;
+
+/// Whether an m×k×n product is big enough for the packed path.
+pub fn worth_packing(m: usize, k: usize, n: usize) -> bool {
+    2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n)
+        >= PACKED_MIN_FLOPS
+}
+
+#[repr(align(64))]
+#[derive(Clone, Copy)]
+struct CacheLine([f32; 16]);
+
+/// Cache-line-aligned reusable f32 scratch. Grows monotonically to the
+/// fixed block maxima and is then reused verbatim (no steady-state
+/// allocation).
+struct AlignedBuf {
+    raw: Vec<CacheLine>,
+}
+
+impl AlignedBuf {
+    const fn new() -> AlignedBuf {
+        AlignedBuf { raw: Vec::new() }
+    }
+
+    /// A 64-byte-aligned mutable view of `floats` f32s.
+    fn ensure(&mut self, floats: usize) -> &mut [f32] {
+        let lines = floats.div_ceil(16);
+        if self.raw.len() < lines {
+            self.raw.resize(lines, CacheLine([0.0; 16]));
+        }
+        // SAFETY: `raw` owns `raw.len() * 16 >= floats` contiguous,
+        // initialized f32s (CacheLine is repr(align(64)) over
+        // [f32; 16]), so reinterpreting the allocation as f32s and
+        // taking the first `floats` of them is in-bounds and aligned.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.raw.as_mut_ptr() as *mut f32,
+                floats,
+            )
+        }
+    }
+}
+
+thread_local! {
+    /// Per-executor packed-A scratch (workers and caller alike).
+    static A_PACK: RefCell<AlignedBuf> =
+        const { RefCell::new(AlignedBuf::new()) };
+    /// Dispatching caller's packed-B scratch (read-shared by workers
+    /// for the duration of one (slab, band) region).
+    static B_PACK: RefCell<AlignedBuf> =
+        const { RefCell::new(AlignedBuf::new()) };
+}
+
+/// A possibly-transposed read view over a row-major [`Mat`] — lets one
+/// packed driver serve `A·B`, `Aᵀ·B` and `A·Bᵀ` without materializing
+/// any transpose.
+#[derive(Clone, Copy)]
+pub struct PackView<'a> {
+    mat: &'a Mat,
+    trans: bool,
+}
+
+impl<'a> PackView<'a> {
+    pub fn normal(mat: &'a Mat) -> PackView<'a> {
+        PackView { mat, trans: false }
+    }
+
+    pub fn transposed(mat: &'a Mat) -> PackView<'a> {
+        PackView { mat, trans: true }
+    }
+
+    pub fn rows(&self) -> usize {
+        if self.trans {
+            self.mat.cols
+        } else {
+            self.mat.rows
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        if self.trans {
+            self.mat.rows
+        } else {
+            self.mat.cols
+        }
+    }
+
+    #[inline]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        if self.trans {
+            self.mat.at(j, i)
+        } else {
+            self.mat.at(i, j)
+        }
+    }
+}
+
+/// Pack `mr` rows (zero-padded to MR) × `kc` inner steps of `a` starting
+/// at (row0, kb), k-major: `buf[kk·MR + i] = A[row0+i, kb+kk]`.
+fn pack_a(
+    buf: &mut [f32],
+    a: PackView,
+    row0: usize,
+    mr: usize,
+    kb: usize,
+    kc: usize,
+) {
+    for kk in 0..kc {
+        let dst = &mut buf[kk * MR..kk * MR + MR];
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = if i < mr { a.at(row0 + i, kb + kk) } else { 0.0 };
+        }
+    }
+}
+
+/// Pack the kc×nc panel of `b` covering columns [jc, jc+nc) into NR-wide
+/// strips (zero-padded): strip `s` holds
+/// `buf[s·kc·NR + kk·NR + j] = B[kb+kk, jc + s·NR + j]`.
+fn pack_b(
+    buf: &mut [f32],
+    b: PackView,
+    kb: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+) {
+    let strips = nc.div_ceil(NR);
+    for s in 0..strips {
+        let base = s * kc * NR;
+        let j0 = s * NR;
+        for kk in 0..kc {
+            let dst = &mut buf[base + kk * NR..base + kk * NR + NR];
+            for (j, d) in dst.iter_mut().enumerate() {
+                let col = j0 + j;
+                *d = if col < nc { b.at(kb + kk, jc + col) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// One task's share of a (slab, band) region: every MR-row strip of its
+/// C rows, packing A on this thread and sweeping the packed B strips.
+#[allow(clippy::too_many_arguments)]
+fn update_rows(
+    a: PackView,
+    row0: usize,
+    crows: &mut [f32],
+    n: usize,
+    kb: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    bpack: &[f32],
+) {
+    let rows = crows.len() / n;
+    A_PACK.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        let apack = buf.ensure(kc * MR);
+        for ir in (0..rows).step_by(MR) {
+            let mr = MR.min(rows - ir);
+            pack_a(apack, a, row0 + ir, mr, kb, kc);
+            let ctile = &mut crows[ir * n..];
+            for jr in (0..nc).step_by(NR) {
+                let nr = NR.min(nc - jr);
+                let strip = &bpack[(jr / NR) * kc * NR..][..kc * NR];
+                microkernel::run(
+                    apack,
+                    strip,
+                    kc,
+                    ctile,
+                    n,
+                    jc + jr,
+                    mr,
+                    nr,
+                );
+            }
+        }
+    });
+}
+
+/// C = A·B through the cache-blocked packed microkernel. `a` must view
+/// an m×k operand and `b` a k×n operand (use [`PackView::transposed`]
+/// for the `Aᵀ·B` / `A·Bᵀ` variants). Parallel over MC-row tasks when
+/// the product is large enough (`pool::parallel_chunks` self-serializes
+/// inside pool workers and under `GRASSWALK_THREADS=1`).
+pub fn gemm_packed(a: PackView, b: PackView, c: &mut Mat) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(k, b.rows(), "gemm_packed inner dim");
+    c.resize_to(m, n);
+    c.data.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let parallel = m * k * n >= super::gemm::par_threshold() && m > MC;
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for kb in (0..k).step_by(KC) {
+            let kc = KC.min(k - kb);
+            B_PACK.with(|cell| {
+                let mut buf = cell.borrow_mut();
+                let bpack = buf.ensure(nc.div_ceil(NR) * kc * NR);
+                pack_b(bpack, b, kb, kc, jc, nc);
+                let bpack: &[f32] = bpack;
+                let body = |i0: usize, crows: &mut [f32]| {
+                    update_rows(
+                        a,
+                        i0 * MC,
+                        crows,
+                        n,
+                        kb,
+                        kc,
+                        jc,
+                        nc,
+                        bpack,
+                    );
+                };
+                if parallel {
+                    pool::parallel_chunks(&mut c.data, MC * n, &body);
+                } else {
+                    for (i0, crows) in
+                        c.data.chunks_mut(MC * n).enumerate()
+                    {
+                        body(i0, crows);
+                    }
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: PackView, b: PackView) -> Mat {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for l in 0..k {
+                    s += a.at(i, l) as f64 * b.at(l, j) as f64;
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        let mut buf = vec![f32::NAN; 2 * MR];
+        pack_a(&mut buf, PackView::normal(&m), 1, 2, 1, 2);
+        // kk=0 → column 1 of rows 1..3, padded with zeros.
+        assert_eq!(buf[0], 11.0);
+        assert_eq!(buf[1], 21.0);
+        assert_eq!(&buf[2..MR], &[0.0; 6]);
+        // kk=1 → column 2.
+        assert_eq!(buf[MR], 12.0);
+        assert_eq!(buf[MR + 1], 22.0);
+    }
+
+    #[test]
+    fn pack_b_strips_and_padding() {
+        let m = Mat::from_fn(2, 11, |i, j| (i * 100 + j) as f32);
+        let (kc, nc) = (2, 11);
+        let mut buf = vec![f32::NAN; nc.div_ceil(NR) * kc * NR];
+        pack_b(&mut buf, PackView::normal(&m), 0, kc, 0, nc);
+        // Strip 0, kk=0 → B[0, 0..8].
+        assert_eq!(&buf[0..NR], &[0., 1., 2., 3., 4., 5., 6., 7.]);
+        // Strip 1, kk=1 → B[1, 8..11] padded to NR.
+        let s1 = kc * NR + NR;
+        assert_eq!(&buf[s1..s1 + NR],
+                   &[108., 109., 110., 0., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn packed_matches_naive_across_views() {
+        let mut rng = Rng::new(90);
+        for &(m, k, n) in
+            &[(1usize, 1usize, 1usize), (5, 9, 7), (33, 70, 65), (64, 64, 64)]
+        {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let at = a.t();
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let bt = b.t();
+            let cases = [
+                (PackView::normal(&a), PackView::normal(&b)),
+                (PackView::transposed(&at), PackView::normal(&b)),
+                (PackView::normal(&a), PackView::transposed(&bt)),
+            ];
+            for (i, &(av, bv)) in cases.iter().enumerate() {
+                let mut c = Mat::filled(2, 2, f32::NAN); // dirty reuse
+                gemm_packed(av, bv, &mut c);
+                let want = naive(av, bv);
+                let d = c.max_abs_diff(&want);
+                assert!(d < 1e-3, "case {i} {m}x{k}x{n}: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_empty_dims_yield_empty_or_zero() {
+        let a = Mat::zeros(0, 4);
+        let b = Mat::zeros(4, 3);
+        let mut c = Mat::filled(5, 5, 1.0);
+        gemm_packed(PackView::normal(&a), PackView::normal(&b), &mut c);
+        assert_eq!(c.shape(), (0, 3));
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 2);
+        gemm_packed(PackView::normal(&a), PackView::normal(&b), &mut c);
+        assert_eq!(c.shape(), (3, 2));
+        assert!(c.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn worth_packing_threshold() {
+        assert!(!worth_packing(1, 1, 1));
+        assert!(!worth_packing(8, 8, 8));
+        assert!(worth_packing(64, 64, 64));
+        assert!(worth_packing(usize::MAX, 2, 2)); // no overflow panic
+    }
+}

@@ -1,0 +1,511 @@
+//! Benchmark-regression gate: committed-baseline comparison for the
+//! `benches/*.rs` binaries.
+//!
+//! Each bench builds a [`Gate`], records named rows — wall time per op
+//! (optionally with a GFLOP/s rate), plus exact counters like
+//! steady-state allocations or thread spawns — and calls
+//! [`Gate::finish`], which compares the run against the committed
+//! baseline `BENCH_<bench>.json` at the repo root:
+//!
+//! * time rows regress when `candidate > baseline · (1 + tolerance)`
+//!   (default tolerance 10%, see `GRASSWALK_BENCH_TOLERANCE`);
+//! * counter rows regress when `candidate > baseline` — counters are
+//!   exact contracts (0 allocs is 0 allocs), no noise allowance;
+//! * rows present only on one side are advisories, never failures, so
+//!   adding a bench row doesn't break CI before its baseline lands.
+//!
+//! On regression `finish` returns `Err` and the bench binary exits
+//! nonzero, failing the CI bench-gate job. **Without a committed
+//! baseline the gate is advisory** (prints the candidate table, exits
+//! 0), so the job can run on every PR and only starts blocking once
+//! someone commits baselines. Updating a baseline is an explicit,
+//! reviewable file change:
+//!
+//! ```text
+//! GRASSWALK_BENCH_WRITE=1 cargo bench --bench linalg   # rewrites BENCH_linalg.json
+//! git diff BENCH_linalg.json                           # perf delta shows in review
+//! ```
+//!
+//! Env knobs (all parsed through pure, unit-tested `resolve_*` seams):
+//! `GRASSWALK_BENCH_WRITE=1` rewrites the baseline instead of gating;
+//! `GRASSWALK_BENCH_GATE=off` records nothing but still prints rows;
+//! `GRASSWALK_BENCH_TOLERANCE` overrides the noise threshold (e.g.
+//! `0.25` on noisy shared runners); `GRASSWALK_BENCH_HANDICAP`
+//! multiplies every recorded time (a synthetic-slowdown lever: setting
+//! `1.15` against a fresh baseline must make the gate fail, which is how
+//! the gate itself is acceptance-tested without waiting for a real
+//! regression).
+
+use crate::util::bench::Stats;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Default relative noise threshold for time rows.
+pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// One named measurement: a time row (`ns_per_op`, optionally with a
+/// derived GFLOP/s rate) or an exact counter row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Row {
+    pub name: String,
+    pub ns_per_op: Option<f64>,
+    pub gflops: Option<f64>,
+    pub counter: Option<u64>,
+}
+
+/// Outcome of comparing one row against the baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Finding {
+    /// Candidate time exceeded baseline by more than the tolerance.
+    TimeRegression {
+        name: String,
+        baseline_ns: f64,
+        candidate_ns: f64,
+    },
+    /// Candidate counter exceeded the exact baseline value.
+    CounterRegression {
+        name: String,
+        baseline: u64,
+        candidate: u64,
+    },
+    /// Baseline row with no candidate (bench row removed or renamed).
+    RowMissing { name: String },
+    /// Candidate row with no baseline yet (newly added bench row).
+    RowNew { name: String },
+}
+
+/// Result of [`compare`]: `regressions` fail the gate, `advisories`
+/// only print.
+#[derive(Clone, Debug, Default)]
+pub struct Comparison {
+    pub regressions: Vec<Finding>,
+    pub advisories: Vec<Finding>,
+    /// Rows matched by name on both sides.
+    pub compared: usize,
+}
+
+/// Pure comparison of candidate rows against baseline rows.
+pub fn compare(baseline: &[Row], candidate: &[Row], tolerance: f64) -> Comparison {
+    let base: BTreeMap<&str, &Row> =
+        baseline.iter().map(|r| (r.name.as_str(), r)).collect();
+    let cand: BTreeMap<&str, &Row> =
+        candidate.iter().map(|r| (r.name.as_str(), r)).collect();
+    let mut out = Comparison::default();
+    for row in candidate {
+        let Some(b) = base.get(row.name.as_str()) else {
+            out.advisories.push(Finding::RowNew {
+                name: row.name.clone(),
+            });
+            continue;
+        };
+        out.compared += 1;
+        if let (Some(bn), Some(cn)) = (b.ns_per_op, row.ns_per_op) {
+            if cn > bn * (1.0 + tolerance) {
+                out.regressions.push(Finding::TimeRegression {
+                    name: row.name.clone(),
+                    baseline_ns: bn,
+                    candidate_ns: cn,
+                });
+            }
+        }
+        if let (Some(bc), Some(cc)) = (b.counter, row.counter) {
+            if cc > bc {
+                out.regressions.push(Finding::CounterRegression {
+                    name: row.name.clone(),
+                    baseline: bc,
+                    candidate: cc,
+                });
+            }
+        }
+    }
+    for row in baseline {
+        if !cand.contains_key(row.name.as_str()) {
+            out.advisories.push(Finding::RowMissing {
+                name: row.name.clone(),
+            });
+        }
+    }
+    out
+}
+
+impl Finding {
+    pub fn line(&self) -> String {
+        match self {
+            Finding::TimeRegression {
+                name,
+                baseline_ns,
+                candidate_ns,
+            } => format!(
+                "REGRESSION  {name}: {candidate_ns:.0} ns/op vs baseline \
+                 {baseline_ns:.0} ns/op ({:+.1}%)",
+                (candidate_ns / baseline_ns - 1.0) * 100.0
+            ),
+            Finding::CounterRegression {
+                name,
+                baseline,
+                candidate,
+            } => format!(
+                "REGRESSION  {name}: counter {candidate} vs baseline \
+                 {baseline} (exact contract)"
+            ),
+            Finding::RowMissing { name } => {
+                format!("advisory    {name}: in baseline but not in this run")
+            }
+            Finding::RowNew { name } => {
+                format!("advisory    {name}: new row, no baseline yet")
+            }
+        }
+    }
+}
+
+/// Serialize rows to the committed `BENCH_<bench>.json` format — one
+/// compact JSON object per row line, so a baseline update diffs
+/// row-by-row in review.
+pub fn rows_to_baseline(bench: &str, rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{{\"bench\":{},\n", json::s(bench).to_string()));
+    out.push_str("\"rows\":[\n");
+    for (i, row) in rows.iter().enumerate() {
+        let mut pairs = vec![("name", json::s(&row.name))];
+        if let Some(ns) = row.ns_per_op {
+            pairs.push(("ns_per_op", json::num(ns)));
+        }
+        if let Some(g) = row.gflops {
+            pairs.push(("gflops", json::num(g)));
+        }
+        if let Some(c) = row.counter {
+            pairs.push(("counter", json::num(c as f64)));
+        }
+        out.push_str(&json::obj(pairs).to_string());
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Parse a `BENCH_<bench>.json` document back into rows.
+pub fn rows_from_baseline(text: &str) -> Result<Vec<Row>, String> {
+    let doc = Json::parse(text)?;
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or("baseline missing \"rows\" array")?;
+    rows.iter()
+        .map(|r| {
+            let name = r
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("row missing \"name\"")?
+                .to_string();
+            Ok(Row {
+                name,
+                ns_per_op: r.get("ns_per_op").and_then(Json::as_f64),
+                gflops: r.get("gflops").and_then(Json::as_f64),
+                counter: r.get("counter").and_then(Json::as_f64).map(|c| c as u64),
+            })
+        })
+        .collect()
+}
+
+/// Pure parsing seam for `GRASSWALK_BENCH_TOLERANCE`: unset → `default`;
+/// a finite number ≥ 0 → that fraction; anything else → `default`
+/// **with** a warning.
+pub fn resolve_tolerance(raw: Option<&str>, default: f64) -> (f64, Option<String>) {
+    let Some(raw) = raw else {
+        return (default, None);
+    };
+    let trimmed = raw.trim();
+    match trimmed.parse::<f64>() {
+        Ok(t) if t.is_finite() && t >= 0.0 => (t, None),
+        _ => (
+            default,
+            Some(format!(
+                "GRASSWALK_BENCH_TOLERANCE={trimmed:?} is not a \
+                 non-negative number; using the default of {default}"
+            )),
+        ),
+    }
+}
+
+/// Pure parsing seam for `GRASSWALK_BENCH_HANDICAP` (a multiplier on
+/// every recorded time; `1.15` simulates a 15% slowdown): unset → 1.0;
+/// a finite number > 0 → that factor; anything else → 1.0 **with** a
+/// warning.
+pub fn resolve_handicap(raw: Option<&str>) -> (f64, Option<String>) {
+    let Some(raw) = raw else {
+        return (1.0, None);
+    };
+    let trimmed = raw.trim();
+    match trimmed.parse::<f64>() {
+        Ok(h) if h.is_finite() && h > 0.0 => (h, None),
+        _ => (
+            1.0,
+            Some(format!(
+                "GRASSWALK_BENCH_HANDICAP={trimmed:?} is not a positive \
+                 number; ignoring it"
+            )),
+        ),
+    }
+}
+
+/// Absolute path of the committed baseline for `bench`.
+pub fn baseline_path(bench: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{bench}.json"))
+}
+
+/// Row recorder + gate for one bench binary.
+pub struct Gate {
+    bench: String,
+    rows: Vec<Row>,
+    handicap: f64,
+}
+
+impl Gate {
+    /// `bench` names the baseline file: `BENCH_<bench>.json`.
+    pub fn new(bench: &str) -> Gate {
+        let raw = std::env::var("GRASSWALK_BENCH_HANDICAP").ok();
+        let (handicap, warning) = resolve_handicap(raw.as_deref());
+        if let Some(msg) = warning {
+            eprintln!("warning: {msg}");
+        }
+        Gate {
+            bench: bench.to_string(),
+            rows: Vec::new(),
+            handicap,
+        }
+    }
+
+    /// Record a time row from bench [`Stats`] (median, in ns/op).
+    pub fn time(&mut self, stats: &Stats) {
+        self.time_ns(stats.name.trim(), stats.median.as_nanos() as f64);
+    }
+
+    /// Record a time row plus its GFLOP/s rate (`flops` per call).
+    pub fn time_with_flops(&mut self, stats: &Stats, flops: usize) {
+        let ns = stats.median.as_nanos() as f64 * self.handicap;
+        self.rows.push(Row {
+            name: stats.name.trim().to_string(),
+            ns_per_op: Some(ns),
+            // 1 flop/ns = 1e9 flop/s = 1 GFLOP/s.
+            gflops: Some(flops as f64 / ns.max(1.0)),
+            counter: None,
+        });
+    }
+
+    /// Record a time row from a raw ns/op figure (for manually-timed
+    /// regions that don't go through `Bench::run`).
+    pub fn time_ns(&mut self, name: &str, ns: f64) {
+        self.rows.push(Row {
+            name: name.trim().to_string(),
+            ns_per_op: Some(ns * self.handicap),
+            gflops: None,
+            counter: None,
+        });
+    }
+
+    /// Record an exact counter row (allocs, spawns, …); any increase
+    /// over baseline fails the gate.
+    pub fn counter(&mut self, name: &str, value: u64) {
+        self.rows.push(Row {
+            name: name.trim().to_string(),
+            ns_per_op: None,
+            gflops: None,
+            counter: Some(value),
+        });
+    }
+
+    /// Compare against the committed baseline (or write it under
+    /// `GRASSWALK_BENCH_WRITE=1`). `Err` means the caller should exit
+    /// nonzero.
+    pub fn finish(self) -> Result<(), String> {
+        let path = baseline_path(&self.bench);
+        if std::env::var("GRASSWALK_BENCH_WRITE").as_deref() == Ok("1") {
+            let doc = rows_to_baseline(&self.bench, &self.rows);
+            std::fs::write(&path, doc).map_err(|e| {
+                format!("benchgate: cannot write {}: {e}", path.display())
+            })?;
+            println!(
+                "benchgate: wrote {} rows to {} (commit it to arm the gate)",
+                self.rows.len(),
+                path.display()
+            );
+            return Ok(());
+        }
+        if std::env::var("GRASSWALK_BENCH_GATE").as_deref() == Ok("off") {
+            println!("benchgate: disabled via GRASSWALK_BENCH_GATE=off");
+            return Ok(());
+        }
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => {
+                println!(
+                    "benchgate: no baseline at {} — advisory run \
+                     ({} rows recorded; GRASSWALK_BENCH_WRITE=1 to create it)",
+                    path.display(),
+                    self.rows.len()
+                );
+                return Ok(());
+            }
+        };
+        let baseline = rows_from_baseline(&text)
+            .map_err(|e| format!("benchgate: bad baseline {}: {e}", path.display()))?;
+        let raw = std::env::var("GRASSWALK_BENCH_TOLERANCE").ok();
+        let (tolerance, warning) =
+            resolve_tolerance(raw.as_deref(), DEFAULT_TOLERANCE);
+        if let Some(msg) = warning {
+            eprintln!("warning: {msg}");
+        }
+        let cmp = compare(&baseline, &self.rows, tolerance);
+        println!(
+            "benchgate: {} rows vs {} (tolerance {:.0}%)",
+            cmp.compared,
+            path.display(),
+            tolerance * 100.0
+        );
+        for f in &cmp.advisories {
+            println!("  {}", f.line());
+        }
+        for f in &cmp.regressions {
+            println!("  {}", f.line());
+        }
+        if cmp.regressions.is_empty() {
+            println!("benchgate: PASS");
+            Ok(())
+        } else {
+            Err(format!(
+                "benchgate: FAIL — {} regression(s) in bench {:?}:\n{}",
+                cmp.regressions.len(),
+                self.bench,
+                cmp.regressions
+                    .iter()
+                    .map(|f| format!("  {}", f.line()))
+                    .collect::<Vec<_>>()
+                    .join("\n")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn time_row(name: &str, ns: f64) -> Row {
+        Row {
+            name: name.into(),
+            ns_per_op: Some(ns),
+            gflops: None,
+            counter: None,
+        }
+    }
+
+    fn counter_row(name: &str, c: u64) -> Row {
+        Row {
+            name: name.into(),
+            ns_per_op: None,
+            gflops: None,
+            counter: Some(c),
+        }
+    }
+
+    #[test]
+    fn fifteen_percent_slowdown_fails_ten_percent_gate() {
+        let base = vec![time_row("gemm", 1000.0)];
+        let cand = vec![time_row("gemm", 1150.0)];
+        let cmp = compare(&base, &cand, DEFAULT_TOLERANCE);
+        assert_eq!(cmp.regressions.len(), 1, "{:?}", cmp.regressions);
+        assert!(matches!(
+            &cmp.regressions[0],
+            Finding::TimeRegression { name, .. } if name == "gemm"
+        ));
+    }
+
+    #[test]
+    fn five_percent_noise_passes() {
+        let base = vec![time_row("gemm", 1000.0)];
+        let cand = vec![time_row("gemm", 1050.0)];
+        let cmp = compare(&base, &cand, DEFAULT_TOLERANCE);
+        assert!(cmp.regressions.is_empty());
+        assert_eq!(cmp.compared, 1);
+    }
+
+    #[test]
+    fn speedups_never_fail() {
+        let base = vec![time_row("gemm", 1000.0)];
+        let cand = vec![time_row("gemm", 400.0)];
+        assert!(compare(&base, &cand, 0.10).regressions.is_empty());
+    }
+
+    #[test]
+    fn counters_gate_exactly() {
+        let base = vec![counter_row("allocs", 0)];
+        let up = vec![counter_row("allocs", 1)];
+        let cmp = compare(&base, &up, DEFAULT_TOLERANCE);
+        assert_eq!(cmp.regressions.len(), 1);
+        // Improvement (1 → 0) is fine.
+        let base = vec![counter_row("allocs", 1)];
+        let down = vec![counter_row("allocs", 0)];
+        assert!(compare(&base, &down, DEFAULT_TOLERANCE)
+            .regressions
+            .is_empty());
+    }
+
+    #[test]
+    fn unmatched_rows_are_advisory() {
+        let base = vec![time_row("old", 10.0)];
+        let cand = vec![time_row("new", 10.0)];
+        let cmp = compare(&base, &cand, DEFAULT_TOLERANCE);
+        assert!(cmp.regressions.is_empty());
+        assert_eq!(cmp.advisories.len(), 2);
+        assert_eq!(cmp.compared, 0);
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let rows = vec![
+            Row {
+                name: "thin 16x256 * 256x688".into(),
+                ns_per_op: Some(12345.5),
+                gflops: Some(22.75),
+                counter: None,
+            },
+            counter_row("steady-state allocs", 0),
+        ];
+        let doc = rows_to_baseline("linalg", &rows);
+        assert!(doc.lines().count() >= 4, "one row per line:\n{doc}");
+        let back = rows_from_baseline(&doc).unwrap();
+        assert_eq!(back, rows);
+    }
+
+    #[test]
+    fn bad_baseline_is_an_error() {
+        assert!(rows_from_baseline("{}").is_err());
+        assert!(rows_from_baseline("{\"rows\":[{\"ns_per_op\":1}]}").is_err());
+    }
+
+    #[test]
+    fn resolve_tolerance_seam() {
+        assert_eq!(resolve_tolerance(None, 0.10), (0.10, None));
+        assert_eq!(resolve_tolerance(Some("0.25"), 0.10), (0.25, None));
+        assert_eq!(resolve_tolerance(Some("0"), 0.10), (0.0, None));
+        let (t, warn) = resolve_tolerance(Some("-0.3"), 0.10);
+        assert_eq!(t, 0.10);
+        assert!(warn.unwrap().contains("\"-0.3\""));
+        let (t, warn) = resolve_tolerance(Some("loose"), 0.10);
+        assert_eq!(t, 0.10);
+        assert!(warn.is_some());
+    }
+
+    #[test]
+    fn resolve_handicap_seam() {
+        assert_eq!(resolve_handicap(None), (1.0, None));
+        assert_eq!(resolve_handicap(Some("1.15")), (1.15, None));
+        let (h, warn) = resolve_handicap(Some("0"));
+        assert_eq!(h, 1.0);
+        assert!(warn.is_some());
+        let (h, warn) = resolve_handicap(Some("nope"));
+        assert_eq!(h, 1.0);
+        assert!(warn.is_some());
+    }
+}

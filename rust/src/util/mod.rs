@@ -2,6 +2,7 @@
 //! pool, JSON, TOML subset, CLI parsing, and a bench harness.
 
 pub mod bench;
+pub mod benchgate;
 pub mod cli;
 pub mod crc;
 pub mod json;

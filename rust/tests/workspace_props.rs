@@ -11,16 +11,28 @@
 //!   allocating math (`reference_step`, preserved verbatim as oracle)
 //!   BITWISE over multi-step trajectories, in both orientations;
 //! * per-matrix parallel stepping (the trainer fan-out) is bitwise
-//!   identical to the sequential loop.
+//!   identical to the sequential loop;
+//! * GEMM kernel tiers (tensor::gemm ULP contract): every kernel —
+//!   scalar nests and the packed microkernel path, across awkward
+//!   shapes m/k/n ∈ {1,7,8,9,63,64,65} and all transpose views — stays
+//!   within the documented per-element bound
+//!   |C − ref_f64| ≤ (k+8)·ε_f32·Σ|a·b|; the default (non-simd) build
+//!   is additionally bitwise-pinned to the pre-microkernel loop nests;
+//!   the packed path is bitwise parallel ≡ serial.
+//!
+//! CI runs this suite under GRASSWALK_THREADS=1 and =4 so both the
+//! serial and pool-dispatch regimes are covered.
 
 use grasswalk::optim::projected::reference_step;
 use grasswalk::optim::{
     CpuMatrixOptimizer, MatrixOptimizer, Method, ProjectedConfig,
     ProjectedOptimizer, SubspaceRule,
 };
+use grasswalk::tensor::pack::{gemm_packed, PackView};
 use grasswalk::tensor::{
-    left_singular_basis, matmul, matmul_into, matmul_nt, matmul_nt_into,
-    matmul_tn, matmul_tn_into, ortho_defect, orthonormalize, qr_thin, Mat,
+    dot, left_singular_basis, matmul, matmul_into, matmul_nt,
+    matmul_nt_into, matmul_tn, matmul_tn_into, matvec, matvec_into,
+    ortho_defect, orthonormalize, qr_thin, vecmat, vecmat_into, Mat,
 };
 use grasswalk::util::pool;
 use grasswalk::util::rng::Rng;
@@ -195,6 +207,243 @@ fn prop_parallel_fanout_bitwise_matches_sequential() {
     }
     for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
         assert_eq!(a.w.data, b.w.data, "matrix {i} diverged");
+    }
+}
+
+/// Assert the tensor::gemm ULP contract element-by-element: `c` must
+/// match the f64 reference of `aeff · beff` (both plain row-major
+/// effective operands) within `(k+8)·ε_f32·Σ_l|a_il·b_lj|`.
+fn assert_ulp_close(c: &Mat, aeff: &Mat, beff: &Mat, label: &str) {
+    assert_eq!(c.shape(), (aeff.rows, beff.cols), "{label}: shape");
+    let k = aeff.cols;
+    for i in 0..aeff.rows {
+        for j in 0..beff.cols {
+            let mut refv = 0.0f64;
+            let mut mass = 0.0f64;
+            for l in 0..k {
+                let t = aeff.at(i, l) as f64 * beff.at(l, j) as f64;
+                refv += t;
+                mass += t.abs();
+            }
+            let tol = (k as f64 + 8.0) * f32::EPSILON as f64 * mass
+                + f32::MIN_POSITIVE as f64;
+            let got = c.at(i, j) as f64;
+            assert!(
+                (got - refv).abs() <= tol,
+                "{label} ({i},{j}): got {got}, ref {refv}, tol {tol}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_packed_gemm_matches_f64_reference_across_awkward_shapes() {
+    // Every lane-remainder combination around the MR=NR=8 tile and the
+    // KC band: the packed driver (scalar microkernel on the default
+    // build, f32x8 with --features simd) must hold the ULP contract on
+    // all of them, through all three transpose views, into a dirty
+    // reused buffer.
+    const DIMS: [usize; 7] = [1, 7, 8, 9, 63, 64, 65];
+    let mut c = Mat::filled(2, 2, f32::NAN);
+    let mut case = 0u64;
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                let mut rng = Rng::new(4000 + case);
+                case += 1;
+                let a = Mat::randn(m, k, 1.0, &mut rng);
+                let b = Mat::randn(k, n, 1.0, &mut rng);
+                let at = a.t();
+                let bt = b.t();
+                gemm_packed(PackView::normal(&a), PackView::normal(&b), &mut c);
+                assert_ulp_close(&c, &a, &b, &format!("nn {m}x{k}x{n}"));
+                gemm_packed(
+                    PackView::transposed(&at),
+                    PackView::normal(&b),
+                    &mut c,
+                );
+                assert_ulp_close(&c, &a, &b, &format!("tn {m}x{k}x{n}"));
+                gemm_packed(
+                    PackView::normal(&a),
+                    PackView::transposed(&bt),
+                    &mut c,
+                );
+                assert_ulp_close(&c, &a, &b, &format!("nt {m}x{k}x{n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_gemm_degenerate_shapes() {
+    // Empty dims and the 1×k×1 outer-degenerate case.
+    let mut c = Mat::filled(4, 4, f32::NAN);
+    let a = Mat::zeros(0, 5);
+    let b = Mat::zeros(5, 3);
+    gemm_packed(PackView::normal(&a), PackView::normal(&b), &mut c);
+    assert_eq!(c.shape(), (0, 3));
+    let a = Mat::zeros(3, 0);
+    let b = Mat::zeros(0, 2);
+    gemm_packed(PackView::normal(&a), PackView::normal(&b), &mut c);
+    assert_eq!(c.shape(), (3, 2));
+    assert!(c.data.iter().all(|&x| x == 0.0));
+    for &k in &[1usize, 63, 64, 65, 300] {
+        let mut rng = Rng::new(4500 + k as u64);
+        let a = Mat::randn(1, k, 1.0, &mut rng);
+        let b = Mat::randn(k, 1, 1.0, &mut rng);
+        gemm_packed(PackView::normal(&a), PackView::normal(&b), &mut c);
+        assert_ulp_close(&c, &a, &b, &format!("1x{k}x1"));
+    }
+}
+
+#[test]
+fn prop_public_gemm_matches_f64_reference_within_ulp() {
+    // The public entry points (whatever tier they dispatch to — the
+    // scalar nests by default, the packed path under --features simd)
+    // obey the same ULP contract. Includes a shape past PAR_THRESHOLD
+    // so the pool-dispatch path is covered.
+    let mut c = Mat::default();
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (7, 9, 8),
+        (33, 65, 17),
+        (64, 64, 64),
+        (100, 80, 120), // m·k·n ≥ 2^16: parallel path
+    ] {
+        let mut rng = Rng::new(4600 + (m * k * n) as u64);
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        matmul_into(&a, &b, &mut c);
+        assert_ulp_close(&c, &a, &b, &format!("matmul {m}x{k}x{n}"));
+        let at = a.t();
+        matmul_tn_into(&at, &b, &mut c);
+        assert_ulp_close(&c, &a, &b, &format!("matmul_tn {m}x{k}x{n}"));
+        let bt = b.t();
+        matmul_nt_into(&a, &bt, &mut c);
+        assert_ulp_close(&c, &a, &b, &format!("matmul_nt {m}x{k}x{n}"));
+    }
+}
+
+/// The pre-microkernel loop nests, reimplemented element-wise: the
+/// default (non-simd) build's public kernels must reproduce them
+/// BITWISE — the refactor may not move a single ulp on the default
+/// build. (Not asserted under --features simd, where the packed tier
+/// replaces the nests past its FLOP threshold under the ULP contract.)
+#[cfg(not(feature = "simd"))]
+mod prerefactor_oracle {
+    use super::*;
+
+    pub fn nn(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f32;
+                for kk in 0..a.cols {
+                    let aik = a.at(i, kk);
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    s += aik * b.at(kk, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    pub fn tn(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.cols, b.cols);
+        for i in 0..a.cols {
+            for j in 0..b.cols {
+                let mut s = 0.0f32;
+                for kk in 0..a.rows {
+                    let aik = a.at(kk, i);
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    s += aik * b.at(kk, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    pub fn nt(a: &Mat, b: &Mat) -> Mat {
+        // The nt kernel is dot-based: reuse the same public `dot` so the
+        // lane split is identical.
+        let mut c = Mat::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                *c.at_mut(i, j) = dot(a.row(i), b.row(j));
+            }
+        }
+        c
+    }
+}
+
+#[cfg(not(feature = "simd"))]
+#[test]
+fn prop_default_gemm_bitwise_equals_prerefactor_nest() {
+    let mut c = Mat::default();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4700 + seed);
+        let m = 1 + rng.below(40);
+        let k = 1 + rng.below(40);
+        let n = 1 + rng.below(40);
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c.data, prerefactor_oracle::nn(&a, &b).data, "nn {seed}");
+        let at = a.t();
+        matmul_tn_into(&at, &b, &mut c);
+        assert_eq!(c.data, prerefactor_oracle::tn(&at, &b).data, "tn {seed}");
+        let bt = b.t();
+        matmul_nt_into(&a, &bt, &mut c);
+        assert_eq!(c.data, prerefactor_oracle::nt(&a, &bt).data, "nt {seed}");
+    }
+    // Past PAR_THRESHOLD: row partitioning must not move a bit either.
+    let mut rng = Rng::new(4999);
+    let a = Mat::randn(100, 80, 1.0, &mut rng);
+    let b = Mat::randn(80, 120, 1.0, &mut rng);
+    matmul_into(&a, &b, &mut c);
+    assert_eq!(c.data, prerefactor_oracle::nn(&a, &b).data, "nn parallel");
+}
+
+#[test]
+fn prop_packed_parallel_equals_serial_bitwise() {
+    // The packed tier's own determinism claim: per-element accumulation
+    // order depends only on the KC banding, so pool dispatch vs serial
+    // is bitwise. 200 rows > MC and m·k·n ≥ PAR_THRESHOLD force the
+    // parallel branch when threads allow.
+    let mut rng = Rng::new(5100);
+    let a = Mat::randn(200, 300, 1.0, &mut rng);
+    let b = Mat::randn(300, 170, 1.0, &mut rng);
+    let mut par = Mat::default();
+    gemm_packed(PackView::normal(&a), PackView::normal(&b), &mut par);
+    let ser = pool::run_serial(|| {
+        let mut c = Mat::default();
+        gemm_packed(PackView::normal(&a), PackView::normal(&b), &mut c);
+        c
+    });
+    assert_eq!(par.data, ser.data);
+}
+
+#[test]
+fn prop_matvec_vecmat_into_bitwise_match_allocating() {
+    let mut y = vec![f32::NAN; 7]; // dirty, reused across cases
+    let mut z = vec![f32::NAN; 7];
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5200 + seed);
+        let m = 1 + rng.below(30);
+        let n = 1 + rng.below(30);
+        let a = Mat::randn(m, n, 1.0, &mut rng);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        matvec_into(&a, &x, &mut y);
+        assert_eq!(y, matvec(&a, &x), "seed {seed} matvec");
+        let xr: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+        vecmat_into(&xr, &a, &mut z);
+        assert_eq!(z, vecmat(&xr, &a), "seed {seed} vecmat");
     }
 }
 
