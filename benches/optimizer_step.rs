@@ -329,6 +329,82 @@ fn main() {
         std::hint::black_box(sink.load(Ordering::Relaxed));
     }
 
+    // Traced steady state (ISSUE 7 acceptance): with tracing enabled, a
+    // span-wrapped GrassWalk step plus the per-step collector drain must
+    // still allocate NOTHING once the ring and collector are warm. The
+    // warmup iteration absorbs the one-time costs (thread-ring
+    // registration, collector track-name table); steady state is pure
+    // clock reads, fixed-slot ring pushes, and histogram increments.
+    println!("-- traced step (trace enabled) --");
+    {
+        use grasswalk::trace::{self, Phase};
+        let (m, n, r) = (64usize, 172usize, 16usize);
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        let mut opt = Method::GrassWalk.build(r, 1_000_000, 1e-3, 1000);
+        let mut w = Mat::randn(m, n, 1.0, &mut rng);
+        let mut step_rng = Rng::new(11);
+        opt.step(&mut w, &g, &mut step_rng);
+        opt.step(&mut w, &g, &mut step_rng);
+
+        let off = b.run(&format!("untraced grasswalk step  {m}x{n}"), || {
+            opt.step(&mut w, &g, &mut step_rng);
+        });
+        gate.time(&off);
+
+        trace::set_enabled(true);
+        let mut collector = trace::TraceCollector::new(false);
+        let mut traced_step =
+            |opt: &mut Box<dyn MatrixOptimizer>,
+             w: &mut Mat,
+             step_rng: &mut Rng,
+             collector: &mut trace::TraceCollector| {
+                let st = trace::start();
+                {
+                    let _sp = trace::span(Phase::OptStep);
+                    opt.step(w, &g, step_rng);
+                }
+                st.record(Phase::Step);
+                collector.drain();
+            };
+        // Warmup drain: registers this thread's ring and sizes the
+        // collector's per-track tables (the only allocating calls).
+        traced_step(&mut opt, &mut w, &mut step_rng, &mut collector);
+
+        let allocs = pool::run_serial(|| {
+            alloc_count(|| {
+                traced_step(&mut opt, &mut w, &mut step_rng, &mut collector)
+            })
+        });
+        assert_eq!(
+            allocs, 0,
+            "traced steady-state step (span + ring push + drain) must \
+             not allocate"
+        );
+        gate.counter(
+            &format!("traced steady allocs (span+drain) {m}x{n}"),
+            allocs,
+        );
+
+        let on = b.run(&format!("traced grasswalk step    {m}x{n}"), || {
+            traced_step(&mut opt, &mut w, &mut step_rng, &mut collector);
+        });
+        gate.time(&on);
+        let delta_ns = on
+            .median
+            .saturating_sub(off.median)
+            .as_nanos() as f64;
+        println!(
+            "    -> tracing overhead per traced step: {delta_ns:.0} ns \
+             ({:.2}% of untraced)",
+            100.0 * delta_ns / off.median.as_nanos().max(1) as f64
+        );
+        gate.time_ns(
+            &format!("trace overhead (traced - untraced) {m}x{n}"),
+            delta_ns,
+        );
+        trace::set_enabled(false);
+    }
+
     // PJRT fused-kernel path, if artifacts exist.
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts");

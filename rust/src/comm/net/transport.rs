@@ -128,10 +128,14 @@ impl TcpState {
         round: u64,
     ) -> Result<usize, NetError> {
         use std::io::Write;
+        // NetSend span: encode + the blocking socket write. Error paths
+        // skip the record — a failed round tears the run down anyway.
+        let sp = crate::trace::start();
         let total =
             encode_frame(&mut self.frame, kind, rank, round, &self.payload)?;
         let stream = self.send.as_mut().ok_or(NetError::PeerDisconnected)?;
         stream.write_all(&self.frame)?;
+        sp.record(crate::trace::Phase::NetSend);
         Ok(total)
     }
 
@@ -145,6 +149,9 @@ impl TcpState {
         needed: usize,
     ) -> Result<Vec<u8>, NetError> {
         let link = self.reader.as_ref().ok_or(NetError::PeerDisconnected)?;
+        // NetRecv span: the blocking wait for the upstream frame — the
+        // ring's exposed-latency phase (validation below is ns-scale).
+        let sp = crate::trace::start();
         let res = match link.frames.recv_timeout(self.io_timeout) {
             Ok(r) => r,
             Err(RecvTimeoutError::Timeout) => return Err(NetError::Timeout),
@@ -153,6 +160,7 @@ impl TcpState {
             }
         };
         let (hdr, payload) = res?;
+        sp.record(crate::trace::Phase::NetRecv);
         if hdr.kind != kind {
             return Err(NetError::UnexpectedKind { expected: kind, got: hdr.kind });
         }

@@ -99,6 +99,9 @@ const TRAIN_KEYS: &[&str] = &[
     "analysis_every",
     "rule",
     "subspace_diag",
+    "trace",
+    "trace_out",
+    "metrics_stream",
 ];
 
 impl ExperimentConfig {
@@ -225,6 +228,17 @@ impl ExperimentConfig {
         }
         tr.subspace_diag =
             get_bool(&t, "train.subspace_diag", tr.subspace_diag)?;
+        tr.trace = get_bool(&t, "train.trace", tr.trace)?;
+        if t.get("train.trace_out").is_some() {
+            tr.trace_out =
+                Some(get_str(&t, "train.trace_out", "")?.to_string());
+            // Same rule as the CLI: a trace dump implies tracing.
+            tr.trace = true;
+        }
+        if t.get("train.metrics_stream").is_some() {
+            tr.metrics_stream =
+                Some(get_str(&t, "train.metrics_stream", "")?.to_string());
+        }
         Ok(cfg)
     }
 
@@ -443,6 +457,40 @@ opt_engine = "pjrt"
         assert!(
             err.contains("subspace_diag") && err.contains("boolean"),
             "{err}"
+        );
+    }
+
+    #[test]
+    fn parses_trace_keys() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[train]\ntrace = true\n\
+             metrics_stream = \"results/stream.jsonl\"",
+        )
+        .unwrap();
+        assert!(cfg.train.trace);
+        assert_eq!(
+            cfg.train.metrics_stream.as_deref(),
+            Some("results/stream.jsonl")
+        );
+        assert_eq!(cfg.train.trace_out, None);
+        // trace_out implies trace, mirroring the CLI.
+        let cfg = ExperimentConfig::from_toml_str(
+            "[train]\ntrace_out = \"results/trace.json\"",
+        )
+        .unwrap();
+        assert!(cfg.train.trace);
+        assert_eq!(
+            cfg.train.trace_out.as_deref(),
+            Some("results/trace.json")
+        );
+        // Defaults: everything off.
+        let cfg = ExperimentConfig::from_toml_str("name = \"x\"").unwrap();
+        assert!(!cfg.train.trace);
+        assert!(cfg.train.trace_out.is_none());
+        assert!(cfg.train.metrics_stream.is_none());
+        // Wrong type errors loudly like every other key.
+        assert!(
+            ExperimentConfig::from_toml_str("[train]\ntrace = 1").is_err()
         );
     }
 

@@ -364,7 +364,8 @@ pub fn save_trainer(
     trainer: &super::trainer::Trainer,
     path: impl AsRef<Path>,
 ) -> Result<()> {
-    Checkpoint {
+    let sp = crate::trace::start();
+    let res = Checkpoint {
         step: trainer.current_step() as u64,
         seed: trainer.cfg.seed,
         params: trainer.params_flat(),
@@ -373,7 +374,9 @@ pub fn save_trainer(
         eval_cursor: trainer.eval_cursor(),
         opt_state: Some(trainer.opt_state_section()),
     }
-    .save(path)
+    .save(path);
+    sp.record(crate::trace::Phase::CheckpointWrite);
+    res
 }
 
 /// Restore parameters + position into an existing trainer (must be built

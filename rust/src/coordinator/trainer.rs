@@ -62,6 +62,7 @@ use crate::comm::{
 };
 use crate::data::{CorpusConfig, SyncLoader, TokenBatch};
 use crate::metrics::Recorder;
+use crate::trace::{self, Phase, RankSummary, TraceCollector};
 use crate::model::shapes::PROJ_TYPES;
 use crate::optim::{
     AdamConfig, AdamVec, CpuMatrixOptimizer, MatrixOptimizer, Method,
@@ -125,6 +126,20 @@ pub struct TrainConfig {
     /// summary (`--subspace-diag`). Off by default: the hot path stays
     /// allocation-free.
     pub subspace_diag: bool,
+    /// Step-phase tracing (`--trace`): span rings + per-phase
+    /// histograms + the end-of-run phase table. Steady-state recording
+    /// is allocation-free; when off, every span site is one relaxed
+    /// atomic load. Under `--transport tcp` the flag must match across
+    /// ranks (the per-rank summary gather is a lockstep collective
+    /// round); `--spawn-local` forwards it verbatim, which guarantees
+    /// this for local rings.
+    pub trace: bool,
+    /// Chrome trace-event JSON output path (`--trace-out`); implies
+    /// retaining per-event data (bounded) in the collector.
+    pub trace_out: Option<String>,
+    /// Streaming JSONL metrics path (`--metrics-stream`); wired to the
+    /// `Recorder` by the CLI, carried here so TOML presets can set it.
+    pub metrics_stream: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -151,6 +166,9 @@ impl Default for TrainConfig {
             analysis_every: None,
             rule: None,
             subspace_diag: false,
+            trace: false,
+            trace_out: None,
+            metrics_stream: None,
         }
     }
 }
@@ -348,6 +366,13 @@ pub struct Trainer {
     /// formats a name.
     diag_energy_names: Vec<String>,
     diag_align_names: Vec<String>,
+    /// Step-phase trace state (`--trace`): the ring drainer/aggregator
+    /// plus reusable scratch for the per-rank summary gather and the
+    /// gathered world summaries (rank order).
+    tracer: Option<TraceCollector>,
+    trace_summary: Vec<f64>,
+    trace_gather: Vec<f64>,
+    rank_summaries: Vec<RankSummary>,
     rng: Rng,
     step: usize,
 }
@@ -517,6 +542,18 @@ impl Trainer {
             basis_seed,
         );
 
+        // Tracing is enabled (never disabled) here: turning it off from
+        // one trainer would silently stop a concurrently-traced run in
+        // the same process (tests). The CLI process scope bounds it.
+        if cfg.trace {
+            trace::set_enabled(true);
+        }
+        let tracer = if cfg.trace {
+            Some(TraceCollector::new(cfg.trace_out.is_some()))
+        } else {
+            None
+        };
+
         Ok(Trainer {
             collective,
             grad_layout,
@@ -525,6 +562,10 @@ impl Trainer {
             world_loss_scratch: Vec::new(),
             diag_energy_names,
             diag_align_names,
+            tracer,
+            trace_summary: Vec::new(),
+            trace_gather: Vec::new(),
+            rank_summaries: Vec::new(),
             engine,
             cfg,
             fwd_bwd,
@@ -609,6 +650,10 @@ impl Trainer {
     /// worker shards, the configured collective over the persistent
     /// transport, then the per-matrix optimizers.
     pub fn train_step(&mut self) -> Result<f64> {
+        // Whole-step phase (the denominator for the phase table's
+        // "% of step"), recorded manually just before the drain below
+        // so it lands in this step's aggregation.
+        let step_t = trace::start();
         self.step += 1;
         let accum = self.cfg.grad_accum.max(1);
         let local = self.cfg.local_shards();
@@ -638,7 +683,11 @@ impl Trainer {
                 .collect();
             fan_out_workers(&mut jobs, |job| {
                 for _ in 0..accum {
-                    let batch = job.loader.next();
+                    let batch = {
+                        let _sp = trace::span(Phase::DataWait);
+                        job.loader.next()
+                    };
+                    let fb = trace::start();
                     let (loss, grads) =
                         match Trainer::fwd_bwd_once(fwd_bwd, params, &batch)
                         {
@@ -648,6 +697,9 @@ impl Trainer {
                                 return;
                             }
                         };
+                    // One fused artifact: forward and backward are not
+                    // separately observable (see trace module docs).
+                    fb.record(Phase::FwdBwd);
                     job.losses.push(loss);
                     if job.grad.is_empty() {
                         let total: usize = grads
@@ -691,10 +743,12 @@ impl Trainer {
         // identical across transports. Both vectors are reused scratch:
         // steady-state steps allocate nothing on this path.
         let mut world_losses = std::mem::take(&mut self.world_loss_scratch);
+        let lg = trace::start();
         let gather_bytes = self
             .collective
             .transport()
             .all_gather_f64(&local_losses, &mut world_losses)?;
+        lg.record(Phase::LossGather);
         let mut loss_sum = 0.0f64;
         for l in &world_losses {
             loss_sum += *l;
@@ -707,14 +761,17 @@ impl Trainer {
         // `bytes_per_worker` folds in the loss-sidecar gather, so the
         // recorded `comm/bytes` series is the FULL per-step wire
         // traffic of this rank (0 extra in-process).
+        let ar = trace::start();
         let mut stats = self
             .collective
             .all_reduce_mean(&mut worker_grads, &self.grad_layout)?;
+        ar.record(Phase::AllReduce);
         stats.bytes_per_worker += gather_bytes;
         self.last_comm = Some(stats);
         let flat = worker_grads.into_iter().next().unwrap();
 
         // --- unflatten into ABI-ordered grad matrices -------------------
+        let uf = trace::start();
         let model = self.model().clone();
         let mut grads: Vec<Value> = Vec::with_capacity(n_params);
         let mut off = 0usize;
@@ -726,6 +783,7 @@ impl Trainer {
             ));
             off += len;
         }
+        uf.record(Phase::GradUnflatten);
 
         // --- LR schedule (applied as gradient scaling; see optim docs) --
         let mult = self.cfg.schedule.multiplier(self.step);
@@ -770,6 +828,8 @@ impl Trainer {
                     jobs.push(StepJob { opt: &mut **opt, w, g, rng });
                 }
                 pool::parallel_items(&mut jobs, |_, job| {
+                    // Per-matrix span on the executing worker's track.
+                    let _sp = trace::span(Phase::OptStep);
                     job.opt.step(&mut job.w, &job.g, &mut job.rng);
                 });
                 for (i, job) in jobs.into_iter().enumerate() {
@@ -790,13 +850,16 @@ impl Trainer {
                         Value::F32(Vec::new(), Vec::new()),
                     )
                     .into_mat()?;
+                    let sp = trace::start();
                     opt.step(&mut w, &g, &mut rng);
+                    sp.record(Phase::OptStep);
                     self.params[i] = Value::F32(shape, w.data);
                 }
             }
         }
 
         // --- dense params ------------------------------------------------
+        let ds = trace::start();
         for (k, gv) in grad_iter.enumerate() {
             let i = n_proj + k;
             // A non-F32 gradient here is a runtime-ABI bug; dropping it
@@ -815,12 +878,23 @@ impl Trainer {
                 self.dense_opts[k].step(w, &gdata);
             }
         }
+        ds.record(Phase::DenseStep);
+
+        // Record the whole-step phase, then fold every ring into the
+        // collector. All pool/fan-out events of this step are visible
+        // here: region joins happen-before this point, and ring heads
+        // are published with Release stores.
+        step_t.record(Phase::Step);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.drain();
+        }
 
         Ok(mean_loss)
     }
 
     /// Held-out eval loss averaged over `eval_batches`.
     pub fn eval(&mut self) -> Result<f64> {
+        let _sp = trace::span(Phase::Eval);
         let mut total = 0.0;
         for _ in 0..self.cfg.eval_batches.max(1) {
             let batch = self.eval_loader.next();
@@ -976,6 +1050,92 @@ impl Trainer {
         Ok(())
     }
 
+    /// Gather per-rank phase summaries over the transport (identity +
+    /// 0 bytes in-process). A lockstep collective round: every rank
+    /// must call this at the same step, which `run` guarantees by
+    /// keying it off config-identical `eval_every`/`steps`. Returns the
+    /// wire bytes so the caller can fold them into `comm/bytes`.
+    fn gather_trace_summaries(&mut self) -> Result<usize> {
+        let Some(tr) = self.tracer.as_ref() else {
+            return Ok(0);
+        };
+        let mut local = std::mem::take(&mut self.trace_summary);
+        tr.encode_summary(&mut local);
+        let mut world = std::mem::take(&mut self.trace_gather);
+        let bytes = self
+            .collective
+            .transport()
+            .all_gather_f64(&local, &mut world)?;
+        trace::decode_summaries(&world, &mut self.rank_summaries);
+        self.trace_summary = local;
+        self.trace_gather = world;
+        Ok(bytes)
+    }
+
+    /// The trace collector, when `--trace` is on.
+    pub fn trace_collector(&self) -> Option<&TraceCollector> {
+        self.tracer.as_ref()
+    }
+
+    /// Gathered per-rank phase summaries (rank order; empty before the
+    /// first eval-interval gather and for untraced runs).
+    pub fn trace_rank_summaries(&self) -> &[RankSummary] {
+        &self.rank_summaries
+    }
+
+    /// End-of-run phase table (drains any straggler events first, e.g.
+    /// the final eval span). `None` for untraced runs.
+    pub fn trace_phase_table(&mut self) -> Option<String> {
+        let tr = self.tracer.as_mut()?;
+        tr.drain();
+        Some(tr.phase_table(&self.rank_summaries))
+    }
+
+    /// Chrome trace-event JSON for this rank's retained events. `None`
+    /// unless `--trace` with `--trace-out` retained events.
+    pub fn trace_chrome_json(&mut self) -> Option<crate::util::json::Json> {
+        let rank = self.cfg.net.as_ref().map_or(0, |n| n.rank);
+        let tr = self.tracer.as_mut()?;
+        if self.cfg.trace_out.is_none() {
+            return None;
+        }
+        tr.drain();
+        Some(tr.chrome_trace(rank))
+    }
+
+    /// Compact phase split for the heartbeat line, e.g.
+    /// `fwd_bwd 61% comm 22% opt 12%`. Empty string when untraced or
+    /// before the first traced step.
+    fn heartbeat_split(&self) -> String {
+        use std::fmt::Write as _;
+        let Some(tr) = self.tracer.as_ref() else {
+            return String::new();
+        };
+        if tr.steps() == 0 {
+            return String::new();
+        }
+        let comm = tr.step_fraction(Phase::AllReduce)
+            + tr.step_fraction(Phase::LossGather);
+        let opt = tr.step_fraction(Phase::OptStep)
+            + tr.step_fraction(Phase::DenseStep);
+        let mut out = String::new();
+        for (label, frac) in [
+            ("data", tr.step_fraction(Phase::DataWait)),
+            ("fwd_bwd", tr.step_fraction(Phase::FwdBwd)),
+            ("comm", comm),
+            ("opt", opt),
+            ("refresh", tr.step_fraction(Phase::SubspaceRefresh)),
+        ] {
+            if frac >= 0.005 {
+                let _ = write!(out, " {label} {:.0}%", 100.0 * frac);
+            }
+        }
+        if !out.is_empty() {
+            out.insert_str(0, " |");
+        }
+        out
+    }
+
     /// Full training run with metric recording.
     pub fn run(&mut self, rec: &mut Recorder) -> Result<TrainReport> {
         rec.note("method", self.cfg.method.label());
@@ -993,28 +1153,65 @@ impl Trainer {
         if let Some(net) = &self.cfg.net {
             rec.note("net_rank", net.rank);
         }
+        // Interned handles for the per-step series: pushes below do no
+        // name lookup and no allocation (the &str push stays for cold /
+        // conditional series like eval, diag and analysis).
+        let id_train_loss = rec.series_id("train_loss");
+        let id_wall_s = rec.series_id("wall_s");
+        let id_comm_bytes = rec.series_id("comm/bytes");
+        let id_comm_compression = rec.series_id("comm/compression");
+        let id_comm_residual = rec.series_id("comm/residual");
         let mut last_train = f64::NAN;
         let mut last_eval = f64::NAN;
+        // Heartbeat window state (steps/s over the last log interval).
+        let mut hb_step = 0usize;
+        let mut hb_t = rec.elapsed_s();
         for s in 1..=self.cfg.steps {
             let loss = self.train_step()?;
             last_train = loss;
-            rec.push("train_loss", s, loss);
-            rec.push("wall_s", s, rec.elapsed_s());
+            // Per-rank phase summaries ride the lockstep ring at eval
+            // intervals (and once at the end, so `--eval-every 0` runs
+            // still get per-rank rows). Every rank computes the same
+            // `trace_due` from config, keeping the ring in lockstep;
+            // the gather's wire bytes fold into `comm/bytes` below so
+            // that series stays an honest total of this rank's traffic.
+            let trace_due = self.tracer.is_some()
+                && ((self.cfg.eval_every > 0
+                    && s % self.cfg.eval_every == 0)
+                    || s == self.cfg.steps);
+            let trace_bytes = if trace_due {
+                self.gather_trace_summaries()?
+            } else {
+                0
+            };
+            rec.push_id(id_train_loss, s, loss);
+            rec.push_id(id_wall_s, s, rec.elapsed_s());
             if let Some(c) = self.last_comm {
-                rec.push("comm/bytes", s, c.bytes_per_worker as f64);
-                rec.push("comm/compression", s, c.compression);
-                rec.push("comm/residual", s, c.residual_norm);
+                rec.push_id(
+                    id_comm_bytes,
+                    s,
+                    (c.bytes_per_worker + trace_bytes) as f64,
+                );
+                rec.push_id(id_comm_compression, s, c.compression);
+                rec.push_id(id_comm_residual, s, c.residual_norm);
             }
             if self.cfg.subspace_diag {
                 self.record_subspace_diag(rec, s);
             }
             if self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
+                let now = rec.elapsed_s();
+                let rate =
+                    (s - hb_step) as f64 / (now - hb_t).max(1e-9);
+                let eta_s = (self.cfg.steps - s) as f64 / rate.max(1e-9);
                 eprintln!(
-                    "[{}] step {s}/{} loss {loss:.4} ({:.1}s)",
+                    "[{}] step {s}/{} loss {loss:.4} | {rate:.2} \
+                     steps/s | eta {eta_s:.0}s ({now:.1}s){}",
                     self.cfg.method.label(),
                     self.cfg.steps,
-                    rec.elapsed_s()
+                    self.heartbeat_split()
                 );
+                hb_step = s;
+                hb_t = now;
             }
             if self.cfg.eval_every > 0 && s % self.cfg.eval_every == 0 {
                 last_eval = self.eval()?;
@@ -1025,10 +1222,15 @@ impl Trainer {
                     self.record_analysis(rec)?;
                 }
             }
+            // Streaming sink: one flushed JSONL record per step, so a
+            // killed rank keeps every completed step (no-op without
+            // `--metrics-stream`).
+            rec.flush_step(s)?;
         }
         if last_eval.is_nan() {
             last_eval = self.eval()?;
             rec.push("eval_loss", self.cfg.steps, last_eval);
+            rec.flush_step(self.cfg.steps)?;
         }
         Ok(TrainReport {
             method: self.cfg.method,

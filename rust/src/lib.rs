@@ -26,7 +26,11 @@
 //!   (error-feedback) all-reduce
 //! * [`coordinator`] — trainer loop, grad accumulation, data-parallel
 //!   workers with ring all-reduce, memory accountant, checkpoints
-//! * [`metrics`] — time series recording + CSV/JSON emission
+//! * [`metrics`] — time series recording + CSV/JSON emission, interned
+//!   per-step push handles, and the crash-durable JSONL stream sink
+//! * [`trace`] — step-phase runtime tracing: per-thread span rings,
+//!   log2-histogram phase stats, per-rank summary gather, Chrome
+//!   trace-event export
 //! * [`analysis`] — gradient-subspace energy & curvature (Figures 1–2)
 //! * [`config`] — TOML presets + typed experiment config
 //! * [`util`] — in-repo substrates (RNG, pool, JSON, TOML, CLI, bench)
@@ -43,4 +47,5 @@ pub mod optim;
 pub mod runtime;
 pub mod subspace;
 pub mod tensor;
+pub mod trace;
 pub mod util;

@@ -27,7 +27,8 @@ use grasswalk::optim::{Method, Schedule};
 use grasswalk::runtime::Engine;
 use grasswalk::util::cli::Args;
 
-const BOOL_FLAGS: &[&str] = &["help", "quiet", "pjrt", "subspace-diag"];
+const BOOL_FLAGS: &[&str] =
+    &["help", "quiet", "pjrt", "subspace-diag", "trace"];
 
 fn main() {
     // Keep the raw argv tail: `train --spawn-local N` re-execs this
@@ -161,6 +162,18 @@ fn train_config_from_args(args: &Args) -> Result<TrainConfig> {
     if let Some(a) = args.get("analysis-every") {
         cfg.analysis_every = a.parse().ok();
     }
+    if args.has("trace") {
+        cfg.trace = true;
+    }
+    if let Some(p) = args.get("trace-out") {
+        cfg.trace_out = Some(p.to_string());
+        // A Chrome trace without spans is an empty file; --trace-out
+        // implies --trace rather than silently writing `[]`.
+        cfg.trace = true;
+    }
+    if let Some(p) = args.get("metrics-stream") {
+        cfg.metrics_stream = Some(p.to_string());
+    }
     Ok(cfg)
 }
 
@@ -197,10 +210,31 @@ fn run(cmd: &str, args: &Args, raw: &[String]) -> Result<()> {
                  \x20 --transport inproc|tcp --world N --net-rank K\n\
                  \x20 --peers host:port,… (multi-process TCP ring)\n\
                  \x20 --spawn-local N (fork an N-rank loopback world)\n\
-                 \x20 --pjrt (fused-kernel hot path) --config FILE.toml"
+                 \x20 --pjrt (fused-kernel hot path) --config FILE.toml\n\
+                 \x20 --trace (step-phase spans + end-of-run phase table)\n\
+                 \x20 --trace-out FILE.json (Chrome trace-event dump;\n\
+                 \x20 implies --trace) --metrics-stream FILE.jsonl\n\
+                 \x20 (append one flushed record per step)"
             );
             Ok(())
         }
+    }
+}
+
+/// Insert `-rank<k>` before the file extension (or append it when the
+/// file name has none). `--spawn-local` forwards argv verbatim to every
+/// rank, so a shared `--metrics-stream`/`--trace-out` path would have
+/// all ranks clobbering one file without this.
+fn rank_suffixed(path: &str, rank: usize) -> String {
+    let (dir, file) = match path.rfind('/') {
+        Some(i) => (&path[..=i], &path[i + 1..]),
+        None => ("", path),
+    };
+    match file.rfind('.') {
+        Some(d) if d > 0 => {
+            format!("{dir}{}-rank{rank}{}", &file[..d], &file[d..])
+        }
+        _ => format!("{path}-rank{rank}"),
     }
 }
 
@@ -237,8 +271,19 @@ fn cmd_train(args: &Args, raw: &[String]) -> Result<()> {
         }
         _ => format!("train-{base}"),
     };
+    let net_rank = match (&cfg.transport, &cfg.net) {
+        (TransportMode::Tcp, Some(net)) => Some(net.rank),
+        _ => None,
+    };
     let engine = Arc::new(Engine::new(artifacts_dir(args))?);
     let mut rec = Recorder::new(&run_name);
+    if let Some(path) = &cfg.metrics_stream {
+        let path = match net_rank {
+            Some(r) => rank_suffixed(path, r),
+            None => path.clone(),
+        };
+        rec.stream_to(&path)?;
+    }
     let mut trainer = Trainer::new(engine, cfg)?;
     let report = trainer.run(&mut rec)?;
     let out = args.get_or("out", "results");
@@ -279,7 +324,6 @@ fn cmd_train(args: &Args, raw: &[String]) -> Result<()> {
             }
         }
         let aligns: Vec<f64> = rec
-            .series
             .iter()
             .filter(|(k, _)| k.starts_with("subspace/alignment/"))
             .filter_map(|(_, s)| s.mean())
@@ -292,6 +336,21 @@ fn cmd_train(args: &Args, raw: &[String]) -> Result<()> {
                 aligns.len()
             );
         }
+    }
+    if let Some(table) = trainer.trace_phase_table() {
+        println!("{table}");
+    }
+    if let Some(json) = trainer.trace_chrome_json() {
+        let path = trainer.cfg.trace_out.clone().unwrap_or_default();
+        let path = match net_rank {
+            Some(r) => rank_suffixed(&path, r),
+            None => path,
+        };
+        if let Some(i) = path.rfind('/') {
+            std::fs::create_dir_all(&path[..i])?;
+        }
+        std::fs::write(&path, json.to_string())?;
+        println!("chrome trace -> {path}");
     }
     if let Some(path) = args.get("save-checkpoint") {
         grasswalk::coordinator::save_trainer(&trainer, path)?;

@@ -1,12 +1,26 @@
 //! S10: metrics — time-series recording for losses, wall-clock, subspace
 //! diagnostics, with CSV/JSON emission for the figure regenerators.
+//!
+//! Two additions for long/multi-host runs:
+//!
+//! * **Interned series handles**: [`Recorder::series_id`] returns a
+//!   stable [`SeriesId`]; [`Recorder::push_id`] appends a point without
+//!   touching the name at all. The `&str` [`Recorder::push`] remains
+//!   for cold paths and is itself allocation-free once a series exists
+//!   (it used to clone the name every call via `entry(name.to_string())`).
+//! * **Streaming JSONL sink** ([`Recorder::stream_to`]): one flushed
+//!   record per step, so a killed rank retains a parseable prefix
+//!   covering every completed step. [`Recorder::replay_jsonl`] rebuilds
+//!   a `Recorder` that is series-equal (bitwise, including step ids) to
+//!   the in-memory one, tolerating a truncated final line.
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::io::Write;
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::{arr, num, obj, s, Json};
 
@@ -61,21 +75,55 @@ impl Series {
     }
 }
 
+/// Interned handle to one series of a specific [`Recorder`]. Pushing
+/// through the handle skips the name lookup entirely.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct SeriesId(u32);
+
 /// A recorder shared by one training run.
 pub struct Recorder {
     pub run_name: String,
-    pub series: BTreeMap<String, Series>,
     pub meta: Vec<(String, String)>,
+    /// Interned series storage; `index` maps name → slot and drives
+    /// every name-sorted iteration (CSV columns, JSON keys).
+    names: Vec<String>,
+    store: Vec<Series>,
+    index: BTreeMap<String, u32>,
     start: Instant,
+    /// Streaming sink state (`--metrics-stream`).
+    stream: Option<std::fs::File>,
+    header_written: bool,
+    pending: Vec<(u32, usize, f64)>,
+    line_buf: String,
 }
 
 impl Recorder {
     pub fn new(run_name: &str) -> Recorder {
+        let start_unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
         Recorder {
             run_name: run_name.to_string(),
-            series: BTreeMap::new(),
-            meta: Vec::new(),
+            // Absolute wall-clock + per-rank run name up front, so the
+            // per-rank JSONL streams of one multi-host run can be
+            // correlated after the fact (monotonic span timestamps are
+            // per-process; this anchors them to shared wall time).
+            meta: vec![
+                ("run_name".to_string(), run_name.to_string()),
+                (
+                    "trace/start_unix_ms".to_string(),
+                    start_unix_ms.to_string(),
+                ),
+            ],
+            names: Vec::new(),
+            store: Vec::new(),
+            index: BTreeMap::new(),
             start: Instant::now(),
+            stream: None,
+            header_written: false,
+            pending: Vec::new(),
+            line_buf: String::new(),
         }
     }
 
@@ -83,8 +131,36 @@ impl Recorder {
         self.meta.push((key.to_string(), value.to_string()));
     }
 
+    /// Intern `name`, returning a handle that pushes without any name
+    /// lookup. Allocates only the first time a name is seen.
+    pub fn series_id(&mut self, name: &str) -> SeriesId {
+        if let Some(&i) = self.index.get(name) {
+            return SeriesId(i);
+        }
+        let i = self.store.len() as u32;
+        self.names.push(name.to_string());
+        self.store.push(Series::default());
+        self.index.insert(name.to_string(), i);
+        SeriesId(i)
+    }
+
+    /// Hot-path push: no lookup, no allocation (amortized — the pending
+    /// stream buffer grows once and is drained every flush).
+    #[inline]
+    pub fn push_id(&mut self, id: SeriesId, step: usize, value: f64) {
+        self.store[id.0 as usize].push(step, value);
+        if self.stream.is_some() {
+            self.pending.push((id.0, step, value));
+        }
+    }
+
+    /// Cold-path push by name. Allocation-free once the series exists.
     pub fn push(&mut self, name: &str, step: usize, value: f64) {
-        self.series.entry(name.to_string()).or_default().push(step, value);
+        let id = match self.index.get(name) {
+            Some(&i) => SeriesId(i),
+            None => self.series_id(name),
+        };
+        self.push_id(id, step, value);
     }
 
     /// Wall-clock seconds since recorder creation (Figure 4's x-axis).
@@ -93,30 +169,203 @@ impl Recorder {
     }
 
     pub fn get(&self, name: &str) -> Option<&Series> {
-        self.series.get(name)
+        self.index.get(name).map(|&i| &self.store[i as usize])
     }
+
+    pub fn name_of(&self, id: SeriesId) -> &str {
+        &self.names[id.0 as usize]
+    }
+
+    /// All series in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Series)> {
+        self.index
+            .iter()
+            .map(|(k, &i)| (k.as_str(), &self.store[i as usize]))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    // -----------------------------------------------------------------
+    // Streaming JSONL sink.
+    // -----------------------------------------------------------------
+
+    /// Start streaming: every [`Recorder::flush_step`] appends one
+    /// JSONL record with all points pushed since the previous flush and
+    /// hands it to the OS immediately (unbuffered `File`), so a killed
+    /// process keeps every completed step.
+    pub fn stream_to(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        self.stream = Some(
+            std::fs::File::create(path)
+                .with_context(|| format!("create metrics stream {path:?}"))?,
+        );
+        self.header_written = false;
+        Ok(())
+    }
+
+    pub fn is_streaming(&self) -> bool {
+        self.stream.is_some()
+    }
+
+    /// Write pending points as one JSONL record (no-op without a stream
+    /// or with nothing pending). The header record — run name + meta —
+    /// goes out lazily with the first flush so startup `note`s are
+    /// included.
+    pub fn flush_step(&mut self, step: usize) -> Result<()> {
+        if self.stream.is_none() || self.pending.is_empty() {
+            self.pending.clear();
+            return Ok(());
+        }
+        if !self.header_written {
+            let header = obj(vec![
+                ("run", s(&self.run_name)),
+                (
+                    "meta",
+                    Json::Obj(
+                        self.meta
+                            .iter()
+                            .map(|(k, v)| (k.clone(), s(v)))
+                            .collect(),
+                    ),
+                ),
+            ]);
+            let mut line = header.to_string();
+            line.push('\n');
+            self.stream
+                .as_mut()
+                .expect("stream checked above")
+                .write_all(line.as_bytes())
+                .context("write metrics stream header")?;
+            self.header_written = true;
+        }
+        self.line_buf.clear();
+        let _ = write!(self.line_buf, "{{\"step\":{step},\"points\":[");
+        for (i, &(id, st, v)) in self.pending.iter().enumerate() {
+            if i > 0 {
+                self.line_buf.push(',');
+            }
+            self.line_buf.push_str("[\"");
+            escape_into(&mut self.line_buf, &self.names[id as usize]);
+            let _ = write!(self.line_buf, "\",{st},");
+            write_f64_json(&mut self.line_buf, v);
+            self.line_buf.push(']');
+        }
+        self.line_buf.push_str("]}\n");
+        self.pending.clear();
+        self.stream
+            .as_mut()
+            .expect("stream checked above")
+            .write_all(self.line_buf.as_bytes())
+            .context("write metrics stream record")?;
+        Ok(())
+    }
+
+    /// Rebuild a recorder from a JSONL stream. The result is
+    /// series-equal (names, step ids, f64 bits) to the recorder that
+    /// wrote the stream up to its last complete record; a truncated
+    /// final line — the signature of a killed run — is tolerated,
+    /// while malformed interior lines are an error.
+    pub fn replay_jsonl(text: &str) -> Result<Recorder> {
+        let mut rec = Recorder::new("replay");
+        let lines: Vec<&str> = text.split('\n').collect();
+        let truncated_tail = !text.is_empty() && !text.ends_with('\n');
+        let n = lines.len();
+        for (li, line) in lines.iter().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let last = li + 1 == n || (li + 2 == n && lines[n - 1].is_empty());
+            let parsed = match Json::parse(line) {
+                Ok(j) => j,
+                // Only the final line may be garbage, and only when the
+                // file doesn't end in a newline (mid-record kill).
+                Err(_) if last && truncated_tail => break,
+                Err(e) => {
+                    bail!("metrics stream line {}: {e}", li + 1)
+                }
+            };
+            if let Some(run) = parsed.get("run").and_then(|j| j.as_str()) {
+                rec.run_name = run.to_string();
+                if let Some(Json::Obj(meta)) = parsed.get("meta") {
+                    rec.meta = meta
+                        .iter()
+                        .map(|(k, v)| {
+                            (
+                                k.clone(),
+                                v.as_str().unwrap_or_default().to_string(),
+                            )
+                        })
+                        .collect();
+                }
+                continue;
+            }
+            let Some(points) = parsed.get("points") else {
+                bail!("metrics stream line {}: no points", li + 1);
+            };
+            let mut i = 0;
+            while let Some(pt) = points.idx(i) {
+                let (Some(name), Some(st)) = (
+                    pt.idx(0).and_then(|j| j.as_str()),
+                    pt.idx(1).and_then(|j| j.as_usize()),
+                ) else {
+                    bail!("metrics stream line {}: bad point", li + 1);
+                };
+                let v = match pt.idx(2) {
+                    Some(Json::Str(sv)) => sv.parse::<f64>().map_err(|_| {
+                        anyhow!(
+                            "metrics stream line {}: bad value {sv:?}",
+                            li + 1
+                        )
+                    })?,
+                    Some(j) => j.as_f64().ok_or_else(|| {
+                        anyhow!(
+                            "metrics stream line {}: bad value",
+                            li + 1
+                        )
+                    })?,
+                    None => bail!(
+                        "metrics stream line {}: missing value",
+                        li + 1
+                    ),
+                };
+                rec.push(name, st, v);
+                i += 1;
+            }
+        }
+        Ok(rec)
+    }
+
+    // -----------------------------------------------------------------
+    // Batch emission.
+    // -----------------------------------------------------------------
 
     /// CSV with one row per step, columns = union of series (empty cells
     /// where a series has no point at that step).
     pub fn to_csv(&self) -> String {
         let mut steps: Vec<usize> = self
-            .series
-            .values()
+            .store
+            .iter()
             .flat_map(|s| s.points.iter().map(|&(st, _)| st))
             .collect();
         steps.sort_unstable();
         steps.dedup();
-        let names: Vec<&String> = self.series.keys().collect();
         let mut out = String::from("step");
-        for n in &names {
+        for (n, _) in self.iter() {
             out.push(',');
             out.push_str(n);
         }
         out.push('\n');
         // Index each series by step for sparse lookup.
-        let maps: Vec<BTreeMap<usize, f64>> = names
+        let maps: Vec<BTreeMap<usize, f64>> = self
             .iter()
-            .map(|n| self.series[*n].points.iter().cloned().collect())
+            .map(|(_, s)| s.points.iter().cloned().collect())
             .collect();
         for st in steps {
             out.push_str(&st.to_string());
@@ -133,11 +382,10 @@ impl Recorder {
 
     pub fn to_json(&self) -> Json {
         let series = self
-            .series
             .iter()
             .map(|(k, v)| {
                 (
-                    k.clone(),
+                    k.to_string(),
                     arr(v
                         .points
                         .iter()
@@ -182,6 +430,38 @@ impl Recorder {
         std::fs::write(path, self.to_json().to_string())
             .with_context(|| format!("write {path:?}"))?;
         Ok(())
+    }
+}
+
+/// Minimal JSON string escaping for series names (they are plain
+/// identifiers in practice; this keeps arbitrary names well-formed).
+fn escape_into(out: &mut String, name: &str) {
+    for c in name.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// f64 → JSON token. Rust's shortest-roundtrip `Display` is valid JSON
+/// for finite values (no exponent notation); non-finite values — which
+/// JSON cannot carry as numbers — become the strings `"NaN"` /
+/// `"inf"` / `"-inf"`, parsed back by `replay_jsonl` via
+/// `str::parse::<f64>` so replays stay bit-faithful.
+fn write_f64_json(out: &mut String, v: f64) {
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else if v.is_nan() {
+        out.push_str("\"NaN\"");
+    } else if v > 0.0 {
+        out.push_str("\"inf\"");
+    } else {
+        out.push_str("\"-inf\"");
     }
 }
 
@@ -259,6 +539,120 @@ mod tests {
         r.write_csv(dir.join("a.csv")).unwrap();
         r.write_json(dir.join("a.json")).unwrap();
         assert!(dir.join("a.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn interned_ids_are_stable_and_equal_to_push() {
+        let mut r = Recorder::new("t");
+        let a = r.series_id("loss");
+        let b = r.series_id("aux");
+        assert_eq!(r.series_id("loss"), a);
+        r.push_id(a, 0, 1.0);
+        r.push("loss", 1, 2.0);
+        r.push_id(b, 1, 9.0);
+        assert_eq!(r.name_of(a), "loss");
+        let pts = &r.get("loss").unwrap().points;
+        assert_eq!(pts, &vec![(0, 1.0), (1, 2.0)]);
+        assert_eq!(r.get("aux").unwrap().points, vec![(1, 9.0)]);
+        // Name-sorted iteration drives CSV columns.
+        let names: Vec<&str> = r.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["aux", "loss"]);
+    }
+
+    #[test]
+    fn meta_records_wall_clock_and_run_name() {
+        let r = Recorder::new("rank3");
+        let get = |k: &str| {
+            r.meta
+                .iter()
+                .find(|(mk, _)| mk == k)
+                .map(|(_, v)| v.clone())
+        };
+        assert_eq!(get("run_name").as_deref(), Some("rank3"));
+        let ms: u64 = get("trace/start_unix_ms").unwrap().parse().unwrap();
+        // Sanity: after 2020-01-01, before 2200-01-01.
+        assert!(ms > 1_577_000_000_000 && ms < 7_258_000_000_000);
+    }
+
+    fn series_equal(a: &Recorder, b: &Recorder) -> bool {
+        let av: Vec<(&str, &Series)> = a.iter().collect();
+        let bv: Vec<(&str, &Series)> = b.iter().collect();
+        av.len() == bv.len()
+            && av.iter().zip(&bv).all(|((an, asr), (bn, bsr))| {
+                an == bn
+                    && asr.points.len() == bsr.points.len()
+                    && asr.points.iter().zip(&bsr.points).all(
+                        |(&(ast, avl), &(bst, bvl))| {
+                            ast == bst
+                                && avl.to_bits() == bvl.to_bits()
+                        },
+                    )
+            })
+    }
+
+    #[test]
+    fn stream_replays_series_equal() {
+        let dir = std::env::temp_dir().join("gw_metrics_stream_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("s.jsonl");
+        let mut r = Recorder::new("streamed");
+        r.note("method", "grasswalk");
+        r.stream_to(&path).unwrap();
+        let loss = r.series_id("train_loss");
+        for step in 1..=5usize {
+            r.push_id(loss, step, 1.0 / step as f64);
+            r.push("wall_s", step, 0.125 * step as f64);
+            if step == 3 {
+                r.push("spike", step, f64::NAN);
+                r.push("hi", step, f64::INFINITY);
+            }
+            r.flush_step(step).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 6, "header + 5 step records");
+        for line in text.lines() {
+            Json::parse(line).expect("every line is standalone JSON");
+        }
+        let replayed = Recorder::replay_jsonl(&text).unwrap();
+        assert!(series_equal(&r, &replayed), "replay != original");
+        assert_eq!(replayed.run_name, "streamed");
+        assert!(replayed
+            .meta
+            .iter()
+            .any(|(k, v)| k == "method" && v == "grasswalk"));
+        assert!(replayed.get("spike").unwrap().points[0].1.is_nan());
+        assert_eq!(
+            replayed.get("hi").unwrap().points[0].1,
+            f64::INFINITY
+        );
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn truncated_tail_is_tolerated_interior_garbage_is_not() {
+        let mut r = Recorder::new("t");
+        let dir = std::env::temp_dir().join("gw_metrics_trunc_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("s.jsonl");
+        r.stream_to(&path).unwrap();
+        for step in 1..=3usize {
+            r.push("x", step, step as f64);
+            r.flush_step(step).unwrap();
+        }
+        let full = std::fs::read_to_string(&path).unwrap();
+        // Chop mid-way through the final record: replay keeps steps 1–2.
+        let cut = full.len() - 8;
+        let replayed = Recorder::replay_jsonl(&full[..cut]).unwrap();
+        assert_eq!(
+            replayed.get("x").unwrap().points,
+            vec![(1, 1.0), (2, 2.0)]
+        );
+        // Same bytes but with a garbage *interior* line: hard error.
+        let mut bad = full.lines().collect::<Vec<_>>();
+        bad.insert(1, "{not json");
+        let bad = bad.join("\n") + "\n";
+        assert!(Recorder::replay_jsonl(&bad).is_err());
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -236,7 +236,14 @@ impl ProjectedOptimizer {
         let t = self.engine.begin_round();
 
         // ---- subspace refresh (off the hot path; may allocate) ----------
+        // Recorded as a trace phase only when the refresh actually ran:
+        // the common no-op check would otherwise flood the histogram
+        // with near-zero samples and bury the real refresh cost.
+        let rt = crate::trace::start();
         let outcome = self.engine.refresh_if_due(g, rng);
+        if outcome.refreshed {
+            rt.record(crate::trace::Phase::SubspaceRefresh);
+        }
         self.last_refresh = outcome.refreshed;
         // R = S_tᵀ S_{t−1}: Some exactly when AO is on and a refresh
         // replaced an existing basis.

@@ -1,0 +1,488 @@
+//! Step-boundary event collection: fixed log2-bucket histograms per
+//! phase (approximate p50/p95 with zero steady-state allocation), a
+//! bounded retained-event store for Chrome trace export, and the
+//! fixed-length per-rank summary codec gathered over the transport.
+
+use std::fmt::Write as _;
+
+use super::ring::{self, Event};
+use super::Phase;
+use crate::util::json::{arr, num, obj, s, Json};
+
+// ---------------------------------------------------------------------
+// Log2 histogram.
+// ---------------------------------------------------------------------
+
+/// 0..=15 ns exact, then 8 sub-buckets per power of two up to 2^63.
+/// Worst-case relative quantile error is one sub-bucket: 12.5%.
+const HIST_BUCKETS: usize = 16 + 60 * 8;
+
+fn bucket_of(ns: u64) -> usize {
+    if ns < 16 {
+        return ns as usize;
+    }
+    let log2 = 63 - ns.leading_zeros() as usize; // >= 4
+    let sub = ((ns >> (log2 - 3)) & 7) as usize;
+    16 + (log2 - 4) * 8 + sub
+}
+
+/// Lower bound of a bucket (the value quantiles report).
+fn bucket_floor(idx: usize) -> u64 {
+    if idx < 16 {
+        return idx as u64;
+    }
+    let i = idx - 16;
+    let log2 = i / 8 + 4;
+    let sub = (i % 8) as u64;
+    (1u64 << log2) + (sub << (log2 - 3))
+}
+
+#[derive(Clone)]
+struct PhaseHist {
+    count: u64,
+    total_ns: u64,
+    max_ns: u64,
+    buckets: [u32; HIST_BUCKETS],
+}
+
+impl PhaseHist {
+    fn new() -> PhaseHist {
+        PhaseHist {
+            count: 0,
+            total_ns: 0,
+            max_ns: 0,
+            buckets: [0; HIST_BUCKETS],
+        }
+    }
+
+    #[inline]
+    fn record(&mut self, ns: u64) {
+        self.count += 1;
+        self.total_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+        self.buckets[bucket_of(ns)] += 1;
+    }
+
+    fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.total_ns / self.count
+        }
+    }
+
+    /// Approximate quantile: lower bound of the first bucket whose
+    /// cumulative count reaches `ceil(q * count)`.
+    fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b as u64;
+            if cum >= target {
+                return bucket_floor(i).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+}
+
+// ---------------------------------------------------------------------
+// Collector.
+// ---------------------------------------------------------------------
+
+/// Retained-event ceiling for `--trace-out`. Beyond this the Chrome
+/// trace truncates (counted and reported) — a bounded export beats an
+/// unbounded allocation in a training loop.
+const MAX_CHROME_EVENTS: usize = 200_000;
+
+/// Owns the drained view of the rings: per-phase histograms, track
+/// names, and (when a Chrome export was requested) a bounded retained
+/// copy of every event. `drain` is allocation-free in steady state —
+/// the only allocations are one `String` per *new* track name and the
+/// single up-front `events` reservation.
+pub struct TraceCollector {
+    hists: Vec<PhaseHist>,
+    track_names: Vec<String>,
+    events: Vec<(u32, Event)>,
+    events_dropped: u64,
+    keep_events: bool,
+}
+
+impl TraceCollector {
+    pub fn new(keep_events: bool) -> TraceCollector {
+        TraceCollector {
+            hists: vec![PhaseHist::new(); Phase::COUNT],
+            track_names: Vec::new(),
+            events: if keep_events {
+                Vec::with_capacity(MAX_CHROME_EVENTS)
+            } else {
+                Vec::new()
+            },
+            events_dropped: 0,
+            keep_events,
+        }
+    }
+
+    /// Drain all rings into this collector. Call at step boundaries.
+    pub fn drain(&mut self) {
+        let TraceCollector {
+            hists,
+            track_names,
+            events,
+            events_dropped,
+            keep_events,
+        } = self;
+        ring::drain(|track, name, ev| {
+            if track >= track_names.len() {
+                track_names.resize(track + 1, String::new());
+            }
+            if track_names[track].is_empty() {
+                track_names[track] = name.to_string();
+            }
+            hists[ev.phase as usize].record(ev.dur_ns());
+            if *keep_events {
+                if events.len() < MAX_CHROME_EVENTS {
+                    events.push((track as u32, ev));
+                } else {
+                    *events_dropped += 1;
+                }
+            }
+        });
+    }
+
+    pub fn count(&self, p: Phase) -> u64 {
+        self.hists[p as usize].count
+    }
+
+    pub fn total_ns(&self, p: Phase) -> u64 {
+        self.hists[p as usize].total_ns
+    }
+
+    pub fn mean_ns(&self, p: Phase) -> u64 {
+        self.hists[p as usize].mean_ns()
+    }
+
+    pub fn p50_ns(&self, p: Phase) -> u64 {
+        self.hists[p as usize].quantile_ns(0.50)
+    }
+
+    pub fn p95_ns(&self, p: Phase) -> u64 {
+        self.hists[p as usize].quantile_ns(0.95)
+    }
+
+    /// Traced `train_step` calls seen so far.
+    pub fn steps(&self) -> u64 {
+        self.count(Phase::Step)
+    }
+
+    /// Fraction of total step time spent in `p` (0 when no steps yet).
+    pub fn step_fraction(&self, p: Phase) -> f64 {
+        let step = self.total_ns(Phase::Step);
+        if step == 0 {
+            0.0
+        } else {
+            self.total_ns(p) as f64 / step as f64
+        }
+    }
+
+    /// Retained events `(track, event)` for export/tests.
+    pub fn events(&self) -> &[(u32, Event)] {
+        &self.events
+    }
+
+    pub fn track_names(&self) -> &[String] {
+        &self.track_names
+    }
+
+    // -----------------------------------------------------------------
+    // Per-rank summaries.
+    // -----------------------------------------------------------------
+
+    /// Pack this rank's per-phase `[count, total, p50, p95]` into a
+    /// fixed-length vector for `Transport::all_gather_f64`.
+    pub fn encode_summary(&self, out: &mut Vec<f64>) {
+        out.clear();
+        for p in Phase::ALL {
+            out.push(self.count(p) as f64);
+            out.push(self.total_ns(p) as f64);
+            out.push(self.p50_ns(p) as f64);
+            out.push(self.p95_ns(p) as f64);
+        }
+        debug_assert_eq!(out.len(), SUMMARY_LEN);
+    }
+
+    // -----------------------------------------------------------------
+    // End-of-run phase table.
+    // -----------------------------------------------------------------
+
+    /// Human-readable per-phase table (mean/p50/p95 ns, % of step) with
+    /// a per-rank mean-step skew line when `ranks` has the gathered
+    /// world summaries (empty slice = single rank / no gather yet).
+    pub fn phase_table(&self, ranks: &[RankSummary]) -> String {
+        let mut t = String::new();
+        let _ = writeln!(
+            t,
+            "-- step-phase breakdown ({} traced steps, {} tracks) --",
+            self.steps(),
+            self.track_names.len()
+        );
+        let _ = writeln!(
+            t,
+            "{:<17}{:>9}{:>13}{:>13}{:>13}{:>10}",
+            "phase", "count", "mean_ns", "p50_ns", "p95_ns", "% step"
+        );
+        for p in Phase::ALL {
+            if self.count(p) == 0 {
+                continue;
+            }
+            let _ = writeln!(
+                t,
+                "{:<17}{:>9}{:>13}{:>13}{:>13}{:>9.1}%",
+                p.label(),
+                self.count(p),
+                self.mean_ns(p),
+                self.p50_ns(p),
+                self.p95_ns(p),
+                100.0 * self.step_fraction(p)
+            );
+        }
+        let dropped = ring::dropped_events();
+        if dropped > 0 {
+            let _ = writeln!(t, "ring events dropped: {dropped}");
+        }
+        if self.events_dropped > 0 {
+            let _ = writeln!(
+                t,
+                "chrome events beyond cap ({MAX_CHROME_EVENTS}): {}",
+                self.events_dropped
+            );
+        }
+        if ranks.len() > 1 {
+            let step = Phase::Step as usize;
+            let mut means = Vec::with_capacity(ranks.len());
+            for r in ranks {
+                let c = r.count[step];
+                means.push(if c > 0.0 { r.total_ns[step] / c } else { 0.0 });
+            }
+            let _ = write!(t, "per-rank mean step ns:");
+            for (k, m) in means.iter().enumerate() {
+                let _ = write!(t, " rank{k} {:.0}", m);
+            }
+            let lo = means.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = means.iter().cloned().fold(0.0f64, f64::max);
+            if lo > 0.0 {
+                let _ = writeln!(t, "  (skew {:.2}x)", hi / lo);
+            } else {
+                let _ = writeln!(t);
+            }
+        }
+        t
+    }
+
+    // -----------------------------------------------------------------
+    // Chrome trace export.
+    // -----------------------------------------------------------------
+
+    /// Chrome trace-event JSON (load in Perfetto / chrome://tracing):
+    /// one process per rank, one thread track per recording thread,
+    /// complete ("X") events with microsecond timestamps.
+    pub fn chrome_trace(&self, rank: usize) -> Json {
+        let mut evs: Vec<Json> = Vec::with_capacity(
+            self.events.len() + self.track_names.len() + 1,
+        );
+        evs.push(obj(vec![
+            ("name", s("process_name")),
+            ("ph", s("M")),
+            ("pid", num(rank as f64)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("name", s(&format!("rank{rank}")))])),
+        ]));
+        for (tid, name) in self.track_names.iter().enumerate() {
+            if name.is_empty() {
+                continue;
+            }
+            evs.push(obj(vec![
+                ("name", s("thread_name")),
+                ("ph", s("M")),
+                ("pid", num(rank as f64)),
+                ("tid", num(tid as f64)),
+                ("args", obj(vec![("name", s(name))])),
+            ]));
+        }
+        for &(track, ev) in &self.events {
+            evs.push(obj(vec![
+                ("name", s(ev.phase.label())),
+                ("cat", s("phase")),
+                ("ph", s("X")),
+                ("pid", num(rank as f64)),
+                ("tid", num(track as f64)),
+                ("ts", num(ev.start_ns as f64 / 1000.0)),
+                ("dur", num(ev.dur_ns() as f64 / 1000.0)),
+            ]));
+        }
+        obj(vec![
+            ("traceEvents", arr(evs)),
+            ("displayTimeUnit", s("ms")),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rank summary codec.
+// ---------------------------------------------------------------------
+
+/// Floats per rank in the gathered summary vector.
+pub const SUMMARY_LEN: usize = 4 * Phase::COUNT;
+
+/// One rank's decoded per-phase summary (indexed by `Phase as usize`).
+#[derive(Clone, Debug, Default)]
+pub struct RankSummary {
+    pub count: Vec<f64>,
+    pub total_ns: Vec<f64>,
+    pub p50_ns: Vec<f64>,
+    pub p95_ns: Vec<f64>,
+}
+
+/// Decode the world's concatenated summaries (rank order) as produced
+/// by `all_gather_f64` over per-rank [`TraceCollector::encode_summary`]
+/// vectors. Trailing partial chunks are ignored (cannot happen with a
+/// correct transport; defensive for tests).
+pub fn decode_summaries(flat: &[f64], out: &mut Vec<RankSummary>) {
+    out.clear();
+    for chunk in flat.chunks_exact(SUMMARY_LEN) {
+        let mut r = RankSummary {
+            count: Vec::with_capacity(Phase::COUNT),
+            total_ns: Vec::with_capacity(Phase::COUNT),
+            p50_ns: Vec::with_capacity(Phase::COUNT),
+            p95_ns: Vec::with_capacity(Phase::COUNT),
+        };
+        for p in 0..Phase::COUNT {
+            r.count.push(chunk[4 * p]);
+            r.total_ns.push(chunk[4 * p + 1]);
+            r.p50_ns.push(chunk[4 * p + 2]);
+            r.p95_ns.push(chunk[4 * p + 3]);
+        }
+        out.push(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_floor_is_tight() {
+        let mut values: Vec<u64> = (0..64u64).collect();
+        for shift in 0..60u32 {
+            for off in [0u64, 1, 3, 7] {
+                values.push((1u64 << shift).saturating_add(off));
+                values.push((1u64 << shift).saturating_sub(off.min(1)));
+            }
+        }
+        values.sort_unstable();
+        values.dedup();
+        let mut prev = 0usize;
+        for &v in &values {
+            let b = bucket_of(v);
+            assert!(b >= prev, "non-monotone at {v}");
+            prev = b;
+            assert!(b < HIST_BUCKETS);
+            let f = bucket_floor(b);
+            assert!(f <= v, "floor {f} > value {v}");
+            // Floor is within one sub-bucket (12.5%) below v.
+            assert!(
+                v - f <= (v / 8).max(1),
+                "floor {f} too far below {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_bound_error() {
+        let mut h = PhaseHist::new();
+        for v in 1..=1000u64 {
+            h.record(v * 100); // 100ns .. 100µs
+        }
+        let p50 = h.quantile_ns(0.5) as f64;
+        let p95 = h.quantile_ns(0.95) as f64;
+        // True p50 = 50_000, p95 = 95_000; log2 buckets are within
+        // 12.5% below the true value.
+        assert!((43_000.0..=50_000.0).contains(&p50), "p50 {p50}");
+        assert!((83_000.0..=95_000.0).contains(&p95), "p95 {p95}");
+        assert_eq!(h.count, 1000);
+        assert_eq!(h.mean_ns(), 50_050);
+    }
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let h = PhaseHist::new();
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0);
+    }
+
+    #[test]
+    fn summary_roundtrip() {
+        let _g = super::super::test_lock();
+        let mut c = TraceCollector::new(false);
+        // Feed events through a real ring so drain paths are covered.
+        ring::drain(|_, _, _| {});
+        for i in 0..5u64 {
+            super::super::ring::push(Event {
+                phase: Phase::FwdBwd,
+                start_ns: i * 10,
+                end_ns: i * 10 + 7,
+            });
+        }
+        super::super::ring::push(Event {
+            phase: Phase::Step,
+            start_ns: 0,
+            end_ns: 100,
+        });
+        c.drain();
+        let mut flat = Vec::new();
+        c.encode_summary(&mut flat);
+        assert_eq!(flat.len(), SUMMARY_LEN);
+        // Pretend a 2-rank world gathered two copies.
+        let mut world = flat.clone();
+        world.extend_from_slice(&flat);
+        let mut ranks = Vec::new();
+        decode_summaries(&world, &mut ranks);
+        assert_eq!(ranks.len(), 2);
+        let fb = Phase::FwdBwd as usize;
+        assert_eq!(ranks[0].count[fb], 5.0);
+        assert_eq!(ranks[1].total_ns[fb], 35.0);
+        let table = c.phase_table(&ranks);
+        assert!(table.contains("fwd_bwd"));
+        assert!(table.contains("per-rank mean step ns"));
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let _g = super::super::test_lock();
+        let mut c = TraceCollector::new(true);
+        ring::drain(|_, _, _| {});
+        super::super::ring::push(Event {
+            phase: Phase::OptStep,
+            start_ns: 1000,
+            end_ns: 3000,
+        });
+        c.drain();
+        let j = c.chrome_trace(3);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap();
+        let mut saw_x = false;
+        let mut i = 0;
+        while let Some(e) = evs.idx(i) {
+            if e.get("ph").unwrap().as_str() == Some("X") {
+                saw_x = true;
+                assert_eq!(e.get("pid").unwrap().as_f64(), Some(3.0));
+                assert_eq!(e.get("dur").unwrap().as_f64(), Some(2.0));
+            }
+            i += 1;
+        }
+        assert!(saw_x, "no complete events in chrome trace");
+    }
+}

@@ -1,0 +1,269 @@
+//! S14: trace — step-phase runtime tracing over a monotonic clock.
+//!
+//! The subsystem answers "where does a training step spend its time"
+//! without perturbing the thing it measures:
+//!
+//! * **Spans** ([`span`] / [`start`]) timestamp a phase on the calling
+//!   thread and push a fixed-size [`Event`] into that thread's
+//!   preallocated ring buffer ([`ring`]). When tracing is disabled the
+//!   entire span path is one relaxed atomic load and a branch — no
+//!   clock read, no ring touch.
+//! * **Rings** are per-thread SPSC buffers registered in a global
+//!   table; they are drained at step boundaries by the trainer's
+//!   [`TraceCollector`], which folds events into fixed log2-bucket
+//!   histograms (approximate p50/p95) and, when a Chrome trace export
+//!   was requested, a bounded retained-event store. The steady-state
+//!   record + drain path performs zero heap allocations (hard-asserted
+//!   in `benches/optimizer_step.rs`).
+//! * **Per-rank summaries**: each rank packs its per-phase histogram
+//!   moments into a fixed-length `f64` vector and `all_gather`s it over
+//!   the existing [`crate::comm::Transport`] at eval intervals, so the
+//!   end-of-run phase table can show per-rank skew. The gather rides
+//!   the same lockstep ring as every other collective, so `--trace`
+//!   must be enabled on all ranks or none (the `--spawn-local`
+//!   launcher forwards the flag verbatim, which guarantees this for
+//!   local rings).
+//!
+//! ## Span → trainer-phase map
+//!
+//! | [`Phase`]            | where it is recorded                                  |
+//! |----------------------|-------------------------------------------------------|
+//! | `Step`               | whole `Trainer::train_step` call (denominator for %)  |
+//! | `DataWait`           | `TokenLoader::next` inside the per-worker accum job   |
+//! | `FwdBwd`             | the fused forward+backward executable (one artifact — |
+//! |                      | forward and backward are *not* separately observable) |
+//! | `LossGather`         | per-rank loss sidecar `all_gather_f64`                |
+//! | `AllReduce`          | `Collective::all_reduce_mean` on the gradient         |
+//! | `GradUnflatten`      | flat grad buffer → per-matrix views                   |
+//! | `OptStep`            | one projected-optimizer matrix step (worker track)    |
+//! | `DenseStep`          | the dense (non-projected) parameter loop              |
+//! | `SubspaceRefresh`    | a basis refresh that actually ran (skipped calls are  |
+//! |                      | not recorded)                                         |
+//! | `Eval`               | `Trainer::eval`                                       |
+//! | `CheckpointWrite`    | `checkpoint::save_trainer`                            |
+//! | `NetSend`/`NetRecv`  | one framed TCP send / blocking recv in `comm::net`    |
+//! | `PoolRegion`         | a whole `util::pool` fork-join region (caller track)  |
+//! | `PoolBusy`           | one executor's slice of a region (per worker track);  |
+//! |                      | idle = enclosing `PoolRegion` − that track's busy     |
+
+mod collect;
+mod ring;
+
+pub use collect::{
+    decode_summaries, RankSummary, TraceCollector, SUMMARY_LEN,
+};
+pub use ring::{drain, dropped_events, Event};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Fixed phase vocabulary. The discriminants are the wire/index order:
+/// histograms, per-rank summary vectors, and the phase table all index
+/// by `phase as usize`, so variants must stay dense from 0.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum Phase {
+    Step = 0,
+    DataWait = 1,
+    FwdBwd = 2,
+    LossGather = 3,
+    AllReduce = 4,
+    GradUnflatten = 5,
+    OptStep = 6,
+    DenseStep = 7,
+    SubspaceRefresh = 8,
+    Eval = 9,
+    CheckpointWrite = 10,
+    NetSend = 11,
+    NetRecv = 12,
+    PoolRegion = 13,
+    PoolBusy = 14,
+}
+
+impl Phase {
+    pub const COUNT: usize = 15;
+
+    pub const ALL: [Phase; Phase::COUNT] = [
+        Phase::Step,
+        Phase::DataWait,
+        Phase::FwdBwd,
+        Phase::LossGather,
+        Phase::AllReduce,
+        Phase::GradUnflatten,
+        Phase::OptStep,
+        Phase::DenseStep,
+        Phase::SubspaceRefresh,
+        Phase::Eval,
+        Phase::CheckpointWrite,
+        Phase::NetSend,
+        Phase::NetRecv,
+        Phase::PoolRegion,
+        Phase::PoolBusy,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Step => "step",
+            Phase::DataWait => "data_wait",
+            Phase::FwdBwd => "fwd_bwd",
+            Phase::LossGather => "loss_gather",
+            Phase::AllReduce => "all_reduce",
+            Phase::GradUnflatten => "grad_unflatten",
+            Phase::OptStep => "opt_step",
+            Phase::DenseStep => "dense_step",
+            Phase::SubspaceRefresh => "subspace_refresh",
+            Phase::Eval => "eval",
+            Phase::CheckpointWrite => "checkpoint_write",
+            Phase::NetSend => "net_send",
+            Phase::NetRecv => "net_recv",
+            Phase::PoolRegion => "pool_region",
+            Phase::PoolBusy => "pool_busy",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Global enable flag + run epoch.
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is tracing on? This is the *entire* disabled-mode cost of a span:
+/// one relaxed load and a branch.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on/off process-wide. Enabling also pins the monotonic
+/// epoch so the first span doesn't race the `OnceLock` initialization.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch (monotonic).
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------
+// Spans.
+// ---------------------------------------------------------------------
+
+/// RAII span: records `[construction, drop)` for `phase` on the
+/// current thread's ring. Inert (no clock read) when tracing is off.
+pub struct Span {
+    phase: Phase,
+    start_ns: u64,
+    armed: bool,
+}
+
+#[inline]
+pub fn span(phase: Phase) -> Span {
+    if !enabled() {
+        return Span { phase, start_ns: 0, armed: false };
+    }
+    Span { phase, start_ns: now_ns(), armed: true }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed {
+            ring::push(Event {
+                phase: self.phase,
+                start_ns: self.start_ns,
+                end_ns: now_ns(),
+            });
+        }
+    }
+}
+
+/// Manual-finish timestamp for call sites that decide *after the fact*
+/// whether the interval is worth recording (e.g. a subspace refresh
+/// that turned out to be a no-op) or that must record before a
+/// function's end (so the event lands in this step's drain).
+#[derive(Clone, Copy)]
+pub struct Started {
+    start_ns: u64,
+    armed: bool,
+}
+
+#[inline]
+pub fn start() -> Started {
+    if !enabled() {
+        return Started { start_ns: 0, armed: false };
+    }
+    Started { start_ns: now_ns(), armed: true }
+}
+
+impl Started {
+    /// Record `[start, now)` as `phase`. Dropping a `Started` without
+    /// calling this discards the measurement.
+    #[inline]
+    pub fn record(self, phase: Phase) {
+        if self.armed {
+            ring::push(Event {
+                phase,
+                start_ns: self.start_ns,
+                end_ns: now_ns(),
+            });
+        }
+    }
+}
+
+/// Track id of the calling thread's ring (registering it if needed).
+/// Tests use this to filter drained events down to their own thread.
+pub fn current_track() -> usize {
+    ring::current_track()
+}
+
+/// Serializes unit tests that drain the global rings: a drain consumes
+/// from *every* ring, so two concurrently-draining tests would steal
+/// each other's events.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static M: OnceLock<std::sync::Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| std::sync::Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_all_matches_discriminants() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(*p as usize, i);
+        }
+        assert_eq!(Phase::ALL.len(), Phase::COUNT);
+    }
+
+    #[test]
+    fn labels_unique_and_nonempty() {
+        let mut seen = std::collections::BTreeSet::new();
+        for p in Phase::ALL {
+            assert!(!p.label().is_empty());
+            assert!(seen.insert(p.label()), "dup label {}", p.label());
+        }
+    }
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,220 @@
+//! Per-thread preallocated SPSC event rings + the global ring registry.
+//!
+//! Each thread that records a span lazily registers one fixed-capacity
+//! ring (allocation happens exactly once, at registration — warmup, not
+//! steady state). The owning thread is the only producer; the single
+//! consumer is whoever holds the registry lock inside [`drain`]. When a
+//! ring is full new events are counted as dropped rather than blocking
+//! or allocating — tracing must never stall the hot path.
+
+use super::Phase;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Events a ring can hold between drains. A traced step records tens of
+/// events per thread; draining every step leaves ample headroom, and
+/// benches that batch many iterations between drains simply shed the
+/// overflow into `dropped`.
+pub(crate) const RING_CAP: usize = 8192;
+
+/// One recorded span: phase + `[start, end)` in ns since the trace
+/// epoch. Fixed-size and `Copy` so ring slots never allocate.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub phase: Phase,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl Event {
+    #[inline]
+    pub fn dur_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+pub(crate) struct TraceRing {
+    track: usize,
+    name: String,
+    /// Monotonic write index (owner thread stores, Release).
+    head: AtomicUsize,
+    /// Monotonic read index (drainer stores, Release).
+    tail: AtomicUsize,
+    dropped: AtomicUsize,
+    slots: UnsafeCell<Box<[Event]>>,
+}
+
+// SAFETY: single-producer (the owning thread writes `slots` only at
+// indices in `[tail, head)` before publishing them with a Release
+// store of `head`), single-consumer (readers serialize on the registry
+// lock and read only `[tail, head)` after an Acquire load of `head`).
+// The producer re-checks `tail` (Acquire) before reusing a slot, so a
+// slot is never overwritten while the consumer may still read it.
+unsafe impl Sync for TraceRing {}
+unsafe impl Send for TraceRing {}
+
+fn registry() -> &'static Mutex<Vec<Arc<TraceRing>>> {
+    static R: OnceLock<Mutex<Vec<Arc<TraceRing>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static RING: std::cell::OnceCell<Arc<TraceRing>> =
+        const { std::cell::OnceCell::new() };
+}
+
+fn with_ring<T>(f: impl FnOnce(&TraceRing) -> T) -> T {
+    RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let name = std::thread::current()
+                .name()
+                .unwrap_or("thread")
+                .to_string();
+            let mut reg =
+                registry().lock().unwrap_or_else(|e| e.into_inner());
+            let track = reg.len();
+            let blank =
+                Event { phase: Phase::Step, start_ns: 0, end_ns: 0 };
+            let ring = Arc::new(TraceRing {
+                track,
+                name,
+                head: AtomicUsize::new(0),
+                tail: AtomicUsize::new(0),
+                dropped: AtomicUsize::new(0),
+                slots: UnsafeCell::new(
+                    vec![blank; RING_CAP].into_boxed_slice(),
+                ),
+            });
+            reg.push(ring.clone());
+            ring
+        });
+        f(ring)
+    })
+}
+
+/// Push one event onto the calling thread's ring (never blocks, never
+/// allocates once the ring exists; a full ring counts a drop instead).
+#[inline]
+pub(crate) fn push(ev: Event) {
+    with_ring(|r| {
+        let head = r.head.load(Ordering::Relaxed);
+        let tail = r.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) >= RING_CAP {
+            r.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: only the owning thread writes slots, and the slot at
+        // `head` is unpublished (consumer reads stop at the previous
+        // head) and not in the consumer's live window (checked above).
+        unsafe {
+            (*r.slots.get())[head % RING_CAP] = ev;
+        }
+        r.head.store(head.wrapping_add(1), Ordering::Release);
+    });
+}
+
+/// Drain every registered ring, invoking `f(track, track_name, event)`
+/// for each pending event in per-ring FIFO order. Consumers serialize
+/// on the registry lock, so concurrent drains can't tear a ring.
+pub fn drain(mut f: impl FnMut(usize, &str, Event)) {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    for ring in reg.iter() {
+        let head = ring.head.load(Ordering::Acquire);
+        let mut tail = ring.tail.load(Ordering::Relaxed);
+        while tail != head {
+            // SAFETY: `[tail, head)` was published by the producer's
+            // Release store of `head`, which our Acquire load saw.
+            let ev = unsafe { (*ring.slots.get())[tail % RING_CAP] };
+            f(ring.track, &ring.name, ev);
+            tail = tail.wrapping_add(1);
+        }
+        ring.tail.store(tail, Ordering::Release);
+    }
+}
+
+/// Total events shed across all rings because a ring was full.
+pub fn dropped_events() -> usize {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter().map(|r| r.dropped.load(Ordering::Relaxed)).sum()
+}
+
+/// Track id of the calling thread's ring (registering it if needed).
+pub(crate) fn current_track() -> usize {
+    with_ring(|r| r.track)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_drain_fifo_on_own_track() {
+        let _g = super::super::test_lock();
+        let track = current_track();
+        // Flush anything a previous test left behind for this thread.
+        drain(|_, _, _| {});
+        for i in 0..10u64 {
+            push(Event {
+                phase: Phase::OptStep,
+                start_ns: i,
+                end_ns: i + 1,
+            });
+        }
+        let mut got = Vec::new();
+        drain(|t, _, ev| {
+            if t == track && ev.phase == Phase::OptStep {
+                got.push(ev.start_ns);
+            }
+        });
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn full_ring_drops_instead_of_blocking() {
+        let _g = super::super::test_lock();
+        let track = current_track();
+        drain(|_, _, _| {});
+        let before = dropped_events();
+        for i in 0..(RING_CAP as u64 + 100) {
+            push(Event {
+                phase: Phase::Eval,
+                start_ns: i,
+                end_ns: i,
+            });
+        }
+        assert!(dropped_events() >= before + 100);
+        let mut n = 0usize;
+        drain(|t, _, _| {
+            if t == track {
+                n += 1;
+            }
+        });
+        assert_eq!(n, RING_CAP);
+    }
+
+    #[test]
+    fn track_name_is_thread_name() {
+        let _g = super::super::test_lock();
+        std::thread::Builder::new()
+            .name("gw-trace-test".into())
+            .spawn(|| {
+                let track = current_track();
+                push(Event {
+                    phase: Phase::DataWait,
+                    start_ns: 1,
+                    end_ns: 2,
+                });
+                let mut name = String::new();
+                drain(|t, n, _| {
+                    if t == track {
+                        name = n.to_string();
+                    }
+                });
+                assert_eq!(name, "gw-trace-test");
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+    }
+}

@@ -244,7 +244,12 @@ fn worker_loop(shared: &Shared) {
             }
         };
         IN_WORKER.with(|c| c.set(true));
+        // Busy span on this worker's own trace track: the slice of the
+        // region this executor actually ran (idle = enclosing
+        // PoolRegion minus this). One relaxed load when tracing is off.
+        let busy = crate::trace::start();
         let result = catch_unwind(AssertUnwindSafe(|| job()));
+        busy.record(crate::trace::Phase::PoolBusy);
         IN_WORKER.with(|c| c.set(false));
         let mut s = lock(&shared.state);
         if let Err(payload) = result {
@@ -328,6 +333,10 @@ impl WorkerPool {
     /// inside a pool job — the public primitives guard via
     /// [`in_worker`].
     pub fn run_limited(&self, f: &(dyn Fn() + Sync), extra_workers: usize) {
+        // Whole fork-join region on the caller's trace track (publish →
+        // join); per-executor busy slices are recorded on their own
+        // tracks, so per-region idle time is derivable per worker.
+        let region = crate::trace::start();
         // SAFETY of the lifetime transmute: workers dereference `job`
         // only between the epoch publish below and the remaining == 0
         // join at the end of this function, and this function does not
@@ -364,7 +373,9 @@ impl WorkerPool {
         // flag is restored before any panic is re-raised.
         let caller_result = {
             let prev = IN_WORKER.with(|c| c.replace(true));
+            let busy = crate::trace::start();
             let out = catch_unwind(AssertUnwindSafe(|| f()));
+            busy.record(crate::trace::Phase::PoolBusy);
             IN_WORKER.with(|c| c.set(prev));
             out
         };
@@ -387,6 +398,7 @@ impl WorkerPool {
             self.shared.done_cv.notify_all();
             p
         };
+        region.record(crate::trace::Phase::PoolRegion);
         // The caller's own payload wins if both panicked; either way
         // the original payload is re-raised, so diagnostics survive.
         if let Err(payload) = caller_result {

@@ -1,0 +1,498 @@
+//! Property tests for the trace subsystem (ISSUE 7): span nesting forms
+//! a valid tree, pool busy time lands on the right worker track,
+//! disabled mode records nothing and allocates nothing, the JSONL
+//! metrics stream replays series-equal (and survives a SIGKILL with a
+//! parseable prefix), the Chrome trace export parses with the in-tree
+//! JSON parser, and tracing does not perturb the training trajectory.
+//!
+//! The enable flag and the ring registry are process-global, and a
+//! collector drain consumes events from EVERY ring — so every test that
+//! enables tracing or drains serializes on one binary-local mutex.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use grasswalk::coordinator::{TrainConfig, Trainer};
+use grasswalk::metrics::Recorder;
+use grasswalk::optim::Method;
+use grasswalk::runtime::Engine;
+use grasswalk::trace::{self, Event, Phase, TraceCollector};
+use grasswalk::util::json::Json;
+use grasswalk::util::pool::WorkerPool;
+
+// ---------------------------------------------------------------------
+// Thread-local allocation counting.
+//
+// A process-global counter would pick up the libtest harness's own
+// allocations on other threads; counting per-thread isolates exactly
+// the code under test. `try_with` keeps the allocator safe on threads
+// whose TLS is already torn down.
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct TlCountingAlloc;
+
+unsafe impl GlobalAlloc for TlCountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: TlCountingAlloc = TlCountingAlloc;
+
+fn tl_allocs(f: impl FnOnce()) -> u64 {
+    let before = TL_ALLOCS.with(Cell::get);
+    f();
+    TL_ALLOCS.with(Cell::get) - before
+}
+
+fn guard() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Flush every ring so a test only sees its own events.
+fn flush_rings() {
+    trace::drain(|_, _, _| {});
+}
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Engine::new(dir).expect("engine")))
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("gw-trace-props-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn contains(outer: &Event, inner: &Event) -> bool {
+    outer.start_ns <= inner.start_ns && inner.end_ns <= outer.end_ns
+}
+
+fn disjoint(a: &Event, b: &Event) -> bool {
+    a.end_ns <= b.start_ns || b.end_ns <= a.start_ns
+}
+
+// ---------------------------------------------------------------------
+// Span nesting → valid tree.
+// ---------------------------------------------------------------------
+
+#[test]
+fn span_nesting_reconstructs_valid_tree() {
+    let _g = guard();
+    trace::set_enabled(true);
+    flush_rings();
+    let track = trace::current_track();
+    {
+        let _outer = trace::span(Phase::Step);
+        {
+            let _mid = trace::span(Phase::FwdBwd);
+            let _inner = trace::span(Phase::OptStep);
+        }
+        let _sibling = trace::span(Phase::AllReduce);
+    }
+    trace::set_enabled(false);
+    let mut evs: Vec<Event> = Vec::new();
+    trace::drain(|t, _, ev| {
+        if t == track {
+            evs.push(ev);
+        }
+    });
+    assert_eq!(evs.len(), 4, "one event per span");
+    // RAII drop order: inner-most first.
+    let by = |p: Phase| *evs.iter().find(|e| e.phase == p).unwrap();
+    let step = by(Phase::Step);
+    let fwd = by(Phase::FwdBwd);
+    let opt = by(Phase::OptStep);
+    let sib = by(Phase::AllReduce);
+    for e in &evs {
+        assert!(e.end_ns >= e.start_ns, "span interval must be ordered");
+    }
+    assert!(contains(&step, &fwd), "step must contain fwd_bwd");
+    assert!(contains(&step, &opt), "step must contain opt_step");
+    assert!(contains(&step, &sib), "step must contain all_reduce");
+    assert!(contains(&fwd, &opt), "fwd_bwd must contain opt_step");
+    assert!(
+        disjoint(&fwd, &sib),
+        "sequential sibling spans must not overlap"
+    );
+    // Every pair on one track is nested-or-disjoint: a same-thread RAII
+    // discipline can never produce a partial overlap.
+    for a in &evs {
+        for b in &evs {
+            assert!(
+                contains(a, b) || contains(b, a) || disjoint(a, b),
+                "partial overlap: {a:?} vs {b:?}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pool busy-time attribution.
+// ---------------------------------------------------------------------
+
+#[test]
+fn pool_busy_lands_on_each_executor_track() {
+    let _g = guard();
+    trace::set_enabled(true);
+    flush_rings();
+    let caller_track = trace::current_track();
+    let pool = WorkerPool::new(3); // caller + 2 spawned workers
+    let spin = AtomicU64::new(0);
+    pool.run(&|| {
+        for _ in 0..10_000 {
+            spin.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    trace::set_enabled(false);
+    let mut busy: Vec<(usize, String, Event)> = Vec::new();
+    let mut regions: Vec<(usize, Event)> = Vec::new();
+    trace::drain(|t, name, ev| match ev.phase {
+        Phase::PoolBusy => busy.push((t, name.to_string(), ev)),
+        Phase::PoolRegion => regions.push((t, ev)),
+        _ => {}
+    });
+    assert_eq!(regions.len(), 1, "one fork-join region");
+    let (region_track, region) = regions[0].clone();
+    assert_eq!(
+        region_track, caller_track,
+        "PoolRegion belongs to the calling thread's track"
+    );
+    assert_eq!(
+        busy.len(),
+        3,
+        "one PoolBusy slice per executor (caller + 2 workers)"
+    );
+    let mut tracks: Vec<usize> = busy.iter().map(|b| b.0).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    assert_eq!(tracks.len(), 3, "each slice on its own track");
+    let mut worker_named = 0;
+    for (t, name, ev) in &busy {
+        assert!(
+            contains(&region, ev),
+            "busy slice must sit inside the region"
+        );
+        if *t == caller_track {
+            continue;
+        }
+        assert!(
+            name.starts_with("gw-pool-"),
+            "worker track named after the pool thread, got `{name}`"
+        );
+        worker_named += 1;
+    }
+    assert_eq!(worker_named, 2);
+    assert!(spin.load(Ordering::Relaxed) >= 30_000);
+}
+
+// ---------------------------------------------------------------------
+// Disabled mode: nothing recorded, nothing allocated.
+// ---------------------------------------------------------------------
+
+#[test]
+fn disabled_mode_records_nothing_and_never_allocates() {
+    let _g = guard();
+    trace::set_enabled(false);
+    // Register this thread's ring up front: registration is the one
+    // (warmup) allocation the span path is allowed, and disabled spans
+    // must not even reach the ring.
+    let track = trace::current_track();
+    flush_rings();
+    let allocs = tl_allocs(|| {
+        for _ in 0..1000 {
+            let _sp = trace::span(Phase::Step);
+            let st = trace::start();
+            st.record(Phase::OptStep);
+        }
+    });
+    assert_eq!(allocs, 0, "disabled span path must not allocate");
+    let mut seen = 0usize;
+    trace::drain(|t, _, _| {
+        if t == track {
+            seen += 1;
+        }
+    });
+    assert_eq!(seen, 0, "disabled span path must not record events");
+}
+
+// ---------------------------------------------------------------------
+// Streaming metrics sink.
+// ---------------------------------------------------------------------
+
+#[test]
+fn jsonl_stream_replays_series_equal() {
+    let dir = tmp_dir("stream");
+    let path = dir.join("stream.jsonl");
+    let mut rec = Recorder::new("props-run");
+    rec.note("tag", "trace-props");
+    rec.stream_to(&path).unwrap();
+    let id = rec.series_id("loss");
+    for s in 1..=5usize {
+        rec.push_id(id, s, 1.0 / s as f64);
+        rec.push("aux/odd", s, (s % 2) as f64);
+        rec.flush_step(s).unwrap();
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    // Every line of a completed stream parses standalone.
+    for (i, line) in text.lines().enumerate() {
+        Json::parse(line).unwrap_or_else(|e| panic!("line {i}: {e}"));
+    }
+    let replayed = Recorder::replay_jsonl(&text).unwrap();
+    assert_eq!(replayed.run_name, "props-run");
+    let orig: Vec<(String, Vec<(usize, u64)>)> = rec
+        .iter()
+        .map(|(k, s)| {
+            (
+                k.to_string(),
+                s.points
+                    .iter()
+                    .map(|&(st, v)| (st, v.to_bits()))
+                    .collect(),
+            )
+        })
+        .collect();
+    let back: Vec<(String, Vec<(usize, u64)>)> = replayed
+        .iter()
+        .map(|(k, s)| {
+            (
+                k.to_string(),
+                s.points
+                    .iter()
+                    .map(|&(st, v)| (st, v.to_bits()))
+                    .collect(),
+            )
+        })
+        .collect();
+    assert_eq!(orig, back, "replay must be bitwise series-equal");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace export.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chrome_trace_parses_and_tracks_are_monotone() {
+    let _g = guard();
+    trace::set_enabled(true);
+    flush_rings();
+    let track = trace::current_track();
+    let mut col = TraceCollector::new(true);
+    for _ in 0..5 {
+        let _sp = trace::span(Phase::OptStep);
+    }
+    {
+        let _sp = trace::span(Phase::Eval);
+    }
+    col.drain();
+    trace::set_enabled(false);
+    let text = col.chrome_trace(0).to_string();
+    let parsed = Json::parse(&text).unwrap();
+    let evs = parsed.get("traceEvents").unwrap();
+    let mut our_spans: Vec<(f64, f64)> = Vec::new();
+    let mut saw_thread_meta = false;
+    let mut i = 0usize;
+    while let Some(e) = evs.idx(i) {
+        i += 1;
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "M" => {
+                if e.get("name").unwrap().as_str() == Some("thread_name") {
+                    saw_thread_meta = true;
+                }
+            }
+            "X" => {
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                let dur = e.get("dur").unwrap().as_f64().unwrap();
+                assert!(ts >= 0.0 && dur >= 0.0);
+                assert_eq!(e.get("pid").unwrap().as_f64(), Some(0.0));
+                if e.get("tid").unwrap().as_f64() == Some(track as f64) {
+                    our_spans.push((ts, dur));
+                }
+            }
+            other => panic!("unexpected event kind {other}"),
+        }
+    }
+    assert!(saw_thread_meta, "thread_name metadata present");
+    assert_eq!(our_spans.len(), 6, "every drained span exported");
+    // Sequential same-thread spans: start times monotone and pairwise
+    // non-overlapping (epsilon absorbs the ns → µs float conversion).
+    for w in our_spans.windows(2) {
+        let (ts0, dur0) = w[0];
+        let (ts1, _) = w[1];
+        assert!(ts1 >= ts0, "event order must follow time order");
+        assert!(
+            ts0 + dur0 <= ts1 + 0.002,
+            "sequential spans must not overlap: {w:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tracing must not perturb training (artifact-gated).
+// ---------------------------------------------------------------------
+
+fn base_cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        method: Method::GrassWalk,
+        steps,
+        rank: 8,
+        interval: 4,
+        lr: 1e-2,
+        dense_lr: 1e-2,
+        eval_every: 0,
+        eval_batches: 2,
+        log_every: 0,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn loss_is_bitwise_identical_with_trace_on_and_off() {
+    let Some(engine) = engine() else { return };
+    let _g = guard();
+    flush_rings();
+    let run = |trace_on: bool| {
+        let mut cfg = base_cfg(8);
+        cfg.trace = trace_on;
+        let mut rec = Recorder::new("tr");
+        let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+        t.run(&mut rec).unwrap();
+        rec.get("train_loss").unwrap().points.clone()
+    };
+    let off = run(false);
+    let on = run(true);
+    trace::set_enabled(false);
+    let off_bits: Vec<(usize, u64)> =
+        off.iter().map(|&(s, v)| (s, v.to_bits())).collect();
+    let on_bits: Vec<(usize, u64)> =
+        on.iter().map(|&(s, v)| (s, v.to_bits())).collect();
+    assert_eq!(
+        off_bits, on_bits,
+        "tracing must be invisible to the trajectory"
+    );
+}
+
+#[test]
+fn traced_run_aggregates_expected_phases() {
+    let Some(engine) = engine() else { return };
+    let _g = guard();
+    flush_rings();
+    let mut cfg = base_cfg(6);
+    cfg.trace = true;
+    cfg.eval_every = 3;
+    let mut rec = Recorder::new("phases");
+    let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+    t.run(&mut rec).unwrap();
+    let table = t.trace_phase_table().expect("traced run has a table");
+    trace::set_enabled(false);
+    let col = t.trace_collector().unwrap();
+    assert_eq!(col.steps(), 6, "every train_step traced");
+    for p in [Phase::FwdBwd, Phase::OptStep, Phase::DataWait] {
+        assert!(col.count(p) > 0, "phase {} not recorded", p.label());
+        assert!(
+            table.contains(p.label()),
+            "phase table must list {}",
+            p.label()
+        );
+    }
+    assert!(table.contains("step-phase breakdown"));
+    // The per-rank summary gather ran at the eval interval: inproc is a
+    // 1-rank world, so exactly one summary with the full step count.
+    let ranks = t.trace_rank_summaries();
+    assert_eq!(ranks.len(), 1);
+    assert!(ranks[0].count[Phase::Step as usize] >= 3.0);
+}
+
+// ---------------------------------------------------------------------
+// Crash durability of the metrics stream (artifact-gated; spawns the
+// real binary and SIGKILLs it mid-run).
+// ---------------------------------------------------------------------
+
+#[test]
+fn killed_stream_leaves_parseable_prefix() {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let dir = tmp_dir("killed");
+    let stream = dir.join("killed.jsonl");
+    let mut child = std::process::Command::new(env!(
+        "CARGO_BIN_EXE_grasswalk"
+    ))
+    .args([
+        "train",
+        "--steps",
+        "1000000",
+        "--eval-every",
+        "0",
+        "--log-every",
+        "0",
+        "--metrics-stream",
+        stream.to_str().unwrap(),
+        "--artifacts",
+        artifacts.to_str().unwrap(),
+        "--out",
+        dir.to_str().unwrap(),
+    ])
+    .stdout(std::process::Stdio::null())
+    .stderr(std::process::Stdio::null())
+    .spawn()
+    .expect("spawn grasswalk train");
+    std::thread::sleep(std::time::Duration::from_secs(2));
+    child.kill().expect("SIGKILL");
+    let _ = child.wait();
+    let text = std::fs::read_to_string(&stream).unwrap_or_default();
+    assert!(
+        !text.is_empty(),
+        "stream must have flushed at least the header within 2s"
+    );
+    // The prefix must replay: every completed step's record is intact
+    // (unbuffered write per step), only the final line may be torn.
+    let rec = Recorder::replay_jsonl(&text)
+        .expect("killed stream must leave a parseable prefix");
+    let s = rec
+        .get("train_loss")
+        .expect("at least one step flushed before the kill");
+    assert!(!s.points.is_empty());
+    for (i, &(step, v)) in s.points.iter().enumerate() {
+        assert_eq!(step, i + 1, "steps must be contiguous from 1");
+        assert!(v.is_finite());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -311,7 +311,6 @@ fn subspace_diag_series_recorded_per_layer() {
     let mut t = Trainer::new(engine, cfg).unwrap();
     t.run(&mut rec).unwrap();
     let energy: Vec<_> = rec
-        .series
         .iter()
         .filter(|(k, _)| k.starts_with("subspace/energy_ratio/"))
         .collect();
@@ -323,7 +322,6 @@ fn subspace_diag_series_recorded_per_layer() {
         }
     }
     let aligns: Vec<_> = rec
-        .series
         .iter()
         .filter(|(k, _)| k.starts_with("subspace/alignment/"))
         .collect();
