@@ -218,6 +218,8 @@ impl TcpRingTransport {
                 let handle = std::thread::Builder::new()
                     .name(format!("net-recv-{}", w.rank))
                     .spawn(move || reader_loop(stream, tx, recycle_rx))
+                    // repo-lint: allow(net-panic) — local thread-spawn
+                    // resource exhaustion, not peer-controlled input.
                     .expect("spawn net reader");
                 Some(ReaderLink {
                     frames,
@@ -321,6 +323,8 @@ impl Transport for TcpRingTransport {
                 })?;
             for (dst, src) in buf[r0..r1].iter_mut().zip(data.chunks_exact(4))
             {
+                // repo-lint: allow(net-panic) — chunks_exact(4) yields
+                // exactly-4-byte slices; recv_expect validated length.
                 *dst += f32::from_le_bytes(src.try_into().unwrap());
             }
             st.recycle(data);
@@ -344,6 +348,8 @@ impl Transport for TcpRingTransport {
                 })?;
             for (dst, src) in buf[r0..r1].iter_mut().zip(data.chunks_exact(4))
             {
+                // repo-lint: allow(net-panic) — chunks_exact(4) yields
+                // exactly-4-byte slices; recv_expect validated length.
                 *dst = f32::from_le_bytes(src.try_into().unwrap());
             }
             st.recycle(data);
@@ -394,6 +400,8 @@ impl Transport for TcpRingTransport {
                 .iter_mut()
                 .zip(data.chunks_exact(8))
             {
+                // repo-lint: allow(net-panic) — chunks_exact(8) yields
+                // exactly-8-byte slices; recv_expect validated length.
                 *dst = f64::from_le_bytes(src.try_into().unwrap());
             }
             st.recycle(data);

@@ -28,6 +28,7 @@
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
+use super::wire;
 use super::wire::{
     encode_frame, read_frame, FrameKind, NetError, HEADER_LEN,
 };
@@ -82,9 +83,9 @@ pub(crate) fn parse_hello(p: &[u8]) -> Result<(u32, u64, u64), NetError> {
         return Err(NetError::Truncated { needed: 20, got: p.len() });
     }
     Ok((
-        u32::from_le_bytes(p[0..4].try_into().unwrap()),
-        u64::from_le_bytes(p[4..12].try_into().unwrap()),
-        u64::from_le_bytes(p[12..20].try_into().unwrap()),
+        u32::from_le_bytes(wire::field(p, 0)?),
+        u64::from_le_bytes(wire::field(p, 4)?),
+        u64::from_le_bytes(wire::field(p, 12)?),
     ))
 }
 
@@ -286,8 +287,13 @@ impl TcpWorld {
         let acceptor = std::thread::Builder::new()
             .name(format!("net-accept-{rank}"))
             .spawn(move || accept_handshake(&listener, &accept_cfg))
+            // repo-lint: allow(net-panic) — local thread-spawn resource
+            // exhaustion, not peer-controlled input.
             .expect("spawn net acceptor");
         let dialed = dial_handshake(cfg);
+        // repo-lint: allow(net-panic) — accept_handshake returns every
+        // peer failure as a typed NetError; a join error means the
+        // handshake code itself panicked, which is a local bug.
         let accepted = acceptor.join().expect("net acceptor panicked");
         // A typed validation error from either side beats a generic
         // timeout from the other (the timeout is usually the symptom of

@@ -49,3 +49,13 @@ pub mod subspace;
 pub mod tensor;
 pub mod trace;
 pub mod util;
+
+// Bounded proof harnesses (rust/verify/) — compiled ONLY under
+// `cargo kani`, invisible to the default build and tests. The #[path]
+// hop keeps verification code out of src/ while placing it inside the
+// crate, so harnesses can drive pub(crate) internals (wire::field,
+// pool::RegionCounters, trace::ring's index helpers) instead of
+// re-implementations. See EXPERIMENTS.md §Verify.
+#[cfg(kani)]
+#[path = "../verify/mod.rs"]
+pub mod verify;

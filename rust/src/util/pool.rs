@@ -61,6 +61,17 @@
 //! and is intentionally never dropped: its workers idle in a condvar
 //! wait and hold no resources, the same lifetime rayon's global pool
 //! has.
+//!
+//! ## Verification
+//!
+//! The fork-join region's epoch/claim/join bookkeeping is factored into
+//! [`RegionCounters`] so the Kani harness in `rust/verify/pool.rs` can
+//! model-check the exact transition code over symbolic schedules (the
+//! invariant that makes the lifetime-transmuted `Job` sound: the join
+//! returns only after every claimed executor finished). The unit tests
+//! below additionally run under Miri in the scheduled verify tier —
+//! `GRASSWALK_MIRI=1` (or `cfg(miri)`) shrinks their iteration counts
+//! so the interpreter finishes. See EXPERIMENTS.md §Verify.
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -177,20 +188,72 @@ pub fn run_serial<R>(f: impl FnOnce() -> R) -> R {
 /// dereferenced while `run_limited` blocks on region completion.
 type Job = &'static (dyn Fn() + Sync);
 
-struct PoolState {
-    /// The active region's job, if any.
-    job: Option<Job>,
+/// The epoch/claim/join counter algebra of a fork-join region, split
+/// from the job pointer so the Kani harness in `rust/verify/pool.rs`
+/// can drive the EXACT transition code the pool runs (publish →
+/// claim* → finish*) without having to conjure a `Job`. The proved
+/// invariants — at most `participants` claims per epoch, one claim per
+/// worker per epoch, and `remaining == 0` only after every claimed
+/// executor finished — are what make the lifetime-transmuted `Job`
+/// below sound: the caller's join waits on `remaining`, so no executor
+/// can still hold the reference when `run_limited` returns.
+pub(crate) struct RegionCounters {
     /// Region counter; workers run the job at most once per new epoch.
-    epoch: u64,
+    pub(crate) epoch: u64,
     /// Worker executors (beyond the caller) the active region wants —
     /// a region with k work units gains nothing from more than k - 1
     /// helpers, and capping keeps a small fan-out from barriering on
     /// the scheduling of every idle worker.
-    participants: usize,
+    pub(crate) participants: usize,
     /// Participation slots already claimed for the active epoch.
-    claimed: usize,
+    pub(crate) claimed: usize,
     /// Claimed workers that still have to finish the active region.
-    remaining: usize,
+    pub(crate) remaining: usize,
+}
+
+impl RegionCounters {
+    pub(crate) const fn new() -> RegionCounters {
+        RegionCounters { epoch: 0, participants: 0, claimed: 0, remaining: 0 }
+    }
+
+    /// Open a new region wanting `participants` worker executors. The
+    /// epoch bump (wrapping — the counters stay sound across u64 wrap,
+    /// pinned by the Kani harness) invalidates every worker's
+    /// `last_epoch` so each can claim at most once.
+    pub(crate) fn publish(&mut self, participants: usize) {
+        self.epoch = self.epoch.wrapping_add(1);
+        self.participants = participants;
+        self.claimed = 0;
+        self.remaining = participants;
+    }
+
+    /// Worker-side participation claim: true iff a slot was free. A
+    /// region that is already fully staffed is skipped (the job is a
+    /// cursor drain — extra hands gain nothing).
+    pub(crate) fn try_claim(&mut self) -> bool {
+        if self.claimed < self.participants {
+            self.claimed += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A claimed executor finished its share; true when it was the last
+    /// one (the region's join can proceed). Must be called exactly once
+    /// per successful [`try_claim`] — the harness proves `remaining`
+    /// can then never underflow.
+    pub(crate) fn finish_one(&mut self) -> bool {
+        self.remaining -= 1;
+        self.remaining == 0
+    }
+}
+
+struct PoolState {
+    /// The active region's job, if any.
+    job: Option<Job>,
+    /// Epoch/claim/join bookkeeping for the active region.
+    counters: RegionCounters,
     /// First worker panic payload of the active region, re-raised to
     /// the region's caller so diagnostics survive the pool boundary.
     panic_payload: Option<Box<dyn std::any::Any + Send>>,
@@ -225,13 +288,9 @@ fn worker_loop(shared: &Shared) {
                     return;
                 }
                 match s.job {
-                    Some(j) if s.epoch != last_epoch => {
-                        last_epoch = s.epoch;
-                        // Claim a participation slot; a region that is
-                        // already fully staffed is skipped (the job is
-                        // a cursor drain — extra hands gain nothing).
-                        if s.claimed < s.participants {
-                            s.claimed += 1;
+                    Some(j) if s.counters.epoch != last_epoch => {
+                        last_epoch = s.counters.epoch;
+                        if s.counters.try_claim() {
                             break j;
                         }
                     }
@@ -257,8 +316,7 @@ fn worker_loop(shared: &Shared) {
                 s.panic_payload = Some(payload);
             }
         }
-        s.remaining -= 1;
-        if s.remaining == 0 {
+        if s.counters.finish_one() {
             drop(s);
             shared.done_cv.notify_all();
         }
@@ -284,10 +342,7 @@ impl WorkerPool {
         let shared = Arc::new(Shared {
             state: Mutex::new(PoolState {
                 job: None,
-                epoch: 0,
-                participants: 0,
-                claimed: 0,
-                remaining: 0,
+                counters: RegionCounters::new(),
                 panic_payload: None,
                 shutdown: false,
             }),
@@ -355,10 +410,7 @@ impl WorkerPool {
                     .unwrap_or_else(|e| e.into_inner());
             }
             s.job = Some(job);
-            s.epoch = s.epoch.wrapping_add(1);
-            s.participants = self.handles.len().min(extra_workers);
-            s.claimed = 0;
-            s.remaining = s.participants;
+            s.counters.publish(self.handles.len().min(extra_workers));
             s.panic_payload = None;
             drop(s);
             // notify_all (not `participants` notify_ones): every worker
@@ -384,7 +436,7 @@ impl WorkerPool {
         // borrows this stack frame.
         let worker_panic = {
             let mut s = lock(&self.shared.state);
-            while s.remaining != 0 {
+            while s.counters.remaining != 0 {
                 s = self
                     .shared
                     .done_cv
@@ -431,6 +483,7 @@ fn global_pool() -> &'static WorkerPool {
 
 /// Run `f(i)` for every `i` in `0..n`, dynamically load-balanced over
 /// the pool with a shared atomic cursor and block size `block`.
+// hot-path
 pub fn parallel_for<F>(n: usize, block: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -461,12 +514,20 @@ where
 /// `*mut T` that may cross threads: the dispatch below hands each chunk
 /// index to exactly one executor, so derived `&mut` slices are disjoint.
 struct SendPtr<T>(*mut T);
+// SAFETY: sharing `&SendPtr<T>` across executors only exposes the raw
+// pointer value; every dereference happens inside `parallel_chunks`'s
+// drain closure, which derives non-overlapping `&mut [T]` pieces from
+// it (one chunk index per executor via the atomic cursor) — the
+// aliasing discipline is enforced there, `T: Send` makes moving the
+// pointee's ownership between threads sound, and the targeted tests run
+// under Miri (verify tier) to check exactly this.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Split `data` into `chunk`-sized mutable pieces and process each with
 /// `f(chunk_index, piece)` in parallel — the disjoint-writes primitive
 /// the GEMM row-blocking uses. Dispatch is a base pointer plus an atomic
 /// chunk cursor: no per-call piece list, no allocation.
+// hot-path
 pub fn parallel_chunks<T, F>(data: &mut [T], chunk: usize, f: F)
 where
     T: Send,
@@ -551,9 +612,30 @@ mod tests {
     }
 
     #[test]
+    fn region_counters_algebra() {
+        // The concrete mirror of rust/verify/pool.rs — cargo test pins
+        // the same publish/claim/finish algebra the Kani harness proves
+        // over symbolic schedules.
+        let mut c = RegionCounters::new();
+        c.publish(2);
+        assert_eq!((c.claimed, c.remaining), (0, 2));
+        assert!(c.try_claim());
+        assert!(c.try_claim());
+        assert!(!c.try_claim(), "fully staffed region rejects claims");
+        assert!(!c.finish_one());
+        assert!(c.finish_one(), "last finisher unblocks the join");
+        let e = c.epoch;
+        c.publish(0);
+        assert_eq!(c.epoch, e.wrapping_add(1));
+        assert_eq!(c.remaining, 0, "0-participant region joins instantly");
+        assert!(!c.try_claim());
+    }
+
+    #[test]
     fn parallel_for_covers_all_indices_once() {
-        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
-        parallel_for(1000, 16, |i| {
+        let n = crate::util::miri_scaled(1000, 96);
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, 16, |i| {
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
@@ -635,21 +717,23 @@ mod tests {
 
     #[test]
     fn steady_state_dispatch_spawns_no_threads() {
+        let len = crate::util::miri_scaled(4096, 512);
+        let rounds = crate::util::miri_scaled(50, 4);
         // Warm the global pool (first threaded call may spawn).
-        let mut v = vec![0u32; 4096];
+        let mut v = vec![0u32; len];
         parallel_chunks(&mut v, 64, |i, p| {
             for x in p.iter_mut() {
                 *x = i as u32;
             }
         });
         let before = spawn_count();
-        for _ in 0..50 {
+        for _ in 0..rounds {
             parallel_chunks(&mut v, 64, |i, p| {
                 for x in p.iter_mut() {
                     *x = x.wrapping_add(i as u32);
                 }
             });
-            parallel_for(4096, 64, |_| {});
+            parallel_for(len, 64, |_| {});
         }
         // Other tests in this binary only use the (already warm) global
         // pool, so the lifetime spawn counter must not have moved.

@@ -1,0 +1,474 @@
+//! Repo-invariant lint over `rust/src` — a zero-dependency source
+//! scanner that runs as a plain `cargo test` target (blocking in CI),
+//! so the invariants the verify tier proves locally stay true globally:
+//!
+//! * **thread-spawn** — no bare `std::thread::spawn` in non-test code
+//!   anywhere (unnamed threads are invisible in traces and panic
+//!   reports); `thread::Builder` spawning only in the allowlisted
+//!   subsystems that own threads.
+//! * **net-panic** — no `.unwrap()` / `.expect(` / `panic!` family in
+//!   non-test `comm/net/` code: that subsystem parses bytes a hostile
+//!   peer controls, and its contract (see `wire.rs`) is that every
+//!   failure is a typed `NetError`, never a process abort.
+//! * **unsafe-safety** — every `unsafe` keyword is immediately preceded
+//!   by (or inside a line following) a contiguous `//` comment block
+//!   containing `SAFETY`, so each unsafe site carries its argument.
+//! * **hot-path-alloc** — functions marked `// hot-path` must not
+//!   allocate per call: `Vec::new`, `vec![`, `.to_vec()`, `format!`,
+//!   `.to_string()`, `String::new` are banned inside their bodies (the
+//!   steady-state 0-alloc contract the benches assert dynamically,
+//!   enforced statically).
+//!
+//! Escape hatch: a `// repo-lint: allow(<rule>)` comment on the same
+//! line or within the three preceding lines suppresses one finding —
+//! every use must carry a justification alongside (reviewed, not
+//! enforced). Scanning is line-based after stripping string literals
+//! and comments (so prose mentioning `.unwrap()` never trips a rule)
+//! and stops at the first `#[cfg(test)]`, which by repo convention
+//! opens the trailing test module of a file.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Files allowed to spawn named (`thread::Builder`) threads: the
+/// subsystems that own long-lived workers. Bare `std::thread::spawn`
+/// is not allowed even here.
+const SPAWN_ALLOWLIST: &[&str] = &[
+    "util/pool.rs",
+    "data/loader.rs",
+    "comm/transport.rs",
+    "comm/net/world.rs",
+    "comm/net/transport.rs",
+];
+
+/// Tokens that can abort the process, banned in `comm/net/` non-test code.
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+/// Per-call allocation tokens banned inside `// hot-path` functions.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec![",
+    ".to_vec()",
+    "format!(",
+    ".to_string()",
+    "String::new",
+];
+
+#[derive(Debug)]
+struct Violation {
+    rule: &'static str,
+    file: String,
+    line: usize,
+    what: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.what
+        )
+    }
+}
+
+/// Strip line comments and the contents of string/char literals from
+/// one line of source, returning (code, comment). Escapes inside
+/// literals are handled; multi-line literals are rare enough in this
+/// tree that per-line scanning with this stripper is exact for every
+/// rule token (none of which can span lines).
+fn split_code_comment(line: &str) -> (String, String) {
+    let bytes = line.as_bytes();
+    let mut code = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == b'/' => {
+                return (code, line[i..].to_string());
+            }
+            '"' => {
+                // Skip the string literal body (keep empty quotes so
+                // token shapes like `format!(` stay intact upstream).
+                code.push('"');
+                i += 1;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'\\' => i += 2,
+                        b'"' => break,
+                        _ => i += 1,
+                    }
+                }
+                if i < bytes.len() {
+                    code.push('"');
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // Char literal or lifetime. A lifetime ('a, 'static) has
+                // no closing quote within a few bytes — copy it through.
+                let rest = &bytes[i + 1..];
+                let close = if rest.first() == Some(&b'\\') {
+                    rest.iter().skip(1).position(|&b| b == b'\'').map(|p| p + 1)
+                } else {
+                    rest.iter().take(2).position(|&b| b == b'\'')
+                };
+                if let Some(p) = close {
+                    code.push('\'');
+                    code.push('\'');
+                    i += p + 2;
+                } else {
+                    code.push('\'');
+                    i += 1;
+                }
+            }
+            _ => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    (code, String::new())
+}
+
+/// Is the finding on `lines[idx]` suppressed by a
+/// `// repo-lint: allow(<rule>)` comment here or up to 3 lines above?
+fn allowed(lines: &[&str], idx: usize, rule: &str) -> bool {
+    let needle = format!("repo-lint: allow({rule})");
+    lines[idx.saturating_sub(3)..=idx]
+        .iter()
+        .any(|l| l.contains(&needle))
+}
+
+/// The contiguous `//` / `#[` block directly above `idx` (doc comments
+/// and attributes), plus the line itself — where a SAFETY argument or
+/// a marker comment must live.
+fn preceding_comment_block<'a>(
+    lines: &'a [&'a str],
+    idx: usize,
+) -> Vec<&'a str> {
+    let mut block = vec![lines[idx]];
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = lines[j].trim_start();
+        if t.starts_with("//") || t.starts_with("#[") {
+            block.push(lines[j]);
+        } else {
+            break;
+        }
+    }
+    block
+}
+
+/// Lint one file's source. `rel` is the path relative to `rust/src`
+/// with `/` separators (what the allowlist and rules match on).
+fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    let is_net = rel.starts_with("comm/net/");
+    let spawn_ok = SPAWN_ALLOWLIST.contains(&rel);
+    // Depth of the brace nesting where the current `// hot-path`
+    // function body ends, if we are inside one.
+    let mut depth = 0i64;
+    let mut hot_until: Option<i64> = None;
+    let mut hot_pending = false;
+
+    for (idx, raw) in lines.iter().enumerate() {
+        let trimmed = raw.trim_start();
+        if trimmed.starts_with("#[cfg(test)]") {
+            break; // trailing test module — out of lint scope
+        }
+        let (code, comment) = split_code_comment(raw);
+        let lineno = idx + 1;
+
+        if comment.contains("// hot-path") {
+            hot_pending = true;
+        }
+
+        // --- thread-spawn ---------------------------------------------
+        if code.contains("std::thread::spawn")
+            || code.contains("thread::spawn(")
+        {
+            if !allowed(&lines, idx, "thread-spawn") {
+                out.push(Violation {
+                    rule: "thread-spawn",
+                    file: rel.to_string(),
+                    line: lineno,
+                    what: "bare thread::spawn (unnamed thread); use \
+                           thread::Builder in an allowlisted subsystem"
+                        .to_string(),
+                });
+            }
+        } else if code.contains("thread::Builder")
+            && !spawn_ok
+            && !allowed(&lines, idx, "thread-spawn")
+        {
+            out.push(Violation {
+                rule: "thread-spawn",
+                file: rel.to_string(),
+                line: lineno,
+                what: "thread::Builder outside the spawn allowlist"
+                    .to_string(),
+            });
+        }
+
+        // --- net-panic ------------------------------------------------
+        if is_net {
+            for tok in PANIC_TOKENS {
+                if code.contains(tok) && !allowed(&lines, idx, "net-panic") {
+                    out.push(Violation {
+                        rule: "net-panic",
+                        file: rel.to_string(),
+                        line: lineno,
+                        what: format!(
+                            "`{tok}` in comm/net decode surface; return a \
+                             typed NetError instead"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // --- unsafe-safety --------------------------------------------
+        let has_unsafe = code
+            .split(|c: char| !c.is_alphanumeric() && c != '_')
+            .any(|w| w == "unsafe");
+        if has_unsafe {
+            let block = preceding_comment_block(&lines, idx);
+            if !block.iter().any(|l| l.contains("SAFETY"))
+                && !allowed(&lines, idx, "unsafe-safety")
+            {
+                out.push(Violation {
+                    rule: "unsafe-safety",
+                    file: rel.to_string(),
+                    line: lineno,
+                    what: "`unsafe` without a preceding // SAFETY: comment"
+                        .to_string(),
+                });
+            }
+        }
+
+        // --- hot-path-alloc (and body tracking) -----------------------
+        if hot_until.is_some() {
+            for tok in ALLOC_TOKENS {
+                if code.contains(tok)
+                    && !allowed(&lines, idx, "hot-path-alloc")
+                {
+                    out.push(Violation {
+                        rule: "hot-path-alloc",
+                        file: rel.to_string(),
+                        line: lineno,
+                        what: format!(
+                            "`{tok}` allocates inside a // hot-path \
+                             function"
+                        ),
+                    });
+                }
+            }
+        }
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if hot_pending {
+                        // The marked fn's body just opened.
+                        hot_until = Some(depth - 1);
+                        hot_pending = false;
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if hot_until == Some(depth) {
+                        hot_until = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// Walk `dir` recursively, yielding every `.rs` file.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read_dir {}: {e}", dir.display()));
+    for entry in entries {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src")
+}
+
+#[test]
+fn repo_invariants_hold() {
+    let root = src_root();
+    let mut files = Vec::new();
+    rust_files(&root, &mut files);
+    files.sort();
+    assert!(
+        files.len() > 40,
+        "lint walked only {} files — wrong root?",
+        files.len()
+    );
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .expect("under src root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        violations.extend(lint_source(&rel, &src));
+    }
+    if !violations.is_empty() {
+        let mut msg = String::from("repo lint violations:\n");
+        for v in &violations {
+            msg.push_str(&format!("  {v}\n"));
+        }
+        panic!("{msg}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Meta-tests: seeded-violation fixtures proving each rule actually
+// fires, and that the escape hatch and scoping actually suppress.
+// ---------------------------------------------------------------------
+
+fn rules_of(violations: &[Violation]) -> Vec<&'static str> {
+    violations.iter().map(|v| v.rule).collect()
+}
+
+#[test]
+fn fixture_bare_spawn_fires_everywhere() {
+    let src = "fn f() {\n    let h = std::thread::spawn(|| {});\n}\n";
+    // Even in an allowlisted file, bare spawn is flagged.
+    assert_eq!(rules_of(&lint_source("util/pool.rs", src)), ["thread-spawn"]);
+    assert_eq!(rules_of(&lint_source("optim/adam.rs", src)), ["thread-spawn"]);
+}
+
+#[test]
+fn fixture_builder_allowlist_is_enforced() {
+    let src =
+        "fn f() {\n    std::thread::Builder::new().spawn(|| {}).ok();\n}\n";
+    assert!(rules_of(&lint_source("util/pool.rs", src)).is_empty());
+    assert_eq!(
+        rules_of(&lint_source("tensor/gemm.rs", src)),
+        ["thread-spawn"]
+    );
+}
+
+#[test]
+fn fixture_net_panic_fires_only_under_comm_net() {
+    for tok in ["x.unwrap()", "x.expect(\"y\")", "panic!(\"y\")"] {
+        let src = format!("fn f(x: Option<u8>) {{\n    {tok};\n}}\n");
+        assert_eq!(
+            rules_of(&lint_source("comm/net/wire.rs", &src)),
+            ["net-panic"],
+            "token {tok}"
+        );
+        // The same code outside comm/net is allowed.
+        assert!(rules_of(&lint_source("comm/mod.rs", &src)).is_empty());
+    }
+}
+
+#[test]
+fn fixture_unwrap_or_is_not_unwrap() {
+    let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap_or(0)\n}\n";
+    assert!(rules_of(&lint_source("comm/net/wire.rs", src)).is_empty());
+}
+
+#[test]
+fn fixture_unsafe_requires_safety_comment() {
+    let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    assert_eq!(
+        rules_of(&lint_source("tensor/pack.rs", bad)),
+        ["unsafe-safety"]
+    );
+    let good = "fn f(p: *const u8) -> u8 {\n    \
+                // SAFETY: caller guarantees p is valid.\n    \
+                unsafe { *p }\n}\n";
+    assert!(rules_of(&lint_source("tensor/pack.rs", good)).is_empty());
+    // The SAFETY argument may sit above attributes (unsafe impls).
+    let with_attr = "// SAFETY: T is plain-old-data.\n\
+                     #[allow(dead_code)]\n\
+                     unsafe impl Send for X {}\n";
+    assert!(rules_of(&lint_source("util/pool.rs", with_attr)).is_empty());
+}
+
+#[test]
+fn fixture_hot_path_alloc_fires_inside_marked_fn_only() {
+    let bad = "// hot-path\nfn f() {\n    let v = Vec::new();\n    \
+               drop(v);\n}\n";
+    assert_eq!(
+        rules_of(&lint_source("tensor/pack.rs", bad)),
+        ["hot-path-alloc"]
+    );
+    // Same allocation after the marked fn's body closes: clean.
+    let after = "// hot-path\nfn f() {}\n\nfn g() {\n    \
+                 let v: Vec<u8> = Vec::new();\n    drop(v);\n}\n";
+    assert!(rules_of(&lint_source("tensor/pack.rs", after)).is_empty());
+    for tok in ["vec![0u8; 4]", "x.to_vec()", "format!(\"{x}\")"] {
+        let src = format!(
+            "// hot-path\nfn f(x: &[u8]) {{\n    let _ = {tok};\n}}\n"
+        );
+        assert_eq!(
+            rules_of(&lint_source("tensor/pack.rs", &src)),
+            ["hot-path-alloc"],
+            "token {tok}"
+        );
+    }
+}
+
+#[test]
+fn fixture_allow_comment_suppresses_each_rule() {
+    let spawn = "fn f() {\n    \
+        // repo-lint: allow(thread-spawn) — fixture justification\n    \
+        let h = std::thread::spawn(|| {});\n}\n";
+    assert!(rules_of(&lint_source("optim/adam.rs", spawn)).is_empty());
+    let net = "fn f(x: Option<u8>) {\n    \
+        x.unwrap(); // repo-lint: allow(net-panic) — fixture\n}\n";
+    assert!(rules_of(&lint_source("comm/net/wire.rs", net)).is_empty());
+    let hot = "// hot-path\nfn f() {\n    \
+        // repo-lint: allow(hot-path-alloc) — warmup only\n    \
+        let v = Vec::new();\n    drop(v);\n}\n";
+    assert!(rules_of(&lint_source("tensor/pack.rs", hot)).is_empty());
+    // The allow comment must name the right rule to suppress.
+    let wrong = "fn f(x: Option<u8>) {\n    \
+        x.unwrap(); // repo-lint: allow(thread-spawn)\n}\n";
+    assert_eq!(
+        rules_of(&lint_source("comm/net/wire.rs", wrong)),
+        ["net-panic"]
+    );
+}
+
+#[test]
+fn fixture_test_module_and_prose_are_out_of_scope() {
+    let src = "/// Doc prose mentioning .unwrap() and panic!( is fine.\n\
+               fn f() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n    \
+               fn g(x: Option<u8>) { x.unwrap(); }\n\
+               }\n";
+    assert!(rules_of(&lint_source("comm/net/wire.rs", src)).is_empty());
+    let strlit = "fn f() -> &'static str {\n    \
+                  \"not a real .unwrap() call\"\n}\n";
+    assert!(rules_of(&lint_source("comm/net/wire.rs", strlit)).is_empty());
+}

@@ -1,0 +1,43 @@
+//! Bounded model-checking harnesses (`cargo kani`) over the crate's
+//! untrusted and `unsafe` surfaces.
+//!
+//! This tree compiles ONLY under `#[cfg(kani)]` — the hookup in
+//! `src/lib.rs` uses a `#[path]` hop so proof code lives outside `src/`
+//! yet sits inside the crate, which is what lets harnesses drive
+//! `pub(crate)` internals (`wire::field`, `pool::RegionCounters`, the
+//! `trace::ring` index helpers) rather than re-implementations of them.
+//! The default `cargo build` / `cargo test` never sees these modules;
+//! the scheduled `verify.yml` workflow runs them.
+//!
+//! ## What is proved (and the bounds)
+//!
+//! Kani explores ALL values of every `kani::any()` input up to the
+//! stated structural bounds — these are proofs over bounded shapes, not
+//! sampled tests:
+//!
+//! * [`wire`] — decode totality (no input byte string can panic
+//!   `read_frame`), encode→decode round-trip identity, `FrameKind`
+//!   discriminant totality, and single-bit-flip corruption detection
+//!   for every flip position outside the length field.
+//! * [`crc`] — incremental CRC32 ≡ one-shot for every split point, and
+//!   the IEEE check vector.
+//! * [`pool`] — the job-slot epoch/claim/finish state machine that
+//!   makes the lifetime-transmuted `Job` in `util::pool` sound: at most
+//!   `participants` claims per region, one claim per worker per epoch,
+//!   and `remaining == 0` exactly when every claimed executor finished.
+//! * [`ring`] — the SPSC index discipline of `trace::ring`: occupancy
+//!   never exceeds capacity, a push never lands inside the consumer's
+//!   unread window, and drop-on-full preserves both (so the per-slot
+//!   `UnsafeCell` accesses never alias across threads).
+//!
+//! Payload/iteration bounds are deliberately small (wire payloads ≤ 8
+//! bytes, CRC inputs ≤ 12 bytes, schedules ≤ 2·workers steps): the
+//! properties are control-flow properties, insensitive to scaling the
+//! data, and small bounds keep `cargo kani` minutes-cheap. Anything
+//! size-dependent (the 1 GiB `MAX_PAYLOAD` guard, full-ring wrap) is
+//! covered by unit tests instead.
+
+pub mod crc;
+pub mod pool;
+pub mod ring;
+pub mod wire;

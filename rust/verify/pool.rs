@@ -1,0 +1,98 @@
+//! Kani harnesses for `util::pool`'s region state machine — the
+//! counters that make the lifetime-transmuted `Job` sound.
+//!
+//! `run_limited` transmutes the caller's borrowed closure to `'static`
+//! before publishing it to workers. That is sound only if no worker can
+//! still hold the `Job` after `join_region` returns, which reduces to
+//! properties of [`RegionCounters`]: a region admits at most
+//! `participants` claims, a worker claims at most once per epoch, and
+//! `remaining` hits zero exactly when every claimed executor has
+//! finished (so the caller's wait can't end early). These harnesses
+//! drive the production transition methods — not a model — under every
+//! bounded interleaving of claim/finish steps Kani can construct.
+
+use crate::util::pool::RegionCounters;
+
+const WORKERS: usize = 3;
+
+/// Every bounded schedule of claim attempts and finishes preserves the
+/// region invariants, starting from ANY epoch (covers u64 wrap).
+#[kani::proof]
+#[kani::unwind(8)]
+fn region_schedule_preserves_claim_finish_invariants() {
+    let mut c = RegionCounters::new();
+    c.epoch = kani::any();
+    let start_epoch = c.epoch;
+    let mut last_epoch = [start_epoch; WORKERS];
+
+    let participants: usize = kani::any();
+    kani::assume(participants <= WORKERS);
+    c.publish(participants);
+    // wrapping +1 has no fixed point: workers parked on the old epoch
+    // always observe the new region.
+    assert_ne!(c.epoch, start_epoch);
+
+    let mut claimed_by = [false; WORKERS];
+    let mut claims = 0usize;
+    let mut finished = 0usize;
+    for _ in 0..2 * WORKERS {
+        let w: usize = kani::any();
+        kani::assume(w < WORKERS);
+        if kani::any() {
+            // Worker `w` runs the claim protocol from `worker_loop`.
+            if c.epoch != last_epoch[w] {
+                last_epoch[w] = c.epoch;
+                if c.try_claim() {
+                    // One claim per worker per epoch — two executors
+                    // can never both run worker `w`'s slot.
+                    assert!(!claimed_by[w]);
+                    claimed_by[w] = true;
+                    claims += 1;
+                }
+            }
+        } else if claims > finished {
+            // Some claimed executor finishes its slice.
+            let all_done = c.finish_one();
+            finished += 1;
+            // The caller's join unblocks exactly when the whole
+            // region is done — never before.
+            assert_eq!(all_done, finished == participants);
+        }
+        assert!(claims <= participants);
+        assert!(c.claimed <= c.participants);
+        assert_eq!(c.remaining, participants - finished);
+    }
+}
+
+/// Republishing re-arms every worker and resets the claim budget: the
+/// second region admits exactly its own `participants` claims no
+/// matter how the first ended.
+#[kani::proof]
+fn republish_resets_claim_budget() {
+    let mut c = RegionCounters::new();
+    c.epoch = kani::any();
+    c.publish(1);
+    let first_epoch = c.epoch;
+    assert!(c.try_claim());
+    assert!(!c.try_claim());
+    assert!(c.finish_one());
+
+    c.publish(2);
+    assert_ne!(c.epoch, first_epoch);
+    assert!(c.try_claim());
+    assert!(c.try_claim());
+    assert!(!c.try_claim());
+    assert!(!c.finish_one());
+    assert!(c.finish_one());
+}
+
+/// A zero-participant region (empty input, or no spare workers) joins
+/// immediately: nothing to claim, nothing to wait for.
+#[kani::proof]
+fn empty_region_needs_no_executors() {
+    let mut c = RegionCounters::new();
+    c.epoch = kani::any();
+    c.publish(0);
+    assert!(!c.try_claim());
+    assert_eq!(c.remaining, 0);
+}

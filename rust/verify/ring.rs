@@ -1,0 +1,69 @@
+//! Kani harnesses for `trace::ring`'s SPSC index discipline — the
+//! arithmetic the per-slot `UnsafeCell` accesses rely on.
+//!
+//! The ring uses monotonic wrapping head/tail counters and capacity
+//! `RING_CAP` (a power of two). The producer writes the slot
+//! [`push_slot`] returns and the consumer reads [`read_slot`] over the
+//! window `[tail, head)`; these harnesses prove the two can never name
+//! the same slot while an event is unread, for every reachable counter
+//! pair — including around `usize` wraparound, where naive `head - tail`
+//! reasoning breaks.
+
+use crate::trace::ring::{occupancy, push_slot, read_slot, RING_CAP};
+
+/// The reachable-state invariant: consumer never passes producer.
+fn reachable(head: usize, tail: usize) -> bool {
+    occupancy(head, tail) <= RING_CAP
+}
+
+/// In every reachable state, a granted push slot is in range and
+/// disjoint from EVERY unread slot (witnessed symbolically); a denied
+/// push means the ring is exactly full — drop-on-full never overwrites.
+#[kani::proof]
+fn push_slot_never_aliases_unread_window() {
+    let head: usize = kani::any();
+    let tail: usize = kani::any();
+    kani::assume(reachable(head, tail));
+    match push_slot(head, tail) {
+        None => assert_eq!(occupancy(head, tail), RING_CAP),
+        Some(slot) => {
+            assert!(slot < RING_CAP);
+            // Symbolic witness: ANY unread index i maps to a different
+            // physical slot than the one the producer will write.
+            let i: usize = kani::any();
+            kani::assume(i < occupancy(head, tail));
+            assert_ne!(read_slot(tail.wrapping_add(i)), slot);
+        }
+    }
+}
+
+/// Single-step induction: both transitions — producer publishes a
+/// granted slot, consumer advances over a non-empty window — preserve
+/// the reachable-state invariant, so it holds forever from the empty
+/// initial ring (where `occupancy(0, 0) == 0`).
+#[kani::proof]
+fn index_invariant_is_inductive() {
+    let head: usize = kani::any();
+    let tail: usize = kani::any();
+    kani::assume(reachable(head, tail));
+    if push_slot(head, tail).is_some() {
+        assert!(reachable(head.wrapping_add(1), tail));
+    }
+    if occupancy(head, tail) > 0 {
+        assert!(reachable(head, tail.wrapping_add(1)));
+        assert_eq!(
+            occupancy(head, tail.wrapping_add(1)),
+            occupancy(head, tail) - 1
+        );
+    }
+}
+
+/// Consumer-side slot math stays in range and walks the window in
+/// physical FIFO order without skips.
+#[kani::proof]
+fn read_slot_in_range_and_sequential() {
+    let tail: usize = kani::any();
+    let s = read_slot(tail);
+    assert!(s < RING_CAP);
+    assert_eq!(read_slot(tail.wrapping_add(1)), (s + 1) % RING_CAP);
+}

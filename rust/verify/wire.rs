@@ -1,0 +1,118 @@
+//! Kani harnesses for the `comm::net::wire` frame codec — the surface
+//! that parses bytes a hostile peer controls.
+
+use crate::comm::net::wire::{
+    self, FrameKind, HEADER_LEN, TRAILER_LEN,
+};
+
+/// Largest symbolic input: a full header + small payload + trailer.
+const MAX_BYTES: usize = HEADER_LEN + 8 + TRAILER_LEN;
+
+/// `read_frame` never panics, for ANY byte string a peer can send.
+///
+/// The one bound beyond buffer size: when the input is long enough to
+/// contain a length field, its value is assumed ≤ 8 so the symbolic
+/// `payload.resize(len)` stays tractable. Larger prefixes hit the
+/// `MAX_PAYLOAD` guard, pinned by the
+/// `oversize_length_prefix_rejected_without_allocating` unit test.
+#[kani::proof]
+#[kani::unwind(40)]
+fn read_frame_is_total() {
+    let buf: [u8; MAX_BYTES] = kani::any();
+    let n: usize = kani::any();
+    kani::assume(n <= MAX_BYTES);
+    if n >= HEADER_LEN {
+        let len = u32::from_le_bytes([buf[20], buf[21], buf[22], buf[23]]);
+        kani::assume(len <= 8);
+    }
+    let mut payload = Vec::new();
+    // The property IS "this call returns" — Ok or a typed NetError,
+    // never a panic, never an out-of-bounds index.
+    let _ = wire::read_frame(&mut &buf[..n], &mut payload);
+}
+
+/// The bounds-checked header reader returns exactly the requested
+/// window, or `Truncated` — for every offset including ones whose
+/// `off + N` would overflow `usize`.
+#[kani::proof]
+#[kani::unwind(12)]
+fn field_is_total_and_exact() {
+    let src: [u8; 9] = kani::any();
+    let off: usize = kani::any();
+    match wire::field::<4>(&src, off) {
+        Ok(out) => {
+            assert!(off + 4 <= src.len());
+            assert!(out == [src[off], src[off + 1], src[off + 2], src[off + 3]]);
+        }
+        Err(_) => assert!(off > src.len() - 4),
+    }
+}
+
+/// encode→decode is the identity on (kind, rank, round, payload) for
+/// every field value and every payload of length ≤ 4.
+#[kani::proof]
+#[kani::unwind(40)]
+fn encode_then_read_roundtrips() {
+    let kind_byte: u8 = kani::any();
+    kani::assume((1..=5).contains(&kind_byte));
+    let kind = FrameKind::from_u8(kind_byte).unwrap();
+    let rank: u32 = kani::any();
+    let round: u64 = kani::any();
+    let payload: [u8; 4] = kani::any();
+    let plen: usize = kani::any();
+    kani::assume(plen <= payload.len());
+
+    let mut frame = Vec::new();
+    let total =
+        wire::encode_frame(&mut frame, kind, rank, round, &payload[..plen])
+            .unwrap();
+    assert_eq!(total, HEADER_LEN + plen + TRAILER_LEN);
+
+    let mut out = Vec::new();
+    let mut cursor = &frame[..];
+    let hdr = wire::read_frame(&mut cursor, &mut out).unwrap();
+    assert_eq!(hdr.kind as u8, kind_byte);
+    assert_eq!(hdr.rank, rank);
+    assert_eq!(hdr.round, round);
+    assert_eq!(hdr.len, plen);
+    assert!(out[..] == payload[..plen]);
+    assert!(cursor.is_empty());
+}
+
+/// `FrameKind::from_u8` is total and inverts `as u8` exactly on the
+/// five live discriminants.
+#[kani::proof]
+fn frame_kind_from_u8_is_total_inverse() {
+    let v: u8 = kani::any();
+    match FrameKind::from_u8(v) {
+        Some(k) => assert_eq!(k as u8, v),
+        None => assert!(!(1..=5).contains(&v)),
+    }
+}
+
+/// Any single-bit flip anywhere in a frame — header, payload, or CRC
+/// trailer — turns decode into an error. The four length-prefix bytes
+/// are excluded: flipping them re-frames the stream (the decoder reads
+/// a different byte count), which is a desync the CRC's burst-error
+/// guarantee does not and cannot cover; the ring transport recovers
+/// from that via the magic sync marker on the next frame.
+#[kani::proof]
+#[kani::unwind(48)]
+fn single_bit_flip_never_decodes_ok() {
+    let rank: u32 = kani::any();
+    let round: u64 = kani::any();
+    let payload: [u8; 3] = kani::any();
+    let mut frame = Vec::new();
+    wire::encode_frame(&mut frame, FrameKind::Data, rank, round, &payload)
+        .unwrap();
+
+    let pos: usize = kani::any();
+    kani::assume(pos < frame.len());
+    kani::assume(!(20..24).contains(&pos));
+    let bit: u8 = kani::any();
+    kani::assume(bit < 8);
+    frame[pos] ^= 1 << bit;
+
+    let mut out = Vec::new();
+    assert!(wire::read_frame(&mut &frame[..], &mut out).is_err());
+}
