@@ -16,8 +16,6 @@
 //!
 //!   cargo bench --bench coordinator
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -26,37 +24,11 @@ use grasswalk::comm::{
     build_collective, Collective, CommMode, GradLayout, RingTransport,
     Transport,
 };
-
-/// Counts every allocation routed through the global allocator (same
-/// idiom as benches/optimizer_step.rs) — across ALL threads, so the
-/// persistent ring workers are covered too.
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(
-        &self,
-        ptr: *mut u8,
-        layout: Layout,
-        new_size: usize,
-    ) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-}
-
-#[global_allocator]
-static GLOBAL: CountingAlloc = CountingAlloc;
+// The process-wide allocation counter lives in the library's counting
+// global allocator (grasswalk::util::alloc), which replaced this
+// bench's hand-rolled `GlobalAlloc` wrapper. It still counts across
+// ALL threads, so the persistent ring workers are covered too.
+use grasswalk::util::alloc;
 
 /// N distinct free loopback peer addresses for the tcp-loopback rows.
 fn free_peers(n: usize) -> Vec<String> {
@@ -140,12 +112,12 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..5 {
             coll.all_reduce_mean(&mut bufs, &layout).unwrap();
         }
-        let before = ALLOCS.load(Ordering::Relaxed);
+        let before = alloc::alloc_calls();
         let rounds = 20;
         for _ in 0..rounds {
             coll.all_reduce_mean(&mut bufs, &layout).unwrap();
         }
-        let delta = ALLOCS.load(Ordering::Relaxed) - before;
+        let delta = alloc::alloc_calls() - before;
         assert_eq!(
             delta, 0,
             "steady-state dense comm round must perform zero allocations"

@@ -25,7 +25,6 @@
 //!    allocations across every thread in the process: the fork-join
 //!    dispatch itself is free once the pool is warm (ISSUE 3).
 
-use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -35,46 +34,18 @@ use grasswalk::optim::{
 };
 use grasswalk::runtime::Engine;
 use grasswalk::tensor::{matmul, matmul_tn, Mat};
+use grasswalk::util::alloc::{self, MemDomain};
 use grasswalk::util::bench::{header, Bench};
 use grasswalk::util::benchgate::Gate;
 use grasswalk::util::pool;
 use grasswalk::util::rng::Rng;
 
-/// Counts every allocation routed through the global allocator.
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(
-        &self,
-        ptr: *mut u8,
-        layout: Layout,
-        new_size: usize,
-    ) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-}
-
-#[global_allocator]
-static GLOBAL: CountingAlloc = CountingAlloc;
-
-/// Allocations performed by `f` on this thread path (single-threaded
-/// callers only — run under `pool::run_serial`).
+/// Allocations performed by `f` process-wide, via the library-level
+/// counting allocator in `grasswalk::util::alloc` (which replaced this
+/// bench's hand-rolled `GlobalAlloc` wrapper). Single-threaded callers
+/// only — run under `pool::run_serial`.
 fn alloc_count(f: impl FnOnce()) -> u64 {
-    let before = ALLOCS.load(Ordering::Relaxed);
-    f();
-    ALLOCS.load(Ordering::Relaxed) - before
+    alloc::count_process(f)
 }
 
 fn main() {
@@ -402,6 +373,108 @@ fn main() {
             &format!("trace overhead (traced - untraced) {m}x{n}"),
             delta_ns,
         );
+        trace::set_enabled(false);
+    }
+
+    // Traced + mem-diag steady state (ISSUE 9 acceptance): tracing AND
+    // per-domain byte tracking on, with the full per-step mem pipeline —
+    // domain scope, collector drain + memory counter sample, and all 20
+    // `mem/*` series pushed through interned ids — must stay 0-alloc
+    // once the ring, collector, sample store, and series capacity are
+    // warm. This is the contract that lets `--trace --mem-diag` run on
+    // the hot path without perturbing what it measures.
+    println!("-- traced + mem-diag step --");
+    {
+        use grasswalk::metrics::Recorder;
+        use grasswalk::trace::{self, Phase};
+        let (m, n, r) = (64usize, 172usize, 16usize);
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        let mut opt = Method::GrassWalk.build(r, 1_000_000, 1e-3, 1000);
+        let mut w = Mat::randn(m, n, 1.0, &mut rng);
+        let mut step_rng = Rng::new(13);
+        opt.step(&mut w, &g, &mut step_rng);
+        opt.step(&mut w, &g, &mut step_rng);
+
+        alloc::set_tracking(true);
+        trace::set_enabled(true);
+        let mut collector = trace::TraceCollector::new(false);
+        let mut rec = Recorder::new("bench-mem-diag");
+        let mem_ids: Vec<(_, _)> = MemDomain::ALL
+            .iter()
+            .map(|d| {
+                (
+                    rec.series_id(&format!("mem/{}/live", d.label())),
+                    rec.series_id(&format!("mem/{}/peak", d.label())),
+                )
+            })
+            .collect();
+        let proc_ids = (
+            rec.series_id("mem/process/live"),
+            rec.series_id("mem/process/peak"),
+        );
+
+        let mut step_no = 0usize;
+        let mut mem_step = |opt: &mut Box<dyn MatrixOptimizer>,
+                            w: &mut Mat,
+                            step_rng: &mut Rng,
+                            collector: &mut trace::TraceCollector,
+                            rec: &mut Recorder| {
+            let st = trace::start();
+            {
+                let _dom = alloc::scope(MemDomain::OptimState);
+                let _sp = trace::span(Phase::OptStep);
+                opt.step(w, &g, step_rng);
+            }
+            st.record(Phase::Step);
+            collector.drain();
+            collector.record_mem_sample(trace::now_ns(), alloc::live_all());
+            for (d, &(il, ip)) in MemDomain::ALL.iter().zip(&mem_ids) {
+                rec.push_id(il, step_no, alloc::live_bytes(*d) as f64);
+                rec.push_id(ip, step_no, alloc::peak_bytes(*d) as f64);
+            }
+            rec.push_id(
+                proc_ids.0,
+                step_no,
+                alloc::process_live_bytes() as f64,
+            );
+            rec.push_id(
+                proc_ids.1,
+                step_no,
+                alloc::process_peak_bytes() as f64,
+            );
+            step_no += 1;
+        };
+        // Warmup: ring registration, collector tables, the bounded
+        // memory-sample store, and enough series capacity that the
+        // measured steps below cannot cross a Vec growth boundary.
+        for _ in 0..70 {
+            mem_step(&mut opt, &mut w, &mut step_rng, &mut collector,
+                     &mut rec);
+        }
+
+        let allocs = pool::run_serial(|| {
+            alloc_count(|| {
+                for _ in 0..10 {
+                    mem_step(&mut opt, &mut w, &mut step_rng,
+                             &mut collector, &mut rec);
+                }
+            })
+        });
+        assert_eq!(
+            allocs, 0,
+            "traced + mem-diag steady-state step (scope + drain + \
+             sample + 20 series pushes) must not allocate"
+        );
+        gate.counter(
+            &format!("traced+mem-diag steady allocs {m}x{n}"),
+            allocs,
+        );
+
+        let st = b.run(&format!("traced+mem-diag step     {m}x{n}"), || {
+            mem_step(&mut opt, &mut w, &mut step_rng, &mut collector,
+                     &mut rec);
+        });
+        gate.time(&st);
         trace::set_enabled(false);
     }
 

@@ -65,6 +65,10 @@ impl GradLayout {
     /// Build from parameter shapes (ABI order). Shapes with other than
     /// two dimensions are treated as flat 1-D regions.
     pub fn from_shapes(shapes: &[Vec<usize>]) -> GradLayout {
+        // Layout metadata is comm-owned memory (ISSUE 9 attribution).
+        let _mem = crate::util::alloc::scope(
+            crate::util::alloc::MemDomain::CommBuffers,
+        );
         let mut regions = Vec::with_capacity(shapes.len());
         let mut off = 0usize;
         for sh in shapes {

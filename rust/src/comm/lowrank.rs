@@ -159,6 +159,13 @@ impl Collective for LowRankAllReduce {
             });
         }
 
+        // One-time buffer growth below (residual accumulators, packed
+        // wire buffers) lands in the CommBuffers memory domain; the
+        // steady-state round allocates nothing, so the scope guard is
+        // the only per-round cost (two TLS writes).
+        let _mem = crate::util::alloc::scope(
+            crate::util::alloc::MemDomain::CommBuffers,
+        );
         if self.residuals.is_empty() {
             self.residuals = (0..local)
                 .map(|_| {

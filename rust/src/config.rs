@@ -102,6 +102,7 @@ const TRAIN_KEYS: &[&str] = &[
     "trace",
     "trace_out",
     "metrics_stream",
+    "mem_diag",
 ];
 
 impl ExperimentConfig {
@@ -239,6 +240,7 @@ impl ExperimentConfig {
             tr.metrics_stream =
                 Some(get_str(&t, "train.metrics_stream", "")?.to_string());
         }
+        tr.mem_diag = get_bool(&t, "train.mem_diag", tr.mem_diag)?;
         Ok(cfg)
     }
 
@@ -491,6 +493,27 @@ opt_engine = "pjrt"
         // Wrong type errors loudly like every other key.
         assert!(
             ExperimentConfig::from_toml_str("[train]\ntrace = 1").is_err()
+        );
+    }
+
+    #[test]
+    fn parses_mem_diag_key() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[train]\nmem_diag = true",
+        )
+        .unwrap();
+        assert!(cfg.train.mem_diag);
+        // Default: off, like every other diagnostic.
+        let cfg = ExperimentConfig::from_toml_str("name = \"x\"").unwrap();
+        assert!(!cfg.train.mem_diag);
+        let err = ExperimentConfig::from_toml_str(
+            "[train]\nmem_diag = \"yes\"",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("mem_diag") && err.contains("boolean"),
+            "{err}"
         );
     }
 

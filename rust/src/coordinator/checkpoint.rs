@@ -365,6 +365,9 @@ pub fn save_trainer(
     path: impl AsRef<Path>,
 ) -> Result<()> {
     let sp = crate::trace::start();
+    let _mem = crate::util::alloc::scope(
+        crate::util::alloc::MemDomain::Checkpoint,
+    );
     let res = Checkpoint {
         step: trainer.current_step() as u64,
         seed: trainer.cfg.seed,

@@ -13,6 +13,8 @@ pub mod trainer;
 
 pub use allreduce::{Ring, RingStats};
 pub use checkpoint::{restore_trainer, save_trainer, Checkpoint};
-pub use memory::{CommMemory, MemoryBreakdown, MemoryModel};
+pub use memory::{
+    reconciliation_table, CommMemory, MemoryBreakdown, MemoryModel,
+};
 pub use pjrt_opt::PjrtProjected;
 pub use trainer::{OptEngine, TrainConfig, Trainer, TrainReport};

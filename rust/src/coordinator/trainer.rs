@@ -61,7 +61,8 @@ use crate::comm::{
     TransportMode,
 };
 use crate::data::{CorpusConfig, SyncLoader, TokenBatch};
-use crate::metrics::Recorder;
+use crate::metrics::{Recorder, SeriesId};
+use crate::util::alloc::{self, MemDomain};
 use crate::trace::{self, Phase, RankSummary, TraceCollector};
 use crate::model::shapes::PROJ_TYPES;
 use crate::optim::{
@@ -140,6 +141,13 @@ pub struct TrainConfig {
     /// Streaming JSONL metrics path (`--metrics-stream`); wired to the
     /// `Recorder` by the CLI, carried here so TOML presets can set it.
     pub metrics_stream: Option<String>,
+    /// Measured-memory diagnostics (`--mem-diag`): turns on per-domain
+    /// byte tracking in `util::alloc` before construction, records
+    /// `mem/<domain>/{live,peak}` series each step through interned
+    /// ids (0 steady-state allocations), feeds memory counter events
+    /// into the Chrome trace when tracing, and prints the end-of-run
+    /// model-vs-measured reconciliation table.
+    pub mem_diag: bool,
 }
 
 impl Default for TrainConfig {
@@ -169,6 +177,7 @@ impl Default for TrainConfig {
             trace: false,
             trace_out: None,
             metrics_stream: None,
+            mem_diag: false,
         }
     }
 }
@@ -404,6 +413,14 @@ impl Trainer {
                 ));
             }
         }
+        // Measured-memory tracking must be live before the first tagged
+        // allocation below (params, optimizer state, loaders, comm
+        // buffers), so the reconciliation table sees construction-time
+        // peaks. Enabled, never disabled: another trainer in the same
+        // process (tests) may still be tracking.
+        if cfg.mem_diag {
+            alloc::set_tracking(true);
+        }
         let model = engine.manifest.model.clone();
         let fwd_bwd = engine.load(&engine.manifest.fwd_bwd_key()?)?;
         let eval_exe = engine.load(&engine.manifest.eval_loss_key()?)?;
@@ -412,14 +429,20 @@ impl Trainer {
         // Parameters: python-matching init scheme (exact values differ
         // from jax PRNG; distributional match is what matters).
         let mut params = Vec::new();
-        for p in &model.params {
-            if p.shape.len() == 1 {
-                params.push(Value::F32(p.shape.clone(), vec![1.0; p.shape[0]]));
-            } else {
-                let std = (2.0 / (5.0 * p.shape[0] as f32)).sqrt();
-                let mut data = vec![0.0f32; p.shape.iter().product()];
-                rng.fill_normal(&mut data, std);
-                params.push(Value::F32(p.shape.clone(), data));
+        {
+            let _mem = alloc::scope(MemDomain::Model);
+            for p in &model.params {
+                if p.shape.len() == 1 {
+                    params.push(Value::F32(
+                        p.shape.clone(),
+                        vec![1.0; p.shape[0]],
+                    ));
+                } else {
+                    let std = (2.0 / (5.0 * p.shape[0] as f32)).sqrt();
+                    let mut data = vec![0.0f32; p.shape.iter().product()];
+                    rng.fill_normal(&mut data, std);
+                    params.push(Value::F32(p.shape.clone(), data));
+                }
             }
         }
 
@@ -444,6 +467,10 @@ impl Trainer {
             }
             _ => None,
         };
+        // Optimizer construction (and any eager state) lands in the
+        // OptimState domain; lazily-initialized moments inherit the
+        // scope re-entered around each step fan-out below.
+        let optim_mem = alloc::scope(MemDomain::OptimState);
         let mut proj_opts = match pjrt_rule {
             Some(rule) => ProjOpts::Engine(
                 (0..model.n_projected)
@@ -507,9 +534,13 @@ impl Trainer {
                 )
             })
             .collect();
+        drop(optim_mem);
 
         // Data: one shard per worker + a held-out eval shard.
-        let (loaders, eval_loader) = Self::build_loaders(&cfg, &model);
+        let (loaders, eval_loader) = {
+            let _mem = alloc::scope(MemDomain::Data);
+            Self::build_loaders(&cfg, &model)
+        };
 
         // Comm subsystem: flat-gradient layout + the configured
         // collective over a persistent transport (threads/links/sockets
@@ -517,6 +548,7 @@ impl Trainer {
         // layout fingerprint double as the TCP handshake's determinism
         // contract: a peer that would derive different shared bases or
         // ship a different gradient geometry is rejected by name.
+        let comm_mem = alloc::scope(MemDomain::CommBuffers);
         let shapes: Vec<Vec<usize>> =
             model.params.iter().map(|p| p.shape.clone()).collect();
         let grad_layout = GradLayout::from_shapes(&shapes);
@@ -541,6 +573,7 @@ impl Trainer {
             cfg.comm_rank,
             basis_seed,
         );
+        drop(comm_mem);
 
         // Tracing is enabled (never disabled) here: turning it off from
         // one trainer would silently stop a concurrently-traced run in
@@ -829,6 +862,10 @@ impl Trainer {
                 }
                 pool::parallel_items(&mut jobs, |_, job| {
                     // Per-matrix span on the executing worker's track.
+                    // The memory scope rides the worker thread too, so
+                    // lazily-initialized moments are attributed to
+                    // OptimState (workspace growth re-tags itself).
+                    let _mem = alloc::scope(MemDomain::OptimState);
                     let _sp = trace::span(Phase::OptStep);
                     job.opt.step(&mut job.w, &job.g, &mut job.rng);
                 });
@@ -850,6 +887,7 @@ impl Trainer {
                         Value::F32(Vec::new(), Vec::new()),
                     )
                     .into_mat()?;
+                    let _mem = alloc::scope(MemDomain::OptimState);
                     let sp = trace::start();
                     opt.step(&mut w, &g, &mut rng);
                     sp.record(Phase::OptStep);
@@ -860,6 +898,7 @@ impl Trainer {
 
         // --- dense params ------------------------------------------------
         let ds = trace::start();
+        let dense_mem = alloc::scope(MemDomain::OptimState);
         for (k, gv) in grad_iter.enumerate() {
             let i = n_proj + k;
             // A non-F32 gradient here is a runtime-ABI bug; dropping it
@@ -878,6 +917,7 @@ impl Trainer {
                 self.dense_opts[k].step(w, &gdata);
             }
         }
+        drop(dense_mem);
         ds.record(Phase::DenseStep);
 
         // Record the whole-step phase, then fold every ring into the
@@ -887,6 +927,11 @@ impl Trainer {
         step_t.record(Phase::Step);
         if let Some(tr) = self.tracer.as_mut() {
             tr.drain();
+            // Per-step memory counter sample for the Chrome export
+            // (allocation-free once the bounded store is warm).
+            if self.cfg.mem_diag {
+                tr.record_mem_sample(trace::now_ns(), alloc::live_all());
+            }
         }
 
         Ok(mean_loss)
@@ -1136,6 +1181,24 @@ impl Trainer {
         out
     }
 
+    /// Live-memory segment for the heartbeat line (`--mem-diag`), e.g.
+    /// ` | mem 41.2MiB live / 63.0MiB peak (top optim_state 18.4MiB)`.
+    /// Empty when byte tracking is off. Heartbeats are off the hot
+    /// path, so the formatting allocations here are fine.
+    fn heartbeat_mem(&self) -> String {
+        if !self.cfg.mem_diag || !alloc::tracking() {
+            return String::new();
+        }
+        let (top, top_bytes) = alloc::top_domain();
+        format!(
+            " | mem {} live / {} peak (top {} {})",
+            alloc::fmt_bytes(alloc::process_live_bytes()),
+            alloc::fmt_bytes(alloc::process_peak_bytes()),
+            top.label(),
+            alloc::fmt_bytes(top_bytes),
+        )
+    }
+
     /// Full training run with metric recording.
     pub fn run(&mut self, rec: &mut Recorder) -> Result<TrainReport> {
         rec.note("method", self.cfg.method.label());
@@ -1161,6 +1224,31 @@ impl Trainer {
         let id_comm_bytes = rec.series_id("comm/bytes");
         let id_comm_compression = rec.series_id("comm/compression");
         let id_comm_residual = rec.series_id("comm/residual");
+        // Measured-memory series (`--mem-diag`): two interned handles
+        // per domain plus the process pair, so the per-step pushes
+        // below are pure atomic reads + id pushes — 0 allocations,
+        // hard-asserted in benches/optimizer_step.rs.
+        let mem_ids: Vec<(SeriesId, SeriesId)> = if self.cfg.mem_diag {
+            MemDomain::ALL
+                .iter()
+                .map(|d| {
+                    (
+                        rec.series_id(&format!("mem/{}/live", d.label())),
+                        rec.series_id(&format!("mem/{}/peak", d.label())),
+                    )
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mem_proc_ids = if self.cfg.mem_diag {
+            Some((
+                rec.series_id("mem/process/live"),
+                rec.series_id("mem/process/peak"),
+            ))
+        } else {
+            None
+        };
         let mut last_train = f64::NAN;
         let mut last_eval = f64::NAN;
         // Heartbeat window state (steps/s over the last log interval).
@@ -1198,6 +1286,26 @@ impl Trainer {
             if self.cfg.subspace_diag {
                 self.record_subspace_diag(rec, s);
             }
+            if self.cfg.mem_diag {
+                for (d, &(il, ip)) in
+                    MemDomain::ALL.iter().zip(&mem_ids)
+                {
+                    rec.push_id(il, s, alloc::live_bytes(*d) as f64);
+                    rec.push_id(ip, s, alloc::peak_bytes(*d) as f64);
+                }
+                if let Some((il, ip)) = mem_proc_ids {
+                    rec.push_id(
+                        il,
+                        s,
+                        alloc::process_live_bytes() as f64,
+                    );
+                    rec.push_id(
+                        ip,
+                        s,
+                        alloc::process_peak_bytes() as f64,
+                    );
+                }
+            }
             if self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
                 let now = rec.elapsed_s();
                 let rate =
@@ -1205,10 +1313,11 @@ impl Trainer {
                 let eta_s = (self.cfg.steps - s) as f64 / rate.max(1e-9);
                 eprintln!(
                     "[{}] step {s}/{} loss {loss:.4} | {rate:.2} \
-                     steps/s | eta {eta_s:.0}s ({now:.1}s){}",
+                     steps/s | eta {eta_s:.0}s ({now:.1}s){}{}",
                     self.cfg.method.label(),
                     self.cfg.steps,
-                    self.heartbeat_split()
+                    self.heartbeat_split(),
+                    self.heartbeat_mem()
                 );
                 hb_step = s;
                 hb_t = now;

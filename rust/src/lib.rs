@@ -34,6 +34,8 @@
 //! * [`analysis`] — gradient-subspace energy & curvature (Figures 1–2)
 //! * [`config`] — TOML presets + typed experiment config
 //! * [`util`] — in-repo substrates (RNG, pool, JSON, TOML, CLI, bench)
+//!   plus the counting global allocator with tagged memory domains
+//!   ([`util::alloc`]) behind the `--mem-diag` measured-memory story
 
 pub mod ablation;
 pub mod analysis;

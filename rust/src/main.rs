@@ -28,7 +28,7 @@ use grasswalk::runtime::Engine;
 use grasswalk::util::cli::Args;
 
 const BOOL_FLAGS: &[&str] =
-    &["help", "quiet", "pjrt", "subspace-diag", "trace"];
+    &["help", "quiet", "pjrt", "subspace-diag", "trace", "mem-diag"];
 
 fn main() {
     // Keep the raw argv tail: `train --spawn-local N` re-execs this
@@ -174,6 +174,9 @@ fn train_config_from_args(args: &Args) -> Result<TrainConfig> {
     if let Some(p) = args.get("metrics-stream") {
         cfg.metrics_stream = Some(p.to_string());
     }
+    if args.has("mem-diag") {
+        cfg.mem_diag = true;
+    }
     Ok(cfg)
 }
 
@@ -214,7 +217,9 @@ fn run(cmd: &str, args: &Args, raw: &[String]) -> Result<()> {
                  \x20 --trace (step-phase spans + end-of-run phase table)\n\
                  \x20 --trace-out FILE.json (Chrome trace-event dump;\n\
                  \x20 implies --trace) --metrics-stream FILE.jsonl\n\
-                 \x20 (append one flushed record per step)"
+                 \x20 (append one flushed record per step)\n\
+                 \x20 --mem-diag (measured memory: per-domain live/peak\n\
+                 \x20 series, heartbeat memory, model-vs-measured table)"
             );
             Ok(())
         }
@@ -276,6 +281,11 @@ fn cmd_train(args: &Args, raw: &[String]) -> Result<()> {
         _ => None,
     };
     let engine = Arc::new(Engine::new(artifacts_dir(args))?);
+    // Captured before the engine moves into the trainer: the
+    // reconciliation table needs the analytic preset matching the
+    // compiled model.
+    let model_cfg = engine.manifest.model.config.clone();
+    let model_seq = engine.manifest.model.seq_len;
     let mut rec = Recorder::new(&run_name);
     if let Some(path) = &cfg.metrics_stream {
         let path = match net_rank {
@@ -339,6 +349,36 @@ fn cmd_train(args: &Args, raw: &[String]) -> Result<()> {
     }
     if let Some(table) = trainer.trace_phase_table() {
         println!("{table}");
+    }
+    if trainer.cfg.mem_diag {
+        match shapes::preset(&model_cfg) {
+            Some(preset) => {
+                // fixed_overhead is the testbed-calibrated CUDA/allocator
+                // constant — it has no host-measured counterpart, so the
+                // reconciliation compares against a 0-overhead model.
+                let mem = MemoryModel {
+                    seq_len: model_seq,
+                    fixed_overhead: 0,
+                    ..MemoryModel::default()
+                };
+                let b = mem.breakdown_with_comm(
+                    &preset,
+                    trainer.cfg.method,
+                    trainer.cfg.rank,
+                    trainer.cfg.comm,
+                    trainer.cfg.comm_rank,
+                    trainer.cfg.dp_world(),
+                );
+                print!(
+                    "{}",
+                    grasswalk::coordinator::reconciliation_table(&b)
+                );
+            }
+            None => eprintln!(
+                "mem-diag: no analytic preset for model config \
+                 `{model_cfg}`; skipping reconciliation table"
+            ),
+        }
     }
     if let Some(json) = trainer.trace_chrome_json() {
         let path = trainer.cfg.trace_out.clone().unwrap_or_default();

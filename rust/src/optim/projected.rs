@@ -266,7 +266,12 @@ impl ProjectedOptimizer {
         let v = self.v.as_mut().unwrap();
 
         // ---- project (eq 1) ---------------------------------------------
-        matmul_tn_into(s, g, &mut ws.gt); // r×n
+        {
+            // First-use growth of `ws.gt` is workspace scratch, not
+            // optimizer state (mem-diag attribution).
+            let _mem = crate::optim::workspace::scratch_scope();
+            matmul_tn_into(s, g, &mut ws.gt); // r×n
+        }
         self.last_energy_ratio = projected_energy_ratio(&ws.gt, g);
 
         // ---- moments ------------------------------------------------------
@@ -303,6 +308,11 @@ impl ProjectedOptimizer {
         }
 
         // ---- bias-corrected Adam direction --------------------------------
+        // Everything below writes into workspace buffers (dir / ghat /
+        // resid / column norms) or updates W in place: scratch growth,
+        // never state, so the whole tail runs under the Workspace
+        // memory domain.
+        let _mem = crate::optim::workspace::scratch_scope();
         let bc1 = 1.0 - cfg.beta1.powi(t as i32);
         let bc2 = 1.0 - cfg.beta2.powi(t as i32);
         ws.dir.assign_zip(m, v, |mm, vv| {

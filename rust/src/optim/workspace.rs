@@ -30,7 +30,18 @@
 //! transpose buffers instead of three fresh allocations per step.
 
 use crate::tensor::Mat;
+use crate::util::alloc::{scope, DomainScope, MemDomain};
 use crate::util::rng::Rng;
+
+/// RAII memory-domain scope for workspace scratch growth: optimizers
+/// enter this around the sections that size [`StepWorkspace`] buffers,
+/// so first-use growth is attributed to [`MemDomain::Workspace`]
+/// instead of the enclosing `OptimState` scope. Free in steady state
+/// (two TLS writes, no allocation) — the 0-alloc hard asserts in
+/// `benches/optimizer_step.rs` run through it.
+pub fn scratch_scope() -> DomainScope {
+    scope(MemDomain::Workspace)
+}
 
 /// Scratch buffers for one optimizer step in the canonical (`m <= n`)
 /// orientation. Field names follow the paper's Algorithm 1.
@@ -100,8 +111,14 @@ pub fn with_orientation(
         f(w, g, rng);
         return;
     }
-    w.t_into(&mut bufs.wt);
-    g.t_into(&mut bufs.gt);
+    {
+        // First-use growth of the transpose buffers is workspace
+        // scratch; the scope ends before `f`, whose own allocations
+        // (state init, refreshes) belong to the caller's domain.
+        let _mem = scratch_scope();
+        w.t_into(&mut bufs.wt);
+        g.t_into(&mut bufs.gt);
+    }
     f(&mut bufs.wt, &bufs.gt, rng);
     bufs.wt.t_into(w);
 }

@@ -212,6 +212,13 @@ impl SubspaceEngine {
         if !due {
             return Refresh { refreshed: false, previous: None };
         }
+        // Off the hot path: basis construction (SVD/geodesic/regen) is
+        // the subspace subsystem's allocation site, tagged so measured
+        // memory attributes it to SubspaceBasis rather than the
+        // enclosing optimizer scope.
+        let _mem = crate::util::alloc::scope(
+            crate::util::alloc::MemDomain::SubspaceBasis,
+        );
         let r = self.rank_for(g.rows);
         let s_new = match &self.basis {
             None => left_singular_basis(g, r),

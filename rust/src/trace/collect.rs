@@ -7,6 +7,7 @@ use std::fmt::Write as _;
 
 use super::ring::{self, Event};
 use super::Phase;
+use crate::util::alloc::MemDomain;
 use crate::util::json::{arr, num, obj, s, Json};
 
 // ---------------------------------------------------------------------
@@ -98,17 +99,26 @@ impl PhaseHist {
 /// unbounded allocation in a training loop.
 const MAX_CHROME_EVENTS: usize = 200_000;
 
+/// Retained memory-sample ceiling (one sample per step under
+/// `--mem-diag`; bounded for the same reason as [`MAX_CHROME_EVENTS`]).
+const MAX_MEM_SAMPLES: usize = 4096;
+
 /// Owns the drained view of the rings: per-phase histograms, track
 /// names, and (when a Chrome export was requested) a bounded retained
 /// copy of every event. `drain` is allocation-free in steady state —
 /// the only allocations are one `String` per *new* track name and the
-/// single up-front `events` reservation.
+/// single up-front `events` reservation. Under `--mem-diag` the
+/// trainer additionally feeds per-domain live-byte snapshots through
+/// [`TraceCollector::record_mem_sample`], which the Chrome export
+/// renders as counter ("C") events.
 pub struct TraceCollector {
     hists: Vec<PhaseHist>,
     track_names: Vec<String>,
     events: Vec<(u32, Event)>,
     events_dropped: u64,
     keep_events: bool,
+    mem_samples: Vec<(u64, [u64; MemDomain::COUNT])>,
+    mem_samples_dropped: u64,
 }
 
 impl TraceCollector {
@@ -123,7 +133,34 @@ impl TraceCollector {
             },
             events_dropped: 0,
             keep_events,
+            mem_samples: Vec::new(),
+            mem_samples_dropped: 0,
         }
+    }
+
+    /// Record one per-domain live-byte snapshot (`--mem-diag`, one per
+    /// step). The store reserves its full bounded capacity on first
+    /// use, so steady-state recording is allocation-free (covered by
+    /// the `benches/optimizer_step.rs` hard assert); samples beyond
+    /// [`MAX_MEM_SAMPLES`] are counted and dropped.
+    pub fn record_mem_sample(
+        &mut self,
+        ts_ns: u64,
+        live: [u64; MemDomain::COUNT],
+    ) {
+        if self.mem_samples.capacity() == 0 {
+            self.mem_samples.reserve_exact(MAX_MEM_SAMPLES);
+        }
+        if self.mem_samples.len() < MAX_MEM_SAMPLES {
+            self.mem_samples.push((ts_ns, live));
+        } else {
+            self.mem_samples_dropped += 1;
+        }
+    }
+
+    /// Retained memory samples `(ts_ns, live-by-domain)` for tests.
+    pub fn mem_samples(&self) -> &[(u64, [u64; MemDomain::COUNT])] {
+        &self.mem_samples
     }
 
     /// Drain all rings into this collector. Call at step boundaries.
@@ -134,6 +171,7 @@ impl TraceCollector {
             events,
             events_dropped,
             keep_events,
+            ..
         } = self;
         ring::drain(|track, name, ev| {
             if track >= track_names.len() {
@@ -249,14 +287,21 @@ impl TraceCollector {
                 100.0 * self.step_fraction(p)
             );
         }
+        // Truncation is surfaced unconditionally: a silent zero is the
+        // evidence that nothing was lost, and a nonzero count also
+        // warns on stderr so it survives stdout redirection.
         let dropped = ring::dropped_events();
-        if dropped > 0 {
-            let _ = writeln!(t, "ring events dropped: {dropped}");
-        }
-        if self.events_dropped > 0 {
-            let _ = writeln!(
-                t,
-                "chrome events beyond cap ({MAX_CHROME_EVENTS}): {}",
+        let _ = writeln!(t, "ring events dropped: {dropped}");
+        let _ = writeln!(
+            t,
+            "chrome events beyond cap ({MAX_CHROME_EVENTS}): {}",
+            self.events_dropped
+        );
+        if dropped > 0 || self.events_dropped > 0 {
+            eprintln!(
+                "warning: trace truncated — {dropped} ring events \
+                 dropped, {} chrome events beyond the \
+                 {MAX_CHROME_EVENTS}-event --trace-out cap",
                 self.events_dropped
             );
         }
@@ -321,6 +366,23 @@ impl TraceCollector {
                 ("tid", num(track as f64)),
                 ("ts", num(ev.start_ns as f64 / 1000.0)),
                 ("dur", num(ev.dur_ns() as f64 / 1000.0)),
+            ]));
+        }
+        // Memory counter track (`--mem-diag`): per-domain live bytes as
+        // Chrome counter events — renders as a stacked area chart.
+        for &(ts_ns, live) in &self.mem_samples {
+            let args: Vec<(&str, Json)> = MemDomain::ALL
+                .iter()
+                .map(|d| (d.label(), num(live[*d as usize] as f64)))
+                .collect();
+            evs.push(obj(vec![
+                ("name", s("mem_live_bytes")),
+                ("cat", s("mem")),
+                ("ph", s("C")),
+                ("pid", num(rank as f64)),
+                ("tid", num(0.0)),
+                ("ts", num(ts_ns as f64 / 1000.0)),
+                ("args", obj(args)),
             ]));
         }
         obj(vec![

@@ -115,6 +115,11 @@ thread_local! {
 fn with_ring<T>(f: impl FnOnce(&TraceRing) -> T) -> T {
     RING.with(|cell| {
         let ring = cell.get_or_init(|| {
+            // One-time per-thread preallocation: attributed to the
+            // TraceRings memory domain (ISSUE 9).
+            let _mem = crate::util::alloc::scope(
+                crate::util::alloc::MemDomain::TraceRings,
+            );
             let name = std::thread::current()
                 .name()
                 .unwrap_or("thread")

@@ -1,0 +1,483 @@
+//! Counting global allocator + tagged memory domains — the *measured*
+//! half of the memory story (the predicted half is
+//! [`crate::coordinator::memory::MemoryModel`]).
+//!
+//! The paper's headline claim is optimizer-state memory savings, but a
+//! model alone can't validate it: this module routes every heap
+//! allocation in the process through a thin [`GlobalAlloc`] wrapper so
+//! the claimed savings become a measured, gateable number
+//! (EXPERIMENTS.md §Memory).
+//!
+//! ## Design
+//!
+//! * **One allocator, library-level.** `#[global_allocator]` lives here
+//!   and nowhere else (enforced by a `repo_lint` rule); benches and
+//!   tests that used to carry their own counting wrappers now read
+//!   [`alloc_calls`] / [`count_process`] / [`count_thread`] instead.
+//! * **Idle-path cost contract.** With byte tracking off (the default),
+//!   an allocation costs one relaxed atomic increment, one relaxed
+//!   flag load, a thread-local cell bump, and a one-byte header write —
+//!   ~2 relaxed atomic operations, no locks, no syscalls. The
+//!   steady-state 0-alloc hard asserts in `benches/optimizer_step.rs`
+//!   run under this wrapper, so its own paths must never allocate.
+//! * **Header tagging.** Every block is over-allocated by
+//!   `align.max(16)` bytes and the first byte records which
+//!   [`MemDomain`] was current at allocation time (plus a "counted"
+//!   bit). Deallocation reads the tag back, so bytes are always
+//!   credited to the domain that *allocated* them — live accounting
+//!   stays exact even when a buffer is freed from a different scope or
+//!   thread, and per-domain live totals always sum to the process
+//!   total (pinned in rust/tests/mem_props.rs).
+//! * **RAII scopes.** [`scope`] sets the calling thread's current
+//!   domain and restores the previous one on drop; scopes nest, and
+//!   child allocations land in the innermost domain. Enabling tracking
+//!   ([`set_tracking`]) is monotonic within a run: blocks allocated
+//!   before enablement carry an uncounted tag and stay invisible to
+//!   both sides of the ledger.
+//!
+//! `--mem-diag` turns byte tracking on before trainer construction,
+//! records `mem/<domain>/{live,peak}` series through the interned
+//! [`crate::metrics::SeriesId`] path, feeds Chrome counter events into
+//! the trace collector, and prints the end-of-run model-vs-measured
+//! reconciliation table.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+
+/// Fixed domain vocabulary. Discriminants are the index order of every
+/// per-domain array and metric series, so variants must stay dense
+/// from 0 (same contract as [`crate::trace::Phase`]).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum MemDomain {
+    /// Optimizer moments + per-matrix persistent state.
+    OptimState = 0,
+    /// Reusable step scratch ([`crate::optim::workspace`]).
+    Workspace = 1,
+    /// Collective pack/residual buffers and layout metadata.
+    CommBuffers = 2,
+    /// Subspace bases and refresh intermediates.
+    SubspaceBasis = 3,
+    /// Per-thread trace ring preallocation.
+    TraceRings = 4,
+    /// Checkpoint serialization buffers.
+    Checkpoint = 5,
+    /// Model parameters and gradients (host side).
+    Model = 6,
+    /// Corpus, tokenizer, loader shards.
+    Data = 7,
+    /// Everything outside an explicit scope.
+    Other = 8,
+}
+
+impl MemDomain {
+    pub const COUNT: usize = 9;
+
+    pub const ALL: [MemDomain; MemDomain::COUNT] = [
+        MemDomain::OptimState,
+        MemDomain::Workspace,
+        MemDomain::CommBuffers,
+        MemDomain::SubspaceBasis,
+        MemDomain::TraceRings,
+        MemDomain::Checkpoint,
+        MemDomain::Model,
+        MemDomain::Data,
+        MemDomain::Other,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            MemDomain::OptimState => "optim_state",
+            MemDomain::Workspace => "workspace",
+            MemDomain::CommBuffers => "comm_buffers",
+            MemDomain::SubspaceBasis => "subspace_basis",
+            MemDomain::TraceRings => "trace_rings",
+            MemDomain::Checkpoint => "checkpoint",
+            MemDomain::Model => "model",
+            MemDomain::Data => "data",
+            MemDomain::Other => "other",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Counters.
+// ---------------------------------------------------------------------
+
+/// Process-wide allocation-event counter (alloc + realloc, like the
+/// historical bench wrappers; dealloc is not an event). Always on.
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Byte-tracking gate: off by default so the idle path stays ~2 relaxed
+/// atomics per allocation.
+static TRACKING: AtomicBool = AtomicBool::new(false);
+
+// Rust 1.75-compatible array-of-atomics initialization.
+#[allow(clippy::declare_interior_mutable_const)]
+const LIVE0: AtomicI64 = AtomicI64::new(0);
+#[allow(clippy::declare_interior_mutable_const)]
+const PEAK0: AtomicU64 = AtomicU64::new(0);
+
+/// Per-domain live bytes (exact: deallocs are credited to the
+/// allocating domain via the header tag, so these never go negative).
+static LIVE: [AtomicI64; MemDomain::COUNT] = [LIVE0; MemDomain::COUNT];
+/// Per-domain peak live bytes since tracking was enabled.
+static PEAK: [AtomicU64; MemDomain::COUNT] = [PEAK0; MemDomain::COUNT];
+static PROC_LIVE: AtomicI64 = AtomicI64::new(0);
+static PROC_PEAK: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Allocation events on this thread (alloc + realloc).
+    static TL_CALLS: Cell<u64> = const { Cell::new(0) };
+    /// The thread's current domain tag (a `MemDomain` discriminant).
+    static TL_DOMAIN: Cell<u8> = const { Cell::new(MemDomain::Other as u8) };
+}
+
+/// Turn per-domain byte tracking on (monotonic within a run: blocks
+/// allocated while tracking was off carry an uncounted tag and never
+/// enter the ledger, so disabling and re-enabling mid-run would only
+/// blind the ledger to the interregnum — the trainer enables once,
+/// before construction).
+pub fn set_tracking(on: bool) {
+    TRACKING.store(on, Ordering::Relaxed);
+}
+
+/// Is per-domain byte tracking on?
+#[inline]
+pub fn tracking() -> bool {
+    TRACKING.load(Ordering::Relaxed)
+}
+
+/// Process-wide allocation events so far (alloc + realloc calls).
+/// Benches diff this around a region under test.
+#[inline]
+pub fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// Allocation events performed by `f` process-wide (all threads — run
+/// under `pool::run_serial` to exclude pool dispatch).
+pub fn count_process(f: impl FnOnce()) -> u64 {
+    let before = alloc_calls();
+    f();
+    alloc_calls() - before
+}
+
+/// Allocation events performed by `f` on the calling thread only —
+/// isolates the code under test from harness threads.
+pub fn count_thread(f: impl FnOnce()) -> u64 {
+    let before = TL_CALLS.with(Cell::get);
+    f();
+    TL_CALLS.with(Cell::get) - before
+}
+
+/// Live bytes currently attributed to `d` (0 until tracking is on).
+#[inline]
+pub fn live_bytes(d: MemDomain) -> u64 {
+    LIVE[d as usize].load(Ordering::Relaxed).max(0) as u64
+}
+
+/// Peak live bytes attributed to `d` since tracking was enabled.
+#[inline]
+pub fn peak_bytes(d: MemDomain) -> u64 {
+    PEAK[d as usize].load(Ordering::Relaxed)
+}
+
+/// Tracked live bytes process-wide (= Σ domains, pinned in mem_props).
+#[inline]
+pub fn process_live_bytes() -> u64 {
+    PROC_LIVE.load(Ordering::Relaxed).max(0) as u64
+}
+
+/// Peak tracked live bytes process-wide.
+#[inline]
+pub fn process_peak_bytes() -> u64 {
+    PROC_PEAK.load(Ordering::Relaxed)
+}
+
+/// Current live bytes of every domain, in discriminant order.
+pub fn live_all() -> [u64; MemDomain::COUNT] {
+    let mut out = [0u64; MemDomain::COUNT];
+    for d in MemDomain::ALL {
+        out[d as usize] = live_bytes(d);
+    }
+    out
+}
+
+/// The domain holding the most live bytes right now (heartbeat line).
+pub fn top_domain() -> (MemDomain, u64) {
+    let mut best = (MemDomain::Other, 0u64);
+    for d in MemDomain::ALL {
+        let b = live_bytes(d);
+        if b > best.1 {
+            best = (d, b);
+        }
+    }
+    best
+}
+
+/// `"12.3MiB"`-style rendering for log lines and tables.
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2}GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.1}MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.1}KiB", b / KIB)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
+// ---------------------------------------------------------------------
+// RAII domain scopes.
+// ---------------------------------------------------------------------
+
+/// Restores the thread's previous domain on drop. `!Send`: the guard
+/// manipulates thread-local state and must drop on the thread that
+/// created it.
+pub struct DomainScope {
+    prev: u8,
+    _not_send: PhantomData<*const ()>,
+}
+
+/// Enter `d` on the calling thread until the guard drops. Nesting
+/// works as expected: allocations land in the innermost scope. The
+/// guard performs no heap allocation, so scopes are safe inside the
+/// 0-alloc hard-asserted hot paths.
+#[inline]
+pub fn scope(d: MemDomain) -> DomainScope {
+    let prev = TL_DOMAIN
+        .try_with(|c| {
+            let p = c.get();
+            c.set(d as u8);
+            p
+        })
+        .unwrap_or(MemDomain::Other as u8);
+    DomainScope { prev, _not_send: PhantomData }
+}
+
+impl Drop for DomainScope {
+    fn drop(&mut self) {
+        let _ = TL_DOMAIN.try_with(|c| c.set(self.prev));
+    }
+}
+
+// ---------------------------------------------------------------------
+// The allocator.
+// ---------------------------------------------------------------------
+
+/// Counted-bit of the header tag; low bits hold the domain index.
+const COUNTED: u8 = 0x80;
+const DOMAIN_MASK: u8 = 0x7f;
+
+/// Header prefix size: at least 16 (keeps any `align <= 16` request
+/// aligned) and exactly `align` beyond that, so the user pointer
+/// `base + pad` always satisfies the requested alignment.
+#[inline]
+fn pad_for(layout: Layout) -> usize {
+    layout.align().max(16)
+}
+
+#[inline]
+fn padded(layout: Layout) -> Option<Layout> {
+    let size = layout.size().checked_add(pad_for(layout))?;
+    Layout::from_size_align(size, layout.align()).ok()
+}
+
+/// Tag for a fresh block: current domain, counted iff tracking is on.
+/// `try_with` keeps the allocator safe on threads whose TLS is already
+/// torn down (those allocations fall into [`MemDomain::Other`]).
+#[inline]
+fn current_tag() -> u8 {
+    let d = TL_DOMAIN
+        .try_with(Cell::get)
+        .unwrap_or(MemDomain::Other as u8);
+    if tracking() {
+        d | COUNTED
+    } else {
+        d
+    }
+}
+
+#[inline]
+fn note_call() {
+    ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+    let _ = TL_CALLS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// Credit `bytes` to domain index `d` (and the process ledger),
+/// updating both peaks.
+#[inline]
+fn credit(d: usize, bytes: usize) {
+    let b = bytes as i64;
+    let now = LIVE[d].fetch_add(b, Ordering::Relaxed) + b;
+    if now > 0 {
+        PEAK[d].fetch_max(now as u64, Ordering::Relaxed);
+    }
+    let pnow = PROC_LIVE.fetch_add(b, Ordering::Relaxed) + b;
+    if pnow > 0 {
+        PROC_PEAK.fetch_max(pnow as u64, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+fn debit(d: usize, bytes: usize) {
+    LIVE[d].fetch_sub(bytes as i64, Ordering::Relaxed);
+    PROC_LIVE.fetch_sub(bytes as i64, Ordering::Relaxed);
+}
+
+/// The process-wide counting allocator. Forwards to [`System`] with a
+/// tag header; see the module doc for the cost contract.
+pub struct CountingAlloc;
+
+// SAFETY: every method forwards to `System` with a layout widened by a
+// constant header (`padded` checks the size arithmetic); the user
+// pointer `base + pad` satisfies the requested alignment because `pad`
+// is `align.max(16)`, a multiple of the (power-of-two) alignment; and
+// dealloc/realloc reconstruct the identical widened layout from the
+// same `pad_for`, so System always sees matching alloc/free pairs.
+unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: callers uphold the GlobalAlloc contract (non-zero-size
+    // layout); the returned pointer is `pad` bytes into a block of
+    // `size + pad` bytes, so the user region is fully in-bounds.
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let pad = pad_for(layout);
+        let Some(l) = padded(layout) else {
+            return std::ptr::null_mut();
+        };
+        let base = System.alloc(l);
+        if base.is_null() {
+            return base;
+        }
+        note_call();
+        let tag = current_tag();
+        *base = tag;
+        if tag & COUNTED != 0 {
+            credit((tag & DOMAIN_MASK) as usize, layout.size());
+        }
+        base.add(pad)
+    }
+
+    // SAFETY: `ptr` came from `alloc`/`realloc` above, so the true
+    // block base sits exactly `pad_for(layout)` bytes below it and the
+    // header byte at the base is initialized.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        let pad = pad_for(layout);
+        let base = ptr.sub(pad);
+        let tag = *base;
+        if tag & COUNTED != 0 {
+            debit((tag & DOMAIN_MASK) as usize, layout.size());
+        }
+        // padded() succeeded at alloc time for this layout.
+        let l = padded(layout).unwrap();
+        System.dealloc(base, l);
+    }
+
+    // SAFETY: same provenance argument as `dealloc`; `System.realloc`
+    // preserves the prefix, so the header byte survives the move and
+    // the new user pointer is re-derived from the new base.
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        let pad = pad_for(layout);
+        let base = ptr.sub(pad);
+        let Some(total) = new_size.checked_add(pad) else {
+            return std::ptr::null_mut();
+        };
+        let old = padded(layout).unwrap();
+        let nb = System.realloc(base, old, total);
+        if nb.is_null() {
+            return nb;
+        }
+        note_call();
+        // The header byte travels with the block: the original
+        // domain keeps ownership of the bytes across growth.
+        let tag = *nb;
+        if tag & COUNTED != 0 {
+            let d = (tag & DOMAIN_MASK) as usize;
+            if new_size >= layout.size() {
+                credit(d, new_size - layout.size());
+            } else {
+                debit(d, layout.size() - new_size);
+            }
+        }
+        nb.add(pad)
+    }
+}
+
+/// The one and only global allocator (repo_lint enforces uniqueness).
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domain_all_matches_discriminants() {
+        for (i, d) in MemDomain::ALL.iter().enumerate() {
+            assert_eq!(*d as usize, i);
+        }
+        assert_eq!(MemDomain::ALL.len(), MemDomain::COUNT);
+    }
+
+    #[test]
+    fn labels_unique_and_nonempty() {
+        let mut seen = std::collections::BTreeSet::new();
+        for d in MemDomain::ALL {
+            assert!(!d.label().is_empty());
+            assert!(seen.insert(d.label()), "dup label {}", d.label());
+        }
+    }
+
+    #[test]
+    fn alloc_calls_counts_this_thread() {
+        let n = count_thread(|| {
+            let v: Vec<u8> = Vec::with_capacity(256);
+            drop(v);
+        });
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn scope_nesting_restores_previous() {
+        let read = || TL_DOMAIN.with(Cell::get);
+        let outer = read();
+        {
+            let _a = scope(MemDomain::OptimState);
+            assert_eq!(read(), MemDomain::OptimState as u8);
+            {
+                let _b = scope(MemDomain::Workspace);
+                assert_eq!(read(), MemDomain::Workspace as u8);
+            }
+            assert_eq!(read(), MemDomain::OptimState as u8);
+        }
+        assert_eq!(read(), outer);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.0MiB");
+        assert!(fmt_bytes(5 << 30).ends_with("GiB"));
+    }
+
+    #[test]
+    fn pad_preserves_alignment() {
+        for a in [1usize, 2, 4, 8, 16, 32, 64] {
+            let l = Layout::from_size_align(10, a).unwrap();
+            let pad = pad_for(l);
+            assert!(pad >= 16);
+            assert_eq!(pad % a, 0, "pad must keep user ptr aligned");
+        }
+    }
+}

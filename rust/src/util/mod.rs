@@ -1,6 +1,8 @@
 //! In-repo substrates replacing crates unavailable offline: PRNG, thread
-//! pool, JSON, TOML subset, CLI parsing, and a bench harness.
+//! pool, JSON, TOML subset, CLI parsing, a bench harness, and the
+//! counting global allocator with tagged memory domains ([`alloc`]).
 
+pub mod alloc;
 pub mod bench;
 pub mod benchgate;
 pub mod cli;

@@ -1,0 +1,350 @@
+//! Property tests for the measured-memory subsystem (ISSUE 9): domain
+//! scopes nest and attribute allocations to the innermost scope with
+//! exact byte accounting, per-domain live totals sum to the process
+//! total, the measured low-rank optimizer-state footprint beats dense
+//! Adam on the TINY preset, the disabled path performs zero heap
+//! allocations, the `mem/*` series are bitwise-stable across `--trace`
+//! on/off, and a `--mem-diag` run emits finite series plus the
+//! model-vs-measured reconciliation table.
+//!
+//! Byte tracking and the domain ledgers are process-global, so every
+//! test that enables tracking or asserts ledger deltas serializes on
+//! one binary-local mutex (same discipline as trace_props.rs).
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use grasswalk::metrics::Recorder;
+use grasswalk::model::shapes;
+use grasswalk::optim::{MatrixOptimizer, Method};
+use grasswalk::tensor::Mat;
+use grasswalk::util::alloc::{self, MemDomain};
+use grasswalk::util::rng::Rng;
+
+fn guard() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts`");
+        return None;
+    }
+    Some(dir)
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("gw-mem-props-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---------------------------------------------------------------------
+// Scope nesting + exact attribution.
+// ---------------------------------------------------------------------
+
+#[test]
+fn scopes_nest_and_attribute_to_innermost() {
+    let _g = guard();
+    alloc::set_tracking(true);
+    let o0 = alloc::live_bytes(MemDomain::OptimState);
+    let w0 = alloc::live_bytes(MemDomain::Workspace);
+    let outer_buf;
+    let inner_buf;
+    {
+        let _a = alloc::scope(MemDomain::OptimState);
+        outer_buf = vec![0u8; 1 << 20];
+        {
+            let _b = alloc::scope(MemDomain::Workspace);
+            inner_buf = vec![0u8; 1 << 19];
+        }
+        // Inner guard dropped: allocations fall back to the outer scope.
+        let more = vec![0u8; 1 << 18];
+        assert_eq!(
+            alloc::live_bytes(MemDomain::OptimState) - o0,
+            (1 << 20) + (1 << 18),
+            "outer scope owns its own and post-inner allocations"
+        );
+        drop(more);
+    }
+    assert_eq!(alloc::live_bytes(MemDomain::OptimState) - o0, 1 << 20);
+    assert_eq!(
+        alloc::live_bytes(MemDomain::Workspace) - w0,
+        1 << 19,
+        "child bytes land in the innermost domain"
+    );
+    // Frees outside any scope still debit the ALLOCATING domain: the
+    // header tag travels with the block.
+    drop(inner_buf);
+    assert_eq!(alloc::live_bytes(MemDomain::Workspace), w0);
+    drop(outer_buf);
+    assert_eq!(alloc::live_bytes(MemDomain::OptimState), o0);
+    // Peaks are monotone: they must still remember the high-water mark.
+    assert!(alloc::peak_bytes(MemDomain::OptimState) >= (1 << 20));
+    alloc::set_tracking(false);
+}
+
+// ---------------------------------------------------------------------
+// Ledger invariant: Σ domains == process total.
+// ---------------------------------------------------------------------
+
+#[test]
+fn domains_sum_to_process_total() {
+    let _g = guard();
+    alloc::set_tracking(true);
+    // Put nonzero live bytes in two tagged domains first.
+    let _a = {
+        let _s = alloc::scope(MemDomain::CommBuffers);
+        vec![0u8; 1 << 16]
+    };
+    let _b = {
+        let _s = alloc::scope(MemDomain::Data);
+        vec![0u8; 1 << 15]
+    };
+    // The harness's own threads may allocate (into Other) between two
+    // reads, so take a double-read-stable snapshot instead of assuming
+    // quiescence.
+    let mut ok = false;
+    for _ in 0..1000 {
+        let sum: u64 = alloc::live_all().iter().sum();
+        let proc = alloc::process_live_bytes();
+        let sum2: u64 = alloc::live_all().iter().sum();
+        if sum == sum2 {
+            assert_eq!(
+                sum, proc,
+                "per-domain live bytes must sum to the process total"
+            );
+            ok = true;
+            break;
+        }
+    }
+    assert!(ok, "ledger never quiesced across 1000 snapshots");
+    alloc::set_tracking(false);
+}
+
+// ---------------------------------------------------------------------
+// Measured optimizer-state footprint: low-rank < dense Adam on TINY.
+// ---------------------------------------------------------------------
+
+#[test]
+fn measured_lowrank_state_beats_dense_adam_on_tiny() {
+    let _g = guard();
+    alloc::set_tracking(true);
+    let preset = shapes::preset("tiny").expect("tiny preset");
+    let measure = |method: Method| -> u64 {
+        let before = alloc::live_bytes(MemDomain::OptimState);
+        let mut rng = Rng::new(7);
+        let mut opts = Vec::new();
+        let mut weights = Vec::new();
+        let mut grads = Vec::new();
+        for ps in preset.param_shapes() {
+            if ps.shape.len() != 2 || ps.proj_type.is_none() {
+                continue;
+            }
+            let (mut m, mut n) = (ps.shape[0], ps.shape[1]);
+            if m > n {
+                std::mem::swap(&mut m, &mut n);
+            }
+            weights.push(Mat::randn(m, n, 0.1, &mut rng));
+            grads.push(Mat::randn(m, n, 0.1, &mut rng));
+            opts.push(method.build_cpu(8, 4, 0.05, 100));
+        }
+        assert!(!opts.is_empty(), "tiny preset has projected matrices");
+        {
+            // Same ambient domain the trainer's fan-out uses; moment
+            // init lands here, workspace scratch re-tags itself.
+            let _mem = alloc::scope(MemDomain::OptimState);
+            for ((opt, w), g) in
+                opts.iter_mut().zip(&mut weights).zip(&grads)
+            {
+                opt.step(w, g, &mut rng);
+                opt.step(w, g, &mut rng);
+            }
+        }
+        let delta = alloc::live_bytes(MemDomain::OptimState) - before;
+        drop(opts);
+        assert_eq!(
+            alloc::live_bytes(MemDomain::OptimState),
+            before,
+            "dropping the optimizers must return the ledger to baseline"
+        );
+        delta
+    };
+    let lowrank = measure(Method::GrassWalk);
+    let dense = measure(Method::Adam);
+    assert!(
+        lowrank < dense,
+        "measured grasswalk optim-state bytes ({lowrank}) must be \
+         strictly below dense Adam ({dense}) — the paper's claim, \
+         measured instead of modeled"
+    );
+    alloc::set_tracking(false);
+}
+
+// ---------------------------------------------------------------------
+// Disabled path: scopes + counter reads allocate nothing.
+// ---------------------------------------------------------------------
+
+#[test]
+fn disabled_tracking_scope_path_never_allocates() {
+    let _g = guard();
+    alloc::set_tracking(false);
+    let n = alloc::count_thread(|| {
+        for _ in 0..1000 {
+            let _s = alloc::scope(MemDomain::Workspace);
+            let _ = alloc::live_bytes(MemDomain::Workspace);
+            let _ = alloc::live_all();
+            let _ = alloc::process_live_bytes();
+            let _ = alloc::top_domain();
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "scope enter/exit and ledger reads must stay allocation-free"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Spawned-binary runs (artifact-gated): mem-diag smoke + trace
+// invariance. Separate processes give each run a clean ledger.
+// ---------------------------------------------------------------------
+
+fn run_train(
+    artifacts: &std::path::Path,
+    dir: &std::path::Path,
+    stream: &std::path::Path,
+    extra: &[&str],
+) -> std::process::Output {
+    let mut args = vec![
+        "train",
+        "--steps",
+        "6",
+        "--rank",
+        "8",
+        "--interval",
+        "4",
+        "--workers",
+        "2",
+        "--comm",
+        "lowrank",
+        "--comm-rank",
+        "4",
+        "--eval-every",
+        "0",
+        "--seed",
+        "11",
+        "--mem-diag",
+    ];
+    args.extend_from_slice(extra);
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_grasswalk"))
+        .args(&args)
+        .args(["--metrics-stream", stream.to_str().unwrap()])
+        .args(["--artifacts", artifacts.to_str().unwrap()])
+        .args(["--out", dir.to_str().unwrap()])
+        .output()
+        .expect("spawn grasswalk train");
+    assert!(
+        out.status.success(),
+        "train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out
+}
+
+#[test]
+fn mem_diag_run_emits_series_heartbeat_and_reconciliation() {
+    let Some(artifacts) = artifacts() else { return };
+    let dir = tmp_dir("smoke");
+    let stream = dir.join("mem.jsonl");
+    let out = run_train(&artifacts, &dir, &stream, &["--log-every", "2"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+
+    // Reconciliation table: measured vs modeled, with a deviation column
+    // on mapped rows and `--` on unmapped ones.
+    assert!(
+        stdout.contains("measured vs modeled memory"),
+        "missing reconciliation table:\n{stdout}"
+    );
+    for label in ["optim_state", "comm_buffers", "trace_rings"] {
+        assert!(stdout.contains(label), "missing row {label}:\n{stdout}");
+    }
+    assert!(stdout.contains("process peak"), "{stdout}");
+
+    // Heartbeat (--log-every) carries the live-memory segment.
+    assert!(
+        stderr.contains("| mem ") && stderr.contains("(top "),
+        "heartbeat must carry live/peak/top memory:\n{stderr}"
+    );
+
+    // Streamed mem/* series: present, finite, live <= peak per domain.
+    let text = std::fs::read_to_string(&stream).unwrap();
+    let rec = Recorder::replay_jsonl(&text).unwrap();
+    for d in MemDomain::ALL {
+        let live = rec
+            .get(&format!("mem/{}/live", d.label()))
+            .unwrap_or_else(|| panic!("missing mem/{}/live", d.label()));
+        let peak = rec
+            .get(&format!("mem/{}/peak", d.label()))
+            .unwrap_or_else(|| panic!("missing mem/{}/peak", d.label()));
+        assert_eq!(live.points.len(), 6, "one sample per step");
+        for (&(_, l), &(_, p)) in live.points.iter().zip(&peak.points) {
+            assert!(l.is_finite() && p.is_finite());
+            assert!(l >= 0.0 && p >= l, "peak {p} < live {l}");
+        }
+    }
+    let proc = rec.get("mem/process/live").expect("process live series");
+    let optim = rec.get("mem/optim_state/live").unwrap();
+    // The run trained something: optimizer state and the process ledger
+    // must be nonzero by the last step.
+    assert!(optim.last().unwrap() > 0.0);
+    assert!(proc.last().unwrap() >= optim.last().unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mem_series_bitwise_stable_across_trace_on_off() {
+    let Some(artifacts) = artifacts() else { return };
+    let dir = tmp_dir("trace-invariance");
+    let s_off = dir.join("off.jsonl");
+    let s_on = dir.join("on.jsonl");
+    run_train(&artifacts, &dir, &s_off, &[]);
+    run_train(&artifacts, &dir, &s_on, &["--trace"]);
+    let off =
+        Recorder::replay_jsonl(&std::fs::read_to_string(&s_off).unwrap())
+            .unwrap();
+    let on =
+        Recorder::replay_jsonl(&std::fs::read_to_string(&s_on).unwrap())
+            .unwrap();
+    // Domains whose allocations are part of the training computation
+    // must not move when tracing turns on. TraceRings/Other/process are
+    // excluded by design: tracing itself allocates rings, a collector,
+    // and sample storage.
+    for d in [
+        MemDomain::OptimState,
+        MemDomain::Workspace,
+        MemDomain::CommBuffers,
+        MemDomain::SubspaceBasis,
+        MemDomain::Checkpoint,
+        MemDomain::Model,
+        MemDomain::Data,
+    ] {
+        let key = format!("mem/{}/live", d.label());
+        let a = off.get(&key).unwrap();
+        let b = on.get(&key).unwrap();
+        let bits = |s: &grasswalk::metrics::Series| -> Vec<(usize, u64)> {
+            s.points.iter().map(|&(st, v)| (st, v.to_bits())).collect()
+        };
+        assert_eq!(
+            bits(a),
+            bits(b),
+            "{key} must be bitwise-identical with tracing on/off"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

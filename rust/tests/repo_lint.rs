@@ -18,6 +18,12 @@
 //!   `.to_string()`, `String::new` are banned inside their bodies (the
 //!   steady-state 0-alloc contract the benches assert dynamically,
 //!   enforced statically).
+//! * **global-allocator** — `#[global_allocator]` may appear only in
+//!   `util/alloc.rs`: the crate ships ONE counting allocator, and a
+//!   second registration anywhere (including benches/tests, which
+//!   `global_allocator_only_in_util_alloc` walks) is a link error at
+//!   best and a silent accounting fork at worst. Count through
+//!   `grasswalk::util::alloc` instead.
 //!
 //! Escape hatch: a `// repo-lint: allow(<rule>)` comment on the same
 //! line or within the three preceding lines suppresses one finding —
@@ -238,6 +244,22 @@ fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
             }
         }
 
+        // --- global-allocator -----------------------------------------
+        if code.contains("#[global_allocator]")
+            && rel != "util/alloc.rs"
+            && !allowed(&lines, idx, "global-allocator")
+        {
+            out.push(Violation {
+                rule: "global-allocator",
+                file: rel.to_string(),
+                line: lineno,
+                what: "#[global_allocator] outside util/alloc.rs; the \
+                       crate has one counting allocator — read \
+                       grasswalk::util::alloc instead"
+                    .to_string(),
+            });
+        }
+
         // --- unsafe-safety --------------------------------------------
         let has_unsafe = code
             .split(|c: char| !c.is_alphanumeric() && c != '_')
@@ -347,6 +369,46 @@ fn repo_invariants_hold() {
     }
 }
 
+/// The global-allocator rule alone also covers benches, integration
+/// tests, and examples: those are exactly the targets that used to
+/// carry their own `#[global_allocator]` wrappers (three of them, all
+/// absorbed into util::alloc), and a reintroduced one would silently
+/// fork the process-wide accounting. The other rules stay src-only —
+/// test code legitimately unwraps and spawns.
+#[test]
+fn global_allocator_only_in_util_alloc() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut files = Vec::new();
+    for dir in ["benches", "rust/tests", "examples"] {
+        rust_files(&manifest.join(dir), &mut files);
+    }
+    files.sort();
+    assert!(files.len() >= 10, "walked only {} files", files.len());
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(manifest)
+            .expect("under manifest dir")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        violations.extend(
+            lint_source(&rel, &src)
+                .into_iter()
+                .filter(|v| v.rule == "global-allocator"),
+        );
+    }
+    if !violations.is_empty() {
+        let mut msg =
+            String::from("global-allocator registrations outside util/alloc.rs:\n");
+        for v in &violations {
+            msg.push_str(&format!("  {v}\n"));
+        }
+        panic!("{msg}");
+    }
+}
+
 // ---------------------------------------------------------------------
 // Meta-tests: seeded-violation fixtures proving each rule actually
 // fires, and that the escape hatch and scoping actually suppress.
@@ -435,6 +497,32 @@ fn fixture_hot_path_alloc_fires_inside_marked_fn_only() {
             "token {tok}"
         );
     }
+}
+
+#[test]
+fn fixture_global_allocator_fires_everywhere_but_util_alloc() {
+    let src = "#[global_allocator]\n\
+               static G: std::alloc::System = std::alloc::System;\n";
+    assert_eq!(
+        rules_of(&lint_source("metrics/mod.rs", src)),
+        ["global-allocator"]
+    );
+    assert_eq!(
+        rules_of(&lint_source("benches/coordinator.rs", src)),
+        ["global-allocator"]
+    );
+    // The one sanctioned home is clean.
+    assert!(rules_of(&lint_source("util/alloc.rs", src)).is_empty());
+    // Prose mentioning the attribute does not trip the rule.
+    let prose = "/// Docs may mention that `#[global_allocator]` lives\n\
+                 /// in util/alloc.rs without tripping the lint.\n\
+                 fn f() {}\n";
+    assert!(rules_of(&lint_source("metrics/mod.rs", prose)).is_empty());
+    // The escape hatch works here like everywhere else.
+    let allowed_src = "// repo-lint: allow(global-allocator) — fixture\n\
+                       #[global_allocator]\n\
+                       static G: std::alloc::System = std::alloc::System;\n";
+    assert!(rules_of(&lint_source("metrics/mod.rs", allowed_src)).is_empty());
 }
 
 #[test]

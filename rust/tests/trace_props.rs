@@ -9,8 +9,6 @@
 //! collector drain consumes events from EVERY ring — so every test that
 //! enables tracing or drains serializes on one binary-local mutex.
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
@@ -22,49 +20,13 @@ use grasswalk::trace::{self, Event, Phase, TraceCollector};
 use grasswalk::util::json::Json;
 use grasswalk::util::pool::WorkerPool;
 
-// ---------------------------------------------------------------------
-// Thread-local allocation counting.
-//
-// A process-global counter would pick up the libtest harness's own
-// allocations on other threads; counting per-thread isolates exactly
-// the code under test. `try_with` keeps the allocator safe on threads
-// whose TLS is already torn down.
-// ---------------------------------------------------------------------
-
-thread_local! {
-    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
-}
-
-struct TlCountingAlloc;
-
-unsafe impl GlobalAlloc for TlCountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(
-        &self,
-        ptr: *mut u8,
-        layout: Layout,
-        new_size: usize,
-    ) -> *mut u8 {
-        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.realloc(ptr, layout, new_size)
-    }
-}
-
-#[global_allocator]
-static GLOBAL: TlCountingAlloc = TlCountingAlloc;
-
+/// Thread-local allocation counting, via the library-level counting
+/// allocator (grasswalk::util::alloc — which absorbed this file's
+/// hand-rolled `TlCountingAlloc`). A process-global counter would pick
+/// up the libtest harness's own allocations on other threads; counting
+/// per-thread isolates exactly the code under test.
 fn tl_allocs(f: impl FnOnce()) -> u64 {
-    let before = TL_ALLOCS.with(Cell::get);
-    f();
-    TL_ALLOCS.with(Cell::get) - before
+    grasswalk::util::alloc::count_thread(f)
 }
 
 fn guard() -> MutexGuard<'static, ()> {
