@@ -129,6 +129,109 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Overlap + quantization stay on the zero-alloc/zero-spawn path
+    // (ISSUE-10): (1) the bucketed, depth-2-pipelined dense round still
+    // performs ZERO steady-state allocations — bucket shells and ring
+    // chunk buffers ping-pong, the inflight deques are pre-sized;
+    // (2) the int8 bucketed+overlapped low-rank round allocates EXACTLY
+    // as much as the plain f32 single-shot round, i.e. codec scratch,
+    // gather blocks, and pipeline shells add nothing beyond the
+    // documented per-round basis-QR floor. Neither regime may touch the
+    // thread pool's spawn path in steady state.
+    {
+        use grasswalk::comm::{BucketPlan, WireCodec};
+        let layout = GradLayout::from_shapes(&[
+            vec![256, 64],
+            vec![128],
+            vec![64, 96],
+        ]);
+        let plan = BucketPlan::from_layout(&layout, 16);
+        assert!(plan.len() > 1, "16 KiB must split the bench layout");
+        let spawns_before = pool::spawn_count();
+
+        let mut dense = build_collective(CommMode::Dense, 4, 16, 0);
+        let mut bufs: Vec<Vec<f32>> = (0..4)
+            .map(|_| vec![1.0f32; layout.total_floats])
+            .collect();
+        for _ in 0..5 {
+            dense
+                .all_reduce_mean_bucketed(&mut bufs, &layout, &plan, true)
+                .unwrap();
+        }
+        let before = alloc::alloc_calls();
+        let rounds = 20;
+        for _ in 0..rounds {
+            dense
+                .all_reduce_mean_bucketed(&mut bufs, &layout, &plan, true)
+                .unwrap();
+        }
+        let dense_delta = alloc::alloc_calls() - before;
+        assert_eq!(
+            dense_delta, 0,
+            "steady-state bucketed+overlapped dense round must perform \
+             zero allocations"
+        );
+        gate.counter(
+            "dense bucketed overlap allocs (x20 rounds, w=4)",
+            dense_delta,
+        );
+
+        let mut run_lowrank = |codec: WireCodec, bucketed: bool| -> u64 {
+            let mut coll = grasswalk::comm::build_collective_with(
+                Box::new(RingTransport::new(4)),
+                CommMode::LowRank,
+                16,
+                0,
+                codec,
+            );
+            let mut bufs: Vec<Vec<f32>> = (0..4)
+                .map(|_| vec![1.0f32; layout.total_floats])
+                .collect();
+            let mut round = |bufs: &mut Vec<Vec<f32>>| {
+                if bucketed {
+                    coll.all_reduce_mean_bucketed(
+                        bufs, &layout, &plan, true,
+                    )
+                    .unwrap();
+                } else {
+                    coll.all_reduce_mean(bufs, &layout).unwrap();
+                }
+            };
+            for _ in 0..5 {
+                round(&mut bufs);
+            }
+            let before = alloc::alloc_calls();
+            for _ in 0..rounds {
+                round(&mut bufs);
+            }
+            alloc::alloc_calls() - before
+        };
+        let f32_single = run_lowrank(WireCodec::F32, false);
+        let int8_piped = run_lowrank(WireCodec::Int8, true);
+        assert_eq!(
+            int8_piped, f32_single,
+            "int8 bucketed+overlapped lowrank round must not allocate \
+             beyond the f32 single-shot basis-QR floor"
+        );
+        gate.counter(
+            "lowrank int8 overlap extra allocs (x20 rounds, w=4)",
+            int8_piped.saturating_sub(f32_single),
+        );
+
+        let spawned = (pool::spawn_count() - spawns_before) as u64;
+        assert_eq!(
+            spawned, 0,
+            "steady-state overlapped/quantized comm must not spawn \
+             pool threads"
+        );
+        gate.counter("overlap+quant comm spawns (all rows)", spawned);
+        println!(
+            "overlap+quant steady state: dense bucketed {dense_delta} \
+             allocs, lowrank int8 piped {int8_piped} vs f32 single-shot \
+             {f32_single} (basis QR only), {spawned} spawns"
+        );
+    }
+
     // In-process vs tcp-loopback round latency (§Net): the identical
     // ring schedule over channel handoffs vs real loopback sockets with
     // frame encode/decode + CRC. 2 ranks — the coordinator drives rank

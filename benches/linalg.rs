@@ -118,6 +118,36 @@ fn main() {
         );
     }
 
+    // Machine-independent gate row: the steady-state `_into` projection
+    // kernels are zero-alloc once their output buffers are warm — the
+    // contract the packed-GEMM tier and the optimizer workspace rely
+    // on. Counted serially so pool dispatch stays out of the number.
+    {
+        let (m, n, r) = (256usize, 688, 32);
+        let g = Mat::randn(m, n, 1.0, &mut rng);
+        let s = grasswalk::tensor::orthonormalize(
+            &Mat::randn(m, r, 1.0, &mut rng));
+        let gt = matmul_tn(&s, &g);
+        let mut proj = Mat::default();
+        let mut back = Mat::default();
+        matmul_tn_into(&s, &g, &mut proj);
+        matmul_into(&s, &gt, &mut back);
+        let allocs = grasswalk::util::pool::run_serial(|| {
+            grasswalk::util::alloc::count_process(|| {
+                for _ in 0..16 {
+                    matmul_tn_into(&s, &g, &mut proj);
+                    matmul_into(&s, &gt, &mut back);
+                }
+            })
+        });
+        assert_eq!(
+            allocs, 0,
+            "steady-state thin `_into` kernels must not allocate"
+        );
+        gate.counter("thin `_into` kernel allocs (x16 rounds)", allocs);
+        println!("thin `_into` kernels: 0 allocs across 16 warm rounds");
+    }
+
     if let Err(e) = gate.finish() {
         eprintln!("{e}");
         std::process::exit(1);

@@ -1,0 +1,238 @@
+//! Deterministic bucket partition of a [`GradLayout`] for overlapped
+//! (pipelined) reduction.
+//!
+//! ## Bucket-determinism contract
+//!
+//! Bucket boundaries are a pure function of the layout geometry and the
+//! configured `--bucket-kb` target — NEVER of timing, thread
+//! interleaving, or which layers "finished backward first". Every rank
+//! derives the identical [`BucketPlan`] locally (the layout fingerprint
+//! is already pinned by the `comm::net` handshake), buckets are reduced
+//! in ascending index order, and the per-bucket fold order inside the
+//! transport is the same ring schedule as the single-shot path. That is
+//! what lets the overlap pipeline change *when* wall-clock work happens
+//! without changing a single bit of the result (pinned in
+//! `rust/tests/comm_props.rs` / `net_props.rs`).
+//!
+//! Regions are never split across buckets: a bucket is a contiguous run
+//! of whole [`GradRegion`]s, so the low-rank collective's per-region
+//! factor packing and error-feedback residuals are untouched by
+//! bucketing — only the granularity of the transport exchange changes.
+
+use super::collective::{GradLayout, GradRegion};
+
+/// One bucket: a contiguous run of whole regions, and the flat-vector
+/// span they cover.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    /// First region index (into `GradLayout::regions`).
+    pub first_region: usize,
+    /// One past the last region index.
+    pub end_region: usize,
+    /// Start offset into the flat gradient vector.
+    pub offset: usize,
+    /// Dense float count covered.
+    pub len: usize,
+}
+
+/// A fixed partition of the layout into reduction buckets, derived once
+/// at trainer construction and reused every round.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    buckets: Vec<Bucket>,
+}
+
+/// Bucket indices ride the frame tag byte, so a plan never exceeds 255
+/// buckets — the tail regions fold into the final bucket instead.
+pub const MAX_BUCKETS: usize = 255;
+
+impl BucketPlan {
+    /// The trivial plan: everything in one bucket (what `bucket_kb = 0`
+    /// means, and the shape under which the bucketed path defers to the
+    /// legacy single-shot collective).
+    pub fn single(layout: &GradLayout) -> BucketPlan {
+        BucketPlan {
+            buckets: vec![Bucket {
+                first_region: 0,
+                end_region: layout.regions.len(),
+                offset: 0,
+                len: layout.total_floats,
+            }],
+        }
+    }
+
+    /// Partition `layout` into buckets of roughly `bucket_kb` KiB of
+    /// dense f32 payload each. Regions are taken in ABI order and never
+    /// split; a bucket closes once it holds at least one region AND its
+    /// dense bytes reach the target. `bucket_kb = 0` yields the single
+    /// bucket.
+    pub fn from_layout(layout: &GradLayout, bucket_kb: usize) -> BucketPlan {
+        if bucket_kb == 0 || layout.regions.is_empty() {
+            return BucketPlan::single(layout);
+        }
+        let _mem = crate::util::alloc::scope(
+            crate::util::alloc::MemDomain::CommBuffers,
+        );
+        let target_floats = (bucket_kb * 1024) / 4;
+        let mut buckets = Vec::new();
+        let mut first = 0usize;
+        let mut len = 0usize;
+        for (i, r) in layout.regions.iter().enumerate() {
+            len += r.len;
+            let last = i + 1 == layout.regions.len();
+            let full = len >= target_floats.max(1);
+            let capped = buckets.len() + 1 >= MAX_BUCKETS;
+            if last || (full && !capped) {
+                buckets.push(Bucket {
+                    first_region: first,
+                    end_region: i + 1,
+                    offset: layout.regions[first].offset,
+                    len,
+                });
+                first = i + 1;
+                len = 0;
+            }
+        }
+        BucketPlan { buckets }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// The regions of bucket `b`.
+    pub fn regions<'a>(
+        &self,
+        layout: &'a GradLayout,
+        b: usize,
+    ) -> &'a [GradRegion] {
+        let bk = &self.buckets[b];
+        &layout.regions[bk.first_region..bk.end_region]
+    }
+
+    /// Low-rank packed floats bucket `b` puts on the wire at `rank`.
+    pub fn packed_floats(
+        &self,
+        layout: &GradLayout,
+        b: usize,
+        rank: usize,
+    ) -> usize {
+        self.regions(layout, b)
+            .iter()
+            .map(|r| r.factor_floats(rank))
+            .sum()
+    }
+
+    /// Largest dense bucket span — sizes the pipeline staging buffers.
+    pub fn max_dense_floats(&self) -> usize {
+        self.buckets.iter().map(|b| b.len).max().unwrap_or(0)
+    }
+
+    /// Largest packed bucket span at `rank`.
+    pub fn max_packed_floats(&self, layout: &GradLayout, rank: usize) -> usize {
+        (0..self.buckets.len())
+            .map(|b| self.packed_floats(layout, b, rank))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> GradLayout {
+        GradLayout::from_shapes(&[
+            vec![64, 32],
+            vec![32],
+            vec![32, 48],
+            vec![48],
+            vec![8, 8],
+        ])
+    }
+
+    #[test]
+    fn single_plan_covers_everything() {
+        let l = layout();
+        let p = BucketPlan::single(&l);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.buckets()[0].offset, 0);
+        assert_eq!(p.buckets()[0].len, l.total_floats);
+        assert_eq!(p.regions(&l, 0).len(), l.regions.len());
+    }
+
+    #[test]
+    fn zero_kb_means_single_bucket() {
+        let l = layout();
+        let p = BucketPlan::from_layout(&l, 0);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.buckets()[0].len, l.total_floats);
+    }
+
+    #[test]
+    fn buckets_tile_the_flat_vector_without_splitting_regions() {
+        let l = layout();
+        for kb in [1, 2, 4, 7, 64, 10_000] {
+            let p = BucketPlan::from_layout(&l, kb);
+            let mut off = 0usize;
+            let mut region = 0usize;
+            for b in p.buckets() {
+                assert_eq!(b.offset, off, "kb={kb}");
+                assert_eq!(b.first_region, region, "kb={kb}");
+                assert!(b.end_region > b.first_region, "kb={kb}");
+                let span: usize = l.regions[b.first_region..b.end_region]
+                    .iter()
+                    .map(|r| r.len)
+                    .sum();
+                assert_eq!(b.len, span, "kb={kb}");
+                off += b.len;
+                region = b.end_region;
+            }
+            assert_eq!(off, l.total_floats, "kb={kb}");
+            assert_eq!(region, l.regions.len(), "kb={kb}");
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_timing_free() {
+        let l = layout();
+        let a = BucketPlan::from_layout(&l, 2);
+        let b = BucketPlan::from_layout(&l, 2);
+        assert_eq!(a.buckets(), b.buckets());
+        // A 2 KiB target (512 floats) splits this ~4.7k-float layout.
+        assert!(a.len() > 1);
+        assert!(a.len() <= l.regions.len());
+    }
+
+    #[test]
+    fn bucket_count_respects_the_tag_byte_cap() {
+        let shapes: Vec<Vec<usize>> = (0..600).map(|_| vec![64]).collect();
+        let l = GradLayout::from_shapes(&shapes);
+        // 64 floats = 256 bytes < 1 KiB target: every region wants its
+        // own bucket, but the plan must stay addressable by a u8 tag.
+        let p = BucketPlan::from_layout(&l, 1);
+        assert!(p.len() <= MAX_BUCKETS);
+        let covered: usize = p.buckets().iter().map(|b| b.len).sum();
+        assert_eq!(covered, l.total_floats);
+    }
+
+    #[test]
+    fn packed_floats_match_layout_accounting() {
+        let l = layout();
+        let p = BucketPlan::from_layout(&l, 4);
+        let rank = 16;
+        let total: usize =
+            (0..p.len()).map(|b| p.packed_floats(&l, b, rank)).sum();
+        assert_eq!(total, l.packed_floats(rank));
+        assert!(p.max_packed_floats(&l, rank) > 0);
+        assert!(p.max_dense_floats() > 0);
+    }
+}

@@ -1,0 +1,458 @@
+//! `--wire f32|bf16|int8`: the payload codec for the low-rank
+//! collective's factor exchange.
+//!
+//! The low-rank collective already ships only rank-r factors (~7.9×
+//! fewer floats than dense on the proxy layout); this module shrinks
+//! the *bytes per float*:
+//!
+//! * **f32** — identity; the packed factors travel as exact
+//!   little-endian f32, bitwise-identical to every prior release.
+//! * **bf16** — round-to-nearest-even truncation to the top 16 bits of
+//!   each f32 (sign + 8-bit exponent + 7-bit mantissa): 2 bytes/float,
+//!   relative error ≤ 2⁻⁸ per element.
+//! * **int8** — per-column affine quantization of each factor block: a
+//!   f32 `maxabs/127` scale per column, then one signed byte per
+//!   element (row-major): ~1 byte/float + 4 bytes/column of scales,
+//!   absolute error ≤ scale/2 per element.
+//!
+//! 1-D regions (biases, norms) are never compressed by the low-rank
+//! collective and keep exact f32 bytes under every codec — only matrix
+//! factor blocks quantize. Quantization error is NOT lost: the
+//! collective folds it into the same per-worker error-feedback
+//! residuals that absorb the low-rank projection error (each worker
+//! subtracts its own *dequantized* reconstruction), so the energy is
+//! reinjected over subsequent rounds — the compression/EF composition
+//! analyzed by the Lotus line of work in PAPERS.md.
+//!
+//! Determinism: encode and decode are pure element-wise f32 arithmetic
+//! in a fixed order, so every rank producing or consuming a block
+//! computes bit-identical bytes and floats — quantized runs stay
+//! bitwise-reproducible across transports (inproc ≡ TCP), just not
+//! bitwise-equal to `--wire f32` runs.
+
+use super::collective::GradRegion;
+use super::net::wire::NetError;
+
+/// Payload encoding for the low-rank factor exchange (`--wire …`).
+/// The discriminant is the wire tag byte carried by quantized `Gather`
+/// frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WireCodec {
+    /// Exact f32 little-endian bytes (the default).
+    F32 = 0,
+    /// Round-to-nearest-even bf16 truncation.
+    Bf16 = 1,
+    /// Per-column-scaled signed bytes.
+    Int8 = 2,
+}
+
+impl WireCodec {
+    pub fn label(self) -> &'static str {
+        match self {
+            WireCodec::F32 => "f32",
+            WireCodec::Bf16 => "bf16",
+            WireCodec::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WireCodec> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" => Some(WireCodec::F32),
+            "bf16" | "bfloat16" => Some(WireCodec::Bf16),
+            "int8" | "i8" => Some(WireCodec::Int8),
+            _ => None,
+        }
+    }
+
+    /// The frame tag byte for this codec.
+    pub fn tag(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`WireCodec::tag`]; `None` is the
+    /// [`NetError::UnknownWireCodec`] path at the receiver.
+    pub fn from_tag(t: u8) -> Option<WireCodec> {
+        match t {
+            0 => Some(WireCodec::F32),
+            1 => Some(WireCodec::Bf16),
+            2 => Some(WireCodec::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// bf16 with round-to-nearest-even, NaN forced quiet.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return 0x7FC0;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// The factor matrix a region contributes to the packed vector:
+/// `(floats, columns)` at `rank`. Tall regions exchange an r×short
+/// factor (short columns); wide regions exchange a short×r factor
+/// (r columns); 1-D regions travel raw (single column, never
+/// quantized). Pure layout arithmetic — every rank derives the same
+/// geometry locally.
+pub fn factor_geometry(r: &GradRegion, rank: usize) -> (usize, usize) {
+    if r.is_matrix() {
+        let (long, short) = r.oriented();
+        let rr = rank.min(long);
+        let cols = if r.rows >= r.cols { short } else { rr };
+        (rr * short, cols)
+    } else {
+        (r.len, 1)
+    }
+}
+
+/// Exact encoded byte count for `regions` at `rank` under `codec`.
+pub fn encoded_len(
+    codec: WireCodec,
+    regions: &[GradRegion],
+    rank: usize,
+) -> usize {
+    regions
+        .iter()
+        .map(|r| {
+            let (floats, cols) = factor_geometry(r, rank);
+            if !r.is_matrix() {
+                return 4 * floats;
+            }
+            match codec {
+                WireCodec::F32 => 4 * floats,
+                WireCodec::Bf16 => 2 * floats,
+                WireCodec::Int8 => 4 * cols + floats,
+            }
+        })
+        .sum()
+}
+
+/// Encode the packed factor vector `src` (region blocks concatenated in
+/// layout order, `layout.packed_floats(rank)` long for the regions
+/// given) into `out` (cleared and reused — steady-state rounds reuse
+/// its capacity).
+// hot-path
+pub fn encode_packed(
+    codec: WireCodec,
+    regions: &[GradRegion],
+    rank: usize,
+    src: &[f32],
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    out.reserve(encoded_len(codec, regions, rank));
+    let mut off = 0usize;
+    for r in regions {
+        let (floats, cols) = factor_geometry(r, rank);
+        let block = &src[off..off + floats];
+        off += floats;
+        if !r.is_matrix() || codec == WireCodec::F32 {
+            for &x in block {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            continue;
+        }
+        match codec {
+            WireCodec::Bf16 => {
+                for &x in block {
+                    out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+                }
+            }
+            WireCodec::Int8 => {
+                let rows = floats / cols.max(1);
+                for c in 0..cols {
+                    let mut maxabs = 0.0f32;
+                    for row in 0..rows {
+                        maxabs = maxabs.max(block[row * cols + c].abs());
+                    }
+                    let scale = maxabs / 127.0;
+                    out.extend_from_slice(&scale.to_le_bytes());
+                }
+                let scales_at = out.len() - 4 * cols;
+                for row in 0..rows {
+                    for c in 0..cols {
+                        let sb = &out[scales_at + 4 * c..scales_at + 4 * c + 4];
+                        let scale = f32::from_le_bytes([
+                            sb[0], sb[1], sb[2], sb[3],
+                        ]);
+                        let q = if scale > 0.0 {
+                            (block[row * cols + c] / scale)
+                                .round()
+                                .clamp(-127.0, 127.0)
+                                as i8
+                        } else {
+                            0
+                        };
+                        out.push(q as u8);
+                    }
+                }
+            }
+            WireCodec::F32 => unreachable!("handled above"),
+        }
+    }
+    debug_assert_eq!(off, src.len());
+}
+
+/// Decode a packed byte block back into floats (the packed-vector
+/// layout `encode_packed` produced). `dst` is resized to the packed
+/// float count. A byte count that disagrees with the layout + codec is
+/// the typed [`NetError::QuantizedPayloadMismatch`] — never a panic,
+/// whatever a peer sends.
+// hot-path
+pub fn decode_packed(
+    codec: WireCodec,
+    regions: &[GradRegion],
+    rank: usize,
+    bytes: &[u8],
+    dst: &mut Vec<f32>,
+) -> Result<(), NetError> {
+    let expected = encoded_len(codec, regions, rank);
+    if bytes.len() != expected {
+        return Err(NetError::QuantizedPayloadMismatch {
+            expected,
+            got: bytes.len(),
+        });
+    }
+    let total: usize = regions
+        .iter()
+        .map(|r| factor_geometry(r, rank).0)
+        .sum();
+    dst.clear();
+    dst.reserve(total);
+    let mut at = 0usize;
+    for r in regions {
+        let (floats, cols) = factor_geometry(r, rank);
+        if !r.is_matrix() || codec == WireCodec::F32 {
+            for _ in 0..floats {
+                let b = &bytes[at..at + 4];
+                dst.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+                at += 4;
+            }
+            continue;
+        }
+        match codec {
+            WireCodec::Bf16 => {
+                for _ in 0..floats {
+                    let b = &bytes[at..at + 2];
+                    dst.push(bf16_to_f32(u16::from_le_bytes([b[0], b[1]])));
+                    at += 2;
+                }
+            }
+            WireCodec::Int8 => {
+                let rows = floats / cols.max(1);
+                let scales_at = at;
+                at += 4 * cols;
+                for _row in 0..rows {
+                    for c in 0..cols {
+                        let sb = &bytes[scales_at + 4 * c..scales_at + 4 * c + 4];
+                        let scale = f32::from_le_bytes([
+                            sb[0], sb[1], sb[2], sb[3],
+                        ]);
+                        let q = bytes[at] as i8;
+                        at += 1;
+                        dst.push(q as f32 * scale);
+                    }
+                }
+            }
+            WireCodec::F32 => unreachable!("handled above"),
+        }
+    }
+    debug_assert_eq!(at, bytes.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn matrix_region(rows: usize, cols: usize) -> GradRegion {
+        GradRegion { offset: 0, len: rows * cols, rows, cols }
+    }
+
+    fn vec_region(len: usize) -> GradRegion {
+        GradRegion { offset: 0, len, rows: len, cols: 1 }
+    }
+
+    #[test]
+    fn parse_label_tag_roundtrip() {
+        for c in [WireCodec::F32, WireCodec::Bf16, WireCodec::Int8] {
+            assert_eq!(WireCodec::parse(c.label()), Some(c));
+            assert_eq!(WireCodec::from_tag(c.tag()), Some(c));
+        }
+        assert_eq!(WireCodec::parse("fp8"), None);
+        assert_eq!(WireCodec::from_tag(3), None);
+        assert_eq!(WireCodec::from_tag(255), None);
+    }
+
+    #[test]
+    fn bf16_conversion_bounds_and_exactness() {
+        // Values with ≤7 mantissa bits are exact.
+        for x in [0.0f32, 1.0, -2.5, 0.15625, 1024.0, -0.0078125] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)), x, "{x}");
+        }
+        // General values: relative error ≤ 2^-8.
+        let mut rng = Rng::new(11);
+        let mut v = vec![0.0f32; 4096];
+        rng.fill_normal(&mut v, 1.0);
+        for &x in &v {
+            let y = bf16_to_f32(f32_to_bf16(x));
+            assert!(
+                (y - x).abs() <= x.abs() / 256.0 + f32::EPSILON,
+                "{x} -> {y}"
+            );
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f32_codec_is_the_identity() {
+        let regions = [matrix_region(8, 4), vec_region(5)];
+        let rank = 3;
+        let floats: usize =
+            regions.iter().map(|r| factor_geometry(r, rank).0).sum();
+        let mut rng = Rng::new(2);
+        let mut src = vec![0.0f32; floats];
+        rng.fill_normal(&mut src, 1.0);
+        let mut bytes = Vec::new();
+        encode_packed(WireCodec::F32, &regions, rank, &src, &mut bytes);
+        assert_eq!(bytes.len(), 4 * floats);
+        let mut back = Vec::new();
+        decode_packed(WireCodec::F32, &regions, rank, &bytes, &mut back)
+            .unwrap();
+        assert_eq!(back, src, "f32 must be bitwise identity");
+    }
+
+    #[test]
+    fn bf16_packed_roundtrip_respects_error_bound() {
+        let regions = [matrix_region(16, 6), vec_region(9), matrix_region(4, 20)];
+        let rank = 5;
+        let floats: usize =
+            regions.iter().map(|r| factor_geometry(r, rank).0).sum();
+        let mut rng = Rng::new(7);
+        let mut src = vec![0.0f32; floats];
+        rng.fill_normal(&mut src, 1.0);
+        let mut bytes = Vec::new();
+        encode_packed(WireCodec::Bf16, &regions, rank, &src, &mut bytes);
+        assert_eq!(bytes.len(), encoded_len(WireCodec::Bf16, &regions, rank));
+        let mut back = Vec::new();
+        decode_packed(WireCodec::Bf16, &regions, rank, &bytes, &mut back)
+            .unwrap();
+        // 1-D tail region (index 1 in packed order) is exact f32.
+        let m0 = factor_geometry(&regions[0], rank).0;
+        let v1 = regions[1].len;
+        assert_eq!(&back[m0..m0 + v1], &src[m0..m0 + v1]);
+        for (&x, &y) in src.iter().zip(&back) {
+            assert!((y - x).abs() <= x.abs() / 256.0 + f32::EPSILON);
+        }
+    }
+
+    #[test]
+    fn int8_packed_roundtrip_respects_per_column_bound() {
+        let regions = [matrix_region(32, 8), matrix_region(3, 24)];
+        let rank = 6;
+        let floats: usize =
+            regions.iter().map(|r| factor_geometry(r, rank).0).sum();
+        let mut rng = Rng::new(13);
+        let mut src = vec![0.0f32; floats];
+        rng.fill_normal(&mut src, 1.0);
+        // Make column magnitudes wildly uneven so a global scale would
+        // fail the bound and only per-column scales pass.
+        for (i, x) in src.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *x *= 100.0;
+            }
+        }
+        let mut bytes = Vec::new();
+        encode_packed(WireCodec::Int8, &regions, rank, &src, &mut bytes);
+        assert_eq!(bytes.len(), encoded_len(WireCodec::Int8, &regions, rank));
+        let mut back = Vec::new();
+        decode_packed(WireCodec::Int8, &regions, rank, &bytes, &mut back)
+            .unwrap();
+        let mut off = 0usize;
+        for r in &regions {
+            let (floats, cols) = factor_geometry(r, rank);
+            let rows = floats / cols;
+            for c in 0..cols {
+                let mut maxabs = 0.0f32;
+                for row in 0..rows {
+                    maxabs = maxabs.max(src[off + row * cols + c].abs());
+                }
+                let half_step = maxabs / 127.0 / 2.0 + 1e-6;
+                for row in 0..rows {
+                    let x = src[off + row * cols + c];
+                    let y = back[off + row * cols + c];
+                    assert!(
+                        (y - x).abs() <= half_step * 1.001,
+                        "col {c}: {x} -> {y}, bound {half_step}"
+                    );
+                }
+            }
+            off += floats;
+        }
+    }
+
+    #[test]
+    fn int8_all_zero_column_stays_exact() {
+        let regions = [matrix_region(8, 2)];
+        let rank = 2;
+        let src = vec![0.0f32; factor_geometry(&regions[0], rank).0];
+        let mut bytes = Vec::new();
+        encode_packed(WireCodec::Int8, &regions, rank, &src, &mut bytes);
+        let mut back = Vec::new();
+        decode_packed(WireCodec::Int8, &regions, rank, &bytes, &mut back)
+            .unwrap();
+        assert!(back.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn decode_rejects_wrong_byte_count_by_name() {
+        let regions = [matrix_region(8, 4)];
+        let rank = 2;
+        let src = vec![1.0f32; factor_geometry(&regions[0], rank).0];
+        let mut bytes = Vec::new();
+        encode_packed(WireCodec::Bf16, &regions, rank, &src, &mut bytes);
+        bytes.pop();
+        let mut back = Vec::new();
+        let err =
+            decode_packed(WireCodec::Bf16, &regions, rank, &bytes, &mut back)
+                .unwrap_err();
+        assert_eq!(err.name(), "quantized-payload-mismatch");
+        // Scale truncation on int8 blocks is the same named failure.
+        let mut ibytes = Vec::new();
+        encode_packed(WireCodec::Int8, &regions, rank, &src, &mut ibytes);
+        ibytes.truncate(3);
+        let err =
+            decode_packed(WireCodec::Int8, &regions, rank, &ibytes, &mut back)
+                .unwrap_err();
+        assert_eq!(err.name(), "quantized-payload-mismatch");
+    }
+
+    #[test]
+    fn encode_is_deterministic() {
+        let regions = [matrix_region(16, 6), vec_region(4)];
+        let rank = 4;
+        let floats: usize =
+            regions.iter().map(|r| factor_geometry(r, rank).0).sum();
+        let mut rng = Rng::new(21);
+        let mut src = vec![0.0f32; floats];
+        rng.fill_normal(&mut src, 1.0);
+        for codec in [WireCodec::Bf16, WireCodec::Int8] {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            encode_packed(codec, &regions, rank, &src, &mut a);
+            encode_packed(codec, &regions, rank, &src, &mut b);
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -125,6 +125,14 @@ pub struct CommStats {
     pub residual_norm: f64,
     /// Transport hops per worker.
     pub hops: usize,
+    /// Total wall time buckets spent in flight on the transport this
+    /// round (begin → finish-return, summed over buckets; 0 when the
+    /// single-shot path ran).
+    pub overlap_flight_ns: u64,
+    /// Of that flight time, how much the coordinator actually waited
+    /// inside `reduce_finish`. `1 − wait/flight` is the overlap ratio:
+    /// the fraction of wire time hidden behind coordinator compute.
+    pub overlap_wait_ns: u64,
 }
 
 /// A gradient collective: reduces per-worker flat gradients to their
@@ -147,6 +155,26 @@ pub trait Collective: Send {
         layout: &GradLayout,
     ) -> Result<CommStats>;
 
+    /// Bucketed variant: reduce the layout bucket-by-bucket per `plan`,
+    /// optionally keeping up to two buckets in flight (`overlap`) so
+    /// wire time hides behind the coordinator's pack/unpack work.
+    ///
+    /// Contract: for a FIXED plan the result is bitwise identical
+    /// whether `overlap` is on or off — overlap changes only when
+    /// wall-clock work happens, never the fold order (pinned in
+    /// rust/tests/comm_props.rs / net_props.rs). The default falls back
+    /// to the single-shot path (correct, just unpipelined) for
+    /// collectives that don't implement bucketing.
+    fn all_reduce_mean_bucketed(
+        &mut self,
+        workers: &mut [Vec<f32>],
+        layout: &GradLayout,
+        _plan: &super::bucket::BucketPlan,
+        _overlap: bool,
+    ) -> Result<CommStats> {
+        self.all_reduce_mean(workers, layout)
+    }
+
     /// Re-align any round-dependent schedule (the low-rank collective's
     /// shared-basis derivation) with a restored trainer step, so a
     /// resumed run regenerates the same basis sequence a continuous run
@@ -161,11 +189,94 @@ pub trait Collective: Send {
 /// in rust/tests/comm_props.rs).
 pub struct DenseAllReduce {
     transport: Box<dyn Transport>,
+    /// Reusable staging shells for the bucketed pipeline (one
+    /// `Vec<Vec<f32>>` per in-flight bucket, ping-ponged through
+    /// `reduce_begin`/`reduce_finish` so steady-state rounds allocate
+    /// nothing).
+    slots: std::collections::VecDeque<Vec<Vec<f32>>>,
+    /// Begin timestamps of in-flight buckets (FIFO, capacity 2).
+    inflight_since: std::collections::VecDeque<std::time::Instant>,
 }
 
 impl DenseAllReduce {
     pub fn new(transport: Box<dyn Transport>) -> DenseAllReduce {
-        DenseAllReduce { transport }
+        DenseAllReduce {
+            transport,
+            slots: std::collections::VecDeque::with_capacity(2),
+            inflight_since: std::collections::VecDeque::with_capacity(2),
+        }
+    }
+
+    fn validate(
+        &self,
+        workers: &[Vec<f32>],
+        layout: &GradLayout,
+    ) -> Result<()> {
+        let n = self.transport.world_size();
+        let local = self.transport.local_endpoints();
+        if workers.len() != local {
+            bail!(
+                "dense collective: {} buffers for {local} local endpoints \
+                 (world {n})",
+                workers.len()
+            );
+        }
+        if workers.iter().any(|w| w.len() != layout.total_floats) {
+            bail!(
+                "dense collective: buffer length != layout total {}",
+                layout.total_floats
+            );
+        }
+        Ok(())
+    }
+
+    /// Stage bucket `b`'s span of every worker into a pooled shell and
+    /// hand it to the transport.
+    // hot-path
+    fn bucket_begin(
+        &mut self,
+        workers: &[Vec<f32>],
+        plan: &super::bucket::BucketPlan,
+        b: usize,
+        max_floats: usize,
+    ) -> Result<()> {
+        let bk = plan.buckets()[b];
+        let mut shell = self.slots.pop_front().unwrap_or_default();
+        while shell.len() < workers.len() {
+            shell.push(Vec::with_capacity(max_floats));
+        }
+        shell.truncate(workers.len());
+        for (dst, src) in shell.iter_mut().zip(workers.iter()) {
+            dst.clear();
+            dst.extend_from_slice(&src[bk.offset..bk.offset + bk.len]);
+        }
+        self.inflight_since.push_back(std::time::Instant::now());
+        self.transport.reduce_begin(shell, b as u8)
+    }
+
+    /// Wait for the oldest in-flight bucket, copy it back into the
+    /// workers, and recycle the shell. Returns (wire stats, flight ns,
+    /// wait ns) for the bucket.
+    // hot-path
+    fn bucket_finish(
+        &mut self,
+        workers: &mut [Vec<f32>],
+        plan: &super::bucket::BucketPlan,
+        b: usize,
+    ) -> Result<(crate::comm::transport::TransportStats, u64, u64)> {
+        let bk = plan.buckets()[b];
+        let waited = std::time::Instant::now();
+        let (shell, tstats) = self.transport.reduce_finish()?;
+        let wait_ns = waited.elapsed().as_nanos() as u64;
+        let flight_ns = match self.inflight_since.pop_front() {
+            Some(t0) => t0.elapsed().as_nanos() as u64,
+            None => wait_ns,
+        };
+        for (src, dst) in shell.iter().zip(workers.iter_mut()) {
+            dst[bk.offset..bk.offset + bk.len].copy_from_slice(src);
+        }
+        self.slots.push_back(shell);
+        Ok((tstats, flight_ns, wait_ns))
     }
 }
 
@@ -184,20 +295,7 @@ impl Collective for DenseAllReduce {
         layout: &GradLayout,
     ) -> Result<CommStats> {
         let n = self.transport.world_size();
-        let local = self.transport.local_endpoints();
-        if workers.len() != local {
-            bail!(
-                "dense collective: {} buffers for {local} local endpoints \
-                 (world {n})",
-                workers.len()
-            );
-        }
-        if workers.iter().any(|w| w.len() != layout.total_floats) {
-            bail!(
-                "dense collective: buffer length != layout total {}",
-                layout.total_floats
-            );
-        }
+        self.validate(workers, layout)?;
         let tstats = self.transport.all_reduce_sum(workers)?;
         // Mean, applied exactly like the legacy Ring::all_reduce_mean.
         let inv = 1.0 / n as f32;
@@ -213,6 +311,84 @@ impl Collective for DenseAllReduce {
             compression: 1.0,
             residual_norm: 0.0,
             hops: tstats.hops,
+            overlap_flight_ns: 0,
+            overlap_wait_ns: 0,
+        })
+    }
+
+    /// Depth-2 bucket pipeline over the dense vector. Bucket spans and
+    /// ring fold order are fixed by the plan, so overlap-on and
+    /// overlap-off produce bitwise-identical results; the mean is
+    /// applied once after every bucket lands, exactly where the
+    /// single-shot path applies it.
+    // hot-path
+    fn all_reduce_mean_bucketed(
+        &mut self,
+        workers: &mut [Vec<f32>],
+        layout: &GradLayout,
+        plan: &super::bucket::BucketPlan,
+        overlap: bool,
+    ) -> Result<CommStats> {
+        if plan.len() <= 1 {
+            return self.all_reduce_mean(workers, layout);
+        }
+        let n = self.transport.world_size();
+        self.validate(workers, layout)?;
+        let nb = plan.len();
+        let maxf = plan.max_dense_floats();
+        let overlap = overlap && self.transport.supports_overlap();
+        let mut bytes = 0usize;
+        let mut hops = 0usize;
+        let mut flight_ns = 0u64;
+        let mut wait_ns = 0u64;
+        // The overlap clock only runs when buckets are pipelined: a
+        // serial round's wait IS its flight, and recording it would
+        // pollute `comm/overlap_ratio` with trivial zeros.
+        let mut fold =
+            |acc: (crate::comm::transport::TransportStats, u64, u64)| {
+                bytes += acc.0.bytes_sent_per_worker;
+                hops += acc.0.hops;
+                if overlap {
+                    flight_ns += acc.1;
+                    wait_ns += acc.2;
+                }
+            };
+        if overlap {
+            let sp = crate::trace::start();
+            self.bucket_begin(workers, plan, 0, maxf)?;
+            sp.record(crate::trace::Phase::BucketReduce);
+            for b in 1..nb {
+                let sp = crate::trace::start();
+                self.bucket_begin(workers, plan, b, maxf)?;
+                fold(self.bucket_finish(workers, plan, b - 1)?);
+                sp.record(crate::trace::Phase::BucketReduce);
+            }
+            let sp = crate::trace::start();
+            fold(self.bucket_finish(workers, plan, nb - 1)?);
+            sp.record(crate::trace::Phase::BucketReduce);
+        } else {
+            for b in 0..nb {
+                let sp = crate::trace::start();
+                self.bucket_begin(workers, plan, b, maxf)?;
+                fold(self.bucket_finish(workers, plan, b)?);
+                sp.record(crate::trace::Phase::BucketReduce);
+            }
+        }
+        let inv = 1.0 / n as f32;
+        for b in workers.iter_mut() {
+            for x in b.iter_mut() {
+                *x *= inv;
+            }
+        }
+        Ok(CommStats {
+            bytes_per_worker: bytes,
+            payload_floats: layout.total_floats,
+            dense_floats: layout.total_floats,
+            compression: 1.0,
+            residual_norm: 0.0,
+            hops,
+            overlap_flight_ns: flight_ns,
+            overlap_wait_ns: wait_ns,
         })
     }
 }
@@ -295,5 +471,82 @@ mod tests {
         assert!(c.all_reduce_mean(&mut wrong_world, &layout).is_err());
         let mut wrong_len = vec![vec![0.0f32; 3], vec![0.0f32; 3]];
         assert!(c.all_reduce_mean(&mut wrong_len, &layout).is_err());
+    }
+
+    fn bucketed_layout() -> GradLayout {
+        GradLayout::from_shapes(&[
+            vec![64, 32],
+            vec![32],
+            vec![32, 48],
+            vec![48],
+            vec![8, 8],
+        ])
+    }
+
+    #[test]
+    fn dense_bucketed_overlap_matches_single_shot_bitwise() {
+        // World 2: every chunk sum has exactly two terms, so the
+        // bucketed schedule is order-free and must match the
+        // single-shot path bitwise, serial AND overlapped.
+        let layout = bucketed_layout();
+        let plan =
+            crate::comm::bucket::BucketPlan::from_layout(&layout, 1);
+        assert!(plan.len() > 1, "1 KiB target must split this layout");
+        let mk =
+            || DenseAllReduce::new(Box::new(RingTransport::new(2)));
+        let (mut single, mut serial, mut piped) = (mk(), mk(), mk());
+        let mut rng = Rng::new(7);
+        for round in 0..3 {
+            let bufs: Vec<Vec<f32>> = (0..2)
+                .map(|_| {
+                    let mut v = vec![0.0f32; layout.total_floats];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let (mut a, mut b, mut c) =
+                (bufs.clone(), bufs.clone(), bufs);
+            single.all_reduce_mean(&mut a, &layout).unwrap();
+            let sb = serial
+                .all_reduce_mean_bucketed(&mut b, &layout, &plan, false)
+                .unwrap();
+            let ob = piped
+                .all_reduce_mean_bucketed(&mut c, &layout, &plan, true)
+                .unwrap();
+            assert_eq!(a, b, "round {round}: serial bucketed differs");
+            assert_eq!(a, c, "round {round}: overlapped differs");
+            assert_eq!(sb.overlap_flight_ns, 0, "serial records no overlap");
+            assert!(ob.overlap_flight_ns > 0, "overlap records flight");
+            assert_eq!(sb.bytes_per_worker, ob.bytes_per_worker);
+        }
+    }
+
+    #[test]
+    fn dense_bucketed_four_workers_integer_grads_bitwise() {
+        // At world ≥ 3 bucketing shifts ring chunk ownership, so
+        // arbitrary f32 sums may differ in rounding between plans.
+        // Small-integer gradients (exact in f32 well below 2^24) make
+        // every fold order exact, pinning that bucketing changes ONLY
+        // the schedule, never the arithmetic.
+        let layout = bucketed_layout();
+        let plan =
+            crate::comm::bucket::BucketPlan::from_layout(&layout, 1);
+        let mk =
+            || DenseAllReduce::new(Box::new(RingTransport::new(4)));
+        let (mut single, mut piped) = (mk(), mk());
+        let mut rng = Rng::new(11);
+        let bufs: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                (0..layout.total_floats)
+                    .map(|_| (rng.next_u64() % 97) as f32 - 48.0)
+                    .collect()
+            })
+            .collect();
+        let (mut a, mut b) = (bufs.clone(), bufs);
+        single.all_reduce_mean(&mut a, &layout).unwrap();
+        piped
+            .all_reduce_mean_bucketed(&mut b, &layout, &plan, true)
+            .unwrap();
+        assert_eq!(a, b, "integer grads must reduce identically");
     }
 }

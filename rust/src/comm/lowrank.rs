@@ -27,17 +27,27 @@
 //! contracts by ≈ (1 − r/long) per round — both pinned in
 //! rust/tests/comm_props.rs. 1-D parameters (norms) are exchanged dense.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::subspace::SharedSeedBasis;
 use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Mat};
 
-use super::collective::{Collective, CommStats, GradLayout};
+use super::bucket::BucketPlan;
+use super::codec::{decode_packed, encode_packed, WireCodec};
+use super::collective::{Collective, CommStats, GradLayout, GradRegion};
 use super::transport::Transport;
 
 pub struct LowRankAllReduce {
     transport: Box<dyn Transport>,
     rank: usize,
+    /// Wire codec for the factor exchange (`--wire f32|bf16|int8`).
+    /// Quantized codecs switch the traffic from a ring all-reduce to a
+    /// byte-block all-gather (quantized values don't sum on the wire);
+    /// every rank dequantizes and folds the blocks in rank order, so
+    /// the result stays bitwise-identical across transports AND across
+    /// bucket plans. Quantization error is folded into the existing
+    /// per-worker error-feedback residuals at pack time.
+    codec: WireCodec,
     /// The shared-seed basis provider every worker regenerates from
     /// locally (the subspace engine's recipe; zero basis traffic).
     basis: SharedSeedBasis,
@@ -59,6 +69,23 @@ pub struct LowRankAllReduce {
     g: Mat,
     factor: Mat,
     recon: Mat,
+    /// World-sized quantized byte blocks in rank order, ping-ponged
+    /// through the transport's byte gather.
+    blocks: Vec<Vec<u8>>,
+    /// Per-region quantize→dequantize byte scratch (folding codec
+    /// error into error feedback at pack time).
+    qbytes: Vec<u8>,
+    /// Decode scratch (per block / per region round-trip).
+    dequant: Vec<f32>,
+    /// Rank-order fold of the wire view: the dequantized-block sum on
+    /// the quantized path, the per-bucket reduced factors on the
+    /// bucketed f32 path.
+    wire_sum: Vec<f32>,
+    /// Pooled staging shells for the bucketed pipeline.
+    shells: std::collections::VecDeque<Vec<Vec<f32>>>,
+    gshells: std::collections::VecDeque<Vec<Vec<u8>>>,
+    /// Begin timestamps of in-flight buckets (FIFO).
+    inflight: std::collections::VecDeque<std::time::Instant>,
 }
 
 impl LowRankAllReduce {
@@ -67,10 +94,20 @@ impl LowRankAllReduce {
         rank: usize,
         seed: u64,
     ) -> LowRankAllReduce {
+        LowRankAllReduce::with_codec(transport, rank, seed, WireCodec::F32)
+    }
+
+    pub fn with_codec(
+        transport: Box<dyn Transport>,
+        rank: usize,
+        seed: u64,
+        codec: WireCodec,
+    ) -> LowRankAllReduce {
         assert!(rank >= 1);
         LowRankAllReduce {
             transport,
             rank,
+            codec,
             basis: SharedSeedBasis { seed },
             round: 0,
             residuals: Vec::new(),
@@ -78,7 +115,18 @@ impl LowRankAllReduce {
             g: Mat::default(),
             factor: Mat::default(),
             recon: Mat::default(),
+            blocks: Vec::new(),
+            qbytes: Vec::new(),
+            dequant: Vec::new(),
+            wire_sum: Vec::new(),
+            shells: std::collections::VecDeque::with_capacity(2),
+            gshells: std::collections::VecDeque::with_capacity(2),
+            inflight: std::collections::VecDeque::with_capacity(2),
         }
+    }
+
+    pub fn codec(&self) -> WireCodec {
+        self.codec
     }
 
     pub fn rank(&self) -> usize {
@@ -102,6 +150,106 @@ impl LowRankAllReduce {
     /// the analysis tooling can reproduce the exact wire view.
     pub fn basis_for(&self, round: u64, region: usize, long: usize) -> Mat {
         self.basis.at(round, region as u64, long, self.rank)
+    }
+}
+
+/// Pack one region of one worker's gradient: the factor projection for
+/// matrices (with the codec's quantize→dequantize round-trip folded in,
+/// so error feedback charges EXACTLY what peers will decode), a raw
+/// copy for 1-D tails. Appends the wire-view floats to `out` and
+/// updates the region's residual in place.
+// hot-path
+#[allow(clippy::too_many_arguments)]
+fn pack_region(
+    codec: WireCodec,
+    rank: usize,
+    reg: &GradRegion,
+    basis: &Mat,
+    slice: &[f32],
+    residual: &mut Mat,
+    g: &mut Mat,
+    factor: &mut Mat,
+    recon: &mut Mat,
+    qbytes: &mut Vec<u8>,
+    qfloats: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    if !reg.is_matrix() {
+        out.extend_from_slice(slice);
+        return Ok(());
+    }
+    g.resize_to(reg.rows, reg.cols);
+    g.data.copy_from_slice(slice);
+    g.axpy(1.0, residual); // G' = G + E
+    if reg.rows >= reg.cols {
+        matmul_tn_into(basis, g, factor); // r × cols
+    } else {
+        matmul_into(g, basis, factor); // rows × r
+    }
+    if codec != WireCodec::F32 {
+        // The wire carries quant(F); replace the factor with its exact
+        // round-trip so the reconstruction, the residual, AND the bytes
+        // we put on the wire all agree. Every rank (sender included)
+        // decodes from the gathered blocks, so cross-rank bitwise
+        // equality never depends on re-encode idempotency; bf16
+        // re-encodes to identical bytes, and int8 keeps its i8 payload
+        // stable (a scale byte can drift one ulp on a rounding tie,
+        // which the next round's error feedback absorbs).
+        encode_packed(codec, std::slice::from_ref(reg), rank, &factor.data, qbytes);
+        decode_packed(codec, std::slice::from_ref(reg), rank, qbytes, qfloats)
+            .map_err(|e| anyhow!("lowrank codec round-trip: {e}"))?;
+        factor.data.copy_from_slice(qfloats);
+    }
+    if reg.rows >= reg.cols {
+        matmul_into(basis, factor, recon);
+    } else {
+        matmul_nt_into(factor, basis, recon);
+    }
+    // Error feedback in place: E ← G' − transmitted.
+    residual.assign_zip(g, recon, |a, b| a - b);
+    out.extend_from_slice(&factor.data);
+    Ok(())
+}
+
+/// Expand the mean packed vector back to the dense layout, identically
+/// into every local worker buffer.
+// hot-path
+fn reconstruct_mean(
+    layout: &GradLayout,
+    rank: usize,
+    bases: &[Mat],
+    mean: &[f32],
+    workers: &mut [Vec<f32>],
+    factor: &mut Mat,
+    recon: &mut Mat,
+) {
+    let Some((first, rest)) = workers.split_first_mut() else {
+        return;
+    };
+    let mut poff = 0usize;
+    for (k, reg) in layout.regions.iter().enumerate() {
+        let fl = reg.factor_floats(rank);
+        let src = &mean[poff..poff + fl];
+        let dst = &mut first[reg.offset..reg.offset + reg.len];
+        if reg.is_matrix() {
+            let basis = &bases[k];
+            if reg.rows >= reg.cols {
+                factor.resize_to(basis.cols, reg.cols);
+                factor.data.copy_from_slice(src);
+                matmul_into(basis, factor, recon);
+            } else {
+                factor.resize_to(reg.rows, basis.cols);
+                factor.data.copy_from_slice(src);
+                matmul_nt_into(factor, basis, recon);
+            }
+            dst.copy_from_slice(&recon.data);
+        } else {
+            dst.copy_from_slice(src);
+        }
+        poff += fl;
+    }
+    for w in rest.iter_mut() {
+        w.copy_from_slice(first);
     }
 }
 
@@ -156,6 +304,8 @@ impl Collective for LowRankAllReduce {
                 compression,
                 residual_norm: 0.0,
                 hops: 0,
+                overlap_flight_ns: 0,
+                overlap_wait_ns: 0,
             });
         }
 
@@ -204,8 +354,21 @@ impl Collective for LowRankAllReduce {
         // Split field borrows: scratch, residuals and the transport are
         // used side by side below.
         let rank = self.rank;
-        let Self { transport, residuals, packed, g, factor, recon, .. } =
-            self;
+        let codec = self.codec;
+        let quantized = codec != WireCodec::F32;
+        let Self {
+            transport,
+            residuals,
+            packed,
+            g,
+            factor,
+            recon,
+            blocks,
+            qbytes,
+            dequant,
+            wire_sum,
+            ..
+        } = self;
 
         // ---- pack: per worker, factors for matrices + raw 1-D tails ----
         // All intermediates live in the owned scratch; steady-state
@@ -219,63 +382,77 @@ impl Collective for LowRankAllReduce {
             p.clear();
             for (k, reg) in layout.regions.iter().enumerate() {
                 let slice = &buf[reg.offset..reg.offset + reg.len];
-                if reg.is_matrix() {
-                    g.resize_to(reg.rows, reg.cols);
-                    g.data.copy_from_slice(slice);
-                    g.axpy(1.0, &residuals[w][k]); // G' = G + E
-                    let basis = &bases[k];
-                    if reg.rows >= reg.cols {
-                        matmul_tn_into(basis, g, factor); // r × cols
-                        matmul_into(basis, factor, recon);
-                    } else {
-                        matmul_into(g, basis, factor); // rows × r
-                        matmul_nt_into(factor, basis, recon);
-                    }
-                    // Error feedback in place: E ← G' − transmitted.
-                    residuals[w][k].assign_zip(g, recon, |a, b| a - b);
-                    p.extend_from_slice(&factor.data);
-                } else {
-                    p.extend_from_slice(slice);
-                }
+                pack_region(
+                    codec,
+                    rank,
+                    reg,
+                    &bases[k],
+                    slice,
+                    &mut residuals[w][k],
+                    g,
+                    factor,
+                    recon,
+                    qbytes,
+                    dequant,
+                    p,
+                )?;
             }
             debug_assert_eq!(p.len(), packed_len);
         }
 
-        // ---- the only traffic: ring all-reduce over the packed factors --
-        let tstats = transport.all_reduce_sum(packed)?;
+        // ---- the only traffic ----
+        let (bytes_per_worker, hops, own_wire_bytes);
+        if !quantized {
+            // f32: ring all-reduce over the packed factors.
+            let tstats = transport.all_reduce_sum(packed)?;
+            bytes_per_worker = tstats.bytes_sent_per_worker;
+            hops = tstats.hops;
+            own_wire_bytes = packed_len * 4;
+        } else {
+            // Quantized: values don't sum on the wire, so each rank
+            // encodes its LOCAL workers' factors into their world
+            // slots, all-gathers the byte blocks, and folds ALL blocks
+            // in rank order locally — a deterministic sum independent
+            // of transport and bucketing.
+            if blocks.len() != n {
+                blocks.resize_with(n, Vec::new);
+            }
+            let off = transport.rank_offset();
+            for (w, p) in packed.iter().enumerate() {
+                encode_packed(
+                    codec,
+                    &layout.regions,
+                    rank,
+                    p,
+                    &mut blocks[off + w],
+                );
+            }
+            let sent = transport.all_gather_bytes(blocks, codec.tag())?;
+            own_wire_bytes = blocks[off].len();
+            wire_sum.clear();
+            wire_sum.resize(packed_len, 0.0);
+            for b in blocks.iter() {
+                decode_packed(codec, &layout.regions, rank, b, dequant)
+                    .map_err(|e| anyhow!("lowrank decode: {e}"))?;
+                for (s, d) in wire_sum.iter_mut().zip(dequant.iter()) {
+                    *s += *d;
+                }
+            }
+            bytes_per_worker = sent;
+            hops = n - 1;
+        }
 
         // ---- mean + local reconstruction (identical on every worker) ---
         let inv = 1.0 / n as f32;
-        let mean = &mut packed[0];
-        for x in mean.iter_mut() {
-            *x *= inv;
-        }
-        let (first, rest) = workers.split_first_mut().unwrap();
-        let mut poff = 0usize;
-        for (k, reg) in layout.regions.iter().enumerate() {
-            let fl = reg.factor_floats(rank);
-            let src = &mean[poff..poff + fl];
-            let dst = &mut first[reg.offset..reg.offset + reg.len];
-            if reg.is_matrix() {
-                let basis = &bases[k];
-                if reg.rows >= reg.cols {
-                    factor.resize_to(basis.cols, reg.cols);
-                    factor.data.copy_from_slice(src);
-                    matmul_into(basis, factor, recon);
-                } else {
-                    factor.resize_to(reg.rows, basis.cols);
-                    factor.data.copy_from_slice(src);
-                    matmul_nt_into(factor, basis, recon);
-                }
-                dst.copy_from_slice(&recon.data);
-            } else {
-                dst.copy_from_slice(src);
+        {
+            let m: &mut Vec<f32> =
+                if quantized { wire_sum } else { &mut packed[0] };
+            for x in m.iter_mut() {
+                *x *= inv;
             }
-            poff += fl;
         }
-        for w in rest.iter_mut() {
-            w.copy_from_slice(first);
-        }
+        let mean: &[f32] = if quantized { wire_sum } else { &packed[0] };
+        reconstruct_mean(layout, rank, &bases, mean, workers, factor, recon);
 
         // Mean over the residual accumulators living in THIS process:
         // all n workers for the in-process transport, just our own rank's
@@ -294,13 +471,315 @@ impl Collective for LowRankAllReduce {
             / local as f64;
 
         self.round += 1;
+        // Quantized compression is measured in BYTES against the dense
+        // f32 wire (4·dense), since the payload is no longer floats.
+        let compression = if quantized {
+            (dense * 4) as f64 / own_wire_bytes.max(1) as f64
+        } else {
+            compression
+        };
         Ok(CommStats {
-            bytes_per_worker: tstats.bytes_sent_per_worker,
+            bytes_per_worker,
             payload_floats: packed_len,
             dense_floats: dense,
             compression,
             residual_norm,
-            hops: tstats.hops,
+            hops,
+            overlap_flight_ns: 0,
+            overlap_wait_ns: 0,
+        })
+    }
+
+    /// Depth-2 bucket pipeline over the factor exchange. The basis
+    /// round, per-region packing, and error feedback are untouched by
+    /// bucketing (regions are never split); only the transport
+    /// granularity changes. Overlap-on ≡ overlap-off bitwise for a
+    /// fixed plan, and the quantized path is additionally bitwise
+    /// identical to its single-shot form for ANY world size (the fold
+    /// is always the rank-ordered block sum).
+    // hot-path
+    fn all_reduce_mean_bucketed(
+        &mut self,
+        workers: &mut [Vec<f32>],
+        layout: &GradLayout,
+        plan: &BucketPlan,
+        overlap: bool,
+    ) -> Result<CommStats> {
+        if plan.len() <= 1 || self.transport.world_size() == 1 {
+            return self.all_reduce_mean(workers, layout);
+        }
+        let n = self.transport.world_size();
+        let local = self.transport.local_endpoints();
+        if workers.len() != local {
+            bail!(
+                "lowrank collective: {} buffers for {local} local \
+                 endpoints (world {n})",
+                workers.len()
+            );
+        }
+        if workers.iter().any(|w| w.len() != layout.total_floats) {
+            bail!(
+                "lowrank collective: buffer length != layout total {}",
+                layout.total_floats
+            );
+        }
+        let packed_len = layout.packed_floats(self.rank);
+        let dense = layout.total_floats;
+
+        let _mem = crate::util::alloc::scope(
+            crate::util::alloc::MemDomain::CommBuffers,
+        );
+        if self.residuals.is_empty() {
+            self.residuals = (0..local)
+                .map(|_| {
+                    layout
+                        .regions
+                        .iter()
+                        .map(|reg| {
+                            if reg.is_matrix() {
+                                Mat::zeros(reg.rows, reg.cols)
+                            } else {
+                                Mat::default()
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+        }
+        let round = self.round;
+        let bases: Vec<Mat> = layout
+            .regions
+            .iter()
+            .enumerate()
+            .map(|(k, reg)| {
+                if reg.is_matrix() {
+                    let (long, _) = reg.oriented();
+                    self.basis_for(round, k, long)
+                } else {
+                    Mat::default()
+                }
+            })
+            .collect();
+
+        let rank = self.rank;
+        let codec = self.codec;
+        let quantized = codec != WireCodec::F32;
+        let Self {
+            transport,
+            residuals,
+            packed,
+            g,
+            factor,
+            recon,
+            qbytes,
+            dequant,
+            wire_sum,
+            shells,
+            gshells,
+            inflight,
+            ..
+        } = self;
+        let overlap = overlap && transport.supports_overlap();
+        let off = transport.rank_offset();
+        if packed.len() != local {
+            *packed =
+                (0..local).map(|_| Vec::with_capacity(packed_len)).collect();
+        }
+        wire_sum.clear();
+        wire_sum.resize(packed_len, 0.0);
+        let nb = plan.len();
+        let mut bytes = 0usize;
+        let mut hops = 0usize;
+        let mut flight_ns = 0u64;
+        let mut wait_ns = 0u64;
+        let mut own_wire_bytes = 0usize;
+        // Finishes land FIFO in ascending bucket order; this running
+        // offset places each bucket's factors in the packed vector.
+        let mut fin_poff = 0usize;
+
+        macro_rules! begin_bucket {
+            ($b:expr) => {{
+                let b: usize = $b;
+                let sp = crate::trace::start();
+                let bk = plan.buckets()[b];
+                if quantized {
+                    let mut gb = gshells.pop_front().unwrap_or_default();
+                    while gb.len() < n {
+                        gb.push(Vec::with_capacity(64));
+                    }
+                    gb.truncate(n);
+                    for blk in gb.iter_mut() {
+                        blk.clear();
+                    }
+                    for (w, buf) in workers.iter().enumerate() {
+                        let p = &mut packed[w];
+                        p.clear();
+                        for k in bk.first_region..bk.end_region {
+                            let reg = &layout.regions[k];
+                            pack_region(
+                                codec,
+                                rank,
+                                reg,
+                                &bases[k],
+                                &buf[reg.offset..reg.offset + reg.len],
+                                &mut residuals[w][k],
+                                g,
+                                factor,
+                                recon,
+                                qbytes,
+                                dequant,
+                                p,
+                            )?;
+                        }
+                        encode_packed(
+                            codec,
+                            plan.regions(layout, b),
+                            rank,
+                            p,
+                            &mut gb[off + w],
+                        );
+                    }
+                    inflight.push_back(std::time::Instant::now());
+                    transport.gather_bytes_begin(gb, codec.tag())?;
+                } else {
+                    let mut shell = shells.pop_front().unwrap_or_default();
+                    while shell.len() < local {
+                        shell.push(Vec::with_capacity(64));
+                    }
+                    shell.truncate(local);
+                    for (w, buf) in workers.iter().enumerate() {
+                        let p = &mut shell[w];
+                        p.clear();
+                        for k in bk.first_region..bk.end_region {
+                            let reg = &layout.regions[k];
+                            pack_region(
+                                codec,
+                                rank,
+                                reg,
+                                &bases[k],
+                                &buf[reg.offset..reg.offset + reg.len],
+                                &mut residuals[w][k],
+                                g,
+                                factor,
+                                recon,
+                                qbytes,
+                                dequant,
+                                p,
+                            )?;
+                        }
+                    }
+                    inflight.push_back(std::time::Instant::now());
+                    transport.reduce_begin(shell, b as u8)?;
+                }
+                sp.record(crate::trace::Phase::BucketReduce);
+            }};
+        }
+        macro_rules! finish_bucket {
+            ($b:expr) => {{
+                let b: usize = $b;
+                let sp = crate::trace::start();
+                let fl = plan.packed_floats(layout, b, rank);
+                let waited = std::time::Instant::now();
+                if quantized {
+                    let (gb, sent) = transport.gather_bytes_finish()?;
+                    // The overlap clock only runs when buckets are
+                    // actually pipelined: a serial round's wait IS its
+                    // flight, and recording it would pollute the
+                    // `comm/overlap_ratio` series with trivial zeros.
+                    if overlap {
+                        wait_ns += waited.elapsed().as_nanos() as u64;
+                        flight_ns += inflight
+                            .front()
+                            .map(|t| t.elapsed().as_nanos() as u64)
+                            .unwrap_or(0);
+                    }
+                    inflight.pop_front();
+                    let regs = plan.regions(layout, b);
+                    let span = &mut wire_sum[fin_poff..fin_poff + fl];
+                    for blk in gb.iter() {
+                        decode_packed(codec, regs, rank, blk, dequant)
+                            .map_err(|e| {
+                                anyhow!("lowrank bucket {b} decode: {e}")
+                            })?;
+                        for (s, d) in span.iter_mut().zip(dequant.iter()) {
+                            *s += *d;
+                        }
+                    }
+                    own_wire_bytes += gb[off].len();
+                    bytes += sent;
+                    hops += n - 1;
+                    gshells.push_back(gb);
+                } else {
+                    let (shell, tstats) = transport.reduce_finish()?;
+                    if overlap {
+                        wait_ns += waited.elapsed().as_nanos() as u64;
+                        flight_ns += inflight
+                            .front()
+                            .map(|t| t.elapsed().as_nanos() as u64)
+                            .unwrap_or(0);
+                    }
+                    inflight.pop_front();
+                    wire_sum[fin_poff..fin_poff + fl]
+                        .copy_from_slice(&shell[0]);
+                    bytes += tstats.bytes_sent_per_worker;
+                    hops += tstats.hops;
+                    own_wire_bytes += fl * 4;
+                    shells.push_back(shell);
+                }
+                fin_poff += fl;
+                sp.record(crate::trace::Phase::BucketReduce);
+            }};
+        }
+
+        if overlap {
+            begin_bucket!(0);
+            for b in 1..nb {
+                begin_bucket!(b);
+                finish_bucket!(b - 1);
+            }
+            finish_bucket!(nb - 1);
+        } else {
+            for b in 0..nb {
+                begin_bucket!(b);
+                finish_bucket!(b);
+            }
+        }
+        debug_assert_eq!(fin_poff, packed_len);
+
+        // ---- mean + local reconstruction ----
+        let inv = 1.0 / n as f32;
+        for x in wire_sum.iter_mut() {
+            *x *= inv;
+        }
+        reconstruct_mean(layout, rank, &bases, wire_sum, workers, factor, recon);
+
+        let residual_norm = residuals
+            .iter()
+            .map(|per_region| {
+                per_region
+                    .iter()
+                    .map(|e| e.fro_norm_sq())
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .sum::<f64>()
+            / local as f64;
+
+        self.round += 1;
+        let compression = if quantized {
+            (dense * 4) as f64 / own_wire_bytes.max(1) as f64
+        } else {
+            dense as f64 / packed_len.max(1) as f64
+        };
+        Ok(CommStats {
+            bytes_per_worker: bytes,
+            payload_floats: packed_len,
+            dense_floats: dense,
+            compression,
+            residual_norm,
+            hops,
+            overlap_flight_ns: flight_ns,
+            overlap_wait_ns: wait_ns,
         })
     }
 }
@@ -469,5 +948,179 @@ mod tests {
         assert!(c.all_reduce_mean(&mut wrong_world, &layout).is_err());
         let mut wrong_len = vec![vec![0.0f32; 3], vec![0.0f32; 3]];
         assert!(c.all_reduce_mean(&mut wrong_len, &layout).is_err());
+    }
+
+    #[test]
+    fn bucketed_overlap_matches_serial_and_single_shot() {
+        // Three collectives, identical seeds: single-shot, bucketed
+        // serial, bucketed overlapped. At world 2 every f32 chunk sum
+        // has exactly two terms, so all three must agree BITWISE over
+        // rounds that carry live EF residuals across a refresh.
+        let layout = layout();
+        let plan = BucketPlan::from_layout(&layout, 1);
+        assert!(plan.len() > 1, "1 KiB target must split this layout");
+        let mk = || {
+            LowRankAllReduce::new(Box::new(RingTransport::new(2)), 4, 5)
+        };
+        let (mut single, mut serial, mut overlap) = (mk(), mk(), mk());
+        for round in 0..4 {
+            let bufs = rand_workers(2, layout.total_floats, 40 + round);
+            let (mut a, mut b, mut c) =
+                (bufs.clone(), bufs.clone(), bufs);
+            single.all_reduce_mean(&mut a, &layout).unwrap();
+            let sb = serial
+                .all_reduce_mean_bucketed(&mut b, &layout, &plan, false)
+                .unwrap();
+            let ob = overlap
+                .all_reduce_mean_bucketed(&mut c, &layout, &plan, true)
+                .unwrap();
+            assert_eq!(a, b, "round {round}: bucketed-serial differs");
+            assert_eq!(a, c, "round {round}: bucketed-overlap differs");
+            assert_eq!(sb.bytes_per_worker, ob.bytes_per_worker);
+            assert_eq!(sb.overlap_flight_ns, 0, "serial path never waits");
+            assert!(
+                ob.overlap_flight_ns > 0,
+                "overlap path must report in-flight time"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_bucketed_matches_single_shot_bitwise() {
+        // The quantized fold is a rank-ordered block sum — independent
+        // of the bucket plan and of overlap — so bf16/int8 bucketed
+        // rounds must match the single-shot path bitwise at ANY world
+        // size (here 3, where the f32 ring would NOT be order-free).
+        let layout = layout();
+        let plan = BucketPlan::from_layout(&layout, 1);
+        assert!(plan.len() > 1);
+        for codec in [WireCodec::Bf16, WireCodec::Int8] {
+            let mk = || {
+                LowRankAllReduce::with_codec(
+                    Box::new(RingTransport::new(3)),
+                    4,
+                    5,
+                    codec,
+                )
+            };
+            let (mut single, mut bucketed) = (mk(), mk());
+            for round in 0..4 {
+                let bufs =
+                    rand_workers(3, layout.total_floats, 80 + round);
+                let (mut a, mut b) = (bufs.clone(), bufs);
+                single.all_reduce_mean(&mut a, &layout).unwrap();
+                bucketed
+                    .all_reduce_mean_bucketed(
+                        &mut b, &layout, &plan, true,
+                    )
+                    .unwrap();
+                assert_eq!(
+                    a,
+                    b,
+                    "{} round {round}: quantized bucketed differs \
+                     from single-shot",
+                    codec.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_workers_agree_and_compress_harder() {
+        // Every worker reconstructs the identical mean from the shared
+        // gathered blocks, the EF residual absorbs the quantization
+        // error (non-zero residual), and the recorded compression
+        // beats the exact-f32 factor exchange.
+        let layout = layout();
+        let f32_stats = {
+            let mut c = LowRankAllReduce::new(
+                Box::new(RingTransport::new(2)),
+                4,
+                5,
+            );
+            let mut bufs = rand_workers(2, layout.total_floats, 21);
+            c.all_reduce_mean(&mut bufs, &layout).unwrap()
+        };
+        for codec in [WireCodec::Bf16, WireCodec::Int8] {
+            let mut c = LowRankAllReduce::with_codec(
+                Box::new(RingTransport::new(2)),
+                4,
+                5,
+                codec,
+            );
+            let mut bufs = rand_workers(2, layout.total_floats, 21);
+            let stats = c.all_reduce_mean(&mut bufs, &layout).unwrap();
+            assert_eq!(bufs[0], bufs[1], "{}", codec.label());
+            assert!(
+                stats.residual_norm > 0.0,
+                "{}: EF must hold the quantization error",
+                codec.label()
+            );
+            assert!(
+                stats.compression > f32_stats.compression,
+                "{}: quantized wire must compress harder than f32 \
+                 ({} vs {})",
+                codec.label(),
+                stats.compression,
+                f32_stats.compression
+            );
+        }
+    }
+
+    #[test]
+    fn quantization_error_drains_through_error_feedback() {
+        // A CONSTANT gradient fed repeatedly: with EF, the quantized
+        // mean must converge toward the exact mean (deferred energy is
+        // reinjected, not lost). Compare the last round's
+        // reconstruction error against the first round's.
+        let layout = layout();
+        let mut c = LowRankAllReduce::with_codec(
+            Box::new(RingTransport::new(2)),
+            6,
+            5,
+            WireCodec::Int8,
+        );
+        let fixed = rand_workers(2, layout.total_floats, 33);
+        let exact: Vec<f32> = (0..layout.total_floats)
+            .map(|i| (fixed[0][i] + fixed[1][i]) / 2.0)
+            .collect();
+        let reg = layout.regions[0]; // a projected matrix region
+        let err = |got: &[f32]| -> f64 {
+            (0..reg.len)
+                .map(|i| {
+                    let d = (got[reg.offset + i]
+                        - exact[reg.offset + i])
+                        as f64;
+                    d * d
+                })
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut first = None;
+        let mut last = 0.0f64;
+        let mut cumulative = vec![0.0f64; layout.total_floats];
+        for round in 0..24 {
+            let mut bufs = fixed.clone();
+            c.all_reduce_mean(&mut bufs, &layout).unwrap();
+            for (acc, &g) in cumulative.iter_mut().zip(&bufs[0]) {
+                *acc += g as f64;
+            }
+            // The running average of delivered means is what training
+            // integrates; EF should push it toward the exact mean.
+            let avg: Vec<f32> = cumulative
+                .iter()
+                .map(|a| (*a / (round + 1) as f64) as f32)
+                .collect();
+            last = err(&avg);
+            if round == 0 {
+                first = Some(last);
+            }
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first * 0.5,
+            "EF must drain quantization error over rounds: first \
+             {first} last {last}"
+        );
     }
 }

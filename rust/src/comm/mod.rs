@@ -25,17 +25,36 @@
 //!   the bulk gradient energy outside the core subspace is reinjected
 //!   over subsequent rounds rather than lost.
 //!
-//! The two axes compose orthogonally: the trainer selects a comm regime
+//! Two cross-cutting pieces ride on top (ISSUE 10):
+//!
+//! * [`bucket`] — a deterministic partition of the layout into
+//!   reduction buckets ([`BucketPlan`], `--bucket-kb`). Boundaries are
+//!   pure layout arithmetic — NEVER timing — so every rank derives the
+//!   identical plan, and `--overlap` (a depth-2 begin/finish pipeline
+//!   on the transport) changes only *when* wire time happens, never a
+//!   bit of the result.
+//! * [`codec`] — the `--wire f32|bf16|int8` quantized wire format for
+//!   the low-rank factor exchange ([`WireCodec`]); quantization error
+//!   folds into the existing error-feedback residuals, and `comm/bytes`
+//!   reports true post-quantization wire traffic.
+//!
+//! The axes compose orthogonally: the trainer selects a comm regime
 //! via [`CommMode`] (`--comm dense|lowrank`, `--comm-rank R`) and a
 //! transport via [`TransportMode`] (`--transport inproc|tcp`, with
 //! `--world N --net-rank k --peers …` for tcp); every combination
-//! produces the same reduced gradients bit for bit.
+//! produces the same reduced gradients bit for bit. `--wire bf16|int8`
+//! changes the transmitted values (still bitwise-reproducible across
+//! transports and bucket plans) and requires `--comm lowrank`.
 
+pub mod bucket;
+pub mod codec;
 pub mod collective;
 pub mod lowrank;
 pub mod net;
 pub mod transport;
 
+pub use bucket::{Bucket, BucketPlan};
+pub use codec::WireCodec;
 pub use collective::{
     Collective, CommStats, DenseAllReduce, GradLayout, GradRegion,
 };
@@ -97,24 +116,30 @@ impl TransportMode {
 }
 
 /// Wrap an already-established transport in the configured collective.
-/// `rank`/`seed` only matter for [`CommMode::LowRank`].
+/// `rank`/`seed`/`codec` only matter for [`CommMode::LowRank`] (`--wire`
+/// quantization applies to the factor exchange; the dense collective is
+/// always exact f32).
 pub fn build_collective_with(
     transport: Box<dyn Transport>,
     mode: CommMode,
     rank: usize,
     seed: u64,
+    codec: WireCodec,
 ) -> Box<dyn Collective> {
     match mode {
         CommMode::Dense => Box::new(DenseAllReduce::new(transport)),
-        CommMode::LowRank => {
-            Box::new(LowRankAllReduce::new(transport, rank.max(1), seed))
-        }
+        CommMode::LowRank => Box::new(LowRankAllReduce::with_codec(
+            transport,
+            rank.max(1),
+            seed,
+            codec,
+        )),
     }
 }
 
 /// Build the configured collective over a fresh persistent in-process
-/// ring of `workers` endpoints. `rank`/`seed` only matter for
-/// [`CommMode::LowRank`].
+/// ring of `workers` endpoints, with the exact f32 wire codec.
+/// `rank`/`seed` only matter for [`CommMode::LowRank`].
 pub fn build_collective(
     mode: CommMode,
     workers: usize,
@@ -126,6 +151,7 @@ pub fn build_collective(
         mode,
         rank,
         seed,
+        WireCodec::F32,
     )
 }
 
@@ -158,5 +184,26 @@ mod tests {
         let l = build_collective(CommMode::LowRank, 2, 8, 0);
         assert_eq!(l.label(), "lowrank");
         assert_eq!(l.transport().local_endpoints(), 2);
+    }
+
+    #[test]
+    fn builder_threads_the_wire_codec() {
+        let q = build_collective_with(
+            Box::new(RingTransport::new(2)),
+            CommMode::LowRank,
+            8,
+            0,
+            WireCodec::Int8,
+        );
+        assert_eq!(q.label(), "lowrank");
+        // The dense collective ignores the codec (always exact f32).
+        let d = build_collective_with(
+            Box::new(RingTransport::new(2)),
+            CommMode::Dense,
+            8,
+            0,
+            WireCodec::Bf16,
+        );
+        assert_eq!(d.label(), "dense");
     }
 }

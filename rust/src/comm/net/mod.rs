@@ -10,9 +10,15 @@
 //!   panics on malformed peers):
 //!
 //!   ```text
-//!   | magic u32 | ver u16 | kind u8 | 0 u8 | rank u32 | round u64 |
+//!   | magic u32 | ver u16 | kind u8 | tag u8 | rank u32 | round u64 |
 //!   | len u32 | payload… | crc32 u32 |
 //!   ```
+//!
+//!   The `tag` byte is kind-specific and CRC-covered: the bucket index
+//!   on bucketed reduction Data frames (a divergent peer schedule fails
+//!   as `bucket-out-of-order`), the [`crate::comm::WireCodec`] id on
+//!   quantized Gather frames (`unknown-wire-codec` /
+//!   `quantized-payload-mismatch`), 0 otherwise.
 //!
 //! * [`world`] — rendezvous and handshake: every rank binds
 //!   `peers[rank]`, dials its downstream neighbor, and both endpoints
@@ -27,9 +33,12 @@
 //!   and accumulation order are byte-for-byte the in-process ring's, and
 //!   f32 chunks travel as exact little-endian bytes — so a TCP world's
 //!   reduced gradients (and therefore its training losses) are bitwise
-//!   identical to `--transport inproc`. A per-rank persistent reader
-//!   thread drains the upstream link so the ring can never write-write
-//!   deadlock; a round-0 probe all-reduces 1.0 to verify the assembled
+//!   identical to `--transport inproc`. Two persistent threads per
+//!   rank: a reader drains the upstream link so the ring can never
+//!   write-write deadlock, and a driver owns the socket schedule so
+//!   `reduce_begin`/`gather_bytes_begin` return immediately and the
+//!   depth-2 `--overlap` pipeline hides bucket wire time behind
+//!   compute. A round-0 probe all-reduces 1.0 to verify the assembled
 //!   ring end-to-end.
 //!
 //! * [`launch`] — `train --spawn-local N`: forks N ranks of this binary

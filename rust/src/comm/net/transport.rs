@@ -12,36 +12,53 @@
 //! an exact roundtrip — so a TCP world's reduced gradient is bitwise
 //! identical to the in-process transport's (pinned in
 //! rust/tests/net_props.rs), and training under `--transport tcp`
-//! reproduces `--transport inproc` losses exactly.
+//! reproduces `--transport inproc` losses exactly. Bucketed rounds
+//! change only the granularity: each bucket is one ring round whose
+//! frames carry the bucket index in the tag byte, so the schedule —
+//! and therefore the result — is the same whether buckets are reduced
+//! serially or overlapped with coordinator compute.
 //!
 //! ## Concurrency shape
 //!
-//! One persistent reader thread per rank owns the upstream (recv)
-//! stream and decodes frames into a bounded channel; the coordinator
-//! thread writes to the downstream (send) stream and consumes decoded
-//! frames. This keeps the classic ring deadlock away — every rank's
-//! inbound bytes are ALWAYS being drained, so a blocking send can never
-//! wedge the whole ring — without per-round thread spawns (the reader
-//! is created once, like the pool and ring workers). Payload buffers
-//! ping-pong between the reader and the coordinator through a recycle
-//! channel, so steady-state rounds reuse the same few allocations.
+//! Two persistent threads per rank, both created once at
+//! establishment:
+//!
+//! * `net-recv-{rank}` owns the upstream (recv) stream and decodes
+//!   frames into a bounded channel, so every rank's inbound bytes are
+//!   ALWAYS being drained and a blocking send can never wedge the ring;
+//! * `net-drive-{rank}` owns the downstream (send) stream and runs the
+//!   hop loops: the coordinator enqueues jobs (reduce round, f64
+//!   sidecar gather, byte-block gather) on a bounded channel and
+//!   collects results from per-type completion channels. Synchronous
+//!   calls are enqueue + wait; [`Transport::reduce_begin`] /
+//!   [`Transport::reduce_finish`] are the same two halves split apart,
+//!   which is what lets bucketed reduction overlap wire time with
+//!   coordinator compute on a real network — without per-round thread
+//!   spawns, and with every buffer ping-ponging through the channels
+//!   so steady-state rounds reuse the same few allocations.
 //!
 //! Failures never panic the process: a dead peer surfaces as
 //! `peer-disconnected`/`truncated-frame`, a hung one as `peer-timeout`,
-//! cross-talk as `unexpected-rank`/`round-mismatch` — all typed
+//! cross-talk as `unexpected-rank`/`round-mismatch`, a divergent bucket
+//! schedule as `bucket-out-of-order`, and a mismatched `--wire` as
+//! `unknown-wire-codec`/`quantized-payload-mismatch` — all typed
 //! [`NetError`]s carried through `anyhow` with rank/round context.
 
+use std::collections::VecDeque;
 use std::net::{Shutdown, TcpStream};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Mutex;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::comm::codec::WireCodec;
 use crate::comm::transport::{Transport, TransportStats};
 
-use super::wire::{encode_frame, read_frame, FrameHeader, FrameKind, NetError};
+use super::wire::{
+    encode_frame_tagged, read_frame, FrameHeader, FrameKind, NetError,
+};
 use super::world::{TcpWorld, WorldConfig};
 
 /// The socket [`Transport`]: `world_size()` ranks across processes,
@@ -49,11 +66,54 @@ use super::world::{TcpWorld, WorldConfig};
 pub struct TcpRingTransport {
     world: usize,
     rank: usize,
-    state: Mutex<TcpState>,
+    /// The persistent `net-drive-{rank}` thread; `None` for a world of
+    /// 1, whose rounds are local no-ops.
+    driver: Option<DriverHandle>,
+    /// Pending local no-op rounds for the degenerate world of 1 (the
+    /// serial begin/finish path still runs there).
+    local_reduces: Mutex<VecDeque<Vec<Vec<f32>>>>,
+    local_gathers: Mutex<VecDeque<Vec<Vec<u8>>>>,
+    /// Outer-shell pool for routing the synchronous `all_reduce_sum`
+    /// through the driver without per-round allocations.
+    shells: Mutex<VecDeque<Vec<Vec<f32>>>>,
+    /// (local, out) f64 scratch pairs for the sidecar gather.
+    f64_scratch: Mutex<VecDeque<(Vec<f64>, Vec<f64>)>>,
+}
+
+/// One queued unit of wire work for the driver thread.
+enum DriverJob {
+    /// A full two-phase ring all-reduce of one buffer; `tag` is the
+    /// bucket index stamped on every Data frame (0 when unbucketed).
+    Reduce { bufs: Vec<Vec<f32>>, tag: u8 },
+    /// Ring relay of the f64 loss sidecar.
+    GatherF64 { local: Vec<f64>, out: Vec<f64> },
+    /// Ring relay of rank-ordered opaque byte blocks; `codec_tag` is
+    /// the wire-codec id stamped on every Gather frame.
+    GatherBytes { blocks: Vec<Vec<u8>>, codec_tag: u8 },
+}
+
+struct DriverHandle {
+    /// Dropping this (`Drop` takes it) closes the queue and stops the
+    /// driver. Capacity 4 covers the depth-2 bucket pipeline plus a
+    /// queued sidecar op with room to spare.
+    jobs: Option<SyncSender<DriverJob>>,
+    reduce_done: Receiver<Result<(Vec<Vec<f32>>, TransportStats)>>,
+    gather_done: Receiver<Result<(Vec<f64>, Vec<f64>, usize)>>,
+    bytes_done: Receiver<Result<(Vec<Vec<u8>>, usize)>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl DriverHandle {
+    fn send_job(&self, job: DriverJob) -> Result<()> {
+        let Some(tx) = &self.jobs else {
+            bail!("net driver stopped");
+        };
+        tx.send(job).map_err(|_| anyhow!("net driver gone"))
+    }
 }
 
 struct TcpState {
-    /// Downstream link (to rank+1); `None` for a world of 1.
+    /// Downstream link (to rank+1).
     send: Option<TcpStream>,
     /// Upstream link, owned by the reader thread.
     reader: Option<ReaderLink>,
@@ -62,7 +122,9 @@ struct TcpState {
     /// Outgoing payload byte scratch, reused per hop.
     payload: Vec<u8>,
     /// Collective round counter; every frame carries it and every
-    /// received frame must match it (lockstep check).
+    /// received frame must match it (lockstep check). Bucketed steps
+    /// advance it once per bucket — deterministically, so every rank
+    /// counts in lockstep.
     round: u64,
     io_timeout: Duration,
 }
@@ -70,8 +132,8 @@ struct TcpState {
 struct ReaderLink {
     frames: Receiver<Result<(FrameHeader, Vec<u8>), NetError>>,
     recycle: SyncSender<Vec<u8>>,
-    /// Clone of the recv stream: `Drop` shuts it down to unblock the
-    /// reader's blocking read.
+    /// Clone of the recv stream: shutdown unblocks the reader's
+    /// blocking read at teardown.
     shutdown: TcpStream,
     handle: Option<JoinHandle<()>>,
 }
@@ -118,6 +180,11 @@ fn stage_f64(out: &mut Vec<u8>, vals: &[f64]) {
     }
 }
 
+fn stage_bytes(out: &mut Vec<u8>, vals: &[u8]) {
+    out.clear();
+    out.extend_from_slice(vals);
+}
+
 impl TcpState {
     /// Frame and send the staged payload. Returns real wire bytes
     /// (header + payload + crc) — what the comm metrics record.
@@ -125,14 +192,21 @@ impl TcpState {
         &mut self,
         rank: u32,
         kind: FrameKind,
+        tag: u8,
         round: u64,
     ) -> Result<usize, NetError> {
         use std::io::Write;
         // NetSend span: encode + the blocking socket write. Error paths
         // skip the record — a failed round tears the run down anyway.
         let sp = crate::trace::start();
-        let total =
-            encode_frame(&mut self.frame, kind, rank, round, &self.payload)?;
+        let total = encode_frame_tagged(
+            &mut self.frame,
+            kind,
+            tag,
+            rank,
+            round,
+            &self.payload,
+        )?;
         let stream = self.send.as_mut().ok_or(NetError::PeerDisconnected)?;
         stream.write_all(&self.frame)?;
         sp.record(crate::trace::Phase::NetSend);
@@ -140,14 +214,16 @@ impl TcpState {
     }
 
     /// Receive one frame and validate its provenance: kind, upstream
-    /// rank, lockstep round, and exact payload size.
+    /// rank, lockstep round, and (when `needed` is given) exact payload
+    /// size. Returns the frame's tag byte alongside the payload; tag
+    /// semantics are kind-specific, so callers validate it.
     fn recv_expect(
         &mut self,
         kind: FrameKind,
         from: u32,
         round: u64,
-        needed: usize,
-    ) -> Result<Vec<u8>, NetError> {
+        needed: Option<usize>,
+    ) -> Result<(u8, Vec<u8>), NetError> {
         let link = self.reader.as_ref().ok_or(NetError::PeerDisconnected)?;
         // NetRecv span: the blocking wait for the upstream frame — the
         // ring's exposed-latency phase (validation below is ns-scale).
@@ -170,10 +246,12 @@ impl TcpState {
         if hdr.round != round {
             return Err(NetError::RoundMismatch { expected: round, got: hdr.round });
         }
-        if payload.len() != needed {
-            return Err(NetError::Truncated { needed, got: payload.len() });
+        if let Some(needed) = needed {
+            if payload.len() != needed {
+                return Err(NetError::Truncated { needed, got: payload.len() });
+            }
         }
-        Ok(payload)
+        Ok((hdr.tag, payload))
     }
 
     /// Hand a consumed payload buffer back to the reader for reuse.
@@ -182,12 +260,255 @@ impl TcpState {
             let _ = link.recycle.try_send(payload);
         }
     }
+
+    /// One two-phase ring all-reduce round over `buf`; every frame is
+    /// stamped with the bucket `tag`, and a frame whose tag disagrees
+    /// is the typed `bucket-out-of-order` failure.
+    fn run_reduce(
+        &mut self,
+        world: usize,
+        rank: usize,
+        buf: &mut [f32],
+        tag: u8,
+    ) -> Result<usize> {
+        let round = self.round;
+        self.round += 1;
+        let n = world;
+        let prev = ((rank + n - 1) % n) as u32;
+        let len = buf.len();
+        // Chunk boundaries: identical to the in-process ring_worker.
+        let start = |c: usize| c * len / n;
+        let mut sent = 0usize;
+        // Phase 1: reduce-scatter (add order identical to ring_worker —
+        // own chunk += received chunk, in ring-arrival order).
+        for step in 0..n - 1 {
+            let send_chunk = (rank + n - step) % n;
+            let (s0, s1) = (start(send_chunk), start(send_chunk + 1));
+            stage_f32(&mut self.payload, &buf[s0..s1]);
+            sent += self
+                .send_staged(rank as u32, FrameKind::Data, tag, round)
+                .map_err(|e| {
+                    anyhow!("tcp ring rank {rank} round {round} send: {e}")
+                })?;
+            let recv_chunk = (rank + n - step - 1 + n) % n;
+            let (r0, r1) = (start(recv_chunk), start(recv_chunk + 1));
+            let (got_tag, data) = self
+                .recv_expect(FrameKind::Data, prev, round, Some((r1 - r0) * 4))
+                .map_err(|e| {
+                    anyhow!("tcp ring rank {rank} round {round} recv: {e}")
+                })?;
+            if got_tag != tag {
+                return Err(anyhow!(
+                    "tcp ring rank {rank} round {round} recv: {}",
+                    NetError::BucketOutOfOrder { expected: tag, got: got_tag }
+                ));
+            }
+            for (dst, src) in buf[r0..r1].iter_mut().zip(data.chunks_exact(4))
+            {
+                // repo-lint: allow(net-panic) — chunks_exact(4) yields
+                // exactly-4-byte slices; recv_expect validated length.
+                *dst += f32::from_le_bytes(src.try_into().unwrap());
+            }
+            self.recycle(data);
+        }
+        // Phase 2: all-gather.
+        for step in 0..n - 1 {
+            let send_chunk = (rank + 1 + n - step) % n;
+            let (s0, s1) = (start(send_chunk), start(send_chunk + 1));
+            stage_f32(&mut self.payload, &buf[s0..s1]);
+            sent += self
+                .send_staged(rank as u32, FrameKind::Data, tag, round)
+                .map_err(|e| {
+                    anyhow!("tcp ring rank {rank} round {round} send: {e}")
+                })?;
+            let recv_chunk = (rank + n - step) % n;
+            let (r0, r1) = (start(recv_chunk), start(recv_chunk + 1));
+            let (got_tag, data) = self
+                .recv_expect(FrameKind::Data, prev, round, Some((r1 - r0) * 4))
+                .map_err(|e| {
+                    anyhow!("tcp ring rank {rank} round {round} recv: {e}")
+                })?;
+            if got_tag != tag {
+                return Err(anyhow!(
+                    "tcp ring rank {rank} round {round} recv: {}",
+                    NetError::BucketOutOfOrder { expected: tag, got: got_tag }
+                ));
+            }
+            for (dst, src) in buf[r0..r1].iter_mut().zip(data.chunks_exact(4))
+            {
+                // repo-lint: allow(net-panic) — chunks_exact(4) yields
+                // exactly-4-byte slices; recv_expect validated length.
+                *dst = f32::from_le_bytes(src.try_into().unwrap());
+            }
+            self.recycle(data);
+        }
+        Ok(sent)
+    }
+
+    /// Ring relay of the f64 sidecar into rank-ordered `out`.
+    fn run_gather_f64(
+        &mut self,
+        world: usize,
+        rank: usize,
+        local: &[f64],
+        out: &mut Vec<f64>,
+    ) -> Result<usize> {
+        let n = world;
+        let l = local.len();
+        out.clear();
+        out.resize(n * l, 0.0);
+        out[rank * l..(rank + 1) * l].copy_from_slice(local);
+        let round = self.round;
+        self.round += 1;
+        let prev = ((rank + n - 1) % n) as u32;
+        let mut sent = 0usize;
+        for step in 0..n - 1 {
+            // Relay: first hop sends our own slot, hop s forwards the
+            // slot received at hop s-1.
+            let send_idx = (rank + n - step) % n;
+            stage_f64(&mut self.payload, &out[send_idx * l..(send_idx + 1) * l]);
+            sent += self
+                .send_staged(rank as u32, FrameKind::Gather, 0, round)
+                .map_err(|e| {
+                    anyhow!("tcp gather rank {rank} round {round} send: {e}")
+                })?;
+            let recv_idx = (rank + n - step - 1) % n;
+            let (_tag, data) = self
+                .recv_expect(FrameKind::Gather, prev, round, Some(l * 8))
+                .map_err(|e| {
+                    anyhow!("tcp gather rank {rank} round {round} recv: {e}")
+                })?;
+            for (dst, src) in out[recv_idx * l..(recv_idx + 1) * l]
+                .iter_mut()
+                .zip(data.chunks_exact(8))
+            {
+                // repo-lint: allow(net-panic) — chunks_exact(8) yields
+                // exactly-8-byte slices; recv_expect validated length.
+                *dst = f64::from_le_bytes(src.try_into().unwrap());
+            }
+            self.recycle(data);
+        }
+        Ok(sent)
+    }
+
+    /// Ring relay of rank-ordered opaque byte blocks (quantized
+    /// factors). Every frame carries the wire-codec id in its tag; a
+    /// tag outside the codec vocabulary is `unknown-wire-codec`, and a
+    /// block whose codec or byte count disagrees with ours is
+    /// `quantized-payload-mismatch`.
+    fn run_gather_bytes(
+        &mut self,
+        world: usize,
+        rank: usize,
+        blocks: &mut [Vec<u8>],
+        codec_tag: u8,
+    ) -> Result<usize> {
+        let n = world;
+        let round = self.round;
+        self.round += 1;
+        let prev = ((rank + n - 1) % n) as u32;
+        let needed = blocks[rank].len();
+        let mut sent = 0usize;
+        for step in 0..n - 1 {
+            let send_idx = (rank + n - step) % n;
+            stage_bytes(&mut self.payload, &blocks[send_idx]);
+            sent += self
+                .send_staged(rank as u32, FrameKind::Gather, codec_tag, round)
+                .map_err(|e| {
+                    anyhow!("tcp bgather rank {rank} round {round} send: {e}")
+                })?;
+            let recv_idx = (rank + n - step - 1) % n;
+            let (got_tag, data) = self
+                .recv_expect(FrameKind::Gather, prev, round, None)
+                .map_err(|e| {
+                    anyhow!("tcp bgather rank {rank} round {round} recv: {e}")
+                })?;
+            if WireCodec::from_tag(got_tag).is_none() {
+                return Err(anyhow!(
+                    "tcp bgather rank {rank} round {round} recv: {}",
+                    NetError::UnknownWireCodec(got_tag)
+                ));
+            }
+            if got_tag != codec_tag || data.len() != needed {
+                return Err(anyhow!(
+                    "tcp bgather rank {rank} round {round} recv: {}",
+                    NetError::QuantizedPayloadMismatch {
+                        expected: needed,
+                        got: data.len(),
+                    }
+                ));
+            }
+            stage_bytes(&mut blocks[recv_idx], &data);
+            self.recycle(data);
+        }
+        Ok(sent)
+    }
+}
+
+/// The driver thread body: run queued wire work until the job channel
+/// closes, then tear the links down (so `Drop` on the transport is
+/// just close-queue + join).
+fn driver_loop(
+    mut st: TcpState,
+    world: usize,
+    rank: usize,
+    jobs: Receiver<DriverJob>,
+    reduce_tx: SyncSender<Result<(Vec<Vec<f32>>, TransportStats)>>,
+    gather_tx: SyncSender<Result<(Vec<f64>, Vec<f64>, usize)>>,
+    bytes_tx: SyncSender<Result<(Vec<Vec<u8>>, usize)>>,
+) {
+    while let Ok(job) = jobs.recv() {
+        let delivered = match job {
+            DriverJob::Reduce { mut bufs, tag } => {
+                let res = match bufs.first_mut() {
+                    Some(buf) => st.run_reduce(world, rank, buf, tag),
+                    None => Err(anyhow!("reduce job without a buffer")),
+                };
+                let out = res.map(|sent| {
+                    (
+                        bufs,
+                        TransportStats {
+                            bytes_sent_per_worker: sent,
+                            hops: 2 * (world - 1),
+                        },
+                    )
+                });
+                reduce_tx.send(out).is_ok()
+            }
+            DriverJob::GatherF64 { local, mut out } => {
+                let res = st.run_gather_f64(world, rank, &local, &mut out);
+                gather_tx.send(res.map(|sent| (local, out, sent))).is_ok()
+            }
+            DriverJob::GatherBytes { mut blocks, codec_tag } => {
+                let res =
+                    st.run_gather_bytes(world, rank, &mut blocks, codec_tag);
+                bytes_tx.send(res.map(|sent| (blocks, sent))).is_ok()
+            }
+        };
+        if !delivered {
+            break;
+        }
+    }
+    // Teardown: unblock + join the reader, close the send stream.
+    if let Some(s) = st.send.take() {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    if let Some(link) = st.reader.take() {
+        let ReaderLink { frames, recycle, shutdown, handle } = link;
+        let _ = shutdown.shutdown(Shutdown::Both);
+        drop(frames);
+        drop(recycle);
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
 }
 
 impl TcpRingTransport {
-    /// Bind/dial/handshake the world, spawn the persistent reader, and
-    /// run the round-0 liveness probe through the data path. Returns
-    /// only when this rank is ready for gradient rounds.
+    /// Bind/dial/handshake the world, spawn the persistent reader and
+    /// driver threads, and run the round-0 liveness probe through the
+    /// data path. Returns only when this rank is ready for gradient
+    /// rounds.
     pub fn establish(cfg: &WorldConfig) -> Result<TcpRingTransport> {
         let (rank, world) = (cfg.net.rank, cfg.net.world);
         let tw = TcpWorld::establish(cfg).map_err(|e| {
@@ -202,44 +523,76 @@ impl TcpRingTransport {
         w: TcpWorld,
         io_timeout: Duration,
     ) -> Result<TcpRingTransport> {
-        if let Some(s) = &w.send {
-            s.set_write_timeout(Some(io_timeout))?;
-        }
-        let reader = match w.recv {
-            None => None,
-            Some(stream) => {
-                // The reader blocks in read() between rounds (no frame
-                // is due); liveness while one IS due is enforced by the
-                // coordinator's recv_timeout instead.
-                stream.set_read_timeout(None)?;
-                let shutdown = stream.try_clone()?;
-                let (tx, frames) = sync_channel(2);
-                let (recycle, recycle_rx) = sync_channel::<Vec<u8>>(2);
-                let handle = std::thread::Builder::new()
-                    .name(format!("net-recv-{}", w.rank))
-                    .spawn(move || reader_loop(stream, tx, recycle_rx))
-                    // repo-lint: allow(net-panic) — local thread-spawn
-                    // resource exhaustion, not peer-controlled input.
-                    .expect("spawn net reader");
-                Some(ReaderLink {
-                    frames,
-                    recycle,
-                    shutdown,
-                    handle: Some(handle),
-                })
+        let driver = if w.world > 1 {
+            if let Some(s) = &w.send {
+                s.set_write_timeout(Some(io_timeout))?;
             }
-        };
-        Ok(TcpRingTransport {
-            world: w.world,
-            rank: w.rank,
-            state: Mutex::new(TcpState {
+            let reader = match w.recv {
+                None => None,
+                Some(stream) => {
+                    // The reader blocks in read() between rounds (no
+                    // frame is due); liveness while one IS due is
+                    // enforced by the driver's recv_timeout instead.
+                    stream.set_read_timeout(None)?;
+                    let shutdown = stream.try_clone()?;
+                    let (tx, frames) = sync_channel(2);
+                    let (recycle, recycle_rx) = sync_channel::<Vec<u8>>(2);
+                    let handle = std::thread::Builder::new()
+                        .name(format!("net-recv-{}", w.rank))
+                        .spawn(move || reader_loop(stream, tx, recycle_rx))
+                        // repo-lint: allow(net-panic) — local thread-spawn
+                        // resource exhaustion, not peer-controlled input.
+                        .expect("spawn net reader");
+                    Some(ReaderLink {
+                        frames,
+                        recycle,
+                        shutdown,
+                        handle: Some(handle),
+                    })
+                }
+            };
+            let st = TcpState {
                 send: w.send,
                 reader,
                 frame: Vec::new(),
                 payload: Vec::new(),
                 round: 0,
                 io_timeout,
-            }),
+            };
+            let (jobs_tx, jobs_rx) = sync_channel::<DriverJob>(4);
+            let (reduce_tx, reduce_done) = sync_channel(2);
+            let (gather_tx, gather_done) = sync_channel(2);
+            let (bytes_tx, bytes_done) = sync_channel(2);
+            let (world, rank) = (w.world, w.rank);
+            let handle = std::thread::Builder::new()
+                .name(format!("net-drive-{rank}"))
+                .spawn(move || {
+                    driver_loop(
+                        st, world, rank, jobs_rx, reduce_tx, gather_tx,
+                        bytes_tx,
+                    )
+                })
+                // repo-lint: allow(net-panic) — local thread-spawn
+                // resource exhaustion, not peer-controlled input.
+                .expect("spawn net driver");
+            Some(DriverHandle {
+                jobs: Some(jobs_tx),
+                reduce_done,
+                gather_done,
+                bytes_done,
+                handle: Some(handle),
+            })
+        } else {
+            None
+        };
+        Ok(TcpRingTransport {
+            world: w.world,
+            rank: w.rank,
+            driver,
+            local_reduces: Mutex::new(VecDeque::new()),
+            local_gathers: Mutex::new(VecDeque::new()),
+            shells: Mutex::new(VecDeque::new()),
+            f64_scratch: Mutex::new(VecDeque::new()),
         })
     }
 
@@ -271,10 +624,17 @@ impl TcpRingTransport {
         Ok(())
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, TcpState> {
-        // A poisoning panic already failed the run; the transport state
-        // (streams + scratch) is still structurally sound for cleanup.
-        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    fn driver(&self) -> Result<&DriverHandle> {
+        match &self.driver {
+            Some(d) => Ok(d),
+            None => bail!("net driver only exists for worlds > 1"),
+        }
+    }
+
+    fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+        // A poisoning panic already failed the run; the pools are still
+        // structurally sound for cleanup.
+        m.lock().unwrap_or_else(|p| p.into_inner())
     }
 }
 
@@ -287,74 +647,57 @@ impl Transport for TcpRingTransport {
         1
     }
 
+    fn rank_offset(&self) -> usize {
+        self.rank
+    }
+
+    fn supports_overlap(&self) -> bool {
+        self.world > 1
+    }
+
     fn all_reduce_sum(&self, buffers: &mut [Vec<f32>]) -> Result<TransportStats> {
         assert_eq!(buffers.len(), 1, "a tcp rank owns exactly one buffer");
-        let mut st = self.lock();
-        let round = st.round;
-        st.round += 1;
-        let n = self.world;
-        if n == 1 {
+        if self.world == 1 {
             return Ok(TransportStats { bytes_sent_per_worker: 0, hops: 0 });
         }
-        let rank = self.rank;
-        let prev = ((rank + n - 1) % n) as u32;
-        let buf = &mut buffers[0];
-        let len = buf.len();
-        // Chunk boundaries: identical to the in-process ring_worker.
-        let start = |c: usize| c * len / n;
-        let mut sent = 0usize;
-        // Phase 1: reduce-scatter (add order identical to ring_worker —
-        // own chunk += received chunk, in ring-arrival order).
-        for step in 0..n - 1 {
-            let send_chunk = (rank + n - step) % n;
-            let (s0, s1) = (start(send_chunk), start(send_chunk + 1));
-            stage_f32(&mut st.payload, &buf[s0..s1]);
-            sent += st
-                .send_staged(rank as u32, FrameKind::Data, round)
-                .map_err(|e| {
-                    anyhow!("tcp ring rank {rank} round {round} send: {e}")
-                })?;
-            let recv_chunk = (rank + n - step - 1 + n) % n;
-            let (r0, r1) = (start(recv_chunk), start(recv_chunk + 1));
-            let data = st
-                .recv_expect(FrameKind::Data, prev, round, (r1 - r0) * 4)
-                .map_err(|e| {
-                    anyhow!("tcp ring rank {rank} round {round} recv: {e}")
-                })?;
-            for (dst, src) in buf[r0..r1].iter_mut().zip(data.chunks_exact(4))
-            {
-                // repo-lint: allow(net-panic) — chunks_exact(4) yields
-                // exactly-4-byte slices; recv_expect validated length.
-                *dst += f32::from_le_bytes(src.try_into().unwrap());
-            }
-            st.recycle(data);
+        let d = self.driver()?;
+        let mut shell =
+            Self::lock(&self.shells).pop_front().unwrap_or_default();
+        shell.push(std::mem::take(&mut buffers[0]));
+        d.send_job(DriverJob::Reduce { bufs: shell, tag: 0 })?;
+        let Ok(res) = d.reduce_done.recv() else {
+            bail!("net driver gone");
+        };
+        let (mut bufs, stats) = res?;
+        buffers[0] = bufs.pop().unwrap_or_default();
+        Self::lock(&self.shells).push_back(bufs);
+        Ok(stats)
+    }
+
+    fn reduce_begin(&self, buffers: Vec<Vec<f32>>, tag: u8) -> Result<()> {
+        if self.world == 1 {
+            Self::lock(&self.local_reduces).push_back(buffers);
+            return Ok(());
         }
-        // Phase 2: all-gather.
-        for step in 0..n - 1 {
-            let send_chunk = (rank + 1 + n - step) % n;
-            let (s0, s1) = (start(send_chunk), start(send_chunk + 1));
-            stage_f32(&mut st.payload, &buf[s0..s1]);
-            sent += st
-                .send_staged(rank as u32, FrameKind::Data, round)
-                .map_err(|e| {
-                    anyhow!("tcp ring rank {rank} round {round} send: {e}")
-                })?;
-            let recv_chunk = (rank + n - step) % n;
-            let (r0, r1) = (start(recv_chunk), start(recv_chunk + 1));
-            let data = st
-                .recv_expect(FrameKind::Data, prev, round, (r1 - r0) * 4)
-                .map_err(|e| {
-                    anyhow!("tcp ring rank {rank} round {round} recv: {e}")
-                })?;
-            for (dst, src) in buf[r0..r1].iter_mut().zip(data.chunks_exact(4))
-            {
-                // repo-lint: allow(net-panic) — chunks_exact(4) yields
-                // exactly-4-byte slices; recv_expect validated length.
-                *dst = f32::from_le_bytes(src.try_into().unwrap());
-            }
-            st.recycle(data);
+        self.driver()?.send_job(DriverJob::Reduce { bufs: buffers, tag })
+    }
+
+    fn reduce_finish(&self) -> Result<(Vec<Vec<f32>>, TransportStats)> {
+        if self.world == 1 {
+            let Some(bufs) = Self::lock(&self.local_reduces).pop_front()
+            else {
+                bail!("reduce_finish without a matching reduce_begin");
+            };
+            return Ok((
+                bufs,
+                TransportStats { bytes_sent_per_worker: 0, hops: 0 },
+            ));
         }
-        Ok(TransportStats { bytes_sent_per_worker: sent, hops: 2 * (n - 1) })
+        let d = self.driver()?;
+        let Ok(res) = d.reduce_done.recv() else {
+            bail!("net driver gone");
+        };
+        res
     }
 
     /// Ring all-gather of the loss sidecar: on return `out` holds every
@@ -366,64 +709,92 @@ impl Transport for TcpRingTransport {
         local: &[f64],
         out: &mut Vec<f64>,
     ) -> Result<usize> {
-        let n = self.world;
-        let l = local.len();
-        out.clear();
-        out.resize(n * l, 0.0);
-        out[self.rank * l..(self.rank + 1) * l].copy_from_slice(local);
-        if n == 1 {
+        if self.world == 1 {
+            out.clear();
+            out.extend_from_slice(local);
             return Ok(0);
         }
-        let mut st = self.lock();
-        let round = st.round;
-        st.round += 1;
-        let rank = self.rank;
-        let prev = ((rank + n - 1) % n) as u32;
-        let mut sent = 0usize;
-        for step in 0..n - 1 {
-            // Relay: first hop sends our own slot, hop s forwards the
-            // slot received at hop s-1.
-            let send_idx = (rank + n - step) % n;
-            stage_f64(&mut st.payload, &out[send_idx * l..(send_idx + 1) * l]);
-            sent += st
-                .send_staged(rank as u32, FrameKind::Gather, round)
-                .map_err(|e| {
-                    anyhow!("tcp gather rank {rank} round {round} send: {e}")
-                })?;
-            let recv_idx = (rank + n - step - 1) % n;
-            let data = st
-                .recv_expect(FrameKind::Gather, prev, round, l * 8)
-                .map_err(|e| {
-                    anyhow!("tcp gather rank {rank} round {round} recv: {e}")
-                })?;
-            for (dst, src) in out[recv_idx * l..(recv_idx + 1) * l]
-                .iter_mut()
-                .zip(data.chunks_exact(8))
-            {
-                // repo-lint: allow(net-panic) — chunks_exact(8) yields
-                // exactly-8-byte slices; recv_expect validated length.
-                *dst = f64::from_le_bytes(src.try_into().unwrap());
-            }
-            st.recycle(data);
-        }
+        let d = self.driver()?;
+        let (mut local_v, out_v) =
+            Self::lock(&self.f64_scratch).pop_front().unwrap_or_default();
+        local_v.clear();
+        local_v.extend_from_slice(local);
+        d.send_job(DriverJob::GatherF64 { local: local_v, out: out_v })?;
+        let Ok(res) = d.gather_done.recv() else {
+            bail!("net driver gone");
+        };
+        let (local_v, out_v, sent) = res?;
+        out.clear();
+        out.extend_from_slice(&out_v);
+        Self::lock(&self.f64_scratch).push_back((local_v, out_v));
         Ok(sent)
+    }
+
+    fn all_gather_bytes(
+        &self,
+        blocks: &mut Vec<Vec<u8>>,
+        tag: u8,
+    ) -> Result<usize> {
+        if blocks.len() != self.world {
+            bail!(
+                "all_gather_bytes: {} blocks for a world of {}",
+                blocks.len(),
+                self.world
+            );
+        }
+        if self.world == 1 {
+            return Ok(0);
+        }
+        let d = self.driver()?;
+        let owned = std::mem::take(blocks);
+        d.send_job(DriverJob::GatherBytes { blocks: owned, codec_tag: tag })?;
+        let Ok(res) = d.bytes_done.recv() else {
+            bail!("net driver gone");
+        };
+        let (owned, sent) = res?;
+        *blocks = owned;
+        Ok(sent)
+    }
+
+    fn gather_bytes_begin(&self, blocks: Vec<Vec<u8>>, tag: u8) -> Result<()> {
+        if blocks.len() != self.world {
+            bail!(
+                "gather_bytes_begin: {} blocks for a world of {}",
+                blocks.len(),
+                self.world
+            );
+        }
+        if self.world == 1 {
+            Self::lock(&self.local_gathers).push_back(blocks);
+            return Ok(());
+        }
+        self.driver()?
+            .send_job(DriverJob::GatherBytes { blocks, codec_tag: tag })
+    }
+
+    fn gather_bytes_finish(&self) -> Result<(Vec<Vec<u8>>, usize)> {
+        if self.world == 1 {
+            let Some(blocks) = Self::lock(&self.local_gathers).pop_front()
+            else {
+                bail!("gather_bytes_finish without a matching begin");
+            };
+            return Ok((blocks, 0));
+        }
+        let d = self.driver()?;
+        let Ok(res) = d.bytes_done.recv() else {
+            bail!("net driver gone");
+        };
+        res
     }
 }
 
 impl Drop for TcpRingTransport {
     fn drop(&mut self) {
-        let mut st = self.lock();
-        if let Some(s) = st.send.take() {
-            let _ = s.shutdown(Shutdown::Both);
-        }
-        if let Some(link) = st.reader.take() {
-            let ReaderLink { frames, recycle, shutdown, handle } = link;
-            // Unblock the reader whether it is parked in read() (stream
-            // shutdown -> EOF) or in channel send (receiver dropped).
-            let _ = shutdown.shutdown(Shutdown::Both);
-            drop(frames);
-            drop(recycle);
-            if let Some(h) = handle {
+        if let Some(mut d) = self.driver.take() {
+            // Closing the job queue stops the driver, which tears down
+            // the streams and joins the reader on its way out.
+            d.jobs.take();
+            if let Some(h) = d.handle.take() {
                 let _ = h.join();
             }
         }
@@ -496,6 +867,7 @@ mod tests {
         let t = TcpRingTransport::establish(&cfg).unwrap();
         assert_eq!(t.world_size(), 1);
         assert_eq!(t.local_endpoints(), 1);
+        assert!(!t.supports_overlap());
         let mut bufs = vec![vec![2.0f32, 3.0]];
         let stats = t.all_reduce_sum(&mut bufs).unwrap();
         assert_eq!(stats.hops, 0);
@@ -503,6 +875,14 @@ mod tests {
         let mut out = Vec::new();
         t.all_gather_f64(&[1.25, 2.5], &mut out).unwrap();
         assert_eq!(out, vec![1.25, 2.5]);
+        // Serial begin/finish still round-trips in a world of 1.
+        t.reduce_begin(vec![vec![7.0f32]], 0).unwrap();
+        let (got, _) = t.reduce_finish().unwrap();
+        assert_eq!(got, vec![vec![7.0f32]]);
+        t.gather_bytes_begin(vec![vec![1u8, 2]], 1).unwrap();
+        let (blocks, sent) = t.gather_bytes_finish().unwrap();
+        assert_eq!(blocks, vec![vec![1u8, 2]]);
+        assert_eq!(sent, 0);
     }
 
     #[test]
@@ -523,6 +903,72 @@ mod tests {
         for h in handles {
             let got = h.join().unwrap();
             assert_eq!(got, vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        }
+    }
+
+    #[test]
+    fn overlapped_tcp_rounds_match_sync_bitwise() {
+        // Two bucketed rounds in flight per rank (begin/begin/finish/
+        // finish) must equal two back-to-back sync rounds.
+        let n = 2;
+        let seeds: Vec<Vec<f32>> = (0..n)
+            .map(|r| (0..23).map(|i| (r * 31 + i) as f32 * 0.5).collect())
+            .collect();
+        let expect = {
+            let mut bufs = seeds.clone();
+            RingTransport::new(n).all_reduce_sum(&mut bufs).unwrap();
+            bufs
+        };
+        let peers = free_peers(n);
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let cfg = world_cfg(n, rank, peers.clone());
+            let a = seeds[rank][..11].to_vec();
+            let b = seeds[rank][11..].to_vec();
+            handles.push(std::thread::spawn(move || {
+                let t = TcpRingTransport::establish(&cfg).unwrap();
+                assert!(t.supports_overlap());
+                t.reduce_begin(vec![a], 0).unwrap();
+                t.reduce_begin(vec![b], 1).unwrap();
+                let (mut got_a, stats) = t.reduce_finish().unwrap();
+                let (mut got_b, _) = t.reduce_finish().unwrap();
+                assert_eq!(stats.hops, 2 * (n - 1));
+                let mut joined = got_a.pop().unwrap();
+                joined.extend_from_slice(&got_b.pop().unwrap());
+                joined
+            }));
+        }
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(got, expect[0], "bucketed tcp diverged from sync");
+        }
+    }
+
+    #[test]
+    fn byte_gather_orders_by_rank_with_codec_tag() {
+        let n = 3;
+        let peers = free_peers(n);
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let cfg = world_cfg(n, rank, peers.clone());
+            handles.push(std::thread::spawn(move || {
+                let t = TcpRingTransport::establish(&cfg).unwrap();
+                assert_eq!(t.rank_offset(), rank);
+                let mut blocks: Vec<Vec<u8>> =
+                    (0..n).map(|_| Vec::new()).collect();
+                blocks[rank] = vec![rank as u8; 5];
+                let sent =
+                    t.all_gather_bytes(&mut blocks, WireCodec::Bf16.tag())
+                        .unwrap();
+                assert!(sent > 0);
+                blocks
+            }));
+        }
+        for h in handles {
+            let got = h.join().unwrap();
+            for (r, b) in got.iter().enumerate() {
+                assert_eq!(b, &vec![r as u8; 5], "rank {r} block");
+            }
         }
     }
 }

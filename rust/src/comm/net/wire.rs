@@ -8,13 +8,33 @@
 //!       0     4  magic        0x47574E31 ("GWN1", sync marker)
 //!       4     2  version      protocol version (VERSION)
 //!       6     1  kind         FrameKind discriminant
-//!       7     1  reserved     must be 0
+//!       7     1  tag          kind-specific sub-id (0 when unused)
 //!       8     4  rank         sender's world rank
 //!      12     8  round        sender's collective round counter
 //!      20     4  payload_len  payload byte count (<= MAX_PAYLOAD)
 //!      24     n  payload      kind-specific bytes
 //!    24+n     4  crc32        IEEE CRC32 over bytes [4, 24+n)
 //! ```
+//!
+//! ## The tag byte (v2 codec framing)
+//!
+//! Byte 7 — reserved-zero in protocol v1 — is a kind-specific sub-id:
+//!
+//! * `Data` frames of a *bucketed* round carry the bucket index, so a
+//!   receiver can detect a peer whose bucket schedule disagrees
+//!   ([`NetError::BucketOutOfOrder`]) instead of silently folding the
+//!   wrong slice. Unbucketed rounds keep tag 0.
+//! * `Gather` frames carrying quantized low-rank factors carry the
+//!   [`super::super::codec::WireCodec`] id (0 = f32, 1 = bf16,
+//!   2 = int8). A tag outside the codec vocabulary decodes as
+//!   [`NetError::UnknownWireCodec`]; a quantized block whose byte count
+//!   disagrees with the negotiated layout is
+//!   [`NetError::QuantizedPayloadMismatch`]. The f64 loss sidecar
+//!   gather keeps tag 0.
+//!
+//! The tag sits under the CRC like every other header field, and
+//! [`encode_frame`] (tag 0) remains byte-compatible with every v1 call
+//! site; only [`encode_frame_tagged`] writes a nonzero tag.
 //!
 //! The CRC covers everything after the magic (header fields AND
 //! payload), so a flipped bit anywhere in a frame surfaces as
@@ -41,8 +61,9 @@ use crate::util::crc::Crc32;
 
 /// Frame sync marker: "GWN1".
 pub const MAGIC: u32 = 0x4757_4E31;
-/// Protocol version; bumped on any wire-format change.
-pub const VERSION: u16 = 1;
+/// Protocol version; bumped on any wire-format change. v2 repurposes
+/// the reserved byte at offset 7 as the kind-specific `tag`.
+pub const VERSION: u16 = 2;
 /// Fixed header size (magic through payload_len).
 pub const HEADER_LEN: usize = 24;
 /// Trailer size (crc32).
@@ -84,6 +105,9 @@ impl FrameKind {
 #[derive(Clone, Copy, Debug)]
 pub struct FrameHeader {
     pub kind: FrameKind,
+    /// Kind-specific sub-id: bucket index for bucketed `Data` frames,
+    /// wire-codec id for quantized `Gather` frames, 0 otherwise.
+    pub tag: u8,
     pub rank: u32,
     pub round: u64,
     pub len: usize,
@@ -121,6 +145,16 @@ pub enum NetError {
     /// Lockstep violation: a frame for a different collective round.
     RoundMismatch { expected: u64, got: u64 },
     UnexpectedKind { expected: FrameKind, got: FrameKind },
+    /// A quantized `Gather` frame carried a codec id outside the wire
+    /// vocabulary (f32/bf16/int8).
+    UnknownWireCodec(u8),
+    /// A quantized factor block's byte count disagrees with what the
+    /// negotiated layout + codec imply (truncated scales, wrong rank,
+    /// or a peer running a different `--wire`).
+    QuantizedPayloadMismatch { expected: usize, got: usize },
+    /// A bucketed `Data` frame arrived for the wrong bucket index — the
+    /// peer's bucket schedule disagrees with ours.
+    BucketOutOfOrder { expected: u8, got: u8 },
     /// The remote acceptor refused our handshake; reason echoed back.
     HandshakeRejected(String),
     ConnectFailed { addr: String },
@@ -148,6 +182,11 @@ impl NetError {
             NetError::LayoutMismatch { .. } => "layout-mismatch",
             NetError::RoundMismatch { .. } => "round-mismatch",
             NetError::UnexpectedKind { .. } => "unexpected-frame-kind",
+            NetError::UnknownWireCodec(_) => "unknown-wire-codec",
+            NetError::QuantizedPayloadMismatch { .. } => {
+                "quantized-payload-mismatch"
+            }
+            NetError::BucketOutOfOrder { .. } => "bucket-out-of-order",
             NetError::HandshakeRejected(_) => "handshake-rejected",
             NetError::ConnectFailed { .. } => "connect-failed",
             NetError::Config(_) => "net-config",
@@ -211,6 +250,18 @@ impl fmt::Display for NetError {
             NetError::UnexpectedKind { expected, got } => {
                 write!(f, "expected {expected:?}, got {got:?}")
             }
+            NetError::UnknownWireCodec(t) => {
+                write!(f, "codec tag byte {t} is not f32/bf16/int8")
+            }
+            NetError::QuantizedPayloadMismatch { expected, got } => {
+                write!(
+                    f,
+                    "quantized block of {got} bytes, layout implies {expected}"
+                )
+            }
+            NetError::BucketOutOfOrder { expected, got } => {
+                write!(f, "expected bucket {expected}, frame is for {got}")
+            }
             NetError::HandshakeRejected(reason) => {
                 write!(f, "peer refused: {reason}")
             }
@@ -257,6 +308,20 @@ pub fn encode_frame(
     round: u64,
     payload: &[u8],
 ) -> Result<usize, NetError> {
+    encode_frame_tagged(out, kind, 0, rank, round, payload)
+}
+
+/// [`encode_frame`] with an explicit tag byte — bucket index for
+/// bucketed `Data` frames, wire-codec id for quantized `Gather` frames.
+// hot-path
+pub fn encode_frame_tagged(
+    out: &mut Vec<u8>,
+    kind: FrameKind,
+    tag: u8,
+    rank: u32,
+    round: u64,
+    payload: &[u8],
+) -> Result<usize, NetError> {
     if payload.len() > MAX_PAYLOAD {
         return Err(NetError::FrameTooLarge(payload.len()));
     }
@@ -265,7 +330,7 @@ pub fn encode_frame(
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.push(kind as u8);
-    out.push(0);
+    out.push(tag);
     out.extend_from_slice(&rank.to_le_bytes());
     out.extend_from_slice(&round.to_le_bytes());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -349,6 +414,7 @@ pub fn read_frame(
     }
     let kind =
         FrameKind::from_u8(head[6]).ok_or(NetError::UnknownKind(head[6]))?;
+    let tag = head[7];
     let rank = u32::from_le_bytes(field(&head, 8)?);
     let round = u64::from_le_bytes(field(&head, 12)?);
     let len = u32::from_le_bytes(field(&head, 20)?) as usize;
@@ -367,7 +433,7 @@ pub fn read_frame(
     if got != expected {
         return Err(NetError::CrcMismatch { expected, got });
     }
-    Ok(FrameHeader { kind, rank, round, len })
+    Ok(FrameHeader { kind, tag, rank, round, len })
 }
 
 #[cfg(test)]
@@ -406,6 +472,63 @@ mod tests {
         roundtrip(FrameKind::Hello, 0, 0, &[]);
         roundtrip(FrameKind::Data, 3, 17, &[1, 2, 3, 4, 5]);
         roundtrip(FrameKind::Gather, 7, u64::MAX, &[0u8; 128]);
+    }
+
+    #[test]
+    fn tagged_frames_roundtrip_and_untagged_is_tag_zero() {
+        for tag in [0u8, 1, 2, 7, 255] {
+            let mut frame = Vec::new();
+            encode_frame_tagged(
+                &mut frame,
+                FrameKind::Data,
+                tag,
+                3,
+                9,
+                &[4u8; 12],
+            )
+            .unwrap();
+            let mut out = Vec::new();
+            let hdr = read_frame(&mut &frame[..], &mut out).unwrap();
+            assert_eq!(hdr.tag, tag);
+            assert_eq!(hdr.rank, 3);
+            assert_eq!(hdr.round, 9);
+        }
+        let mut frame = Vec::new();
+        encode_frame(&mut frame, FrameKind::Gather, 1, 2, &[8u8; 8]).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(read_frame(&mut &frame[..], &mut out).unwrap().tag, 0);
+    }
+
+    #[test]
+    fn tag_byte_sits_under_the_crc() {
+        let mut frame = Vec::new();
+        encode_frame_tagged(&mut frame, FrameKind::Data, 5, 0, 0, &[1u8; 4])
+            .unwrap();
+        frame[7] ^= 0x02; // corrupt the tag in flight
+        let mut out = Vec::new();
+        let err = read_frame(&mut &frame[..], &mut out).unwrap_err();
+        assert_eq!(err.name(), "corrupt-frame");
+    }
+
+    #[test]
+    fn codec_and_bucket_errors_have_stable_names() {
+        assert_eq!(
+            NetError::UnknownWireCodec(9).name(),
+            "unknown-wire-codec"
+        );
+        assert_eq!(
+            NetError::QuantizedPayloadMismatch { expected: 64, got: 60 }
+                .name(),
+            "quantized-payload-mismatch"
+        );
+        assert_eq!(
+            NetError::BucketOutOfOrder { expected: 1, got: 2 }.name(),
+            "bucket-out-of-order"
+        );
+        // Display stays prefixed by the stable name, like every NetError.
+        let msg = NetError::BucketOutOfOrder { expected: 1, got: 2 }
+            .to_string();
+        assert!(msg.starts_with("bucket-out-of-order: "), "{msg}");
     }
 
     #[test]

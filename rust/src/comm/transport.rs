@@ -36,10 +36,12 @@
 //! *identical* to the legacy implementation, so results are bitwise equal
 //! (pinned in rust/tests/comm_props.rs).
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Mutex;
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Per-round transport accounting.
 #[derive(Clone, Copy, Debug, Default)]
@@ -96,6 +98,81 @@ pub trait Transport: Send {
         out.extend_from_slice(local);
         Ok(0)
     }
+
+    /// Whether this backend can run [`Transport::reduce_begin`] /
+    /// [`Transport::reduce_finish`] rounds concurrently with coordinator
+    /// compute. Backends that return `false` are still correct — the
+    /// bucketed collective simply degrades to serial per-bucket rounds,
+    /// which are bitwise identical anyway.
+    fn supports_overlap(&self) -> bool {
+        false
+    }
+
+    /// The world rank of this process's endpoint 0 — the slot its
+    /// buffers occupy in rank-ordered gathers. 0 for the in-process
+    /// ring (whose endpoints ARE ranks 0..N); the net rank for a TCP
+    /// process.
+    fn rank_offset(&self) -> usize {
+        0
+    }
+
+    /// Begin an asynchronous all-reduce round: ownership of the
+    /// per-endpoint buffers moves into the transport, the wire work
+    /// proceeds in the background (ring worker threads in-process, the
+    /// net driver thread over TCP), and the coordinator keeps computing.
+    /// Rounds complete strictly FIFO via [`Transport::reduce_finish`].
+    /// `tag` is the bucket index of a bucketed round (0 when
+    /// unbucketed), stamped on every frame a socket backend sends so a
+    /// peer with a divergent bucket schedule fails by name instead of
+    /// folding the wrong slice. At most two rounds may be in flight
+    /// (the depth-2 bucket pipeline) — that bound is what lets every
+    /// backend run on its existing bounded channels without growing
+    /// them.
+    fn reduce_begin(&self, _buffers: Vec<Vec<f32>>, _tag: u8) -> Result<()> {
+        bail!("transport backend does not support overlapped reduction")
+    }
+
+    /// Finish the OLDEST in-flight [`Transport::reduce_begin`] round,
+    /// returning the same buffer allocations (now holding the
+    /// world-wide sums) so steady-state rounds stay 0-alloc.
+    fn reduce_finish(&self) -> Result<(Vec<Vec<f32>>, TransportStats)> {
+        bail!("transport backend does not support overlapped reduction")
+    }
+
+    /// All-gather opaque byte blocks (quantized low-rank factors):
+    /// `blocks` has exactly `world_size()` entries in rank order; the
+    /// caller fills the local endpoints' slots (starting at
+    /// [`Transport::rank_offset`]) and the transport fills the rest,
+    /// reusing each slot's allocation once its capacity covers the
+    /// block. `tag` is the wire-codec id stamped into each frame's tag
+    /// byte so a receiver can reject a mismatched `--wire` peer by
+    /// name. Returns the wire bytes this rank sent (the in-process
+    /// default is the identity and sends nothing). Byte identity — not
+    /// summation — is the point: every rank dequantizes and folds the
+    /// same blocks in the same rank order, which is what keeps
+    /// quantized rounds bitwise identical across transports.
+    fn all_gather_bytes(
+        &self,
+        _blocks: &mut Vec<Vec<u8>>,
+        _tag: u8,
+    ) -> Result<usize> {
+        Ok(0)
+    }
+
+    /// Asynchronous [`Transport::all_gather_bytes`]: begin ships the
+    /// local blocks, finish returns the world's blocks FIFO (same
+    /// depth-2 bound as `reduce_begin`).
+    fn gather_bytes_begin(
+        &self,
+        _blocks: Vec<Vec<u8>>,
+        _tag: u8,
+    ) -> Result<()> {
+        bail!("transport backend does not support overlapped gather")
+    }
+
+    fn gather_bytes_finish(&self) -> Result<(Vec<Vec<u8>>, usize)> {
+        bail!("transport backend does not support overlapped gather")
+    }
 }
 
 /// Persistent in-process ring: N worker threads + N neighbor links
@@ -107,6 +184,14 @@ pub struct RingTransport {
     /// Per-worker round completion (buffer + bytes-sent move out).
     done: Vec<Receiver<(Vec<f32>, usize)>>,
     handles: Vec<JoinHandle<()>>,
+    /// FIFO of in-flight `reduce_begin` rounds: the emptied outer
+    /// shells awaiting refill at `reduce_finish` (for n == 1 the shell
+    /// still holds its buffers — the round is a local no-op). The
+    /// deque's capacity is reused round over round, so the overlap path
+    /// adds zero steady-state allocations.
+    inflight: Mutex<VecDeque<Vec<Vec<f32>>>>,
+    /// FIFO of in-flight byte-gather rounds (identity in-process).
+    gathers: Mutex<VecDeque<(Vec<Vec<u8>>, usize)>>,
 }
 
 impl RingTransport {
@@ -119,6 +204,8 @@ impl RingTransport {
                 jobs: Vec::new(),
                 done: Vec::new(),
                 handles: Vec::new(),
+                inflight: Mutex::new(VecDeque::new()),
+                gathers: Mutex::new(VecDeque::new()),
             };
         }
         // Neighbor links: link_tx[i] feeds worker (i+1) % n.
@@ -147,7 +234,18 @@ impl RingTransport {
             done.push(done_rx);
             handles.push(handle);
         }
-        RingTransport { n, jobs, done, handles }
+        RingTransport {
+            n,
+            jobs,
+            done,
+            handles,
+            inflight: Mutex::new(VecDeque::new()),
+            gathers: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+        m.lock().unwrap_or_else(|p| p.into_inner())
     }
 }
 
@@ -181,6 +279,120 @@ impl Transport for RingTransport {
             bytes = bytes.max(sent);
         }
         Ok(TransportStats { bytes_sent_per_worker: bytes, hops: 2 * (n - 1) })
+    }
+
+    fn supports_overlap(&self) -> bool {
+        self.n > 1
+    }
+
+    fn reduce_begin(&self, mut buffers: Vec<Vec<f32>>, _tag: u8) -> Result<()> {
+        let n = self.n;
+        if buffers.len() != n {
+            bail!("reduce_begin: {} buffers for {n} workers", buffers.len());
+        }
+        if n > 1 {
+            let len = buffers[0].len();
+            if buffers.iter().any(|b| b.len() != len) {
+                bail!("reduce_begin: ragged buffer lengths");
+            }
+            // Hand every buffer to its ring worker; the emptied outer
+            // shell queues for the matching `reduce_finish`. The job
+            // channels' capacity 1 is enough for the depth-2 pipeline:
+            // by the time a third `reduce_begin` runs, `reduce_finish`
+            // has drained the first round, which means every worker has
+            // delivered its result and is already dequeuing the second
+            // round's job.
+            for (i, buf) in buffers.iter_mut().enumerate() {
+                if self.jobs[i].send(std::mem::take(buf)).is_err() {
+                    bail!("comm ring worker {i} gone");
+                }
+            }
+        }
+        Self::lock(&self.inflight).push_back(buffers);
+        Ok(())
+    }
+
+    fn reduce_finish(&self) -> Result<(Vec<Vec<f32>>, TransportStats)> {
+        let Some(mut shell) = Self::lock(&self.inflight).pop_front() else {
+            bail!("reduce_finish without a matching reduce_begin");
+        };
+        let n = self.n;
+        if n == 1 {
+            return Ok((
+                shell,
+                TransportStats { bytes_sent_per_worker: 0, hops: 0 },
+            ));
+        }
+        let mut bytes = 0usize;
+        for (i, slot) in shell.iter_mut().enumerate() {
+            let Ok((out, sent)) = self.done[i].recv() else {
+                bail!("comm ring worker {i} gone");
+            };
+            *slot = out;
+            bytes = bytes.max(sent);
+        }
+        Ok((
+            shell,
+            TransportStats { bytes_sent_per_worker: bytes, hops: 2 * (n - 1) },
+        ))
+    }
+
+    fn all_gather_bytes(
+        &self,
+        blocks: &mut Vec<Vec<u8>>,
+        _tag: u8,
+    ) -> Result<usize> {
+        // In-process the local endpoints ARE the world, so the gather is
+        // the identity; report the payload bytes the busiest rank of a
+        // real ring relay would send ((n−1) hops of its largest block),
+        // mirroring how `all_reduce_sum` accounts payload in-process.
+        if blocks.len() != self.n {
+            bail!(
+                "all_gather_bytes: {} blocks for {} endpoints",
+                blocks.len(),
+                self.n
+            );
+        }
+        Ok(self.simulated_gather_bytes(blocks))
+    }
+
+    fn gather_bytes_begin(
+        &self,
+        blocks: Vec<Vec<u8>>,
+        _tag: u8,
+    ) -> Result<()> {
+        if blocks.len() != self.n {
+            bail!(
+                "gather_bytes_begin: {} blocks for {} endpoints",
+                blocks.len(),
+                self.n
+            );
+        }
+        let bytes = self.simulated_gather_bytes(&blocks);
+        Self::lock(&self.gathers).push_back((blocks, bytes));
+        Ok(())
+    }
+
+    fn gather_bytes_finish(&self) -> Result<(Vec<Vec<u8>>, usize)> {
+        match Self::lock(&self.gathers).pop_front() {
+            Some(round) => Ok(round),
+            None => {
+                bail!("gather_bytes_finish without a matching begin")
+            }
+        }
+    }
+}
+
+impl RingTransport {
+    /// Payload bytes the busiest rank of an (n−1)-hop ring relay of
+    /// these blocks would send — the in-process stand-in for real wire
+    /// traffic, zero for the degenerate single-worker world.
+    fn simulated_gather_bytes(&self, blocks: &[Vec<u8>]) -> usize {
+        if self.n == 1 {
+            return 0;
+        }
+        let largest = blocks.iter().map(Vec::len).max().unwrap_or(0);
+        (self.n - 1) * largest
     }
 }
 
@@ -357,6 +569,66 @@ mod tests {
         let t = RingTransport::new(4);
         assert_eq!(t.world_size(), 4);
         assert_eq!(t.local_endpoints(), 4);
+    }
+
+    #[test]
+    fn overlapped_rounds_match_sync_rounds_bitwise() {
+        // Two rounds in flight (the depth-2 bucket pipeline), finished
+        // FIFO, must equal the same two rounds run synchronously.
+        for n in [2usize, 3, 4] {
+            let t = RingTransport::new(n);
+            assert!(t.supports_overlap());
+            let (bufs_a, _) = make_buffers(n, 97, 1);
+            let (bufs_b, _) = make_buffers(n, 55, 2);
+            let mut sync_a = bufs_a.clone();
+            let mut sync_b = bufs_b.clone();
+            t.all_reduce_sum(&mut sync_a).unwrap();
+            t.all_reduce_sum(&mut sync_b).unwrap();
+            t.reduce_begin(bufs_a, 0).unwrap();
+            t.reduce_begin(bufs_b, 1).unwrap();
+            let (got_a, stats_a) = t.reduce_finish().unwrap();
+            let (got_b, _) = t.reduce_finish().unwrap();
+            assert_eq!(stats_a.hops, 2 * (n - 1));
+            assert_eq!(got_a, sync_a, "n={n} round A");
+            assert_eq!(got_b, sync_b, "n={n} round B");
+        }
+    }
+
+    #[test]
+    fn overlap_on_single_worker_is_a_noop() {
+        let t = RingTransport::new(1);
+        assert!(!t.supports_overlap());
+        // Still usable: the serial fallback path may call begin/finish.
+        t.reduce_begin(vec![vec![3.0f32, 4.0]], 0).unwrap();
+        let (bufs, stats) = t.reduce_finish().unwrap();
+        assert_eq!(bufs, vec![vec![3.0f32, 4.0]]);
+        assert_eq!(stats.hops, 0);
+    }
+
+    #[test]
+    fn finish_without_begin_is_an_error() {
+        let t = RingTransport::new(2);
+        assert!(t.reduce_finish().is_err());
+        assert!(t.gather_bytes_finish().is_err());
+    }
+
+    #[test]
+    fn byte_gather_is_identity_with_simulated_traffic() {
+        let t = RingTransport::new(3);
+        let mut blocks =
+            vec![vec![1u8, 2], vec![3u8, 4, 5, 6], vec![7u8]];
+        let want = blocks.clone();
+        let bytes = t.all_gather_bytes(&mut blocks, 1).unwrap();
+        assert_eq!(blocks, want);
+        assert_eq!(bytes, 2 * 4, "(n-1) hops of the largest block");
+        t.gather_bytes_begin(blocks, 1).unwrap();
+        let (back, bytes2) = t.gather_bytes_finish().unwrap();
+        assert_eq!(back, want);
+        assert_eq!(bytes2, bytes);
+        // World 1 sends nothing.
+        let t1 = RingTransport::new(1);
+        let mut solo = vec![vec![9u8; 16]];
+        assert_eq!(t1.all_gather_bytes(&mut solo, 2).unwrap(), 0);
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::comm::{net::NetConfig, CommMode, TransportMode};
+use crate::comm::{net::NetConfig, CommMode, TransportMode, WireCodec};
 use crate::coordinator::{OptEngine, TrainConfig};
 use crate::optim::{Method, Schedule};
 use crate::subspace::SubspaceRule;
@@ -84,6 +84,9 @@ const TRAIN_KEYS: &[&str] = &[
     "workers",
     "comm",
     "comm_rank",
+    "wire",
+    "overlap",
+    "bucket_kb",
     "transport",
     "world",
     "net_rank",
@@ -153,6 +156,17 @@ impl ExperimentConfig {
                 .ok_or_else(|| anyhow!("unknown comm mode `{c}`"))?;
         }
         tr.comm_rank = get_usize(&t, "train.comm_rank", tr.comm_rank)?;
+        if t.get("train.wire").is_some() {
+            let w = get_str(&t, "train.wire", "")?;
+            tr.wire = WireCodec::parse(w).ok_or_else(|| {
+                anyhow!(
+                    "config: unknown wire codec `{w}` (expected f32, \
+                     bf16, or int8)"
+                )
+            })?;
+        }
+        tr.overlap = get_bool(&t, "train.overlap", tr.overlap)?;
+        tr.bucket_kb = get_usize(&t, "train.bucket_kb", tr.bucket_kb)?;
         if t.get("train.transport").is_some() {
             let s = get_str(&t, "train.transport", "")?;
             tr.transport = TransportMode::parse(s).ok_or_else(|| {
@@ -515,6 +529,36 @@ opt_engine = "pjrt"
             err.contains("mem_diag") && err.contains("boolean"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn parses_wire_overlap_and_bucket_keys() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[train]\ncomm = \"lowrank\"\nwire = \"bf16\"\n\
+             overlap = true\nbucket_kb = 64",
+        )
+        .unwrap();
+        assert_eq!(cfg.train.wire, WireCodec::Bf16);
+        assert!(cfg.train.overlap);
+        assert_eq!(cfg.train.bucket_kb, 64);
+        // Defaults: exact f32, single shot, no overlap.
+        let cfg = ExperimentConfig::from_toml_str("name = \"x\"").unwrap();
+        assert_eq!(cfg.train.wire, WireCodec::F32);
+        assert!(!cfg.train.overlap);
+        assert_eq!(cfg.train.bucket_kb, 0);
+        // Unknown codec / wrong types error loudly.
+        assert!(ExperimentConfig::from_toml_str(
+            "[train]\nwire = \"fp4\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[train]\noverlap = \"yes\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[train]\nbucket_kb = -1"
+        )
+        .is_err());
     }
 
     #[test]

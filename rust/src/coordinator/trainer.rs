@@ -57,8 +57,8 @@ use anyhow::{anyhow, Result};
 
 use crate::analysis;
 use crate::comm::{
-    self, Collective, CommMode, CommStats, GradLayout, Transport,
-    TransportMode,
+    self, BucketPlan, Collective, CommMode, CommStats, GradLayout,
+    Transport, TransportMode, WireCodec,
 };
 use crate::data::{CorpusConfig, SyncLoader, TokenBatch};
 use crate::metrics::{Recorder, SeriesId};
@@ -110,6 +110,18 @@ pub struct TrainConfig {
     /// TCP world topology (`--world N --net-rank k --peers …`);
     /// required iff `transport` is tcp with a world > 1.
     pub net: Option<comm::net::NetConfig>,
+    /// Wire codec for the low-rank factor exchange
+    /// (`--wire f32|bf16|int8`); requires `--comm lowrank` when not f32.
+    pub wire: WireCodec,
+    /// Overlap bucketed reduction with coordinator compute
+    /// (`--overlap`): a depth-2 begin/finish pipeline on the transport.
+    /// Bitwise-identical to the serial schedule for a fixed bucket plan.
+    pub overlap: bool,
+    /// Reduction-bucket target in KiB of dense f32 payload
+    /// (`--bucket-kb`, 0 = one bucket, the legacy single-shot path).
+    /// Bucket boundaries are pure layout arithmetic — every rank
+    /// derives the identical plan.
+    pub bucket_kb: usize,
     pub seed: u64,
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -165,6 +177,9 @@ impl Default for TrainConfig {
             comm_rank: 16,
             transport: TransportMode::Inproc,
             net: None,
+            wire: WireCodec::F32,
+            overlap: false,
+            bucket_kb: 0,
             seed: 0,
             eval_every: 50,
             eval_batches: 2,
@@ -362,6 +377,9 @@ pub struct Trainer {
     collective: Box<dyn Collective>,
     /// Flat-gradient geometry shared with the collective.
     grad_layout: GradLayout,
+    /// Fixed reduction-bucket plan derived once from the layout
+    /// (`--bucket-kb`); a single bucket when bucketing is off.
+    bucket_plan: BucketPlan,
     /// Stats from the most recent collective round.
     last_comm: Option<CommStats>,
     /// Reusable loss-sidecar scratch (local fold + world gather), so
@@ -412,6 +430,13 @@ impl Trainer {
                     net.world
                 ));
             }
+        }
+        if cfg.wire != WireCodec::F32 && cfg.comm != CommMode::LowRank {
+            return Err(anyhow!(
+                "--wire {} quantizes the low-rank factor exchange; it \
+                 requires --comm lowrank",
+                cfg.wire.label()
+            ));
         }
         // Measured-memory tracking must be live before the first tagged
         // allocation below (params, optimizer state, loaders, comm
@@ -552,6 +577,8 @@ impl Trainer {
         let shapes: Vec<Vec<usize>> =
             model.params.iter().map(|p| p.shape.clone()).collect();
         let grad_layout = GradLayout::from_shapes(&shapes);
+        let bucket_plan =
+            BucketPlan::from_layout(&grad_layout, cfg.bucket_kb);
         let basis_seed = cfg.seed ^ 0xC033;
         let transport: Box<dyn Transport> = match cfg.transport {
             TransportMode::Inproc => {
@@ -572,6 +599,7 @@ impl Trainer {
             cfg.comm,
             cfg.comm_rank,
             basis_seed,
+            cfg.wire,
         );
         drop(comm_mem);
 
@@ -590,6 +618,7 @@ impl Trainer {
         Ok(Trainer {
             collective,
             grad_layout,
+            bucket_plan,
             last_comm: None,
             loss_scratch: Vec::new(),
             world_loss_scratch: Vec::new(),
@@ -795,9 +824,12 @@ impl Trainer {
         // recorded `comm/bytes` series is the FULL per-step wire
         // traffic of this rank (0 extra in-process).
         let ar = trace::start();
-        let mut stats = self
-            .collective
-            .all_reduce_mean(&mut worker_grads, &self.grad_layout)?;
+        let mut stats = self.collective.all_reduce_mean_bucketed(
+            &mut worker_grads,
+            &self.grad_layout,
+            &self.bucket_plan,
+            self.cfg.overlap,
+        )?;
         ar.record(Phase::AllReduce);
         stats.bytes_per_worker += gather_bytes;
         self.last_comm = Some(stats);
@@ -1199,6 +1231,23 @@ impl Trainer {
         )
     }
 
+    /// Overlap segment for the heartbeat line (`--overlap`), e.g.
+    /// `" | ovl 63%"`: the fraction of the last step's bucket wire time
+    /// that was hidden behind compute (`1 - wait/flight`). Empty when
+    /// the last step had no overlapped buckets in flight.
+    fn heartbeat_overlap(&self) -> String {
+        let Some(c) = self.last_comm else {
+            return String::new();
+        };
+        if c.overlap_flight_ns == 0 {
+            return String::new();
+        }
+        let ratio = (1.0
+            - c.overlap_wait_ns as f64 / c.overlap_flight_ns as f64)
+            .max(0.0);
+        format!(" | ovl {:.0}%", 100.0 * ratio)
+    }
+
     /// Full training run with metric recording.
     pub fn run(&mut self, rec: &mut Recorder) -> Result<TrainReport> {
         rec.note("method", self.cfg.method.label());
@@ -1211,6 +1260,9 @@ impl Trainer {
         rec.note("grad_accum", self.cfg.grad_accum);
         rec.note("comm", self.collective.label());
         rec.note("comm_rank", self.cfg.comm_rank);
+        rec.note("wire", self.cfg.wire.label());
+        rec.note("overlap", self.cfg.overlap);
+        rec.note("buckets", self.bucket_plan.len());
         rec.note("transport", self.cfg.transport.label());
         rec.note("dp_world", self.cfg.dp_world());
         if let Some(net) = &self.cfg.net {
@@ -1224,6 +1276,7 @@ impl Trainer {
         let id_comm_bytes = rec.series_id("comm/bytes");
         let id_comm_compression = rec.series_id("comm/compression");
         let id_comm_residual = rec.series_id("comm/residual");
+        let id_comm_overlap = rec.series_id("comm/overlap_ratio");
         // Measured-memory series (`--mem-diag`): two interned handles
         // per domain plus the process pair, so the per-step pushes
         // below are pure atomic reads + id pushes — 0 allocations,
@@ -1282,6 +1335,13 @@ impl Trainer {
                 );
                 rec.push_id(id_comm_compression, s, c.compression);
                 rec.push_id(id_comm_residual, s, c.residual_norm);
+                if c.overlap_flight_ns > 0 {
+                    let ratio = (1.0
+                        - c.overlap_wait_ns as f64
+                            / c.overlap_flight_ns as f64)
+                        .max(0.0);
+                    rec.push_id(id_comm_overlap, s, ratio);
+                }
             }
             if self.cfg.subspace_diag {
                 self.record_subspace_diag(rec, s);
@@ -1313,10 +1373,11 @@ impl Trainer {
                 let eta_s = (self.cfg.steps - s) as f64 / rate.max(1e-9);
                 eprintln!(
                     "[{}] step {s}/{} loss {loss:.4} | {rate:.2} \
-                     steps/s | eta {eta_s:.0}s ({now:.1}s){}{}",
+                     steps/s | eta {eta_s:.0}s ({now:.1}s){}{}{}",
                     self.cfg.method.label(),
                     self.cfg.steps,
                     self.heartbeat_split(),
+                    self.heartbeat_overlap(),
                     self.heartbeat_mem()
                 );
                 hb_step = s;
@@ -1382,6 +1443,11 @@ impl Trainer {
     /// Stats from the most recent collective round.
     pub fn last_comm(&self) -> Option<CommStats> {
         self.last_comm
+    }
+
+    /// Buckets in the fixed reduction plan (1 = single-shot).
+    pub fn bucket_count(&self) -> usize {
+        self.bucket_plan.len()
     }
 
     /// Restore trainer position (checkpoint support). Also re-aligns the

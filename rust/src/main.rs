@@ -27,8 +27,15 @@ use grasswalk::optim::{Method, Schedule};
 use grasswalk::runtime::Engine;
 use grasswalk::util::cli::Args;
 
-const BOOL_FLAGS: &[&str] =
-    &["help", "quiet", "pjrt", "subspace-diag", "trace", "mem-diag"];
+const BOOL_FLAGS: &[&str] = &[
+    "help",
+    "quiet",
+    "pjrt",
+    "subspace-diag",
+    "trace",
+    "mem-diag",
+    "overlap",
+];
 
 fn main() {
     // Keep the raw argv tail: `train --spawn-local N` re-execs this
@@ -84,6 +91,17 @@ fn train_config_from_args(args: &Args) -> Result<TrainConfig> {
             .ok_or_else(|| anyhow::anyhow!("unknown comm mode `{c}`"))?;
     }
     cfg.comm_rank = args.usize_or("comm-rank", cfg.comm_rank);
+    if let Some(w) = args.get("wire") {
+        cfg.wire = grasswalk::comm::WireCodec::parse(w).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown wire codec `{w}` (expected f32, bf16, or int8)"
+            )
+        })?;
+    }
+    if args.has("overlap") {
+        cfg.overlap = true;
+    }
+    cfg.bucket_kb = require_usize(args, "bucket-kb", cfg.bucket_kb)?;
     if let Some(t) = args.get("transport") {
         cfg.transport = TransportMode::parse(t).ok_or_else(|| {
             anyhow::anyhow!(
@@ -210,6 +228,11 @@ fn run(cmd: &str, args: &Args, raw: &[String]) -> Result<()> {
                  \x20 --rule svd|walk|jump|track|frozen|golore (subspace\n\
                  \x20 rule override) --subspace-diag (per-layer series)\n\
                  \x20 --comm dense|lowrank --comm-rank R (collective regime)\n\
+                 \x20 --wire f32|bf16|int8 (quantized low-rank wire format;\n\
+                 \x20 requires --comm lowrank) --bucket-kb KB (bucketed\n\
+                 \x20 reduction granularity; 0 = single shot) --overlap\n\
+                 \x20 (pipeline bucket reduction behind packing; bitwise\n\
+                 \x20 identical to --overlap off)\n\
                  \x20 --transport inproc|tcp --world N --net-rank K\n\
                  \x20 --peers host:port,… (multi-process TCP ring)\n\
                  \x20 --spawn-local N (fork an N-rank loopback world)\n\
@@ -313,10 +336,18 @@ fn cmd_train(args: &Args, raw: &[String]) -> Result<()> {
         rec.get("comm/bytes").and_then(|s| s.mean()),
         rec.get("comm/compression").and_then(|s| s.last()),
     ) {
+        let ovl = rec
+            .get("comm/overlap_ratio")
+            .and_then(|s| s.mean())
+            .map(|r| format!(" overlap={:.0}%", 100.0 * r))
+            .unwrap_or_default();
         println!(
-            "comm={} transport={} world={} bytes/step={bytes:.0} \
-             compression={ratio:.2}x residual={:.4}",
+            "comm={} wire={} buckets={} transport={} world={} \
+             bytes/step={bytes:.0} compression={ratio:.2}x \
+             residual={:.4}{ovl}",
             trainer.cfg.comm.label(),
+            trainer.cfg.wire.label(),
+            trainer.bucket_count(),
             trainer.cfg.transport.label(),
             trainer.cfg.dp_world(),
             rec.get("comm/residual").and_then(|s| s.last()).unwrap_or(0.0)

@@ -45,6 +45,8 @@
 //! | `PoolRegion`         | a whole `util::pool` fork-join region (caller track)  |
 //! | `PoolBusy`           | one executor's slice of a region (per worker track);  |
 //! |                      | idle = enclosing `PoolRegion` − that track's busy     |
+//! | `BucketReduce`       | one bucket's begin→finish window inside a bucketed    |
+//! |                      | `all_reduce_mean_bucketed` round (overlap pipeline)   |
 
 mod collect;
 // pub(crate) so the Kani harnesses in rust/verify/ring.rs can drive the
@@ -81,10 +83,11 @@ pub enum Phase {
     NetRecv = 12,
     PoolRegion = 13,
     PoolBusy = 14,
+    BucketReduce = 15,
 }
 
 impl Phase {
-    pub const COUNT: usize = 15;
+    pub const COUNT: usize = 16;
 
     pub const ALL: [Phase; Phase::COUNT] = [
         Phase::Step,
@@ -102,6 +105,7 @@ impl Phase {
         Phase::NetRecv,
         Phase::PoolRegion,
         Phase::PoolBusy,
+        Phase::BucketReduce,
     ];
 
     pub fn label(self) -> &'static str {
@@ -121,6 +125,7 @@ impl Phase {
             Phase::NetRecv => "net_recv",
             Phase::PoolRegion => "pool_region",
             Phase::PoolBusy => "pool_busy",
+            Phase::BucketReduce => "bucket_reduce",
         }
     }
 }

@@ -3,8 +3,11 @@
 //! the comm::net subsystem) malformed TCP worlds are the real-world
 //! failure modes of an AOT pipeline. The net handshake cases each pin a
 //! NAMED error: wrong world size, duplicate rank, mismatched basis seed
-//! or layout fingerprint, truncated/corrupt frames, and a peer
-//! disconnecting mid-round.
+//! or layout fingerprint, truncated/corrupt frames, a peer
+//! disconnecting mid-round, a peer on a divergent bucket schedule
+//! (`bucket-out-of-order`), a peer speaking an unknown `--wire` codec
+//! (`unknown-wire-codec`), and a quantized block whose codec or byte
+//! count disagrees (`quantized-payload-mismatch`).
 
 use grasswalk::runtime::{Engine, Value};
 
@@ -349,6 +352,83 @@ mod net_failures {
         let s = TcpStream::connect(addr).unwrap();
         drop(s); // close without sending anything
         assert_eq!(h.join().unwrap().name(), "peer-disconnected");
+    }
+
+    /// Two live loopback ranks running mismatched collective calls;
+    /// returns `(rank0_err, rank1_err)` as display strings.
+    fn clashing_rounds(
+        run0: impl FnOnce(&TcpRingTransport) -> String + Send + 'static,
+        run1: impl FnOnce(&TcpRingTransport) -> String + Send + 'static,
+    ) -> (String, String) {
+        let peers =
+            grasswalk::comm::net::launch::free_loopback_peers(2).unwrap();
+        let mk = |rank: usize| {
+            let mut c = cfg(2, rank, peers.clone(), 7, 9);
+            c.io_timeout = Duration::from_secs(10);
+            c
+        };
+        let c1 = mk(1);
+        let h = std::thread::spawn(move || {
+            let t = TcpRingTransport::establish(&c1).unwrap();
+            run1(&t)
+        });
+        let t0 = TcpRingTransport::establish(&mk(0)).unwrap();
+        let e0 = run0(&t0);
+        (e0, h.join().unwrap())
+    }
+
+    #[test]
+    fn divergent_bucket_schedule_is_bucket_out_of_order() {
+        // Rank 0 reduces bucket 0 while rank 1 reduces bucket 3: each
+        // receives a Data frame whose tag disagrees with its own
+        // schedule — a typed error, never a silent fold of the wrong
+        // slice, never a panic.
+        let reduce = |tag: u8| {
+            move |t: &TcpRingTransport| {
+                t.reduce_begin(vec![vec![1.0f32; 32]], tag).unwrap();
+                t.reduce_finish().unwrap_err().to_string()
+            }
+        };
+        let (e0, e1) = clashing_rounds(reduce(0), reduce(3));
+        assert!(e0.contains("bucket-out-of-order"), "{e0}");
+        assert!(e1.contains("bucket-out-of-order"), "{e1}");
+    }
+
+    #[test]
+    fn unknown_wire_codec_tag_named_on_the_receiver() {
+        // Rank 1 gathers with a tag outside the codec vocabulary; rank
+        // 0 (speaking bf16 = tag 1) rejects it as unknown-wire-codec.
+        // Rank 1 receives a VALID codec tag that merely disagrees with
+        // its own — the quantized-payload-mismatch path.
+        let gather = |tag: u8| {
+            move |t: &TcpRingTransport| {
+                let mut blocks = vec![vec![0u8; 16], vec![0u8; 16]];
+                t.all_gather_bytes(&mut blocks, tag)
+                    .unwrap_err()
+                    .to_string()
+            }
+        };
+        let (e0, e1) = clashing_rounds(gather(1), gather(9));
+        assert!(e0.contains("unknown-wire-codec"), "{e0}");
+        assert!(e1.contains("quantized-payload-mismatch"), "{e1}");
+    }
+
+    #[test]
+    fn quantized_block_size_disagreement_named() {
+        // Same codec on both sides, different payload byte counts (a
+        // peer whose factor geometry diverged): both ranks fail as
+        // quantized-payload-mismatch.
+        let gather = |len: usize| {
+            move |t: &TcpRingTransport| {
+                let mut blocks = vec![vec![0u8; len], vec![0u8; len]];
+                t.all_gather_bytes(&mut blocks, 1)
+                    .unwrap_err()
+                    .to_string()
+            }
+        };
+        let (e0, e1) = clashing_rounds(gather(8), gather(12));
+        assert!(e0.contains("quantized-payload-mismatch"), "{e0}");
+        assert!(e1.contains("quantized-payload-mismatch"), "{e1}");
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //!   wire bytes, not a model;
 //! * the low-rank error-feedback residual a TCP rank reports equals the
 //!   same worker's residual in the in-process reference;
+//! * a bucketed + overlapped TCP world (`--bucket-kb`, `--overlap`) is
+//!   bitwise-identical to the in-process SINGLE-SHOT reference — for
+//!   the f32 low-rank exchange at world 2, and for the quantized
+//!   (`--wire bf16|int8`) exchange at ANY world size, across rounds
+//!   that span a basis-refresh boundary with live error-feedback state;
 //! * (artifact-gated) a `--spawn-local 2` world TRAINS the tiny config
 //!   to bitwise-identical train/eval losses as `--transport inproc`,
 //!   for both comm regimes — the end-to-end determinism contract.
@@ -21,8 +26,8 @@ use grasswalk::comm::net::launch::free_loopback_peers;
 use grasswalk::comm::net::wire::{HEADER_LEN, TRAILER_LEN};
 use grasswalk::comm::net::{NetConfig, TcpRingTransport, WorldConfig};
 use grasswalk::comm::{
-    build_collective, build_collective_with, CommMode, CommStats,
-    GradLayout, LowRankAllReduce, RingTransport,
+    build_collective, build_collective_with, BucketPlan, CommMode,
+    CommStats, GradLayout, LowRankAllReduce, RingTransport, WireCodec,
 };
 use grasswalk::util::rng::Rng;
 
@@ -57,11 +62,17 @@ fn rand_bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
 
 /// Stand up a loopback world where every rank runs the configured
 /// collective over its own input per round; returns `[rank][round] ->
-/// (reduced buffer, stats)`.
-fn run_tcp_collectives(
+/// (reduced buffer, stats)`. `bucket_kb = 0` is the single-shot path;
+/// a non-zero target exercises the bucketed (and, with `overlap`,
+/// pipelined) schedule.
+#[allow(clippy::too_many_arguments)]
+fn run_tcp_collectives_cfg(
     world: usize,
     mode: CommMode,
     comm_rank: usize,
+    codec: WireCodec,
+    bucket_kb: usize,
+    overlap: bool,
     shapes: Vec<Vec<usize>>,
     rounds: Vec<Vec<Vec<f32>>>, // rounds[r][rank] = that rank's input
 ) -> Vec<Vec<(Vec<f32>, CommStats)>> {
@@ -75,6 +86,7 @@ fn run_tcp_collectives(
             rounds.iter().map(|r| r[rank].clone()).collect();
         handles.push(std::thread::spawn(move || {
             let layout = GradLayout::from_shapes(&shapes);
+            let plan = BucketPlan::from_layout(&layout, bucket_kb);
             let cfg = world_cfg(
                 world,
                 rank,
@@ -84,19 +96,42 @@ fn run_tcp_collectives(
             );
             let transport =
                 Box::new(TcpRingTransport::establish(&cfg).unwrap());
-            let mut coll =
-                build_collective_with(transport, mode, comm_rank, seed);
+            let mut coll = build_collective_with(
+                transport, mode, comm_rank, seed, codec,
+            );
             let mut out = Vec::new();
             for input in my_inputs {
                 let mut bufs = vec![input];
-                let stats =
-                    coll.all_reduce_mean(&mut bufs, &layout).unwrap();
+                let stats = coll
+                    .all_reduce_mean_bucketed(
+                        &mut bufs, &layout, &plan, overlap,
+                    )
+                    .unwrap();
                 out.push((bufs.pop().unwrap(), stats));
             }
             out
         }));
     }
     handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn run_tcp_collectives(
+    world: usize,
+    mode: CommMode,
+    comm_rank: usize,
+    shapes: Vec<Vec<usize>>,
+    rounds: Vec<Vec<Vec<f32>>>,
+) -> Vec<Vec<(Vec<f32>, CommStats)>> {
+    run_tcp_collectives_cfg(
+        world,
+        mode,
+        comm_rank,
+        WireCodec::F32,
+        0,
+        false,
+        shapes,
+        rounds,
+    )
 }
 
 fn shapes() -> Vec<Vec<usize>> {
@@ -250,7 +285,113 @@ fn prop_tcp_lowrank_bitwise_matches_inproc() {
 }
 
 // ---------------------------------------------------------------------------
-// (c) end-to-end: --spawn-local ≡ --workers, bitwise (artifact-gated)
+// (c) bucketed + overlapped + quantized: tcp ≡ inproc single-shot
+// ---------------------------------------------------------------------------
+
+/// A bucketed, overlapped TCP world with an f32 low-rank exchange is
+/// bitwise-identical to the in-process single-shot reference at world 2
+/// (two-term f32 sums are order-free; larger worlds shift ring chunk
+/// ownership, covered by the quantized test below for any n). Four
+/// rounds cross a basis-refresh boundary with live EF residuals.
+#[test]
+fn prop_tcp_bucketed_overlap_lowrank_matches_single_shot() {
+    let shapes = shapes();
+    let layout = GradLayout::from_shapes(&shapes);
+    let comm_rank = 3usize;
+    let world = 2usize;
+    let rounds: Vec<Vec<Vec<f32>>> = (0..4)
+        .map(|r| rand_bufs(world, layout.total_floats, 700 + r))
+        .collect();
+    let plan = BucketPlan::from_layout(&layout, 1);
+    assert!(plan.len() > 1, "1 KiB target must split this layout");
+    let tcp = run_tcp_collectives_cfg(
+        world,
+        CommMode::LowRank,
+        comm_rank,
+        WireCodec::F32,
+        1,
+        true,
+        shapes.clone(),
+        rounds.clone(),
+    );
+    let mut reference = LowRankAllReduce::new(
+        Box::new(RingTransport::new(world)),
+        comm_rank,
+        0xC033,
+    );
+    for (r, inputs) in rounds.iter().enumerate() {
+        let mut bufs = inputs.clone();
+        reference.all_reduce_mean(&mut bufs, &layout).unwrap();
+        for rank in 0..world {
+            let (got, stats) = &tcp[rank][r];
+            assert_eq!(
+                got, &bufs[rank],
+                "round={r} rank={rank}: bucketed+overlap tcp must be \
+                 bitwise-identical to the single-shot inproc reference"
+            );
+            assert!(
+                stats.overlap_flight_ns > 0,
+                "round={r} rank={rank}: overlap path must report \
+                 in-flight time"
+            );
+        }
+    }
+}
+
+/// The quantized exchange (`--wire bf16|int8`) folds blocks in rank
+/// order regardless of transport or bucket plan, so a bucketed +
+/// overlapped TCP world is bitwise-identical to the in-process
+/// single-shot reference at ANY world size — here 2 and 3, across four
+/// rounds (a basis-refresh boundary) with live EF residuals.
+#[test]
+fn prop_tcp_quantized_bucketed_matches_single_shot() {
+    let shapes = shapes();
+    let layout = GradLayout::from_shapes(&shapes);
+    let comm_rank = 3usize;
+    for codec in [WireCodec::Bf16, WireCodec::Int8] {
+        for world in [2usize, 3] {
+            let rounds: Vec<Vec<Vec<f32>>> = (0..4)
+                .map(|r| {
+                    rand_bufs(world, layout.total_floats, 900 + r)
+                })
+                .collect();
+            let tcp = run_tcp_collectives_cfg(
+                world,
+                CommMode::LowRank,
+                comm_rank,
+                codec,
+                1,
+                true,
+                shapes.clone(),
+                rounds.clone(),
+            );
+            let mut reference = LowRankAllReduce::with_codec(
+                Box::new(RingTransport::new(world)),
+                comm_rank,
+                0xC033,
+                codec,
+            );
+            for (r, inputs) in rounds.iter().enumerate() {
+                let mut bufs = inputs.clone();
+                reference.all_reduce_mean(&mut bufs, &layout).unwrap();
+                for rank in 0..world {
+                    let (got, _) = &tcp[rank][r];
+                    assert_eq!(
+                        got,
+                        &bufs[rank],
+                        "{} world={world} round={r} rank={rank}: \
+                         quantized bucketed tcp must be \
+                         bitwise-identical to single-shot inproc",
+                        codec.label(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (d) end-to-end: --spawn-local ≡ --workers, bitwise (artifact-gated)
 // ---------------------------------------------------------------------------
 
 fn artifacts_dir() -> std::path::PathBuf {

@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use grasswalk::comm::CommMode;
+use grasswalk::comm::{CommMode, WireCodec};
 use grasswalk::coordinator::{
     restore_trainer, save_trainer, OptEngine, TrainConfig, Trainer,
 };
@@ -204,6 +204,56 @@ fn lowrank_comm_tracks_dense_eval_loss() {
     assert!(
         (low_eval - dense_eval).abs() / dense_eval.abs() < 0.05,
         "lowrank eval {low_eval} vs dense {dense_eval}"
+    );
+}
+
+#[test]
+fn quantized_overlapped_lowrank_tracks_dense_eval_loss() {
+    // ISSUE-10 acceptance: the bucketed, depth-2-overlapped low-rank
+    // collective with the int8 wire stays within 5% of dense eval loss
+    // over the e2e horizon — quantization error rides the same
+    // error-feedback accumulators as the projection error — while the
+    // wire shrinks well past the f32 factor exchange.
+    let Some(engine) = engine() else { return };
+    let run = |comm, wire, overlap, bucket_kb| {
+        let cfg = TrainConfig {
+            workers: 2,
+            comm,
+            comm_rank: 16,
+            wire,
+            overlap,
+            bucket_kb,
+            ..base_cfg(40)
+        };
+        let mut rec = Recorder::new("qcomm");
+        let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+        t.run(&mut rec).unwrap();
+        let eval = rec.get("eval_loss").unwrap().last().unwrap();
+        let ovl_points = rec
+            .get("comm/overlap_ratio")
+            .map(|s| s.points.len())
+            .unwrap_or(0);
+        (eval, t.last_comm().unwrap(), ovl_points, t.bucket_count())
+    };
+    let (dense_eval, dense_stats, _, _) =
+        run(CommMode::Dense, WireCodec::F32, false, 0);
+    let (q_eval, q_stats, ovl_points, buckets) =
+        run(CommMode::LowRank, WireCodec::Int8, true, 16);
+    assert!(buckets > 1, "16 KiB must bucket the TINY layout");
+    assert!(
+        ovl_points > 0,
+        "overlapped run must record comm/overlap_ratio"
+    );
+    assert!(
+        q_stats.bytes_per_worker * 8 <= dense_stats.bytes_per_worker,
+        "int8 lowrank bytes {} !<= dense/8 {}",
+        q_stats.bytes_per_worker,
+        dense_stats.bytes_per_worker / 8
+    );
+    assert!(q_stats.compression >= 8.0, "{}", q_stats.compression);
+    assert!(
+        (q_eval - dense_eval).abs() / dense_eval.abs() < 0.05,
+        "int8 lowrank eval {q_eval} vs dense {dense_eval}"
     );
 }
 
